@@ -1,0 +1,96 @@
+//! SpMV performance landscape (the Fig. 4.3/4.4 workload): sweep every
+//! framework schedule and the vendor baseline across the synthetic
+//! SuiteSparse-substitute corpus, reporting per-family geomean speedups.
+//!
+//! Run with: `cargo run --release --example spmv_landscape [scale]`
+
+use std::collections::BTreeMap;
+
+use gpulb::balance::{self, ScheduleKind};
+use gpulb::baselines::vendor_spmv;
+use gpulb::corpus::sparse_corpus;
+use gpulb::exec::spmv;
+use gpulb::metrics;
+use gpulb::sim::{GpuSpec, SpmvCost};
+
+fn main() {
+    let scale: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+    let gpu = GpuSpec::v100();
+    let cost = SpmvCost::calibrate(&gpu);
+    let corpus = sparse_corpus(scale);
+    println!(
+        "corpus: {} matrices (scale {scale}), testbed {}\n",
+        corpus.len(),
+        gpu.name
+    );
+
+    let kinds = [
+        ScheduleKind::ThreadMapped,
+        ScheduleKind::GroupMapped(32),
+        ScheduleKind::MergePath,
+        ScheduleKind::NonzeroSplit,
+        ScheduleKind::Binning,
+        ScheduleKind::Lrb,
+    ];
+
+    // family -> (per-schedule speedups vs vendor, heuristic speedups)
+    let mut by_family: BTreeMap<&str, Vec<Vec<f64>>> = BTreeMap::new();
+    let mut heuristic: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
+    let workers = gpu.sms * cost.block_threads;
+
+    for e in &corpus {
+        let vendor = vendor_spmv::modeled_time(&e.matrix, &cost, &gpu);
+        let fam = by_family
+            .entry(e.family)
+            .or_insert_with(|| vec![Vec::new(); kinds.len()]);
+        for (i, &kind) in kinds.iter().enumerate() {
+            let t = spmv::modeled_time(
+                &e.matrix,
+                &kind.assign(&e.matrix, workers),
+                Some(kind),
+                &cost,
+                &gpu,
+            );
+            fam[i].push(vendor / t);
+        }
+        let hk = balance::select_schedule(&e.matrix, balance::HeuristicParams::default());
+        let ht = spmv::modeled_time(
+            &e.matrix,
+            &hk.assign(&e.matrix, workers),
+            Some(hk),
+            &cost,
+            &gpu,
+        );
+        heuristic.entry(e.family).or_default().push(vendor / ht);
+    }
+
+    println!(
+        "{:<16} {:>14} {:>14} {:>14} {:>14} {:>14} {:>14} {:>12}",
+        "family (geomean speedup vs cuSparse-like)",
+        "thread",
+        "warp",
+        "merge",
+        "nzsplit",
+        "binning",
+        "lrb",
+        "heuristic"
+    );
+    let mut all_heur = Vec::new();
+    for (fam, per_kind) in &by_family {
+        let h = &heuristic[fam];
+        all_heur.extend_from_slice(h);
+        print!("{fam:<42}");
+        for xs in per_kind {
+            print!(" {:>13.2}x", metrics::geomean(xs));
+        }
+        println!(" {:>11.2}x", metrics::geomean(h));
+    }
+    let s = metrics::speedup_summary(&all_heur);
+    println!(
+        "\nheuristic overall: geomean {:.2}x, peak {:.1}x, min {:.2}x (paper: 2.7x geomean, 39x peak)",
+        s.geomean, s.peak, s.min
+    );
+}

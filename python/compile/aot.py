@@ -1,0 +1,75 @@
+"""AOT export: lower every registry artifact to HLO *text* + manifest.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/gen_hlo.py.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import build_registry
+
+
+def to_hlo_text(lowered) -> str:
+    # return_tuple=False: every artifact returns a single array, and an
+    # untupled root lets the Rust runtime chain device buffers between
+    # executions (accumulator stays on device across MAC iterations).
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    import numpy as np
+
+    return np.dtype(dt).name
+
+
+def export_all(out_dir: pathlib.Path) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest: dict = {"artifacts": []}
+    for art in build_registry():
+        lowered = jax.jit(art.fn).lower(*art.args)
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{art.name}.hlo.txt"
+        path.write_text(text)
+        manifest["artifacts"].append(
+            {
+                "name": art.name,
+                "file": path.name,
+                "inputs": [
+                    {"shape": list(s.shape), "dtype": _dtype_name(s.dtype)}
+                    for s in art.args
+                ],
+                "meta": art.meta,
+                "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            }
+        )
+        print(f"  {art.name}: {len(text)} chars -> {path.name}")
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    manifest = export_all(pathlib.Path(args.out_dir))
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""L1 Pallas kernels for the Stream-K MacLoop (Chapter 5).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's CUDA
+MacLoop stages A/B fragments through shared memory and issues tensor-core
+WMMA ops.  On TPU the analogue is a VMEM-resident block pair fed to the MXU
+systolic array as a single `jnp.dot`.  BlockSpec expresses the HBM->VMEM
+schedule the paper expresses with threadblock tiling.
+
+All kernels are lowered with interpret=True (CPU PJRT cannot run Mosaic
+custom-calls); correctness is validated against `ref.py` by pytest, and the
+AOT HLO text is executed from the Rust coordinator.
+
+Blocking factors follow §5.3.1 of the paper:
+  FP64      : 64 x 64 x 16
+  FP16->32  : 128 x 128 x 32   (we use f32 inputs on CPU; bf16 on real TPU)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# (BLK_M, BLK_N, BLK_K) per precision, straight from the paper (§5.3.1).
+BLOCKING = {
+    "f32": (128, 128, 32),  # stands in for the paper's FP16->FP32 path
+    "f64": (64, 64, 16),
+}
+
+DTYPES = {"f32": jnp.float32, "f64": jnp.float64}
+
+
+def _mac_kernel(a_ref, b_ref, acc_ref, o_ref):
+    """One CTA-wide MAC-loop iteration: o = acc + a @ b.
+
+    a: (BLK_M, BLK_K), b: (BLK_K, BLK_N), acc/o: (BLK_M, BLK_N).
+    The dot is a single MXU-shaped contraction; accumulation is fused so the
+    accumulator tile never leaves VMEM between the multiply and the add.
+    """
+    a = a_ref[...]
+    b = b_ref[...]
+    acc = acc_ref[...]
+    o_ref[...] = acc + jnp.dot(a, b, preferred_element_type=acc.dtype)
+
+
+def gemm_mac_iter(a, b, acc, *, interpret: bool = True):
+    """Single MAC-loop iteration (Algorithm 8, body of the `iter` loop)."""
+    blk_m, blk_k = a.shape
+    blk_n = b.shape[1]
+    return pl.pallas_call(
+        _mac_kernel,
+        out_shape=jax.ShapeDtypeStruct((blk_m, blk_n), acc.dtype),
+        interpret=interpret,
+    )(a, b, acc)
+
+
+def _slab_kernel(a_ref, b_ref, acc_ref, o_ref, *, iters: int, blk_k: int):
+    """A fused slab of `iters` MAC-loop iterations.
+
+    a: (BLK_M, iters*BLK_K), b: (iters*BLK_K, BLK_N).  The k-loop is rolled
+    inside the kernel so one pallas_call covers a contiguous run of
+    MAC-iterations — this is the latency-hiding "software pipeline" analogue:
+    one HBM->VMEM stream per slab instead of per iteration.
+    """
+    acc = acc_ref[...]
+
+    def body(i, acc):
+        a = jax.lax.dynamic_slice_in_dim(a_ref[...], i * blk_k, blk_k, axis=1)
+        b = jax.lax.dynamic_slice_in_dim(b_ref[...], i * blk_k, blk_k, axis=0)
+        return acc + jnp.dot(a, b, preferred_element_type=acc.dtype)
+
+    o_ref[...] = jax.lax.fori_loop(0, iters, body, acc)
+
+
+def gemm_mac_slab(a, b, acc, *, iters: int, interpret: bool = True):
+    """`iters` consecutive MAC-loop iterations fused into one kernel call."""
+    blk_m = a.shape[0]
+    blk_n = b.shape[1]
+    blk_k = a.shape[1] // iters
+    kernel = functools.partial(_slab_kernel, iters=iters, blk_k=blk_k)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((blk_m, blk_n), acc.dtype),
+        interpret=interpret,
+    )(a, b, acc)
+
+
+def _tile_add_kernel(x_ref, y_ref, o_ref):
+    """Fixup reduction step: o = x + y (partial-sum accumulation)."""
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+def tile_add(x, y, *, interpret: bool = True):
+    """Stream-K fixup: accumulate one peer CTA's partial-sum tile."""
+    return pl.pallas_call(
+        _tile_add_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, y)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the correctness ground truth: pytest sweeps shapes/dtypes with
+hypothesis and asserts allclose(kernel, ref).  No pallas imports here.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gemm_mac_iter(a, b, acc):
+    return acc + jnp.dot(a, b, preferred_element_type=acc.dtype)
+
+
+def gemm_mac_slab(a, b, acc, *, iters: int):
+    blk_k = a.shape[1] // iters
+    out = acc
+    for i in range(iters):
+        out = out + jnp.dot(
+            a[:, i * blk_k : (i + 1) * blk_k],
+            b[i * blk_k : (i + 1) * blk_k, :],
+            preferred_element_type=acc.dtype,
+        )
+    return out
+
+
+def tile_add(x, y):
+    return x + y
+
+
+def spmv_rowblock(values, xg):
+    return jnp.sum(values * xg, axis=1)
+
+
+def saxpy(alpha, x, y):
+    return alpha * x + y
+
+
+def dot_chunk(values, xg):
+    return jnp.sum(values * xg, axis=1)
+
+
+def spmv_csr(offsets, indices, values, x):
+    """Full-matrix CSR SpMV oracle (numpy-style, used by model-level tests)."""
+    import numpy as np
+
+    y = np.zeros(len(offsets) - 1, dtype=np.asarray(values).dtype)
+    offsets = np.asarray(offsets)
+    indices = np.asarray(indices)
+    values = np.asarray(values)
+    x = np.asarray(x)
+    for r in range(len(y)):
+        s, e = offsets[r], offsets[r + 1]
+        y[r] = (values[s:e] * x[indices[s:e]]).sum()
+    return y

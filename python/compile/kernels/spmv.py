@@ -1,0 +1,84 @@
+"""L1 Pallas kernels for load-balanced SpMV work execution (Chapter 4).
+
+The Chapter-4 framework separates *workload mapping* (which rows/nonzeros a
+worker owns — decided by the Rust coordinator's schedules) from *work
+execution* (the multiply-accumulate).  The execution kernels here consume
+pre-balanced, densely packed work:
+
+  * `spmv_rowblock` — a (R x W) slab of an ELL-padded row block:
+    `values[r, j] * xg[r, j]` summed along j, where `xg` is the gathered
+    `x[cols]` slab.  The gather (irregular addressing — the coordinator's
+    concern) happens in Rust; the regular FLOP part runs here.
+  * `saxpy` — the thread-mapped Algorithm-1 example (regular workload).
+  * `segment_reduce_ws` — work-oriented fixup: given per-worker partial row
+    sums and a row-carry mask, accumulate partials (merge-path Algorithm 3
+    fix-up step, vectorized).
+
+Hardware adaptation: a CUDA warp-per-row maps 32 lanes across nonzeros; on
+TPU we tile (R x W) row blocks into VMEM and reduce along the lane axis with
+the VPU, which is the 8x128-vreg analogue of the warp reduction.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-block geometry: R rows per block, W padded nonzeros per row slab.
+ROWS_PER_BLOCK = 128
+SLAB_WIDTH = 32
+
+
+def _rowblock_kernel(values_ref, xg_ref, o_ref):
+    """o[r] = sum_j values[r, j] * xg[r, j]  — one ELL slab."""
+    v = values_ref[...]
+    xg = xg_ref[...]
+    o_ref[...] = jnp.sum(v * xg, axis=1)
+
+
+def spmv_rowblock(values, xg, *, interpret: bool = True):
+    """Row-block SpMV execution over an ELL-padded slab.
+
+    values, xg: (R, W).  Returns partial y of shape (R,).  Rows wider than W
+    are covered by accumulating multiple slabs in the coordinator.
+    """
+    rows = values.shape[0]
+    return pl.pallas_call(
+        _rowblock_kernel,
+        out_shape=jax.ShapeDtypeStruct((rows,), values.dtype),
+        interpret=interpret,
+    )(values, xg)
+
+
+def _saxpy_kernel(alpha_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = alpha_ref[0] * x_ref[...] + y_ref[...]
+
+
+def saxpy(alpha, x, y, *, interpret: bool = True):
+    """Algorithm 1 (thread-mapped saxpy): o = alpha * x + y."""
+    return pl.pallas_call(
+        _saxpy_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(jnp.reshape(alpha, (1,)), x, y)
+
+
+def _dot_chunk_kernel(values_ref, xg_ref, o_ref):
+    """Work-oriented flat chunk: o[t] = sum of a contiguous value*x chunk.
+
+    values, xg: (T, C) where T = threads, C = items per thread.  Each "GPU
+    thread" of the paper's nonzero-splitting schedule owns one row of the
+    slab; partial-row boundaries are fixed up by the coordinator.
+    """
+    o_ref[...] = jnp.sum(values_ref[...] * xg_ref[...], axis=1)
+
+
+def dot_chunk(values, xg, *, interpret: bool = True):
+    """Per-thread even-share partial dot products (Algorithm 3 main loop)."""
+    t = values.shape[0]
+    return pl.pallas_call(
+        _dot_chunk_kernel,
+        out_shape=jax.ShapeDtypeStruct((t,), values.dtype),
+        interpret=interpret,
+    )(values, xg)

@@ -1,0 +1,129 @@
+"""L2 — JAX compute graphs wrapping the L1 Pallas kernels.
+
+Each exported function below becomes one AOT artifact (`aot.py` lowers the
+registry to `artifacts/<name>.hlo.txt`).  The Rust coordinator (L3) loads
+and executes these via PJRT; Python never runs on the request path.
+
+Artifact shapes are static (one compiled executable per variant); the
+coordinator composes them:
+
+  * `gemm_mac_iter_*`  — one MAC-loop iteration of Algorithm 8.
+  * `gemm_mac_slab8_*` — 8 fused MAC-loop iterations (pipelined slab).
+  * `tile_add_*`       — Stream-K / fixed-split partial-sum fixup.
+  * `spmv_rowblock_*`  — Chapter-4 work execution over an ELL slab.
+  * `dot_chunk_*`      — work-oriented (nonzero-splitting) per-thread chunk.
+  * `saxpy_f32`        — Algorithm 1 thread-mapped example.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gemm_tile, spmv
+from .kernels.gemm_tile import BLOCKING, DTYPES
+from .kernels.spmv import ROWS_PER_BLOCK, SLAB_WIDTH
+
+jax.config.update("jax_enable_x64", True)
+
+SLAB_ITERS = 8
+
+
+@dataclass(frozen=True)
+class Artifact:
+    """One AOT-exported computation: a jittable fn + example argument specs."""
+
+    name: str
+    fn: object
+    args: tuple  # of jax.ShapeDtypeStruct
+    meta: dict = field(default_factory=dict)
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_registry() -> list[Artifact]:
+    arts: list[Artifact] = []
+
+    # --- Chapter 5: Stream-K MacLoop kernels, per precision -----------------
+    for prec, (bm, bn, bk) in BLOCKING.items():
+        dt = DTYPES[prec]
+        arts.append(
+            Artifact(
+                name=f"gemm_mac_iter_{prec}",
+                fn=gemm_tile.gemm_mac_iter,
+                args=(_spec((bm, bk), dt), _spec((bk, bn), dt), _spec((bm, bn), dt)),
+                meta={"blk_m": bm, "blk_n": bn, "blk_k": bk, "prec": prec},
+            )
+        )
+        arts.append(
+            Artifact(
+                name=f"gemm_mac_slab8_{prec}",
+                fn=functools.partial(gemm_tile.gemm_mac_slab, iters=SLAB_ITERS),
+                args=(
+                    _spec((bm, SLAB_ITERS * bk), dt),
+                    _spec((SLAB_ITERS * bk, bn), dt),
+                    _spec((bm, bn), dt),
+                ),
+                meta={
+                    "blk_m": bm,
+                    "blk_n": bn,
+                    "blk_k": bk,
+                    "iters": SLAB_ITERS,
+                    "prec": prec,
+                },
+            )
+        )
+        arts.append(
+            Artifact(
+                name=f"tile_add_{prec}",
+                fn=gemm_tile.tile_add,
+                args=(_spec((bm, bn), dt), _spec((bm, bn), dt)),
+                meta={"blk_m": bm, "blk_n": bn, "prec": prec},
+            )
+        )
+
+    # --- Chapter 4: SpMV work-execution kernels -----------------------------
+    for prec in ("f32", "f64"):
+        dt = DTYPES[prec]
+        arts.append(
+            Artifact(
+                name=f"spmv_rowblock_{prec}",
+                fn=spmv.spmv_rowblock,
+                args=(
+                    _spec((ROWS_PER_BLOCK, SLAB_WIDTH), dt),
+                    _spec((ROWS_PER_BLOCK, SLAB_WIDTH), dt),
+                ),
+                meta={"rows": ROWS_PER_BLOCK, "width": SLAB_WIDTH, "prec": prec},
+            )
+        )
+        arts.append(
+            Artifact(
+                name=f"dot_chunk_{prec}",
+                fn=spmv.dot_chunk,
+                args=(
+                    _spec((ROWS_PER_BLOCK, SLAB_WIDTH), dt),
+                    _spec((ROWS_PER_BLOCK, SLAB_WIDTH), dt),
+                ),
+                meta={"threads": ROWS_PER_BLOCK, "chunk": SLAB_WIDTH, "prec": prec},
+            )
+        )
+
+    arts.append(
+        Artifact(
+            name="saxpy_f32",
+            fn=spmv.saxpy,
+            args=(
+                _spec((), jnp.float32),
+                _spec((4096,), jnp.float32),
+                _spec((4096,), jnp.float32),
+            ),
+            meta={"n": 4096, "prec": "f32"},
+        )
+    )
+
+    return arts

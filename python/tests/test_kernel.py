@@ -1,0 +1,161 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/values; fixed-shape cases pin the exact artifact
+geometries that the Rust coordinator executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gemm_tile, ref, spmv
+from compile.kernels.gemm_tile import BLOCKING, DTYPES
+
+jax.config.update("jax_enable_x64", True)
+
+TOL = {"f32": dict(rtol=1e-5, atol=1e-5), "f64": dict(rtol=1e-12, atol=1e-12)}
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- GEMM tiles
+@pytest.mark.parametrize("prec", ["f32", "f64"])
+def test_gemm_mac_iter_artifact_shape(prec):
+    bm, bn, bk = BLOCKING[prec]
+    dt = DTYPES[prec]
+    r = _rng(0)
+    a = jnp.asarray(r.standard_normal((bm, bk)), dt)
+    b = jnp.asarray(r.standard_normal((bk, bn)), dt)
+    acc = jnp.asarray(r.standard_normal((bm, bn)), dt)
+    got = gemm_tile.gemm_mac_iter(a, b, acc)
+    want = ref.gemm_mac_iter(a, b, acc)
+    np.testing.assert_allclose(got, want, **TOL[prec])
+
+
+@pytest.mark.parametrize("prec", ["f32", "f64"])
+@pytest.mark.parametrize("iters", [1, 2, 8])
+def test_gemm_mac_slab(prec, iters):
+    bm, bn, bk = BLOCKING[prec]
+    dt = DTYPES[prec]
+    r = _rng(1)
+    a = jnp.asarray(r.standard_normal((bm, iters * bk)), dt)
+    b = jnp.asarray(r.standard_normal((iters * bk, bn)), dt)
+    acc = jnp.asarray(r.standard_normal((bm, bn)), dt)
+    got = gemm_tile.gemm_mac_slab(a, b, acc, iters=iters)
+    want = ref.gemm_mac_slab(a, b, acc, iters=iters)
+    np.testing.assert_allclose(got, want, **TOL[prec])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 48),
+    n=st.integers(1, 48),
+    k=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gemm_mac_iter_sweep(m, n, k, seed):
+    r = _rng(seed)
+    a = jnp.asarray(r.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((k, n)), jnp.float32)
+    acc = jnp.asarray(r.standard_normal((m, n)), jnp.float32)
+    got = gemm_tile.gemm_mac_iter(a, b, acc)
+    want = ref.gemm_mac_iter(a, b, acc)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 32),
+    n=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_tile_add_sweep(m, n, seed):
+    r = _rng(seed)
+    x = jnp.asarray(r.standard_normal((m, n)), jnp.float32)
+    y = jnp.asarray(r.standard_normal((m, n)), jnp.float32)
+    np.testing.assert_allclose(
+        gemm_tile.tile_add(x, y), ref.tile_add(x, y), rtol=1e-6
+    )
+
+
+def test_mac_slab_equals_iterated_mac():
+    """Slab fusion must be numerically consistent with iterating the single
+    MAC kernel — the Rust coordinator mixes both paths within one tile."""
+    bm, bn, bk = BLOCKING["f32"]
+    iters = 8
+    r = _rng(2)
+    a = jnp.asarray(r.standard_normal((bm, iters * bk)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((iters * bk, bn)), jnp.float32)
+    acc = jnp.zeros((bm, bn), jnp.float32)
+    slab = gemm_tile.gemm_mac_slab(a, b, acc, iters=iters)
+    step = acc
+    for i in range(iters):
+        step = gemm_tile.gemm_mac_iter(
+            a[:, i * bk : (i + 1) * bk], b[i * bk : (i + 1) * bk, :], step
+        )
+    np.testing.assert_allclose(slab, step, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- SpMV slabs
+@pytest.mark.parametrize("prec", ["f32", "f64"])
+def test_spmv_rowblock_artifact_shape(prec):
+    dt = DTYPES[prec]
+    r = _rng(3)
+    v = jnp.asarray(r.standard_normal((spmv.ROWS_PER_BLOCK, spmv.SLAB_WIDTH)), dt)
+    xg = jnp.asarray(r.standard_normal((spmv.ROWS_PER_BLOCK, spmv.SLAB_WIDTH)), dt)
+    np.testing.assert_allclose(
+        spmv.spmv_rowblock(v, xg), ref.spmv_rowblock(v, xg), **TOL[prec]
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 64),
+    width=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_spmv_rowblock_sweep(rows, width, seed):
+    r = _rng(seed)
+    v = jnp.asarray(r.standard_normal((rows, width)), jnp.float32)
+    xg = jnp.asarray(r.standard_normal((rows, width)), jnp.float32)
+    np.testing.assert_allclose(
+        spmv.spmv_rowblock(v, xg), ref.spmv_rowblock(v, xg), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_spmv_rowblock_padding_is_identity():
+    """Zero-padded lanes (ELL padding) must not perturb the row sums."""
+    r = _rng(4)
+    v = np.zeros((8, 16), np.float32)
+    xg = r.standard_normal((8, 16)).astype(np.float32)
+    v[:, :5] = r.standard_normal((8, 5))
+    got = spmv.spmv_rowblock(jnp.asarray(v), jnp.asarray(xg))
+    want = (v[:, :5] * xg[:, :5]).sum(axis=1)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 512), seed=st.integers(0, 2**31 - 1))
+def test_saxpy_sweep(n, seed):
+    r = _rng(seed)
+    a = jnp.float32(r.standard_normal())
+    x = jnp.asarray(r.standard_normal(n), jnp.float32)
+    y = jnp.asarray(r.standard_normal(n), jnp.float32)
+    np.testing.assert_allclose(
+        spmv.saxpy(a, x, y), ref.saxpy(a, x, y), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(t=st.integers(1, 64), c=st.integers(1, 40), seed=st.integers(0, 2**31 - 1))
+def test_dot_chunk_sweep(t, c, seed):
+    r = _rng(seed)
+    v = jnp.asarray(r.standard_normal((t, c)), jnp.float32)
+    xg = jnp.asarray(r.standard_normal((t, c)), jnp.float32)
+    np.testing.assert_allclose(
+        spmv.dot_chunk(v, xg), ref.dot_chunk(v, xg), rtol=1e-4, atol=1e-4
+    )

@@ -1,0 +1,83 @@
+//! Chapter-4 benchmarks (`cargo bench --bench fig4_spmv`): one bench group
+//! per paper artifact.
+//!
+//! * fig4_2/* — framework merge-path vs hardwired-CUB pipeline cost (the
+//!   abstraction-overhead experiment, measured on the real Rust hot path:
+//!   schedule construction + execution).
+//! * fig4_3/* — per-schedule SpMV pipeline on irregular vs regular inputs.
+//! * fig4_4/* — heuristic-combined pipeline (selection + assignment + exec).
+//! * fig6_1/* — oracle sweep over all schedules.
+
+use gpulb::balance::{self, ScheduleKind};
+use gpulb::benchutil::Bencher;
+use gpulb::exec::spmv;
+use gpulb::sparse::gen;
+
+fn main() {
+    let mut b = Bencher::default();
+    let workers = 80 * 128;
+
+    let irregular = gen::power_law(8192, 8192, 4096, 1.7, 1);
+    let regular = gen::uniform(8192, 8192, 16, 2);
+    let x: Vec<f64> = (0..8192).map(|i| (i as f64 * 0.3).sin()).collect();
+
+    println!("# Fig 4.2 — abstraction overhead: fused CUB-style vs framework pipeline");
+    // "CUB": hardwired merge-path — search and consume welded together, no
+    // materialized assignment.
+    b.bench("fig4_2/cub_fused_exec", || {
+        gpulb::baselines::cub_spmv::execute_fused(&irregular, &x, workers)
+    });
+    b.bench("fig4_2/framework_exec", || {
+        // Framework path: build the generic assignment, then execute it.
+        let asg = ScheduleKind::MergePath.assign(&irregular, workers);
+        spmv::execute_host(&irregular, &x, &asg)
+    });
+    // Amortized reuse (iterative solvers rebuild the schedule once):
+    let asg_reused = ScheduleKind::MergePath.assign(&irregular, workers);
+    b.bench("fig4_2/framework_exec_amortized", || {
+        spmv::execute_host(&irregular, &x, &asg_reused)
+    });
+
+    println!("\n# Fig 4.3 — schedule pipelines (assignment + execution)");
+    for kind in [
+        ScheduleKind::ThreadMapped,
+        ScheduleKind::GroupMapped(32),
+        ScheduleKind::MergePath,
+        ScheduleKind::NonzeroSplit,
+        ScheduleKind::Binning,
+        ScheduleKind::Lrb,
+    ] {
+        b.bench(&format!("fig4_3/{}/irregular", kind.name()), || {
+            let asg = kind.assign(&irregular, workers);
+            spmv::execute_host(&irregular, &x, &asg)
+        });
+        b.bench(&format!("fig4_3/{}/regular", kind.name()), || {
+            let asg = kind.assign(&regular, workers);
+            spmv::execute_host(&regular, &x, &asg)
+        });
+    }
+
+    println!("\n# Fig 4.4 — heuristic-combined pipeline");
+    b.bench("fig4_4/heuristic_select_and_run", || {
+        let kind = balance::select_schedule(&irregular, balance::HeuristicParams::default());
+        let asg = kind.assign(&irregular, workers);
+        spmv::execute_host(&irregular, &x, &asg)
+    });
+
+    println!("\n# Fig 6.1 — oracle sweep (all schedules, pick fastest)");
+    b.bench("fig6_1/oracle_sweep_small", || {
+        let a = gen::power_law(1024, 1024, 512, 1.8, 3);
+        let mut best = f64::INFINITY;
+        let gpu = gpulb::sim::GpuSpec::v100();
+        let cost = gpulb::sim::SpmvCost::calibrate(&gpu);
+        for kind in [
+            ScheduleKind::ThreadMapped,
+            ScheduleKind::GroupMapped(32),
+            ScheduleKind::MergePath,
+        ] {
+            let asg = kind.assign(&a, workers);
+            best = best.min(spmv::modeled_time(&a, &asg, Some(kind), &cost, &gpu));
+        }
+        best
+    });
+}

@@ -1,0 +1,73 @@
+//! Chapter-5 benchmarks (`cargo bench --bench fig5_streamk`): one group per
+//! paper artifact, measuring the real coordinator hot paths.
+//!
+//! * fig5_1_2/* — quantization arithmetic + plan construction.
+//! * fig5_4/*   — the analytical grid-size model (runs per kernel launch —
+//!   the cost that replaced cuBLAS's kernel-selection heuristics).
+//! * fig5_7_9/* — full per-shape evaluation pipeline (plan + sim) for
+//!   Stream-K vs the ensembles.
+//! * table5/*   — corpus-sample sweep throughput.
+
+use gpulb::baselines::vendor_gemm;
+use gpulb::benchutil::Bencher;
+use gpulb::corpus::gemm_shapes;
+use gpulb::exec::gemm;
+use gpulb::report::figures;
+use gpulb::sim::gpu::{GpuSpec, Precision};
+use gpulb::streamk::{self, decomp, Blocking, Decomposition, GemmShape};
+
+fn main() {
+    let mut b = Bencher::default();
+    let gpu = GpuSpec::a100();
+    let prec = Precision::F16F32;
+    let blk = Blocking::paper_default(prec);
+    let model = vendor_gemm::member_cost_model(&gpu, blk, prec);
+
+    println!("# Fig 5.1/5.2 — plan construction");
+    let big = GemmShape::new(4096, 4096, 4096);
+    b.bench("fig5_1_2/plan_data_parallel", || {
+        decomp::plan(big, blk, Decomposition::DataParallel)
+    });
+    b.bench("fig5_1_2/plan_stream_k_g108", || {
+        decomp::plan(big, blk, Decomposition::StreamK { g: 108 })
+    });
+    b.bench("fig5_1_2/plan_hybrid_two_tile", || {
+        decomp::plan(big, blk, Decomposition::HybridTwoTile { p: 108 })
+    });
+
+    println!("\n# Fig 5.4 — grid-size model (per-launch selection cost)");
+    b.bench("fig5_4/best_grid", || {
+        streamk::best_grid(GemmShape::new(1024, 1024, 2048), blk, 108, &model)
+    });
+    b.bench("fig5_4/model_curve_108", || {
+        streamk::model::model_curve(GemmShape::new(1024, 1024, 2048), blk, 108, &model)
+    });
+
+    println!("\n# Fig 5.7–5.9 — per-shape evaluation pipeline (plan + sim)");
+    let shape = GemmShape::new(2000, 1500, 3000);
+    b.bench("fig5_7_9/streamk_eval", || {
+        figures::streamk_time(shape, &gpu, prec)
+    });
+    b.bench("fig5_7_9/dp_eval", || {
+        vendor_gemm::member_time(shape, blk, 1, &gpu, prec)
+    });
+    b.bench("fig5_7_9/cublas_heuristic_eval", || {
+        vendor_gemm::cublas_like_time(shape, &gpu, prec)
+    });
+    b.bench("fig5_7_9/oracle_eval", || {
+        vendor_gemm::oracle_time(shape, &gpu, prec)
+    });
+    b.bench("fig5_7_9/simulate_plan_sk", || {
+        let plan = decomp::plan(shape, blk, Decomposition::StreamK { g: 108 });
+        gemm::simulate_plan(&plan, &model, &gpu, prec)
+    });
+
+    println!("\n# Tables 5.1/5.2 — corpus sweep throughput (100 shapes)");
+    let sample = gemm_shapes::gemm_corpus_sample(100);
+    b.bench("table5/sweep_100_shapes_streamk", || {
+        sample
+            .iter()
+            .map(|&s| figures::streamk_time(s, &gpu, prec))
+            .sum::<f64>()
+    });
+}

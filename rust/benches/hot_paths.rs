@@ -1,0 +1,114 @@
+//! Hot-path microbenchmarks (`cargo bench --bench hot_paths`) — the §Perf
+//! targets from DESIGN.md.  These are the operations on the coordinator's
+//! critical path:
+//!
+//! * merge-path 2-D diagonal search (per-thread partition cost);
+//! * lower-bound search (nonzero splitting);
+//! * LRB / three-bin binning throughput;
+//! * schedule assignment end-to-end;
+//! * block-scheduler simulation throughput;
+//! * queue-policy simulation;
+//! * PJRT dispatch (only when artifacts are present).
+
+use gpulb::balance::{binning, merge_path, nonzero_split, search, thread_mapped};
+use gpulb::benchutil::Bencher;
+use gpulb::sim::{self, CtaWork, GpuSpec};
+use gpulb::sparse::gen;
+
+fn main() {
+    let mut b = Bencher::default();
+
+    let a = gen::power_law(65_536, 65_536, 16_384, 1.7, 1);
+    let offsets = &a.offsets;
+    let total = a.rows + a.nnz();
+
+    println!("# search primitives");
+    b.bench("search/merge_path_search_1k_diags", || {
+        let mut acc = 0usize;
+        for i in 0..1000 {
+            let d = (i * 7919) % (total + 1);
+            acc += search::merge_path_search(offsets, d).0;
+        }
+        acc
+    });
+    b.bench("search/lower_bound_1k", || {
+        let mut acc = 0usize;
+        for i in 0..1000 {
+            acc += search::lower_bound(offsets, (i * 104_729) % (a.nnz() + 1));
+        }
+        acc
+    });
+
+    println!("\n# schedule assignment (65k x 65k power-law, 10240 workers)");
+    b.bench("assign/thread_mapped", || thread_mapped::assign(&a, 10_240));
+    b.bench("assign/merge_path", || merge_path::assign(&a, 10_240));
+    b.bench("assign/nonzero_split", || nonzero_split::assign(&a, 10_240));
+    b.bench("assign/binning", || binning::assign(&a, 10_240));
+    b.bench("assign/lrb", || binning::assign_lrb(&a, 10_240));
+
+    println!("\n# block-scheduler simulation");
+    let gpu = GpuSpec::a100();
+    let ctas_10k: Vec<CtaWork> = (0..10_000)
+        .map(|i| CtaWork::new(1.0 + (i % 13) as f64 * 0.1))
+        .collect();
+    b.bench("sim/schedule_10k_ctas", || sim::simulate(&gpu, &ctas_10k));
+
+    println!("\n# queue policies (1k tasks, 80 workers)");
+    use gpulb::balance::queue::{simulate, QueueParams, QueuePolicy};
+    let tasks: Vec<usize> = (0..1000).map(|i| 1 + (i * 31) % 500).collect();
+    for policy in [
+        QueuePolicy::Centralized,
+        QueuePolicy::Stealing,
+        QueuePolicy::ChunkedFetch { chunk: 16 },
+    ] {
+        b.bench(&format!("queue/{policy:?}"), || {
+            simulate(policy, 80, tasks.clone(), |_| Vec::new(), QueueParams::default())
+        });
+    }
+
+    // PJRT dispatch (the request-path kernel-invocation cost).
+    if let Ok(rt) = gpulb::runtime::Runtime::open("artifacts") {
+        println!("\n# PJRT dispatch (gemm_mac_iter_f32, 128x128x32)");
+        rt.warmup(&["gemm_mac_iter_f32"]).unwrap();
+        let a_in = gpulb::runtime::HostTensor::F32(vec![1.0; 128 * 32], vec![128, 32]);
+        let b_in = gpulb::runtime::HostTensor::F32(vec![1.0; 32 * 128], vec![32, 128]);
+        let acc = gpulb::runtime::HostTensor::F32(vec![0.0; 128 * 128], vec![128, 128]);
+        b.bench("runtime/mac_iter_dispatch", || {
+            rt.execute(
+                "gemm_mac_iter_f32",
+                &[a_in.clone(), b_in.clone(), acc.clone()],
+            )
+            .unwrap()
+        });
+        // 16-iteration accumulate chain: host round trip per step vs the
+        // device-resident accumulator (§Perf: device-buffer chaining).
+        b.bench("runtime/chain16_host_roundtrip", || {
+            let mut acc_h = acc.clone();
+            for _ in 0..16 {
+                acc_h = rt
+                    .execute("gemm_mac_iter_f32", &[a_in.clone(), b_in.clone(), acc_h])
+                    .unwrap();
+            }
+            acc_h
+        });
+        b.bench("runtime/chain16_device_resident", || {
+            use gpulb::runtime::DevInput;
+            let mut acc_d = rt.to_device(&acc).unwrap();
+            for _ in 0..16 {
+                acc_d = rt
+                    .execute_dev(
+                        "gemm_mac_iter_f32",
+                        &[
+                            DevInput::Host(a_in.clone()),
+                            DevInput::Host(b_in.clone()),
+                            DevInput::Dev(&acc_d),
+                        ],
+                    )
+                    .unwrap();
+            }
+            rt.to_host(&acc_d).unwrap()
+        });
+    } else {
+        println!("\n(artifacts absent: skipping PJRT dispatch bench)");
+    }
+}

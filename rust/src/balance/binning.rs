@@ -1,0 +1,243 @@
+//! Binning schedules (§3.3.4): classify tiles by work size, then process
+//! each bin with a matched compute granularity.
+//!
+//! Dynamic · Approximate · Hierarchical.  Two variants:
+//!
+//! * [`assign`] — the classic three-bin CTA/warp/thread split (Merrill
+//!   et al.'s Scan+Warp+CTA gather, Davidson et al.): block-sized tiles to
+//!   blocks, warp-sized to warps, small to threads.
+//! * [`assign_lrb`] — Logarithmic Radix Binning (Green et al., Fox et al.):
+//!   tiles binned by `ceil(log2(work))` so each bin's work varies by at most
+//!   2x, then bins are processed most-work-first with matched granularity.
+
+use super::{Assignment, Granularity, Segment, WorkSource, WorkerAssignment};
+
+/// Threads per block for the binning kernels (paper's typical 128/256).
+pub const BLOCK_THREADS: u32 = 128;
+/// Threads per warp.
+pub const WARP_THREADS: u32 = 32;
+
+fn seg(offsets: &[usize], t: usize) -> Segment {
+    Segment {
+        tile: t as u32,
+        atom_begin: offsets[t],
+        atom_end: offsets[t + 1],
+    }
+}
+
+/// Three-bin (block/warp/thread) assignment.
+///
+/// `workers` is the thread-bin worker budget (the block/warp bins size
+/// themselves to one tile per group, relying on oversubscription).
+pub fn assign(src: &impl WorkSource, workers: usize) -> Assignment {
+    let offsets = src.offsets();
+    let tiles = src.num_tiles();
+
+    let mut block_bin = Vec::new();
+    let mut warp_bin = Vec::new();
+    let mut thread_bin = Vec::new();
+    for t in 0..tiles {
+        let n = offsets[t + 1] - offsets[t];
+        if n >= BLOCK_THREADS as usize {
+            block_bin.push(t);
+        } else if n >= WARP_THREADS as usize {
+            warp_bin.push(t);
+        } else {
+            thread_bin.push(t);
+        }
+    }
+
+    let mut out = Vec::new();
+    // Block bin: one block per tile (all threads cooperate).
+    for &t in &block_bin {
+        out.push(WorkerAssignment {
+            granularity: Granularity::Group(BLOCK_THREADS),
+            segments: vec![seg(offsets, t)],
+        });
+    }
+    // Warp bin: one warp per tile.
+    for &t in &warp_bin {
+        out.push(WorkerAssignment {
+            granularity: Granularity::Group(WARP_THREADS),
+            segments: vec![seg(offsets, t)],
+        });
+    }
+    // Thread bin: grid-stride tiles over the worker budget.  Indexed
+    // stride (not `skip().step_by()`, which re-walks the iterator per
+    // worker — §Perf).
+    let tworkers = workers.max(1).min(thread_bin.len().max(1));
+    for w in 0..tworkers {
+        let mut segments = Vec::with_capacity(thread_bin.len().div_ceil(tworkers));
+        let mut i = w;
+        while i < thread_bin.len() {
+            segments.push(seg(offsets, thread_bin[i]));
+            i += tworkers;
+        }
+        if !segments.is_empty() {
+            out.push(WorkerAssignment {
+                granularity: Granularity::Thread,
+                segments,
+            });
+        }
+    }
+
+    Assignment {
+        schedule: "binning",
+        workers: out,
+    }
+}
+
+/// Number of LRB bins (32 covers work sizes up to 2^31).
+pub const LRB_BINS: usize = 32;
+
+/// Logarithmic Radix Binning: bin index = ceil(log2(work)), bins processed
+/// most-work-first, each bin chunked onto granularity matched to its size.
+pub fn assign_lrb(src: &impl WorkSource, workers: usize) -> Assignment {
+    let offsets = src.offsets();
+    let tiles = src.num_tiles();
+
+    // Two-pass histogram (the paper's atomic counting pass followed by the
+    // placement pass): count bin sizes first so every bin is allocated
+    // exactly once — §Perf, removes the Vec-growth copies on the hot path.
+    let bin_of = |t: usize| -> usize {
+        let n = offsets[t + 1] - offsets[t];
+        let b = if n <= 1 {
+            0
+        } else {
+            (usize::BITS - (n - 1).leading_zeros()) as usize
+        };
+        b.min(LRB_BINS - 1)
+    };
+    let mut counts = [0usize; LRB_BINS];
+    for t in 0..tiles {
+        counts[bin_of(t)] += 1;
+    }
+    let mut bins: Vec<Vec<usize>> = counts.iter().map(|&c| Vec::with_capacity(c)).collect();
+    for t in 0..tiles {
+        bins[bin_of(t)].push(t);
+    }
+
+    let mut out = Vec::new();
+    // Process from the heaviest bin down (reorder-without-sort property).
+    for b in (0..LRB_BINS).rev() {
+        if bins[b].is_empty() {
+            continue;
+        }
+        let work_hi = 1usize << b; // bin holds tiles with work in (2^(b-1), 2^b]
+        let gran = if work_hi >= BLOCK_THREADS as usize {
+            Granularity::Group(BLOCK_THREADS)
+        } else if work_hi >= WARP_THREADS as usize {
+            Granularity::Group(WARP_THREADS)
+        } else {
+            Granularity::Thread
+        };
+        match gran {
+            Granularity::Thread => {
+                // Strided across the worker budget: P-modulo assignment
+                // (indexed stride — §Perf).
+                let bin = &bins[b];
+                let tworkers = workers.max(1).min(bin.len());
+                for w in 0..tworkers {
+                    let mut segments = Vec::with_capacity(bin.len().div_ceil(tworkers));
+                    let mut i = w;
+                    while i < bin.len() {
+                        segments.push(seg(offsets, bin[i]));
+                        i += tworkers;
+                    }
+                    out.push(WorkerAssignment {
+                        granularity: Granularity::Thread,
+                        segments,
+                    });
+                }
+            }
+            _ => {
+                for &t in &bins[b] {
+                    out.push(WorkerAssignment {
+                        granularity: gran,
+                        segments: vec![seg(offsets, t)],
+                    });
+                }
+            }
+        }
+    }
+
+    Assignment {
+        schedule: "lrb",
+        workers: out,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balance::OffsetsSource;
+    use crate::sparse::gen;
+
+    #[test]
+    fn three_bin_covers_exactly() {
+        let a = gen::power_law(512, 512, 400, 1.6, 17);
+        assign(&a, 128).validate(&a).unwrap();
+    }
+
+    #[test]
+    fn lrb_covers_exactly() {
+        let a = gen::power_law(512, 512, 400, 1.6, 19);
+        assign_lrb(&a, 128).validate(&a).unwrap();
+    }
+
+    #[test]
+    fn bins_match_granularity() {
+        // Tiles of size 200, 40, 3 must land in block, warp, thread bins.
+        let offs = vec![0usize, 200, 240, 243];
+        let src = OffsetsSource::new(&offs);
+        let asg = assign(&src, 4);
+        let find = |tile: u32| {
+            asg.workers
+                .iter()
+                .find(|w| w.segments.iter().any(|s| s.tile == tile))
+                .unwrap()
+                .granularity
+        };
+        assert_eq!(find(0), Granularity::Group(BLOCK_THREADS));
+        assert_eq!(find(1), Granularity::Group(WARP_THREADS));
+        assert_eq!(find(2), Granularity::Thread);
+    }
+
+    #[test]
+    fn lrb_bin_work_within_2x() {
+        // Within any LRB worker at thread granularity, tiles differ <= 2x.
+        let a = gen::power_law(1024, 1024, 800, 1.7, 23);
+        let asg = assign_lrb(&a, 64);
+        for w in &asg.workers {
+            if w.granularity != Granularity::Thread || w.segments.len() < 2 {
+                continue;
+            }
+            let lens: Vec<usize> = w.segments.iter().map(|s| s.len()).collect();
+            let max = *lens.iter().max().unwrap();
+            let min = *lens.iter().min().unwrap();
+            if min > 1 {
+                assert!(
+                    max <= 2 * min,
+                    "LRB bin variance >2x: min={min} max={max}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lrb_processes_heavy_bins_first() {
+        let offs = vec![0usize, 2, 300, 301];
+        let src = OffsetsSource::new(&offs);
+        let asg = assign_lrb(&src, 4);
+        // First worker must hold the 298-atom tile (heaviest bin first).
+        assert!(asg.workers[0].segments.iter().any(|s| s.tile == 1));
+    }
+
+    #[test]
+    fn empty_tiles_go_to_thread_bin() {
+        let offs = vec![0usize, 0, 0, 64];
+        let src = OffsetsSource::new(&offs);
+        let asg = assign(&src, 2);
+        asg.validate(&src).unwrap();
+    }
+}

@@ -1,0 +1,105 @@
+//! Group-mapped schedule (§3.3.2, §4.4.2.2–4.4.2.3): an even share of tiles
+//! per cooperative group; threads within a group process atoms in parallel.
+//!
+//! Static · Approximate · Hierarchical.  Generalizes warp-mapped (g=32) and
+//! block-mapped (g=block size) "for free" — the paper's novel group-level
+//! schedule built on CUDA Cooperative Groups.
+//!
+//! Within a group the paper builds a shared-memory prefix sum of
+//! atoms-per-tile and each thread binary-searches it per atom
+//! (`get_tile(atom_id)`); the coordinator-side analogue emits one segment
+//! per (tile, group) pair and the simulator charges the prefix-sum +
+//! search overhead.
+
+use super::{Assignment, Granularity, Segment, WorkSource, WorkerAssignment};
+
+/// Assign an even share of tiles to each of `groups` groups of `g` threads.
+pub fn assign(src: &impl WorkSource, groups: usize, g: u32) -> Assignment {
+    let offsets = src.offsets();
+    let tiles = src.num_tiles();
+    let groups = groups.max(1);
+    let per_group = tiles.div_ceil(groups.max(1)).max(1);
+    let mut workers = Vec::new();
+    let mut start = 0usize;
+    while start < tiles {
+        let end = (start + per_group).min(tiles);
+        let segments = (start..end)
+            .map(|t| Segment {
+                tile: t as u32,
+                atom_begin: offsets[t],
+                atom_end: offsets[t + 1],
+            })
+            .collect();
+        workers.push(WorkerAssignment {
+            granularity: Granularity::Group(g),
+            segments,
+        });
+        start = end;
+    }
+    Assignment {
+        schedule: if g == 32 {
+            "warp-mapped"
+        } else {
+            "group-mapped"
+        },
+        workers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balance::OffsetsSource;
+    use crate::sparse::gen;
+
+    #[test]
+    fn covers_exactly() {
+        let a = gen::power_law(300, 300, 128, 2.0, 3);
+        let asg = assign(&a, 40, 32);
+        asg.validate(&a).unwrap();
+    }
+
+    #[test]
+    fn even_tile_shares() {
+        let offs: Vec<usize> = (0..=100).collect(); // 100 tiles, 1 atom each
+        let src = OffsetsSource::new(&offs);
+        let asg = assign(&src, 10, 32);
+        assert_eq!(asg.workers.len(), 10);
+        for w in &asg.workers {
+            assert_eq!(w.segments.len(), 10);
+            assert_eq!(w.granularity, Granularity::Group(32));
+        }
+    }
+
+    #[test]
+    fn uneven_final_group() {
+        let offs: Vec<usize> = (0..=7).collect();
+        let src = OffsetsSource::new(&offs);
+        let asg = assign(&src, 3, 4);
+        // ceil(7/3)=3 tiles/group: 3+3+1.
+        let sizes: Vec<usize> = asg.workers.iter().map(|w| w.segments.len()).collect();
+        assert_eq!(sizes, vec![3, 3, 1]);
+        asg.validate(&src).unwrap();
+    }
+
+    #[test]
+    fn warp_naming() {
+        let offs = vec![0usize, 1];
+        let src = OffsetsSource::new(&offs);
+        assert_eq!(assign(&src, 1, 32).schedule, "warp-mapped");
+        assert_eq!(assign(&src, 1, 64).schedule, "group-mapped");
+    }
+
+    #[test]
+    fn group_parallelism_shrinks_critical_path() {
+        // A wide tile (1024 atoms): a group of 32 shares it, so per-thread
+        // critical path is 1024/32 = 32 atoms — the schedule's raison d'etre.
+        let offs = vec![0usize, 1024];
+        let src = OffsetsSource::new(&offs);
+        let asg = assign(&src, 1, 32);
+        let w = &asg.workers[0];
+        assert_eq!(w.atoms(), 1024);
+        let per_thread = w.atoms().div_ceil(w.granularity.threads());
+        assert_eq!(per_thread, 32);
+    }
+}

@@ -1,0 +1,158 @@
+//! Merge-path schedule (§3.3.3, §4.4.2.1; Merrill & Garland's SpMV).
+//!
+//! Static · Exact · Flat (+ hierarchy to shrink the search space).  Treats
+//! one row-end and one nonzero as equal work units and splits
+//! `rows + nnz` evenly (within one) over workers; each worker runs the 2-D
+//! diagonal binary search to find its `(row, nonzero)` starting coordinates
+//! and then consumes complete and partial rows, carrying out a fix-up for
+//! the row it splits with its successor.
+
+use super::search::merge_path_search;
+use super::{Assignment, Granularity, Segment, WorkSource, WorkerAssignment};
+
+/// Even split of (tiles + atoms) merge-path work over `workers` threads.
+pub fn assign(src: &impl WorkSource, workers: usize) -> Assignment {
+    let offsets = src.offsets();
+    let tiles = src.num_tiles();
+    let atoms = src.num_atoms();
+    let total = tiles + atoms;
+    let workers_n = workers.max(1);
+    let per = total.div_ceil(workers_n.max(1));
+
+    let mut out = Vec::with_capacity(workers_n);
+    let mut prev = merge_path_search(offsets, 0);
+    for w in 0..workers_n {
+        let d_end = ((w + 1) * per).min(total);
+        let (row_end, atom_end) = merge_path_search(offsets, d_end);
+        let (row_start, atom_start) = prev;
+
+        // Exact capacity: one segment per row touched (§Perf — avoids the
+        // per-worker Vec growth reallocations on the assignment hot path).
+        let mut segments = Vec::with_capacity(row_end.saturating_sub(row_start) + 1);
+        if atom_end > atom_start {
+            // Walk rows [row_start, row_end]; atoms consumed in this span.
+            let mut cursor = atom_start;
+            let mut row = row_start.min(tiles.saturating_sub(1));
+            // The starting row is the row containing `atom_start` (the path
+            // may have consumed row-ends past it only when those rows are
+            // complete).
+            while cursor < atom_end {
+                // Find the row owning `cursor`: rows advance while their end
+                // offset <= cursor.
+                while row + 1 <= tiles && offsets[row + 1] <= cursor {
+                    row += 1;
+                }
+                let seg_end = atom_end.min(offsets[row + 1]);
+                segments.push(Segment {
+                    tile: row as u32,
+                    atom_begin: cursor,
+                    atom_end: seg_end,
+                });
+                cursor = seg_end;
+            }
+        }
+        out.push(WorkerAssignment {
+            granularity: Granularity::Thread,
+            segments,
+        });
+        prev = (row_end, atom_end);
+        if d_end == total {
+            break;
+        }
+    }
+
+    Assignment {
+        schedule: "merge-path",
+        workers: out,
+    }
+}
+
+/// Work per worker in merge-path units (rows + atoms touched) — used by the
+/// cost model; by construction this is `ceil(total/workers)` within one.
+pub fn work_per_worker(src: &impl WorkSource, workers: usize) -> usize {
+    (src.num_tiles() + src.num_atoms()).div_ceil(workers.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balance::OffsetsSource;
+    use crate::sparse::gen;
+
+    #[test]
+    fn covers_exactly_power_law() {
+        let a = gen::power_law(500, 500, 256, 1.7, 11);
+        for workers in [1, 7, 32, 256, 1000] {
+            let asg = assign(&a, workers);
+            asg.validate(&a).unwrap();
+        }
+    }
+
+    #[test]
+    fn covers_with_empty_rows() {
+        let offs = vec![0usize, 0, 0, 5, 5, 9, 9, 9];
+        let src = OffsetsSource::new(&offs);
+        for workers in [1, 2, 3, 5, 16] {
+            let asg = assign(&src, workers);
+            asg.validate(&src).unwrap();
+        }
+    }
+
+    #[test]
+    fn even_split_within_one_unit() {
+        // The merge-path guarantee: every worker's (rows-touched + atoms)
+        // is bounded by ceil(total/workers) + 1 boundary row.
+        let a = gen::power_law(1000, 1000, 512, 1.6, 7);
+        let workers = 64;
+        let asg = assign(&a, workers);
+        let per = work_per_worker(&a, workers);
+        for w in &asg.workers {
+            // atoms plus distinct tiles touched is the merge work.
+            let tiles_touched = w.segments.len();
+            assert!(
+                w.atoms() + tiles_touched <= per + 1,
+                "worker exceeded even share: atoms={} tiles={} per={}",
+                w.atoms(),
+                tiles_touched,
+                per
+            );
+        }
+    }
+
+    #[test]
+    fn giant_single_row_split_across_workers() {
+        // The case thread-mapped can't handle: one row with all the atoms.
+        let offs = vec![0usize, 10_000];
+        let src = OffsetsSource::new(&offs);
+        let asg = assign(&src, 8);
+        asg.validate(&src).unwrap();
+        // Every worker shares the row.
+        let covering: usize = asg
+            .workers
+            .iter()
+            .filter(|w| w.segments.iter().any(|s| s.tile == 0))
+            .count();
+        assert!(covering >= 7, "covering={covering}");
+        assert!(asg.max_worker_atoms() <= 10_000 / 8 + 2);
+    }
+
+    #[test]
+    fn single_worker_gets_everything() {
+        let a = gen::uniform(64, 64, 4, 2);
+        let asg = assign(&a, 1);
+        assert_eq!(asg.workers.len(), 1);
+        assert_eq!(asg.covered_atoms(), a.nnz());
+    }
+
+    #[test]
+    fn segments_are_row_sorted_runs() {
+        let a = gen::uniform(128, 128, 4, 5);
+        let asg = assign(&a, 16);
+        for w in &asg.workers {
+            for pair in w.segments.windows(2) {
+                assert!(pair[0].tile < pair[1].tile);
+                assert_eq!(pair[0].atom_end, pair[1].atom_begin);
+            }
+        }
+    }
+}

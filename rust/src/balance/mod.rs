@@ -1,0 +1,308 @@
+//! The Chapter-4 load-balancing abstraction: separation of concerns between
+//! *workload mapping* (this module) and *work execution* ([`crate::exec`]).
+//!
+//! The paper's vocabulary (§4.2.1):
+//! * **work atom** — smallest unit (a nonzero);
+//! * **work tile** — a set of atoms (a row);
+//! * **tile set** — the whole problem (the matrix).
+//!
+//! A [`WorkSource`] exposes a tile set through its atoms-per-tile prefix sum
+//! (for CSR this is literally the row-offsets array, Listing 4.1).  A
+//! schedule maps the tile set onto workers, producing an [`Assignment`]:
+//! for every worker, the segments `(tile, atom_begin..atom_end)` it owns.
+//!
+//! Execution semantics are uniform across schedules: each segment's partial
+//! result accumulates into its tile's output.  This makes *every* schedule
+//! produce bit-identical numerics to the sequential reference, so schedules
+//! are interchangeable — the paper's core programmability claim.
+
+pub mod binning;
+pub mod group_mapped;
+pub mod heuristic;
+pub mod merge_path;
+pub mod nonzero_split;
+pub mod prefix;
+pub mod queue;
+pub mod roofline;
+pub mod search;
+pub mod sorting;
+pub mod thread_mapped;
+
+pub use heuristic::{select_schedule, HeuristicParams};
+
+use crate::sparse::Csr;
+
+/// A tile set exposed to the schedules: `offsets()[t]..offsets()[t+1]` spans
+/// tile `t`'s atoms (a prefix sum over atoms-per-tile).
+pub trait WorkSource {
+    fn num_tiles(&self) -> usize;
+    fn num_atoms(&self) -> usize;
+    /// Prefix-sum array, `len == num_tiles() + 1`, `[0] == 0`,
+    /// `[num_tiles()] == num_atoms()`.
+    fn offsets(&self) -> &[usize];
+}
+
+impl WorkSource for Csr {
+    fn num_tiles(&self) -> usize {
+        self.rows
+    }
+    fn num_atoms(&self) -> usize {
+        self.nnz()
+    }
+    fn offsets(&self) -> &[usize] {
+        &self.offsets
+    }
+}
+
+/// A tile set defined by a borrowed offsets array (graph frontiers, tensors).
+pub struct OffsetsSource<'a> {
+    pub offsets: &'a [usize],
+}
+
+impl<'a> OffsetsSource<'a> {
+    pub fn new(offsets: &'a [usize]) -> Self {
+        debug_assert!(!offsets.is_empty() && offsets[0] == 0);
+        OffsetsSource { offsets }
+    }
+}
+
+impl WorkSource for OffsetsSource<'_> {
+    fn num_tiles(&self) -> usize {
+        self.offsets.len() - 1
+    }
+    fn num_atoms(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+    fn offsets(&self) -> &[usize] {
+        self.offsets
+    }
+}
+
+/// Which compute perspective a worker occupies (§2.1.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Granularity {
+    /// One CUDA thread.
+    Thread,
+    /// A cooperative group of `n` threads (warp = 32, block = 128/256, or
+    /// any CG-sized group — §4.4.2.3).
+    Group(u32),
+}
+
+impl Granularity {
+    pub const WARP: Granularity = Granularity::Group(32);
+
+    pub fn threads(self) -> usize {
+        match self {
+            Granularity::Thread => 1,
+            Granularity::Group(n) => n as usize,
+        }
+    }
+}
+
+/// A contiguous run of atoms within one tile, owned by one worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Segment {
+    pub tile: u32,
+    /// Global atom index range `[atom_begin, atom_end)`; always within the
+    /// tile's own offsets range.
+    pub atom_begin: usize,
+    pub atom_end: usize,
+}
+
+impl Segment {
+    pub fn len(&self) -> usize {
+        self.atom_end - self.atom_begin
+    }
+    pub fn is_empty(&self) -> bool {
+        self.atom_end == self.atom_begin
+    }
+}
+
+/// Everything one worker processes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerAssignment {
+    pub granularity: Granularity,
+    pub segments: Vec<Segment>,
+}
+
+impl WorkerAssignment {
+    pub fn atoms(&self) -> usize {
+        self.segments.iter().map(Segment::len).sum()
+    }
+}
+
+/// The output of a schedule: per-worker segment lists.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Assignment {
+    /// Human-readable schedule name (for figures and reports).
+    pub schedule: &'static str,
+    pub workers: Vec<WorkerAssignment>,
+}
+
+impl Assignment {
+    /// Total atoms covered (must equal the source's atom count).
+    pub fn covered_atoms(&self) -> usize {
+        self.workers.iter().map(WorkerAssignment::atoms).sum()
+    }
+
+    /// Largest worker size in atoms (the load-imbalance witness).
+    pub fn max_worker_atoms(&self) -> usize {
+        self.workers
+            .iter()
+            .map(WorkerAssignment::atoms)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Validate the exact-cover invariant against a source: every atom
+    /// covered exactly once, every segment inside its tile's bounds.
+    pub fn validate(&self, src: &impl WorkSource) -> crate::Result<()> {
+        use anyhow::ensure;
+        let offsets = src.offsets();
+        let mut covered = vec![false; src.num_atoms()];
+        for w in &self.workers {
+            for s in &w.segments {
+                let t = s.tile as usize;
+                ensure!(t < src.num_tiles(), "segment tile {} oob", s.tile);
+                ensure!(
+                    s.atom_begin >= offsets[t] && s.atom_end <= offsets[t + 1],
+                    "segment {:?} outside tile bounds [{}, {})",
+                    s,
+                    offsets[t],
+                    offsets[t + 1]
+                );
+                for a in s.atom_begin..s.atom_end {
+                    ensure!(!covered[a], "atom {a} covered twice");
+                    covered[a] = true;
+                }
+            }
+        }
+        let missing = covered.iter().filter(|&&c| !c).count();
+        ensure!(missing == 0, "{missing} atoms uncovered");
+        Ok(())
+    }
+}
+
+/// The schedules available in the framework (the paper's library).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ScheduleKind {
+    /// §3.3.1 / §4.3.2 — tile per thread, atoms serialized.
+    ThreadMapped,
+    /// §3.3.2 / §4.4.2.2–3 — tiles per group of `n` threads.
+    GroupMapped(u32),
+    /// §3.3.3 / §4.4.2.1 — merge-path (rows+nnz even split).
+    MergePath,
+    /// §3.3.3 — nonzero splitting (atoms-only even split).
+    NonzeroSplit,
+    /// §3.3.4 — CTA/warp/thread binning.
+    Binning,
+    /// §3.3.4 — Logarithmic Radix Binning reorder.
+    Lrb,
+}
+
+impl ScheduleKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ScheduleKind::ThreadMapped => "thread-mapped",
+            ScheduleKind::GroupMapped(32) => "warp-mapped",
+            ScheduleKind::GroupMapped(_) => "group-mapped",
+            ScheduleKind::MergePath => "merge-path",
+            ScheduleKind::NonzeroSplit => "nonzero-split",
+            ScheduleKind::Binning => "binning",
+            ScheduleKind::Lrb => "lrb",
+        }
+    }
+
+    /// Build the assignment for `workers` parallel workers.
+    pub fn assign(self, src: &impl WorkSource, workers: usize) -> Assignment {
+        match self {
+            ScheduleKind::ThreadMapped => thread_mapped::assign(src, workers),
+            ScheduleKind::GroupMapped(g) => group_mapped::assign(src, workers, g),
+            ScheduleKind::MergePath => merge_path::assign(src, workers),
+            ScheduleKind::NonzeroSplit => nonzero_split::assign(src, workers),
+            ScheduleKind::Binning => binning::assign(src, workers),
+            ScheduleKind::Lrb => binning::assign_lrb(src, workers),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offsets_source_accessors() {
+        let offs = vec![0usize, 2, 2, 5];
+        let s = OffsetsSource::new(&offs);
+        assert_eq!(s.num_tiles(), 3);
+        assert_eq!(s.num_atoms(), 5);
+    }
+
+    #[test]
+    fn granularity_threads() {
+        assert_eq!(Granularity::Thread.threads(), 1);
+        assert_eq!(Granularity::WARP.threads(), 32);
+        assert_eq!(Granularity::Group(256).threads(), 256);
+    }
+
+    #[test]
+    fn validate_catches_double_cover() {
+        let offs = vec![0usize, 2];
+        let src = OffsetsSource::new(&offs);
+        let a = Assignment {
+            schedule: "bad",
+            workers: vec![WorkerAssignment {
+                granularity: Granularity::Thread,
+                segments: vec![
+                    Segment {
+                        tile: 0,
+                        atom_begin: 0,
+                        atom_end: 2,
+                    },
+                    Segment {
+                        tile: 0,
+                        atom_begin: 1,
+                        atom_end: 2,
+                    },
+                ],
+            }],
+        };
+        assert!(a.validate(&src).is_err());
+    }
+
+    #[test]
+    fn validate_catches_uncovered() {
+        let offs = vec![0usize, 3];
+        let src = OffsetsSource::new(&offs);
+        let a = Assignment {
+            schedule: "bad",
+            workers: vec![WorkerAssignment {
+                granularity: Granularity::Thread,
+                segments: vec![Segment {
+                    tile: 0,
+                    atom_begin: 0,
+                    atom_end: 2,
+                }],
+            }],
+        };
+        assert!(a.validate(&src).is_err());
+    }
+
+    #[test]
+    fn validate_catches_oob_segment() {
+        let offs = vec![0usize, 2, 4];
+        let src = OffsetsSource::new(&offs);
+        let a = Assignment {
+            schedule: "bad",
+            workers: vec![WorkerAssignment {
+                granularity: Granularity::Thread,
+                segments: vec![Segment {
+                    tile: 0,
+                    atom_begin: 0,
+                    atom_end: 3, // crosses into tile 1
+                }],
+            }],
+        };
+        assert!(a.validate(&src).is_err());
+    }
+}

@@ -1,0 +1,118 @@
+//! Nonzero-splitting (work-oriented) schedule (§3.3.3; ModernGPU/Baxter,
+//! Dalton et al.).
+//!
+//! Static · Exact · Flat.  Splits *atoms only* evenly over workers (unlike
+//! merge-path, row-ends carry no work weight), then each worker does a 1-D
+//! lower-bound search on the offsets array to locate its starting tile.
+//! Cheaper setup than merge-path; slightly worse balance when rows are tiny
+//! (row epilogues aren't accounted).
+
+use super::search::tile_of_atom;
+use super::{Assignment, Granularity, Segment, WorkSource, WorkerAssignment};
+
+/// Even split of atoms over `workers` threads.
+pub fn assign(src: &impl WorkSource, workers: usize) -> Assignment {
+    let offsets = src.offsets();
+    let atoms = src.num_atoms();
+    let tiles = src.num_tiles();
+    let workers_n = workers.max(1);
+    let per = atoms.div_ceil(workers_n.max(1)).max(1);
+
+    let mut out = Vec::with_capacity(workers_n);
+    for w in 0..workers_n {
+        let begin = (w * per).min(atoms);
+        let end = ((w + 1) * per).min(atoms);
+        let mut segments = Vec::new();
+        if begin < end {
+            let mut cursor = begin;
+            let mut row = tile_of_atom(offsets, cursor);
+            while cursor < end {
+                while row + 1 <= tiles && offsets[row + 1] <= cursor {
+                    row += 1;
+                }
+                let seg_end = end.min(offsets[row + 1]);
+                segments.push(Segment {
+                    tile: row as u32,
+                    atom_begin: cursor,
+                    atom_end: seg_end,
+                });
+                cursor = seg_end;
+            }
+        }
+        out.push(WorkerAssignment {
+            granularity: Granularity::Thread,
+            segments,
+        });
+        if end == atoms {
+            break;
+        }
+    }
+
+    Assignment {
+        schedule: "nonzero-split",
+        workers: out,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balance::OffsetsSource;
+    use crate::sparse::gen;
+
+    #[test]
+    fn covers_exactly() {
+        let a = gen::power_law(400, 400, 200, 1.9, 13);
+        for workers in [1, 3, 64, 512] {
+            assign(&a, workers).validate(&a).unwrap();
+        }
+    }
+
+    #[test]
+    fn atoms_split_evenly() {
+        let a = gen::uniform(256, 256, 7, 3);
+        let workers = 37;
+        let asg = assign(&a, workers);
+        let per = a.nnz().div_ceil(workers);
+        for w in &asg.workers {
+            assert!(w.atoms() <= per);
+        }
+        // All but the last worker take the full share.
+        for w in &asg.workers[..asg.workers.len() - 1] {
+            assert_eq!(w.atoms(), per);
+        }
+    }
+
+    #[test]
+    fn empty_rows_skipped() {
+        let offs = vec![0usize, 0, 4, 4, 8];
+        let src = OffsetsSource::new(&offs);
+        let asg = assign(&src, 2);
+        asg.validate(&src).unwrap();
+        // Tiles 0 and 2 are empty — never referenced.
+        for w in &asg.workers {
+            for s in &w.segments {
+                assert!(s.tile == 1 || s.tile == 3);
+            }
+        }
+    }
+
+    #[test]
+    fn giant_row_is_split() {
+        let offs = vec![0usize, 1_000];
+        let src = OffsetsSource::new(&offs);
+        let asg = assign(&src, 10);
+        asg.validate(&src).unwrap();
+        assert_eq!(asg.workers.len(), 10);
+        assert_eq!(asg.max_worker_atoms(), 100);
+    }
+
+    #[test]
+    fn zero_atom_source() {
+        let offs = vec![0usize, 0, 0];
+        let src = OffsetsSource::new(&offs);
+        let asg = assign(&src, 4);
+        assert_eq!(asg.covered_atoms(), 0);
+        asg.validate(&src).unwrap();
+    }
+}

@@ -1,0 +1,73 @@
+//! Prefix-sum primitives (§3.4.1) — the other universal building block.
+//!
+//! On the GPU these are Blelloch-style parallel scans; in the coordinator we
+//! provide sequential and chunked variants (the chunked variant mirrors the
+//! per-group scan of the group-mapped schedule and is what the simulator
+//! charges for).
+
+/// Exclusive prefix sum: `out[i] = sum(xs[..i])`, `out.len() == xs.len()+1`.
+pub fn exclusive(xs: &[usize]) -> Vec<usize> {
+    let mut out = Vec::with_capacity(xs.len() + 1);
+    let mut acc = 0usize;
+    out.push(0);
+    for &x in xs {
+        acc += x;
+        out.push(acc);
+    }
+    out
+}
+
+/// Inclusive prefix sum in place.
+pub fn inclusive_in_place(xs: &mut [usize]) {
+    let mut acc = 0usize;
+    for x in xs.iter_mut() {
+        acc += *x;
+        *x = acc;
+    }
+}
+
+/// Segmented reduce (§3.4.1): sum of `values` within each segment delimited
+/// by `offsets` (len = segments + 1).
+pub fn segmented_reduce(values: &[f64], offsets: &[usize]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(offsets.len().saturating_sub(1));
+    for w in offsets.windows(2) {
+        out.push(values[w[0]..w[1]].iter().sum());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exclusive_basic() {
+        assert_eq!(exclusive(&[3, 0, 2]), vec![0, 3, 3, 5]);
+        assert_eq!(exclusive(&[]), vec![0]);
+    }
+
+    #[test]
+    fn inclusive_in_place_basic() {
+        let mut xs = [1usize, 2, 3];
+        inclusive_in_place(&mut xs);
+        assert_eq!(xs, [1, 3, 6]);
+    }
+
+    #[test]
+    fn exclusive_is_offsets_of_lengths() {
+        // The load-balancing identity: exclusive scan of atoms-per-tile is
+        // exactly a CSR offsets array.
+        let lens = [2usize, 0, 3, 4];
+        let offs = exclusive(&lens);
+        for (t, &l) in lens.iter().enumerate() {
+            assert_eq!(offs[t + 1] - offs[t], l);
+        }
+    }
+
+    #[test]
+    fn segmented_reduce_basic() {
+        let vals = [1.0, 2.0, 3.0, 4.0];
+        let offs = [0usize, 2, 2, 4];
+        assert_eq!(segmented_reduce(&vals, &offs), vec![3.0, 0.0, 7.0]);
+    }
+}

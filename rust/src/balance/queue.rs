@@ -1,0 +1,471 @@
+//! Task-oriented scheduling (§3.3.5): dynamic work queues simulated over
+//! virtual-time workers.
+//!
+//! Dynamic · Approximate · Cooperative · Centralized or Distributed.  The
+//! GPU queue variants surveyed by the paper are reproduced as policies:
+//!
+//! * [`QueuePolicy::StaticList`]   — Cederman/Tsigas in/out arrays with a
+//!   kernel-boundary swap (no pop synchronization, barrier per iteration).
+//! * [`QueuePolicy::Centralized`]  — one device-wide queue, atomic pops
+//!   (contention scales with workers).
+//! * [`QueuePolicy::Stealing`]     — per-worker deques, steal-from-richest
+//!   when empty (Tzeng et al., CUIRRE).
+//! * [`QueuePolicy::Donation`]     — stealing + overflow donation to the
+//!   poorest queue (Tzeng et al.'s "ideal" variant).
+//! * [`QueuePolicy::ChunkedFetch`] — one thread fetches a chunk per block,
+//!   amortizing the atomic (Atos-style hierarchical task/work hybrid).
+//!
+//! Workers process tasks in virtual time; a task may dynamically spawn new
+//! tasks (BFS frontier expansion), which is the regime queues exist for.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::collections::VecDeque;
+
+/// A task is `items` work items (cost = items * t_item + overheads).
+pub type Task = usize;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueuePolicy {
+    StaticList,
+    Centralized,
+    Stealing,
+    /// Donation with per-queue capacity.
+    Donation { capacity: usize },
+    /// Centralized queue fetched `chunk` tasks at a time.
+    ChunkedFetch { chunk: usize },
+}
+
+/// Virtual-time costs (seconds).
+#[derive(Debug, Clone, Copy)]
+pub struct QueueParams {
+    /// One synchronized pop/push (atomic RMW + global-memory round trip).
+    pub t_sync: f64,
+    /// Extra latency per contending worker on a shared atomic.
+    pub t_contention: f64,
+    /// Per work-item processing time.
+    pub t_item: f64,
+    /// Kernel relaunch / barrier cost (StaticList iteration swap).
+    pub t_barrier: f64,
+}
+
+impl Default for QueueParams {
+    fn default() -> Self {
+        QueueParams {
+            t_sync: 4.0e-7,
+            t_contention: 1.0e-8,
+            t_item: 1.0e-8,
+            t_barrier: 3.0e-6,
+        }
+    }
+}
+
+/// Outcome of a queue simulation.
+#[derive(Debug, Clone)]
+pub struct QueueSim {
+    pub makespan: f64,
+    pub processed: usize,
+    pub pops: usize,
+    pub steals: usize,
+    pub donations: usize,
+    pub barriers: usize,
+    pub worker_busy: Vec<f64>,
+}
+
+impl QueueSim {
+    pub fn utilization(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            return 1.0;
+        }
+        self.worker_busy.iter().sum::<f64>()
+            / (self.worker_busy.len() as f64 * self.makespan)
+    }
+}
+
+/// Run the simulation.  `expand(task) -> spawned tasks` models dynamic work
+/// creation; pass `|_| Vec::new()` for static workloads.
+pub fn simulate(
+    policy: QueuePolicy,
+    workers: usize,
+    initial: Vec<Task>,
+    mut expand: impl FnMut(Task) -> Vec<Task>,
+    p: QueueParams,
+) -> QueueSim {
+    match policy {
+        QueuePolicy::StaticList => simulate_static_list(workers, initial, &mut expand, p),
+        QueuePolicy::Centralized => {
+            simulate_shared(workers, initial, &mut expand, p, 1, false)
+        }
+        QueuePolicy::ChunkedFetch { chunk } => {
+            simulate_shared(workers, initial, &mut expand, p, chunk.max(1), true)
+        }
+        QueuePolicy::Stealing => {
+            simulate_distributed(workers, initial, &mut expand, p, None)
+        }
+        QueuePolicy::Donation { capacity } => {
+            simulate_distributed(workers, initial, &mut expand, p, Some(capacity.max(1)))
+        }
+    }
+}
+
+fn pop_cost(p: &QueueParams, contenders: usize) -> f64 {
+    p.t_sync + p.t_contention * contenders.saturating_sub(1) as f64
+}
+
+/// Centralized queue (optionally chunk-fetched).
+fn simulate_shared(
+    workers: usize,
+    initial: Vec<Task>,
+    expand: &mut impl FnMut(Task) -> Vec<Task>,
+    p: QueueParams,
+    chunk: usize,
+    intra_balance: bool,
+) -> QueueSim {
+    let workers = workers.max(1);
+    let mut queue: VecDeque<Task> = initial.into();
+    let mut busy: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
+    let mut idle: Vec<usize> = (0..workers).rev().collect();
+    let mut now = 0.0f64;
+    let mut out = QueueSim {
+        makespan: 0.0,
+        processed: 0,
+        pops: 0,
+        steals: 0,
+        donations: 0,
+        barriers: 0,
+        worker_busy: vec![0.0; workers],
+    };
+
+    loop {
+        while !idle.is_empty() && !queue.is_empty() {
+            let w = idle.pop().unwrap();
+            let take = chunk.min(queue.len());
+            let tasks: Vec<Task> = queue.drain(..take).collect();
+            out.pops += 1;
+            let items: usize = tasks.iter().sum();
+            // One synchronized fetch covers the whole chunk (the Atos-style
+            // amortization); the item work itself is the same either way,
+            // but intra-block rebalancing lets the chunk's items be spread
+            // across the block's threads, shaving the per-task epilogue.
+            let epilogue = if intra_balance && take > 1 {
+                p.t_sync * 0.25 // single cooperative epilogue for the chunk
+            } else {
+                p.t_sync * 0.25 * take as f64
+            };
+            let cost = pop_cost(&p, workers) + items as f64 * p.t_item + epilogue;
+            let finish = now + cost;
+            out.worker_busy[w] += cost;
+            out.processed += take;
+            busy.push(Reverse(Ev {
+                t: finish,
+                w,
+                spawned: tasks,
+            }));
+        }
+        match busy.pop() {
+            None => break,
+            Some(Reverse(ev)) => {
+                now = ev.t;
+                out.makespan = now;
+                for t in ev.spawned {
+                    for child in expand(t) {
+                        queue.push_back(child);
+                    }
+                }
+                idle.push(ev.w);
+            }
+        }
+    }
+    out
+}
+
+/// Per-worker queues with stealing (and optional donation).
+fn simulate_distributed(
+    workers: usize,
+    initial: Vec<Task>,
+    expand: &mut impl FnMut(Task) -> Vec<Task>,
+    p: QueueParams,
+    donation_cap: Option<usize>,
+) -> QueueSim {
+    let workers = workers.max(1);
+    let mut queues: Vec<VecDeque<Task>> = vec![VecDeque::new(); workers];
+    for (i, t) in initial.into_iter().enumerate() {
+        queues[i % workers].push_back(t);
+    }
+    let mut busy: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
+    let mut idle: Vec<usize> = (0..workers).rev().collect();
+    let mut now = 0.0f64;
+    let mut out = QueueSim {
+        makespan: 0.0,
+        processed: 0,
+        pops: 0,
+        steals: 0,
+        donations: 0,
+        barriers: 0,
+        worker_busy: vec![0.0; workers],
+    };
+
+    loop {
+        let mut dispatched = true;
+        while dispatched {
+            dispatched = false;
+            let mut i = 0;
+            while i < idle.len() {
+                let w = idle[i];
+                // Own queue first (cheap, uncontended), else steal from the
+                // richest victim.
+                let (task, overhead) = if let Some(t) = queues[w].pop_front() {
+                    out.pops += 1;
+                    (Some(t), p.t_sync * 0.25) // own-queue pop, no contention
+                } else {
+                    let victim = (0..workers)
+                        .filter(|&v| v != w && !queues[v].is_empty())
+                        .max_by_key(|&v| queues[v].len());
+                    match victim {
+                        Some(v) => {
+                            out.steals += 1;
+                            (queues[v].pop_back(), pop_cost(&p, 2))
+                        }
+                        None => (None, 0.0),
+                    }
+                };
+                match task {
+                    Some(items) => {
+                        let cost = overhead + items as f64 * p.t_item;
+                        let finish = now + cost;
+                        out.worker_busy[w] += cost;
+                        out.processed += 1;
+                        busy.push(Reverse(Ev {
+                            t: finish,
+                            w,
+                            spawned: vec![items],
+                        }));
+                        idle.swap_remove(i);
+                        dispatched = true;
+                    }
+                    None => {
+                        i += 1;
+                    }
+                }
+            }
+        }
+        match busy.pop() {
+            None => break,
+            Some(Reverse(ev)) => {
+                now = ev.t;
+                out.makespan = now;
+                let w = ev.w;
+                for t in ev.spawned {
+                    for child in expand(t) {
+                        // Donation: overflow to the poorest queue.
+                        if let Some(cap) = donation_cap {
+                            if queues[w].len() >= cap {
+                                let poorest = (0..workers)
+                                    .filter(|&v| v != w)
+                                    .min_by_key(|&v| queues[v].len())
+                                    .unwrap_or(w);
+                                out.donations += 1;
+                                queues[poorest].push_back(child);
+                                continue;
+                            }
+                        }
+                        queues[w].push_back(child);
+                    }
+                }
+                idle.push(w);
+            }
+        }
+    }
+    out
+}
+
+/// Static in/out task lists with a barrier swap per iteration.
+fn simulate_static_list(
+    workers: usize,
+    initial: Vec<Task>,
+    expand: &mut impl FnMut(Task) -> Vec<Task>,
+    p: QueueParams,
+) -> QueueSim {
+    let workers = workers.max(1);
+    let mut in_array = initial;
+    let mut out = QueueSim {
+        makespan: 0.0,
+        processed: 0,
+        pops: 0,
+        steals: 0,
+        donations: 0,
+        barriers: 0,
+        worker_busy: vec![0.0; workers],
+    };
+    while !in_array.is_empty() {
+        // Block i handles tasks i, i+p, ... (no pop synchronization).
+        let mut clocks = vec![0.0f64; workers];
+        let mut out_array = Vec::new();
+        for (i, &items) in in_array.iter().enumerate() {
+            let w = i % workers;
+            let cost = items as f64 * p.t_item + p.t_sync * 0.25; // out-array push
+            clocks[w] += cost;
+            out.worker_busy[w] += cost;
+            out.processed += 1;
+            out_array.extend(expand(items));
+        }
+        let iter_time = clocks.iter().cloned().fold(0.0, f64::max);
+        out.makespan += iter_time + p.t_barrier;
+        out.barriers += 1;
+        in_array = out_array;
+    }
+    out
+}
+
+#[derive(PartialEq)]
+struct Ev {
+    t: f64,
+    w: usize,
+    spawned: Vec<Task>,
+}
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        self.t
+            .partial_cmp(&o.t)
+            .unwrap()
+            .then(self.w.cmp(&o.w))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn no_expand(_: Task) -> Vec<Task> {
+        Vec::new()
+    }
+
+    #[test]
+    fn all_policies_process_everything() {
+        let tasks: Vec<Task> = (1..=40).collect();
+        let total = tasks.len();
+        for policy in [
+            QueuePolicy::StaticList,
+            QueuePolicy::Centralized,
+            QueuePolicy::Stealing,
+            QueuePolicy::Donation { capacity: 2 },
+            QueuePolicy::ChunkedFetch { chunk: 4 },
+        ] {
+            let r = simulate(policy, 4, tasks.clone(), no_expand, QueueParams::default());
+            assert_eq!(r.processed, total, "{policy:?}");
+            assert!(r.makespan > 0.0);
+        }
+    }
+
+    #[test]
+    fn stealing_rebalances_skewed_seed() {
+        // All initial work lands on worker 0's queue under round-robin of a
+        // single giant task list; give one worker everything explicitly.
+        let mut tasks = vec![0usize; 0];
+        for _ in 0..32 {
+            tasks.push(1000);
+        }
+        // Round-robin seeding spreads; to observe steals, use 1 initial task
+        // that expands into many.
+        let mut remaining = 31;
+        let r = simulate(
+            QueuePolicy::Stealing,
+            4,
+            vec![1000],
+            move |_| {
+                if remaining > 0 {
+                    remaining -= 1;
+                    vec![1000]
+                } else {
+                    Vec::new()
+                }
+            },
+            QueueParams::default(),
+        );
+        assert_eq!(r.processed, 32);
+        assert!(r.steals > 0, "steals={}", r.steals);
+        let _ = tasks;
+    }
+
+    #[test]
+    fn donation_triggers_on_overflow() {
+        let mut remaining = 63;
+        let r = simulate(
+            QueuePolicy::Donation { capacity: 1 },
+            4,
+            vec![100],
+            move |_| {
+                if remaining >= 2 {
+                    remaining -= 2;
+                    vec![100, 100]
+                } else if remaining == 1 {
+                    remaining -= 1;
+                    vec![100]
+                } else {
+                    Vec::new()
+                }
+            },
+            QueueParams::default(),
+        );
+        assert_eq!(r.processed, 64);
+        assert!(r.donations > 0);
+    }
+
+    #[test]
+    fn static_list_counts_barriers() {
+        // Each task spawns one child for 3 generations => 3+1 iterations.
+        let mut gen = 0;
+        let r = simulate(
+            QueuePolicy::StaticList,
+            2,
+            vec![10, 10],
+            move |_| {
+                if gen < 6 {
+                    gen += 1;
+                    vec![10]
+                } else {
+                    Vec::new()
+                }
+            },
+            QueueParams::default(),
+        );
+        assert!(r.barriers >= 2);
+        assert_eq!(r.processed, 8);
+    }
+
+    #[test]
+    fn chunked_fetch_fewer_pops_than_centralized() {
+        let tasks: Vec<Task> = vec![10; 64];
+        let c = simulate(
+            QueuePolicy::Centralized,
+            4,
+            tasks.clone(),
+            no_expand,
+            QueueParams::default(),
+        );
+        let h = simulate(
+            QueuePolicy::ChunkedFetch { chunk: 8 },
+            4,
+            tasks,
+            no_expand,
+            QueueParams::default(),
+        );
+        assert!(h.pops < c.pops, "chunked {} vs central {}", h.pops, c.pops);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let tasks: Vec<Task> = (1..=100).map(|i| i * 3).collect();
+        for policy in [QueuePolicy::Centralized, QueuePolicy::Stealing] {
+            let r = simulate(policy, 8, tasks.clone(), no_expand, QueueParams::default());
+            let u = r.utilization();
+            assert!((0.0..=1.0 + 1e-9).contains(&u), "{policy:?} u={u}");
+        }
+    }
+}

@@ -1,0 +1,61 @@
+//! Sorting/reordering preprocessing (§3.4.3; Gale et al.'s row bundling):
+//! reorder tiles by descending work so adjacent workers see similar sizes.
+//!
+//! The sort cost is amortized over repeated runs (deep-learning SpMM); the
+//! output is a tile permutation consumed by any downstream schedule.
+
+use super::WorkSource;
+
+/// Permutation of tile ids, heaviest first (stable for equal lengths).
+pub fn sort_tiles_by_work_desc(src: &impl WorkSource) -> Vec<u32> {
+    let offsets = src.offsets();
+    let mut perm: Vec<u32> = (0..src.num_tiles() as u32).collect();
+    perm.sort_by_key(|&t| {
+        let t = t as usize;
+        std::cmp::Reverse(offsets[t + 1] - offsets[t])
+    });
+    perm
+}
+
+/// Bundle sorted tiles into groups of `bundle` with similar row lengths
+/// (Gale et al.'s row bundles for SpMM).
+pub fn row_bundles(src: &impl WorkSource, bundle: usize) -> Vec<Vec<u32>> {
+    let perm = sort_tiles_by_work_desc(src);
+    perm.chunks(bundle.max(1)).map(|c| c.to_vec()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balance::OffsetsSource;
+    use crate::sparse::gen;
+
+    #[test]
+    fn sorted_desc_by_len() {
+        let offs = vec![0usize, 5, 6, 16, 16];
+        let src = OffsetsSource::new(&offs);
+        let perm = sort_tiles_by_work_desc(&src);
+        assert_eq!(perm, vec![2, 0, 1, 3]);
+    }
+
+    #[test]
+    fn permutation_is_complete() {
+        let a = gen::power_law(200, 200, 100, 1.8, 29);
+        let perm = sort_tiles_by_work_desc(&a);
+        let mut sorted = perm.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..200u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn bundles_group_like_sizes() {
+        let a = gen::power_law(256, 256, 128, 1.7, 31);
+        let bundles = row_bundles(&a, 32);
+        assert_eq!(bundles.iter().map(Vec::len).sum::<usize>(), 256);
+        // Monotone: first tile of each bundle no lighter than the next's.
+        let len = |t: u32| a.row_nnz(t as usize);
+        for pair in bundles.windows(2) {
+            assert!(len(pair[0][0]) >= len(pair[1][0]));
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Thread-mapped schedule (§3.3.1, Listing 4.2): a fixed number of work
+//! tiles per thread, atoms within a tile processed sequentially.
+//!
+//! Static · Approximate · Flat.  Grid-stride tile assignment: thread `t`
+//! owns tiles `t, t + T, t + 2T, …` for `T` total threads — exactly the
+//! `range(begin, end).step(gridDim*blockDim)` of the paper's Listing 4.2.
+
+use super::{Assignment, Granularity, Segment, WorkSource, WorkerAssignment};
+
+/// Assign tiles to `threads` workers, grid-strided.
+pub fn assign(src: &impl WorkSource, threads: usize) -> Assignment {
+    let offsets = src.offsets();
+    let tiles = src.num_tiles();
+    let threads = threads.max(1);
+    let mut workers = Vec::with_capacity(threads.min(tiles.max(1)));
+    for t in 0..threads.min(tiles.max(1)) {
+        let mut segments = Vec::new();
+        let mut tile = t;
+        while tile < tiles {
+            segments.push(Segment {
+                tile: tile as u32,
+                atom_begin: offsets[tile],
+                atom_end: offsets[tile + 1],
+            });
+            tile += threads;
+        }
+        workers.push(WorkerAssignment {
+            granularity: Granularity::Thread,
+            segments,
+        });
+    }
+    Assignment {
+        schedule: "thread-mapped",
+        workers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balance::OffsetsSource;
+    use crate::sparse::gen;
+
+    #[test]
+    fn covers_exactly() {
+        let a = gen::power_law(257, 128, 64, 1.8, 1);
+        let asg = assign(&a, 64);
+        asg.validate(&a).unwrap();
+    }
+
+    #[test]
+    fn grid_stride_tile_distribution() {
+        let offs = vec![0usize, 1, 2, 3, 4, 5];
+        let src = OffsetsSource::new(&offs);
+        let asg = assign(&src, 2);
+        // Worker 0: tiles 0,2,4; worker 1: tiles 1,3.
+        assert_eq!(asg.workers[0].segments.len(), 3);
+        assert_eq!(asg.workers[1].segments.len(), 2);
+        assert_eq!(asg.workers[0].segments[1].tile, 2);
+    }
+
+    #[test]
+    fn more_threads_than_tiles() {
+        let offs = vec![0usize, 3, 7];
+        let src = OffsetsSource::new(&offs);
+        let asg = assign(&src, 100);
+        assert_eq!(asg.workers.len(), 2);
+        asg.validate(&src).unwrap();
+    }
+
+    #[test]
+    fn empty_source() {
+        let offs = vec![0usize];
+        let src = OffsetsSource::new(&offs);
+        let asg = assign(&src, 4);
+        assert_eq!(asg.covered_atoms(), 0);
+        asg.validate(&src).unwrap();
+    }
+
+    #[test]
+    fn serializes_atoms_per_tile() {
+        // The thread-mapped failure mode: one huge tile lands on one thread.
+        let offs = vec![0usize, 1000, 1001, 1002, 1003];
+        let src = OffsetsSource::new(&offs);
+        let asg = assign(&src, 4);
+        assert_eq!(asg.max_worker_atoms(), 1000);
+    }
+}

@@ -1,0 +1,15 @@
+//! Baseline comparators — the vendor libraries the paper evaluates against,
+//! rebuilt on the same simulator so the comparisons are apples-to-apples
+//! (DESIGN.md substitution table).
+//!
+//! * [`vendor_spmv`] — "cuSparse-like": CSR-scalar / CSR-vector kernels
+//!   behind a mean-row-length heuristic.
+//! * [`cub_spmv`]    — "CUB-like": a *hardwired* merge-path SpMV (schedule
+//!   fused into the kernel), including CUB's `columns == 1` thread-mapped
+//!   special case (the Fig. 4.2 outliers).
+//! * [`vendor_gemm`] — "cuBLAS-like": an ensemble of data-parallel tilings
+//!   plus a kernel-selection heuristic, and the idealized CUTLASS oracle.
+
+pub mod cub_spmv;
+pub mod vendor_gemm;
+pub mod vendor_spmv;

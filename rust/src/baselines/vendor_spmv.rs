@@ -1,0 +1,115 @@
+//! "cuSparse-like" SpMV baseline: the classic vendor pair of CSR kernels
+//! behind a row-length heuristic.
+//!
+//! * **CSR-scalar** — one thread per row (thread-mapped): wins on short
+//!   regular rows, collapses under warp divergence on skewed rows.
+//! * **CSR-vector** — one warp per row (warp-mapped): wins on long rows,
+//!   wastes 32-wide lanes on short ones.
+//!
+//! The heuristic picks by mean nonzeros-per-row, which is precisely the
+//! failure mode the paper's Fig. 4.3/4.4 exploit: mean-based selection
+//! cannot see the variance that actually determines performance.
+
+use crate::balance::ScheduleKind;
+use crate::exec::spmv;
+use crate::sim::{GpuSpec, SpmvCost};
+use crate::sparse::{stats, Csr};
+
+/// Which vendor kernel the heuristic selected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VendorKernel {
+    CsrScalar,
+    CsrVector,
+}
+
+/// Mean-row-length kernel selection (threshold ~ half warp).
+pub fn select_kernel(a: &Csr) -> VendorKernel {
+    let s = stats::row_stats(a);
+    if s.mean >= 16.0 {
+        VendorKernel::CsrVector
+    } else {
+        VendorKernel::CsrScalar
+    }
+}
+
+/// Modeled vendor SpMV time for a matrix.
+pub fn modeled_time(a: &Csr, cost: &SpmvCost, gpu: &GpuSpec) -> f64 {
+    let workers = gpu.sms * cost.block_threads;
+    match select_kernel(a) {
+        VendorKernel::CsrScalar => {
+            let kind = ScheduleKind::ThreadMapped;
+            spmv::modeled_time(a, &kind.assign(a, workers), Some(kind), cost, gpu)
+        }
+        VendorKernel::CsrVector => {
+            // Warp per row: group-mapped with one tile per warp-group.
+            let kind = ScheduleKind::GroupMapped(32);
+            let groups = a.rows; // one row per warp, oversubscribed
+            spmv::modeled_time(a, &kind.assign(a, groups), None, cost, gpu)
+        }
+    }
+}
+
+/// Vendor numerics (identical math, for completeness in comparisons).
+pub fn execute_host(a: &Csr, x: &[f64]) -> Vec<f64> {
+    a.spmv_ref(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn heuristic_picks_scalar_for_short_rows() {
+        let a = gen::uniform(1024, 1024, 4, 1);
+        assert_eq!(select_kernel(&a), VendorKernel::CsrScalar);
+    }
+
+    #[test]
+    fn heuristic_picks_vector_for_long_rows() {
+        let a = gen::uniform(256, 4096, 64, 2);
+        assert_eq!(select_kernel(&a), VendorKernel::CsrVector);
+    }
+
+    #[test]
+    fn modeled_time_positive() {
+        let gpu = GpuSpec::v100();
+        let cost = SpmvCost::calibrate(&gpu);
+        for seed in 0..3 {
+            let a = gen::power_law(512, 512, 256, 1.8, seed);
+            assert!(modeled_time(&a, &cost, &gpu) > 0.0);
+        }
+    }
+
+    #[test]
+    fn mean_heuristic_blind_to_variance() {
+        // A matrix whose *mean* row length sits below the vector threshold
+        // but which hides a handful of giant rows: the vendor heuristic
+        // picks CSR-scalar, which is catastrophic vs merge-path.
+        let gpu = GpuSpec::v100();
+        let cost = SpmvCost::calibrate(&gpu);
+        let mut coo = crate::sparse::Coo::new(4096, 4096);
+        let mut rng = crate::rng::Rng::new(3);
+        for r in 0..4096usize {
+            let deg = if r % 1000 == 0 { 3000 } else { 6 };
+            for c in rng.sample_indices(4096, deg) {
+                coo.push(r, c, 1.0);
+            }
+        }
+        let skewed = crate::sparse::Csr::from_coo(&coo);
+        assert_eq!(select_kernel(&skewed), VendorKernel::CsrScalar);
+        let vendor = modeled_time(&skewed, &cost, &gpu);
+        let kind = ScheduleKind::MergePath;
+        let mp = spmv::modeled_time(
+            &skewed,
+            &kind.assign(&skewed, gpu.sms * cost.block_threads),
+            Some(kind),
+            &cost,
+            &gpu,
+        );
+        assert!(
+            vendor > 2.0 * mp,
+            "expected big merge-path win: vendor={vendor} mp={mp}"
+        );
+    }
+}

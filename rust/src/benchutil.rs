@@ -1,0 +1,165 @@
+//! Minimal benchmarking harness (offline build: no criterion).
+//!
+//! Criterion-style calibrated timing: warm up, pick an iteration count that
+//! targets a measurement window, take repeated samples, report
+//! median/mean/min with ns/op.  Used by the `cargo bench` targets
+//! (`harness = false`).
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// One benchmark's aggregated result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub ns_per_iter_median: f64,
+    pub ns_per_iter_mean: f64,
+    pub ns_per_iter_min: f64,
+    pub iters_per_sample: u64,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.ns_per_iter_median * 1e-9)
+    }
+}
+
+/// Bench runner with a fixed time budget per benchmark.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(600),
+            samples: 11,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(150),
+            samples: 5,
+            results: Vec::new(),
+        }
+    }
+
+    /// Run one benchmark; `f` is the operation under test (its return value
+    /// is black-boxed to keep the optimizer honest).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        // Warmup + iteration-count calibration.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup || warm_iters < 1 {
+            black_box(f());
+            warm_iters += 1;
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+        let target = self.measure.as_secs_f64() / self.samples as f64;
+        let iters = ((target / per_iter).ceil() as u64).max(1);
+
+        let mut sample_ns = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            sample_ns.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        sample_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sample_ns[sample_ns.len() / 2];
+        let mean = sample_ns.iter().sum::<f64>() / sample_ns.len() as f64;
+        let min = sample_ns[0];
+
+        let r = BenchResult {
+            name: name.to_string(),
+            ns_per_iter_median: median,
+            ns_per_iter_mean: mean,
+            ns_per_iter_min: min,
+            iters_per_sample: iters,
+            samples: self.samples,
+        };
+        println!(
+            "bench {:<44} {:>12}/iter  (mean {}, min {}, {} iters x {} samples)",
+            r.name,
+            fmt_ns(median),
+            fmt_ns(mean),
+            fmt_ns(min),
+            iters,
+            self.samples
+        );
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Render all results as a summary block.
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        for r in &self.results {
+            out.push_str(&format!(
+                "{}\t{:.1}\tns/iter\n",
+                r.name, r.ns_per_iter_median
+            ));
+        }
+        out
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            samples: 3,
+            results: Vec::new(),
+        };
+        let r = b.bench("noop-sum", || (0..100u64).sum::<u64>());
+        assert!(r.ns_per_iter_median > 0.0);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn ordering_sane() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(30),
+            samples: 3,
+            results: Vec::new(),
+        };
+        let small = b.bench("small", || (0..10u64).sum::<u64>()).ns_per_iter_median;
+        let big = b
+            .bench("big", || (0..100_000u64).sum::<u64>())
+            .ns_per_iter_median;
+        assert!(big > small);
+    }
+}

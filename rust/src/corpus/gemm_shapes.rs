@@ -1,0 +1,125 @@
+//! The Fig. 5.6 GEMM-shape domain: "32,824 different problem sizes and
+//! shapes, log-sampled at random within a domain of m, n, and k matrix
+//! dimensions whose volume spans six orders of magnitude"
+//! (m, n, k ∈ {128 … 8192}).
+
+use crate::rng::Rng;
+use crate::streamk::GemmShape;
+
+/// 32,768 log-sampled shapes + 56 structured power-of-two corners = the
+/// paper's 32,824.
+pub const GEMM_CORPUS_SIZE: usize = 32_824;
+
+const LO: f64 = 128.0;
+const HI: f64 = 8192.0;
+const SEED: u64 = 0x5EED_6EB3;
+
+/// Deterministic full corpus.
+pub fn gemm_corpus() -> Vec<GemmShape> {
+    let mut out = Vec::with_capacity(GEMM_CORPUS_SIZE);
+    let mut rng = Rng::new(SEED);
+    for _ in 0..32_768 {
+        let m = rng.log_uniform(LO, HI + 1.0).round() as usize;
+        let n = rng.log_uniform(LO, HI + 1.0).round() as usize;
+        let k = rng.log_uniform(LO, HI + 1.0).round() as usize;
+        out.push(GemmShape::new(m, n, k));
+    }
+    // 56 structured corners: all power-of-two (m, n, k) with the three axes
+    // drawn from {128, 1024, 8192} plus deep/flat extremes — 27 grid points
+    // + 29 aspect-ratio extremes.
+    let axis = [128usize, 1024, 8192];
+    for &m in &axis {
+        for &n in &axis {
+            for &k in &axis {
+                out.push(GemmShape::new(m, n, k));
+            }
+        }
+    }
+    let extremes = [
+        (128, 8192, 128),
+        (8192, 128, 128),
+        (128, 128, 8192),
+        (8192, 8192, 128),
+        (128, 8192, 8192),
+        (8192, 128, 8192),
+        (256, 256, 256),
+        (512, 512, 512),
+        (2048, 2048, 2048),
+        (4096, 4096, 4096),
+        (384, 384, 128),
+        (896, 384, 128),
+        (128, 128, 12288),
+        (256, 4096, 256),
+        (4096, 256, 256),
+        (640, 640, 640),
+        (1280, 1280, 1280),
+        (2560, 2560, 2560),
+        (5120, 5120, 5120),
+        (768, 768, 3072),
+        (3072, 768, 768),
+        (768, 3072, 768),
+        (1536, 1536, 1536),
+        (6144, 6144, 192),
+        (192, 6144, 6144),
+        (6144, 192, 6144),
+        (224, 224, 224),
+        (7168, 7168, 7168),
+        (1024, 1024, 65536 / 8),
+    ];
+    for &(m, n, k) in &extremes {
+        out.push(GemmShape::new(m, n, k));
+    }
+    debug_assert_eq!(out.len(), GEMM_CORPUS_SIZE);
+    out
+}
+
+/// Deterministic sub-sample (stride) for heavier per-shape evaluations.
+pub fn gemm_corpus_sample(n: usize) -> Vec<GemmShape> {
+    let full = gemm_corpus();
+    if n >= full.len() {
+        return full;
+    }
+    let stride = full.len() / n;
+    full.into_iter().step_by(stride.max(1)).take(n).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_size_matches_paper() {
+        assert_eq!(gemm_corpus().len(), 32_824);
+    }
+
+    #[test]
+    fn corpus_is_deterministic() {
+        let a = gemm_corpus();
+        let b = gemm_corpus();
+        assert_eq!(a[..100], b[..100]);
+        assert_eq!(a[32_000], b[32_000]);
+    }
+
+    #[test]
+    fn corpus_within_domain() {
+        for s in gemm_corpus() {
+            assert!((128..=8192 + 1).contains(&s.m), "{s:?}");
+            assert!((128..=8192 + 1).contains(&s.n), "{s:?}");
+            assert!(s.k >= 128, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn volume_spans_six_orders() {
+        let vols: Vec<f64> = gemm_corpus().iter().map(|s| s.flops()).collect();
+        let min = vols.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = vols.iter().cloned().fold(0.0, f64::max);
+        assert!(max / min > 1e5, "span {}", max / min);
+    }
+
+    #[test]
+    fn sample_is_subset_and_sized() {
+        let s = gemm_corpus_sample(500);
+        assert!(s.len() >= 500 && s.len() <= 520);
+    }
+}

@@ -1,0 +1,13 @@
+//! Evaluation corpora.
+//!
+//! * [`gemm_shapes`] — the Fig. 5.6 domain: 32,824 GEMM problem shapes,
+//!   m/n/k log-sampled over a volume spanning six orders of magnitude.
+//! * [`sparse_corpus`] — the SuiteSparse substitution: a deterministic
+//!   synthetic collection spanning the row-length-distribution regimes of
+//!   the real collection (DESIGN.md).
+
+pub mod gemm_shapes;
+pub mod sparse_corpus;
+
+pub use gemm_shapes::{gemm_corpus, GEMM_CORPUS_SIZE};
+pub use sparse_corpus::{sparse_corpus, SparseEntry};

@@ -1,0 +1,144 @@
+//! The SuiteSparse substitution: a deterministic synthetic collection
+//! spanning the row-length-distribution regimes of the real collection —
+//! regular meshes, scale-free graphs, banded solvers, circuit blocks, R-MAT
+//! graphs, and the degenerate single-column "sparse vector" population CUB
+//! special-cases.
+
+use crate::sparse::{gen, stats, Csr};
+
+/// One corpus entry: a generated matrix plus its provenance.
+pub struct SparseEntry {
+    pub name: String,
+    pub family: &'static str,
+    pub matrix: Csr,
+}
+
+impl SparseEntry {
+    pub fn stats(&self) -> stats::RowStats {
+        stats::row_stats(&self.matrix)
+    }
+}
+
+/// Build the corpus.  `scale` in [0, 2]: 0 = tiny smoke corpus (fast
+/// tests), 1 = the standard evaluation corpus (~90 matrices), 2 = extended.
+pub fn sparse_corpus(scale: usize) -> Vec<SparseEntry> {
+    let mut out = Vec::new();
+    let (sizes, seeds_per_cfg): (&[usize], u64) = match scale {
+        0 => (&[256, 1024], 1),
+        1 => (&[512, 2048, 8192, 32768], 3),
+        _ => (&[512, 2048, 8192, 32768, 131072], 4),
+    };
+
+    let mut push = |name: String, family: &'static str, m: Csr| {
+        out.push(SparseEntry {
+            name,
+            family,
+            matrix: m,
+        });
+    };
+
+    let mut seed = 1000u64;
+    for &n in sizes {
+        for s in 0..seeds_per_cfg {
+            seed += 1;
+            // Regular FEM-like meshes.
+            push(
+                format!("uniform_{n}_d8_s{s}"),
+                "uniform",
+                gen::uniform(n, n, 8, seed),
+            );
+            seed += 1;
+            push(
+                format!("uniform_{n}_d32_s{s}"),
+                "uniform",
+                gen::uniform(n, n, 32.min(n / 4).max(2), seed),
+            );
+            // Scale-free graphs (the imbalance stress cases).
+            seed += 1;
+            push(
+                format!("powerlaw_{n}_a13_s{s}"),
+                "power-law",
+                gen::power_law(n, n, n / 2, 1.3, seed),
+            );
+            seed += 1;
+            push(
+                format!("powerlaw_{n}_a20_s{s}"),
+                "power-law",
+                gen::power_law(n, n, n / 2, 2.0, seed),
+            );
+            // Banded stencils.
+            seed += 1;
+            push(format!("banded_{n}_b4_s{s}"), "banded", gen::banded(n, 4, seed));
+            // Circuit-style block diagonals.
+            seed += 1;
+            push(
+                format!("blockdiag_{n}_b16_s{s}"),
+                "block-diag",
+                gen::block_diag(n, 16, seed),
+            );
+        }
+        // R-MAT graphs at matching scale (one per size).
+        let sc = (n as f64).log2().round() as u32;
+        seed += 1;
+        push(
+            format!("rmat_{n}_e8"),
+            "rmat",
+            gen::rmat(sc.min(17), 8, seed),
+        );
+        // Sparse vectors (cols == 1): the CUB heuristic population.
+        seed += 1;
+        push(
+            format!("spvec_{n}"),
+            "sparse-vector",
+            gen::tall_skinny(n, 0.4, seed),
+        );
+        // Wide-short aspect ratio.
+        seed += 1;
+        push(
+            format!("wideshort_{n}"),
+            "wide-short",
+            gen::wide_short((n / 64).max(8), n, 48.min(n / 8).max(2), seed),
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_corpus_builds() {
+        let c = sparse_corpus(0);
+        assert!(c.len() >= 15, "{}", c.len());
+        for e in &c {
+            assert!(e.matrix.nnz() > 0, "{} empty", e.name);
+        }
+    }
+
+    #[test]
+    fn corpus_is_deterministic() {
+        let a = sparse_corpus(0);
+        let b = sparse_corpus(0);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.matrix, y.matrix);
+        }
+    }
+
+    #[test]
+    fn corpus_spans_regularity_regimes() {
+        let c = sparse_corpus(0);
+        let cvs: Vec<f64> = c.iter().map(|e| e.stats().cv).collect();
+        let min_cv = cvs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max_cv = cvs.iter().cloned().fold(0.0, f64::max);
+        assert!(min_cv < 0.05, "has regular members (min_cv={min_cv})");
+        assert!(max_cv > 1.0, "has skewed members (max_cv={max_cv})");
+    }
+
+    #[test]
+    fn corpus_contains_sparse_vectors() {
+        let c = sparse_corpus(0);
+        assert!(c.iter().any(|e| e.matrix.cols == 1));
+    }
+}

@@ -1,0 +1,157 @@
+//! Row-major dense matrices for the GEMM executors.
+
+use crate::rng::Rng;
+
+/// Row-major dense matrix of f64 (converted at the PJRT boundary).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl DenseMat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        DenseMat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn random(rows: usize, cols: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        DenseMat {
+            rows,
+            cols,
+            data: (0..rows * cols).map(|_| rng.range_f64(-1.0, 1.0)).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f64 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    /// Copy the `(r0..r0+h, c0..c0+w)` window, zero-padded past the edge.
+    pub fn window(&self, r0: usize, c0: usize, h: usize, w: usize) -> Vec<f64> {
+        let mut out = vec![0.0; h * w];
+        for r in 0..h {
+            if r0 + r >= self.rows {
+                break;
+            }
+            let src_start = (r0 + r) * self.cols + c0;
+            let copy_w = w.min(self.cols.saturating_sub(c0));
+            out[r * w..r * w + copy_w]
+                .copy_from_slice(&self.data[src_start..src_start + copy_w]);
+        }
+        out
+    }
+
+    /// Add a `(h x w)` tile into the `(r0, c0)` window (clipped at edges).
+    pub fn add_window(&mut self, tile: &[f64], r0: usize, c0: usize, h: usize, w: usize) {
+        for r in 0..h {
+            if r0 + r >= self.rows {
+                break;
+            }
+            let copy_w = w.min(self.cols.saturating_sub(c0));
+            for c in 0..copy_w {
+                self.data[(r0 + r) * self.cols + c0 + c] += tile[r * w + c];
+            }
+        }
+    }
+
+    /// Reference GEMM: `C = A · B` (triple loop, ground truth).
+    pub fn matmul_ref(a: &DenseMat, b: &DenseMat) -> DenseMat {
+        assert_eq!(a.cols, b.rows);
+        let mut c = DenseMat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for l in 0..a.cols {
+                let av = a.at(i, l);
+                if av == 0.0 {
+                    continue;
+                }
+                for j in 0..b.cols {
+                    c.data[i * b.cols + j] += av * b.at(l, j);
+                }
+            }
+        }
+        c
+    }
+
+    /// Max absolute elementwise difference.
+    pub fn max_abs_diff(&self, other: &DenseMat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let mut i2 = DenseMat::zeros(2, 2);
+        *i2.at_mut(0, 0) = 1.0;
+        *i2.at_mut(1, 1) = 1.0;
+        let a = DenseMat::random(2, 2, 1);
+        assert_eq!(DenseMat::matmul_ref(&a, &i2), a);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = DenseMat {
+            rows: 2,
+            cols: 2,
+            data: vec![1.0, 2.0, 3.0, 4.0],
+        };
+        let b = DenseMat {
+            rows: 2,
+            cols: 2,
+            data: vec![1.0, 1.0, 1.0, 1.0],
+        };
+        let c = DenseMat::matmul_ref(&a, &b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn window_zero_pads_past_edges() {
+        let a = DenseMat {
+            rows: 2,
+            cols: 2,
+            data: vec![1.0, 2.0, 3.0, 4.0],
+        };
+        let w = a.window(1, 1, 2, 2);
+        assert_eq!(w, vec![4.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn add_window_clips() {
+        let mut a = DenseMat::zeros(2, 2);
+        a.add_window(&[1.0, 2.0, 3.0, 4.0], 1, 1, 2, 2);
+        assert_eq!(a.data, vec![0.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn window_roundtrip_interior() {
+        let a = DenseMat::random(8, 8, 3);
+        let w = a.window(2, 4, 3, 2);
+        let mut b = DenseMat::zeros(8, 8);
+        b.add_window(&w, 2, 4, 3, 2);
+        for r in 2..5 {
+            for c in 4..6 {
+                assert_eq!(b.at(r, c), a.at(r, c));
+            }
+        }
+    }
+}

@@ -1,0 +1,291 @@
+//! GEMM execution over a Stream-K [`Plan`]: host numerics, PJRT numerics,
+//! and simulated timing.
+
+use crate::runtime::{HostTensor, Runtime};
+use crate::sim::gpu::Precision;
+use crate::sim::{self, CostModel, CtaWork, GpuSpec};
+use crate::streamk::{CtaPlan, Plan};
+use crate::Result;
+
+use super::dense::DenseMat;
+
+/// Execute a plan on host matrices: every CTA's MAC-loop iterations run in
+/// plan order; partial tiles accumulate — semantics of Algorithm 10 with
+/// the fixup realized as commutative accumulation.
+pub fn execute_plan_host(a: &DenseMat, b: &DenseMat, plan: &Plan) -> DenseMat {
+    assert_eq!(a.cols, b.rows);
+    let (bm, bn, bk) = (plan.blocking.bm, plan.blocking.bn, plan.blocking.bk);
+    let tiles_n = plan.shape.n.div_ceil(bn);
+    let mut c = DenseMat::zeros(plan.shape.m, plan.shape.n);
+
+    for cta in &plan.ctas {
+        for range in &cta.ranges {
+            let tile_r = (range.tile / tiles_n) * bm;
+            let tile_c = (range.tile % tiles_n) * bn;
+            // Accumulate this CTA's share of the tile's k-iterations.
+            let mut acc = vec![0.0f64; bm * bn];
+            for it in range.iter_begin..range.iter_end {
+                let k0 = it as usize * bk;
+                let a_blk = a.window(tile_r, k0, bm, bk);
+                let b_blk = b.window(k0, tile_c, bk, bn);
+                for i in 0..bm {
+                    for l in 0..bk {
+                        let av = a_blk[i * bk + l];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        for j in 0..bn {
+                            acc[i * bn + j] += av * b_blk[l * bn + j];
+                        }
+                    }
+                }
+            }
+            c.add_window(&acc, tile_r, tile_c, bm, bn);
+        }
+    }
+    c
+}
+
+/// Execute a plan through the AOT Pallas MacLoop artifacts (the production
+/// three-layer path).  Requires the plan's blocking to match an artifact
+/// geometry (`gemm_mac_iter_{f32,f64}` from the manifest).
+pub fn execute_plan_runtime(
+    a: &DenseMat,
+    b: &DenseMat,
+    plan: &Plan,
+    rt: &Runtime,
+    prec: Precision,
+) -> Result<DenseMat> {
+    let (bm, bn, bk) = (plan.blocking.bm, plan.blocking.bn, plan.blocking.bk);
+    let suffix = prec.artifact_suffix();
+    let mac_name = format!("gemm_mac_iter_{suffix}");
+    let slab_name = format!("gemm_mac_slab8_{suffix}");
+    let spec = rt
+        .manifest()
+        .get(&mac_name)
+        .ok_or_else(|| anyhow::anyhow!("missing artifact {mac_name}"))?;
+    anyhow::ensure!(
+        spec.meta_usize("blk_m") == Some(bm)
+            && spec.meta_usize("blk_n") == Some(bn)
+            && spec.meta_usize("blk_k") == Some(bk),
+        "plan blocking {:?} != artifact blocking",
+        plan.blocking
+    );
+    let slab_iters = rt
+        .manifest()
+        .get(&slab_name)
+        .and_then(|s| s.meta_usize("iters"))
+        .unwrap_or(8) as u64;
+
+    let tiles_n = plan.shape.n.div_ceil(bn);
+    let mut c = DenseMat::zeros(plan.shape.m, plan.shape.n);
+
+    let to_tensor = |data: Vec<f64>, shape: Vec<usize>| -> HostTensor {
+        match prec {
+            Precision::F16F32 => {
+                HostTensor::F32(data.into_iter().map(|v| v as f32).collect(), shape)
+            }
+            Precision::F64 => HostTensor::F64(data, shape),
+        }
+    };
+    let from_tensor = |t: HostTensor| -> Vec<f64> {
+        match t {
+            HostTensor::F32(v, _) => v.into_iter().map(|x| x as f64).collect(),
+            HostTensor::F64(v, _) => v,
+            HostTensor::I32(..) => unreachable!("gemm artifacts return floats"),
+        }
+    };
+
+    use crate::runtime::DevInput;
+    for cta in &plan.ctas {
+        for range in &cta.ranges {
+            let tile_r = (range.tile / tiles_n) * bm;
+            let tile_c = (range.tile % tiles_n) * bn;
+            // The accumulator tile stays resident on the device across the
+            // whole MAC-loop range — no host round trips between
+            // iterations (§Perf: device-buffer chaining).
+            let mut acc = rt.to_device(&to_tensor(vec![0.0; bm * bn], vec![bm, bn]))?;
+            let mut it = range.iter_begin;
+            while it < range.iter_end {
+                let remaining = range.iter_end - it;
+                if remaining >= slab_iters {
+                    // Fused 8-iteration slab (the pipelined path).
+                    let k0 = it as usize * bk;
+                    let kw = slab_iters as usize * bk;
+                    let a_blk = to_tensor(a.window(tile_r, k0, bm, kw), vec![bm, kw]);
+                    let b_blk = to_tensor(b.window(k0, tile_c, kw, bn), vec![kw, bn]);
+                    acc = rt.execute_dev(
+                        &slab_name,
+                        &[DevInput::Host(a_blk), DevInput::Host(b_blk), DevInput::Dev(&acc)],
+                    )?;
+                    it += slab_iters;
+                } else {
+                    let k0 = it as usize * bk;
+                    let a_blk = to_tensor(a.window(tile_r, k0, bm, bk), vec![bm, bk]);
+                    let b_blk = to_tensor(b.window(k0, tile_c, bk, bn), vec![bk, bn]);
+                    acc = rt.execute_dev(
+                        &mac_name,
+                        &[DevInput::Host(a_blk), DevInput::Host(b_blk), DevInput::Dev(&acc)],
+                    )?;
+                    it += 1;
+                }
+            }
+            // Fixup: accumulate the partial tile into C (tile_add artifact
+            // when shared; direct store when exclusive — we accumulate
+            // uniformly, which is numerically identical).
+            c.add_window(&from_tensor(rt.to_host(&acc)?), tile_r, tile_c, bm, bn);
+        }
+    }
+    Ok(c)
+}
+
+/// Simulated execution: cost each CTA with the §5.3.1.1 model, dispatch on
+/// the block scheduler, report the timeline.
+#[derive(Debug, Clone)]
+pub struct GemmSim {
+    pub makespan: f64,
+    pub achieved_tflops: f64,
+    /// Fraction of device peak achieved (the Fig. 5.7/5.8 y-axis).
+    pub utilization: f64,
+    pub ctas: usize,
+}
+
+pub fn simulate_plan(plan: &Plan, model: &CostModel, gpu: &GpuSpec, prec: Precision) -> GemmSim {
+    let peers = plan.peers_per_tile();
+    let costs: Vec<CtaWork> = plan
+        .ctas
+        .iter()
+        .map(|cta| CtaWork::new(cta_cost(cta, &peers, model)))
+        .collect();
+    let timeline = sim::simulate(gpu, &costs);
+    let makespan = timeline.makespan.max(1e-12);
+    let achieved = plan.shape.flops() / makespan / 1e12;
+    GemmSim {
+        makespan,
+        achieved_tflops: achieved,
+        utilization: achieved / gpu.peak_tflops(prec),
+        ctas: plan.ctas.len(),
+    }
+}
+
+/// Per-CTA cost: fixed launch + MAC iterations (with the §5.3.2
+/// tile-processing-skew penalty when the CTA's share starts mid-tile) +
+/// partial-store per shared non-starting range + peer accumulation per
+/// shared starting range.
+fn cta_cost(cta: &CtaPlan, peers: &[u32], m: &CostModel) -> f64 {
+    // A CTA whose first range begins mid-tile runs k-staggered relative to
+    // its neighbors for its entire duration ("this skew will persist for
+    // the duration of the GEMM computation", §5.3.2) — its MAC iterations
+    // lose cross-CTA fragment reuse.
+    let skewed = cta
+        .ranges
+        .first()
+        .map(|r| !r.starts_tile())
+        .unwrap_or(false);
+    let c_eff = if skewed { m.c * (1.0 + m.skew) } else { m.c };
+    let mut cost = m.a + c_eff * cta.iters() as f64;
+    for r in &cta.ranges {
+        let p = peers[r.tile] as f64;
+        if p > 1.0 {
+            if r.starts_tile() {
+                cost += m.d * (p - 1.0);
+            } else {
+                cost += m.b;
+            }
+        }
+    }
+    cost
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::gpu::Precision;
+    use crate::streamk::{decomp, Blocking, Decomposition, GemmShape};
+
+    fn check_numerics(shape: GemmShape, blk: Blocking, d: Decomposition) {
+        let a = DenseMat::random(shape.m, shape.k, 1);
+        let b = DenseMat::random(shape.k, shape.n, 2);
+        let want = DenseMat::matmul_ref(&a, &b);
+        let plan = decomp::plan(shape, blk, d);
+        plan.validate().unwrap();
+        let got = execute_plan_host(&a, &b, &plan);
+        assert!(
+            got.max_abs_diff(&want) < 1e-9,
+            "{:?} diff={}",
+            d,
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn host_numerics_all_decompositions() {
+        let shape = GemmShape::new(96, 64, 80);
+        let blk = Blocking::new(32, 32, 16);
+        for d in [
+            Decomposition::DataParallel,
+            Decomposition::FixedSplit { s: 3 },
+            Decomposition::StreamK { g: 4 },
+            Decomposition::StreamK { g: 7 },
+            Decomposition::HybridOneTile { p: 4 },
+            Decomposition::HybridTwoTile { p: 4 },
+        ] {
+            check_numerics(shape, blk, d);
+        }
+    }
+
+    #[test]
+    fn host_numerics_ragged_edges() {
+        // Shapes not divisible by the blocking: window zero-padding must
+        // keep results exact.
+        let shape = GemmShape::new(50, 70, 90);
+        let blk = Blocking::new(32, 32, 16);
+        check_numerics(shape, blk, Decomposition::StreamK { g: 5 });
+    }
+
+    #[test]
+    fn sim_streamk_beats_dp_on_partial_wave() {
+        // 9 tiles on 4 SMs: DP at 75% quantization; Stream-K ~100%.
+        let shape = GemmShape::new(384, 384, 4096);
+        let blk = Blocking::new(128, 128, 32);
+        let gpu = GpuSpec::toy(4);
+        let model = CostModel::calibrate(&gpu, (128, 128, 32), Precision::F16F32);
+        let dp = simulate_plan(
+            &decomp::plan(shape, blk, Decomposition::DataParallel),
+            &model,
+            &gpu,
+            Precision::F16F32,
+        );
+        let sk = simulate_plan(
+            &decomp::plan(shape, blk, Decomposition::StreamK { g: 4 }),
+            &model,
+            &gpu,
+            Precision::F16F32,
+        );
+        // DP wastes 25% of the device (75% quantization); Stream-K
+        // recovers most of it, minus fixup + tile-processing skew.
+        assert!(
+            sk.makespan < dp.makespan * 0.9,
+            "sk={} dp={}",
+            sk.makespan,
+            dp.makespan
+        );
+    }
+
+    #[test]
+    fn sim_utilization_bounded() {
+        let shape = GemmShape::new(4096, 4096, 4096);
+        let blk = Blocking::new(128, 128, 32);
+        let gpu = GpuSpec::a100();
+        let model = CostModel::calibrate(&gpu, (128, 128, 32), Precision::F16F32);
+        let r = simulate_plan(
+            &decomp::plan(shape, blk, Decomposition::StreamK { g: 108 }),
+            &model,
+            &gpu,
+            Precision::F16F32,
+        );
+        assert!(r.utilization > 0.0 && r.utilization <= 1.0, "{r:?}");
+        // Large compute-bound GEMM should be near peak.
+        assert!(r.utilization > 0.7, "util={}", r.utilization);
+    }
+}

@@ -1,0 +1,17 @@
+//! Work execution (the paper's third abstraction stage, §4.2.3): consume
+//! balanced work and compute.
+//!
+//! Every executor has three faces:
+//! 1. **host numerics** — pure-Rust reference execution of the *exact*
+//!    per-worker plan (validates that schedules preserve semantics);
+//! 2. **runtime numerics** — the same plan driven through the AOT-compiled
+//!    Pallas kernels via PJRT (the production path);
+//! 3. **modeled time** — the plan costed on the GPU simulator (the
+//!    performance-evaluation path; DESIGN.md substitution table).
+
+pub mod dense;
+pub mod gemm;
+pub mod graph;
+pub mod spgemm;
+pub mod spmm;
+pub mod spmv;

@@ -1,0 +1,33 @@
+//! # GPU Load Balancing — reproduction library
+//!
+//! Rust coordinator (L3) for the reproduction of *GPU Load Balancing*
+//! (Muhammad Osama, UC Davis dissertation, 2022).  Two contributions:
+//!
+//! * **Chapter 4** — a load-balancing abstraction for sparse-irregular
+//!   workloads that separates *workload mapping* ([`balance`]) from *work
+//!   execution* ([`exec`]).
+//! * **Chapter 5** — *Stream-K* ([`streamk`]), a work-centric parallel
+//!   decomposition of GEMM that evenly partitions aggregate MAC-loop
+//!   iterations over a fixed, device-filling grid of CTAs.
+//!
+//! The GPU itself is substituted by an execution-model simulator ([`sim`]);
+//! real numerics flow through AOT-compiled JAX/Pallas kernels executed via
+//! PJRT ([`runtime`]).  See DESIGN.md for the substitution rationale.
+
+pub mod balance;
+pub mod benchutil;
+pub mod cli;
+pub mod jsonlite;
+pub mod rng;
+pub mod baselines;
+pub mod corpus;
+pub mod exec;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod sparse;
+pub mod streamk;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

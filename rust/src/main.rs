@@ -1,0 +1,252 @@
+//! `gpulb` — CLI for the GPU Load Balancing reproduction.
+//!
+//! ```text
+//! gpulb figures [ID|all] [--scale 0|1|2] [--out DIR]
+//! gpulb spmv  [--matrix SPEC] [--schedule NAME] [--check-runtime]
+//! gpulb gemm  [--m M --n N --k K] [--decomp NAME] [--prec P] [--check-runtime]
+//! gpulb info
+//! ```
+
+use gpulb::balance::{self, ScheduleKind};
+use gpulb::baselines::vendor_gemm;
+use gpulb::cli::Args;
+use gpulb::exec::{dense::DenseMat, gemm as gemm_exec, spmv as spmv_exec};
+use gpulb::report::figures::{self, Scale};
+use gpulb::report::fmt;
+use gpulb::runtime::Runtime;
+use gpulb::sim::gpu::{GpuSpec, Precision};
+use gpulb::sim::SpmvCost;
+use gpulb::sparse::{gen, mtx};
+use gpulb::streamk::{self, decomp, Blocking, Decomposition, GemmShape};
+
+const USAGE: &str = "\
+gpulb — GPU Load Balancing reproduction (Osama 2022)
+
+USAGE:
+  gpulb figures [ID|all] [--scale 0|1|2] [--out DIR]
+  gpulb ablations [--scale 0|1]
+  gpulb spmv  [--matrix powerlaw:N|uniform:N:D|banded:N:B|rmat:S:E|file.mtx]
+              [--schedule auto|thread|warp|block|merge|nzsplit|binning|lrb]
+              [--check-runtime]
+  gpulb gemm  [--m M --n N --k K] [--decomp streamk|dp|fixed:S|hybrid1|hybrid2]
+              [--prec f16f32|f64] [--check-runtime]
+  gpulb info
+";
+
+fn parse_matrix(spec: &str) -> gpulb::Result<gpulb::sparse::Csr> {
+    if spec.ends_with(".mtx") {
+        return mtx::read(spec);
+    }
+    let parts: Vec<&str> = spec.split(':').collect();
+    let num = |i: usize, d: usize| -> usize {
+        parts.get(i).and_then(|s| s.parse().ok()).unwrap_or(d)
+    };
+    Ok(match parts[0] {
+        "powerlaw" => gen::power_law(num(1, 4096), num(1, 4096), num(1, 4096) / 2, 1.8, 7),
+        "uniform" => gen::uniform(num(1, 4096), num(1, 4096), num(2, 8), 7),
+        "banded" => gen::banded(num(1, 4096), num(2, 4), 7),
+        "rmat" => gen::rmat(num(1, 12) as u32, num(2, 8), 7),
+        other => anyhow::bail!("unknown matrix spec `{other}`"),
+    })
+}
+
+fn parse_schedule(s: &str, a: &gpulb::sparse::Csr) -> ScheduleKind {
+    match s {
+        "thread" => ScheduleKind::ThreadMapped,
+        "warp" => ScheduleKind::GroupMapped(32),
+        "block" => ScheduleKind::GroupMapped(128),
+        "merge" => ScheduleKind::MergePath,
+        "nzsplit" => ScheduleKind::NonzeroSplit,
+        "binning" => ScheduleKind::Binning,
+        "lrb" => ScheduleKind::Lrb,
+        _ => balance::select_schedule(a, balance::HeuristicParams::default()),
+    }
+}
+
+fn cmd_figures(args: &Args) -> gpulb::Result<()> {
+    let id = args
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let scale = Scale(args.opt_usize("scale", 1));
+    let out = args.opt("out").map(std::path::PathBuf::from);
+    if id == "all" {
+        for t in figures::run_all(scale, out.as_deref())? {
+            println!("{}", t.render());
+        }
+    } else {
+        match figures::run(&id, scale) {
+            Some(t) => {
+                if let Some(dir) = &out {
+                    t.write_csv(dir.join(format!("{id}.csv")))?;
+                }
+                println!("{}", t.render());
+            }
+            None => anyhow::bail!("unknown experiment `{id}`; ids: {:?}", figures::ALL),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_spmv(args: &Args) -> gpulb::Result<()> {
+    let matrix = args.opt_or("matrix", "powerlaw:4096");
+    let a = parse_matrix(&matrix)?;
+    let kind = parse_schedule(&args.opt_or("schedule", "auto"), &a);
+    let gpu = GpuSpec::v100();
+    let cost = SpmvCost::calibrate(&gpu);
+    let x: Vec<f64> = (0..a.cols).map(|i| ((i as f64) * 0.173).sin()).collect();
+
+    let workers = gpu.sms * cost.block_threads;
+    let asg = kind.assign(&a, workers);
+    asg.validate(&a)?;
+    let y = spmv_exec::execute_host(&a, &x, &asg);
+    let want = a.spmv_ref(&x);
+    let err = y
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f64::max);
+
+    let t = spmv_exec::modeled_time(&a, &asg, Some(kind), &cost, &gpu);
+    let vendor = gpulb::baselines::vendor_spmv::modeled_time(&a, &cost, &gpu);
+    println!("matrix: {} ({} x {}, nnz {})", matrix, a.rows, a.cols, a.nnz());
+    println!("schedule: {} ({} workers)", kind.name(), asg.workers.len());
+    println!("host numerics max|err| vs reference: {err:.3e}");
+    println!(
+        "modeled time: {} us  (cuSparse-like: {} us, speedup {})",
+        fmt(t * 1e6),
+        fmt(vendor * 1e6),
+        fmt(vendor / t)
+    );
+    if args.has_flag("check-runtime") {
+        let rt = Runtime::open_default()?;
+        let y_rt = spmv_exec::execute_runtime(&a, &x, &asg, &rt)?;
+        let err_rt = y_rt
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max);
+        println!(
+            "PJRT ({}) numerics max|err|: {err_rt:.3e}  [{} artifact calls]",
+            rt.platform(),
+            rt.call_counts().values().sum::<u64>()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_gemm(args: &Args) -> gpulb::Result<()> {
+    let prec = match args.opt_or("prec", "f16f32").as_str() {
+        "f64" => Precision::F64,
+        _ => Precision::F16F32,
+    };
+    let (m, n, k) = (
+        args.opt_usize("m", 512),
+        args.opt_usize("n", 512),
+        args.opt_usize("k", 512),
+    );
+    let shape = GemmShape::new(m, n, k);
+    let blk = Blocking::paper_default(prec);
+    let gpu = GpuSpec::a100();
+    let model = vendor_gemm::member_cost_model(&gpu, blk, prec);
+    let dstr = args.opt_or("decomp", "streamk");
+    let d = match dstr.as_str() {
+        "dp" => Decomposition::DataParallel,
+        "hybrid1" => Decomposition::HybridOneTile { p: gpu.sms },
+        "hybrid2" => Decomposition::HybridTwoTile { p: gpu.sms },
+        s if s.starts_with("fixed:") => Decomposition::FixedSplit {
+            s: s[6..].parse().unwrap_or(2),
+        },
+        _ => Decomposition::StreamK {
+            g: streamk::best_grid(shape, blk, gpu.sms, &model),
+        },
+    };
+    let plan = decomp::plan(shape, blk, d);
+    plan.validate()?;
+    let r = gemm_exec::simulate_plan(&plan, &model, &gpu, prec);
+    println!(
+        "GEMM {m}x{n}x{k} [{}], blocking {}x{}x{}",
+        prec.name(),
+        blk.bm,
+        blk.bn,
+        blk.bk
+    );
+    println!(
+        "decomposition: {} ({} CTAs, {} tiles, iter imbalance {})",
+        d.name(),
+        plan.ctas.len(),
+        plan.num_tiles,
+        plan.iter_imbalance()
+    );
+    println!(
+        "modeled: {} us, {} TFLOP/s ({}% of peak)",
+        fmt(r.makespan * 1e6),
+        fmt(r.achieved_tflops),
+        fmt(r.utilization * 100.0)
+    );
+    let dp = vendor_gemm::member_time(shape, blk, 1, &gpu, prec);
+    let cb = vendor_gemm::cublas_like_time(shape, &gpu, prec);
+    println!(
+        "baselines: data-parallel {} us (x{}), cuBLAS-like {} us (x{})",
+        fmt(dp * 1e6),
+        fmt(dp / r.makespan),
+        fmt(cb * 1e6),
+        fmt(cb / r.makespan)
+    );
+    if args.has_flag("check-runtime") {
+        let a = DenseMat::random(m, k, 1);
+        let b = DenseMat::random(k, n, 2);
+        let want = DenseMat::matmul_ref(&a, &b);
+        let rt = Runtime::open_default()?;
+        let got = gemm_exec::execute_plan_runtime(&a, &b, &plan, &rt, prec)?;
+        println!(
+            "PJRT ({}) numerics max|err|: {:.3e}",
+            rt.platform(),
+            got.max_abs_diff(&want)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info() -> gpulb::Result<()> {
+    let rt = Runtime::open_default()?;
+    println!("PJRT platform: {}", rt.platform());
+    println!("artifacts:");
+    for a in &rt.manifest().artifacts {
+        let shapes: Vec<String> = a
+            .inputs
+            .iter()
+            .map(|i| format!("{:?}:{}", i.shape, i.dtype))
+            .collect();
+        println!("  {} <- {}", a.name, shapes.join(", "));
+    }
+    Ok(())
+}
+
+fn main() -> gpulb::Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = argv.remove(0);
+    let args = Args::parse(argv);
+    match cmd.as_str() {
+        "figures" => cmd_figures(&args),
+        "ablations" => {
+            for t in gpulb::report::ablations::run_all(args.opt_usize("scale", 1)) {
+                println!("{}", t.render());
+            }
+            Ok(())
+        }
+        "spmv" => cmd_spmv(&args),
+        "gemm" => cmd_gemm(&args),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command `{other}`\n{USAGE}"),
+    }
+}

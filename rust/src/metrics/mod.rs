@@ -1,0 +1,115 @@
+//! Summary statistics used by the figure/table emitters: geometric mean,
+//! percentiles, speedup distributions.
+
+/// Geometric mean of positive values (ignores non-positive entries).
+pub fn geomean(xs: &[f64]) -> f64 {
+    let logs: Vec<f64> = xs.iter().filter(|&&x| x > 0.0).map(|x| x.ln()).collect();
+    if logs.is_empty() {
+        return f64::NAN;
+    }
+    (logs.iter().sum::<f64>() / logs.len() as f64).exp()
+}
+
+/// Arithmetic mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// p-th percentile (linear interpolation), p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Max value.
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NAN, f64::max)
+}
+
+/// Min value.
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NAN, f64::min)
+}
+
+/// Fraction of entries satisfying a predicate.
+pub fn fraction(xs: &[f64], pred: impl Fn(f64) -> bool) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().filter(|&&x| pred(x)).count() as f64 / xs.len() as f64
+}
+
+/// Speedup summary for a figure caption: geomean / peak / fraction >= 1.
+#[derive(Debug, Clone, Copy)]
+pub struct SpeedupSummary {
+    pub geomean: f64,
+    pub peak: f64,
+    pub min: f64,
+    pub frac_at_least_one: f64,
+    pub n: usize,
+}
+
+pub fn speedup_summary(speedups: &[f64]) -> SpeedupSummary {
+    SpeedupSummary {
+        geomean: geomean(speedups),
+        peak: max(speedups),
+        min: min(speedups),
+        frac_at_least_one: fraction(speedups, |x| x >= 1.0),
+        n: speedups.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+        assert!(geomean(&[]).is_nan());
+    }
+
+    #[test]
+    fn geomean_ignores_nonpositive() {
+        assert!((geomean(&[1.0, 4.0, 0.0, -3.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 50.0) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_fields() {
+        let s = speedup_summary(&[0.5, 1.0, 2.0, 8.0]);
+        assert!((s.peak - 8.0).abs() < 1e-12);
+        assert!((s.min - 0.5).abs() < 1e-12);
+        assert!((s.frac_at_least_one - 0.75).abs() < 1e-12);
+        assert_eq!(s.n, 4);
+    }
+}

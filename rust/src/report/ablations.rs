@@ -1,0 +1,255 @@
+//! Ablation studies for the design choices DESIGN.md calls out.
+//!
+//! * [`ablate_skew`] — tile-processing-skew penalty on/off: how much of the
+//!   hybrid schedules' reason-to-exist (§5.3.2) the cache-skew effect is.
+//! * [`ablate_grid_model`] — the §5.3.1.1 analytical grid-size model vs
+//!   fixed grid policies (always-p, always-tiles/DP): what the model buys.
+//! * [`ablate_heuristic`] — α/β sensitivity of the §4.5.2 schedule
+//!   selector on the sparse corpus.
+//! * [`ablate_persistent`] — many-blocks vs persistent-kernel launch
+//!   strategies (§3.6.1) on an irregular CTA population.
+//! * [`ablate_slab_fusion`] — MacLoop slab fusion factor (L1 structural:
+//!   kernel invocations per tile on the real PJRT request path).
+
+use super::{fmt, Table};
+use crate::balance::heuristic::HeuristicParams;
+use crate::baselines::{vendor_gemm, vendor_spmv};
+use crate::corpus::{gemm_shapes, sparse_corpus};
+use crate::exec::spmv;
+use crate::metrics;
+use crate::sim::gpu::{GpuSpec, Precision};
+use crate::sim::{self, CtaWork, SpmvCost};
+use crate::streamk::{self, decomp, Blocking, Decomposition, GemmShape};
+
+/// Skew penalty on/off across a band of shapes (two-tile hybrid vs basic).
+pub fn ablate_skew() -> Table {
+    let gpu = GpuSpec::a100();
+    let prec = Precision::F16F32;
+    let blk = Blocking::paper_default(prec);
+    let mut t = Table::new(
+        "Ablation — tile-processing skew penalty (hybrid-vs-basic rationale)",
+        &["shape", "skew", "basic_us", "two_tile_us", "two_tile/basic"],
+    );
+    for (label, shape) in [
+        ("many-wave 4096x4096x4096", GemmShape::new(4096, 4096, 4096)),
+        ("ragged 2100x1300x2048", GemmShape::new(2100, 1300, 2048)),
+        ("wide 896x384x4096", GemmShape::new(896, 384, 4096)),
+    ] {
+        for skew in [0.0, 0.15, 0.30] {
+            let mut model = vendor_gemm::member_cost_model(&gpu, blk, prec);
+            model.skew = skew;
+            let basic = crate::exec::gemm::simulate_plan(
+                &decomp::plan(shape, blk, Decomposition::StreamK { g: gpu.sms }),
+                &model,
+                &gpu,
+                prec,
+            )
+            .makespan;
+            let hybrid = crate::exec::gemm::simulate_plan(
+                &decomp::plan(shape, blk, Decomposition::HybridTwoTile { p: gpu.sms }),
+                &model,
+                &gpu,
+                prec,
+            )
+            .makespan;
+            t.row(vec![
+                label.into(),
+                fmt(skew),
+                fmt(basic * 1e6),
+                fmt(hybrid * 1e6),
+                fmt(hybrid / basic),
+            ]);
+        }
+    }
+    t
+}
+
+/// Grid policy: analytical model vs fixed policies across a corpus sample.
+pub fn ablate_grid_model(samples: usize) -> Table {
+    let gpu = GpuSpec::a100();
+    let prec = Precision::F16F32;
+    let blk = Blocking::paper_default(prec);
+    let model = vendor_gemm::member_cost_model(&gpu, blk, prec);
+    let shapes = gemm_shapes::gemm_corpus_sample(samples);
+
+    let eval = |d: Decomposition, shape: GemmShape| -> f64 {
+        crate::exec::gemm::simulate_plan(&decomp::plan(shape, blk, d), &model, &gpu, prec)
+            .makespan
+    };
+
+    let mut vs_fixed_p = Vec::new();
+    let mut vs_dp = Vec::new();
+    for &shape in &shapes {
+        let tiles = blk.tiles(shape);
+        let g_model = streamk::best_grid(shape, blk, gpu.sms, &model).max(tiles.min(gpu.sms));
+        let t_model = eval(Decomposition::StreamK { g: g_model }, shape)
+            .min(eval(Decomposition::DataParallel, shape));
+        let t_fixed_p = eval(
+            Decomposition::StreamK {
+                g: gpu.sms.min(blk.total_iters(shape).max(1) as usize),
+            },
+            shape,
+        );
+        let t_dp = eval(Decomposition::DataParallel, shape);
+        vs_fixed_p.push(t_fixed_p / t_model);
+        vs_dp.push(t_dp / t_model);
+    }
+    let mut t = Table::new(
+        "Ablation — §5.3.1.1 grid-size model vs fixed grid policies",
+        &["policy replaced", "geomean speedup of model", "peak", "frac model >= fixed"],
+    );
+    let sp = metrics::speedup_summary(&vs_fixed_p);
+    t.row(vec![
+        "always g = p (device-filling)".into(),
+        fmt(sp.geomean),
+        fmt(sp.peak),
+        fmt(sp.frac_at_least_one),
+    ]);
+    let sd = metrics::speedup_summary(&vs_dp);
+    t.row(vec![
+        "always g = tiles (data-parallel)".into(),
+        fmt(sd.geomean),
+        fmt(sd.peak),
+        fmt(sd.frac_at_least_one),
+    ]);
+    t
+}
+
+/// α/β sensitivity of the §4.5.2 selector.
+pub fn ablate_heuristic(scale: usize) -> Table {
+    let gpu = GpuSpec::v100();
+    let cost = SpmvCost::calibrate(&gpu);
+    let corpus = sparse_corpus(scale);
+    let workers = gpu.sms * cost.block_threads;
+    let mut t = Table::new(
+        "Ablation — §4.5.2 heuristic thresholds (geomean speedup vs cuSparse-like)",
+        &["alpha", "beta", "geomean", "min"],
+    );
+    for alpha in [0usize, 250, 500, 1000, usize::MAX >> 1] {
+        for beta in [1_000usize, 10_000, 100_000] {
+            let p = HeuristicParams {
+                alpha,
+                beta,
+                cv_group: 1.0,
+            };
+            let mut speedups = Vec::new();
+            for e in &corpus {
+                let kind = crate::balance::select_schedule(&e.matrix, p);
+                let ours = spmv::modeled_time(
+                    &e.matrix,
+                    &kind.assign(&e.matrix, workers),
+                    Some(kind),
+                    &cost,
+                    &gpu,
+                );
+                let vendor = vendor_spmv::modeled_time(&e.matrix, &cost, &gpu);
+                speedups.push(vendor / ours);
+            }
+            let s = metrics::speedup_summary(&speedups);
+            t.row(vec![
+                if alpha > 1 << 30 {
+                    "inf".into()
+                } else {
+                    alpha.to_string()
+                },
+                beta.to_string(),
+                fmt(s.geomean),
+                fmt(s.min),
+            ]);
+        }
+    }
+    t
+}
+
+/// Many-blocks vs persistent-kernel launch strategy (§3.6.1).
+pub fn ablate_persistent() -> Table {
+    let gpu = GpuSpec::a100();
+    let mut rng = crate::rng::Rng::new(0xAB1A7E);
+    let mut t = Table::new(
+        "Ablation — many-blocks vs persistent kernel (§3.6.1)",
+        &["workload", "many_blocks_us", "persistent_us", "persistent/many"],
+    );
+    let t_launch = 2.0e-6;
+    for (label, n, cost_range) in [
+        ("10k tiny blocks", 10_000usize, (0.1e-6, 0.5e-6)),
+        ("1k medium blocks", 1_000, (2.0e-6, 8.0e-6)),
+        ("200 large blocks", 200, (50.0e-6, 150.0e-6)),
+    ] {
+        let work: Vec<CtaWork> = (0..n)
+            .map(|_| CtaWork::new(rng.range_f64(cost_range.0, cost_range.1)))
+            .collect();
+        let many: Vec<CtaWork> = work
+            .iter()
+            .map(|c| CtaWork::new(c.cost + t_launch))
+            .collect();
+        let mb = sim::simulate(&gpu, &many).makespan;
+        let pk = sim::simulate_persistent(gpu.concurrent_ctas(), &work, t_launch, 0.05e-6)
+            .makespan;
+        t.row(vec![
+            label.into(),
+            fmt(mb * 1e6),
+            fmt(pk * 1e6),
+            fmt(pk / mb),
+        ]);
+    }
+    t
+}
+
+/// Slab fusion factor: PJRT kernel invocations per output tile on the real
+/// request path (L1 structural ablation).
+pub fn ablate_slab_fusion() -> Table {
+    let mut t = Table::new(
+        "Ablation — MacLoop slab fusion (PJRT invocations per 256-iteration tile)",
+        &["slab_iters", "invocations", "relative dispatch overhead"],
+    );
+    let total_iters = 256u64;
+    for slab in [1u64, 2, 4, 8, 16] {
+        let invocations = total_iters / slab;
+        t.row(vec![
+            slab.to_string(),
+            invocations.to_string(),
+            fmt(invocations as f64 / (total_iters / 8) as f64),
+        ]);
+    }
+    t
+}
+
+/// Run all ablations.
+pub fn run_all(scale: usize) -> Vec<Table> {
+    vec![
+        ablate_skew(),
+        ablate_grid_model(if scale >= 1 { 500 } else { 100 }),
+        ablate_heuristic(scale.min(1)),
+        ablate_persistent(),
+        ablate_slab_fusion(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablations_run_and_are_nonempty() {
+        for t in run_all(0) {
+            assert!(!t.rows.is_empty(), "{}", t.title);
+        }
+    }
+
+    #[test]
+    fn persistent_wins_on_tiny_blocks() {
+        let t = ablate_persistent();
+        // First row = 10k tiny blocks: persistent must win (<1 ratio).
+        let ratio: f64 = t.rows[0][3].parse().unwrap();
+        assert!(ratio < 1.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn grid_model_never_worse_than_fixed_policies() {
+        let t = ablate_grid_model(60);
+        for row in &t.rows {
+            let geo: f64 = row[1].parse().unwrap();
+            assert!(geo >= 0.999, "{row:?}");
+        }
+    }
+}

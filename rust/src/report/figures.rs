@@ -1,0 +1,752 @@
+//! Regeneration harness for **every table and figure** in the paper's
+//! evaluation (DESIGN.md per-experiment index).  Each function runs the
+//! experiment on the simulated testbed and returns the paper-shaped rows;
+//! `run_all` drives them and writes CSVs.
+//!
+//! Absolute numbers come from the calibrated simulator, not the authors'
+//! A100/V100 — the *shape* of each result (who wins, by what factor, where
+//! crossovers fall) is the reproduction target.
+
+use std::path::Path;
+
+use super::{fmt, Table};
+use crate::balance::{self, ScheduleKind};
+use crate::baselines::{cub_spmv, vendor_gemm, vendor_spmv};
+use crate::corpus::{gemm_shapes, sparse_corpus};
+use crate::exec::spmv;
+use crate::metrics;
+use crate::sim::gpu::{GpuSpec, Precision};
+use crate::sim::SpmvCost;
+use crate::streamk::{self, decomp, Blocking, Decomposition, GemmShape};
+
+/// Evaluation scale: 0 = smoke, 1 = standard, 2 = full paper size.
+#[derive(Debug, Clone, Copy)]
+pub struct Scale(pub usize);
+
+impl Scale {
+    fn sparse_scale(self) -> usize {
+        self.0.min(2)
+    }
+
+    fn gemm_samples(self) -> usize {
+        match self.0 {
+            0 => 200,
+            1 => 2000,
+            _ => gemm_shapes::GEMM_CORPUS_SIZE,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared helpers
+// ---------------------------------------------------------------------------
+
+/// Framework SpMV modeled time under a specific schedule.
+fn framework_time(
+    a: &crate::sparse::Csr,
+    kind: ScheduleKind,
+    cost: &SpmvCost,
+    gpu: &GpuSpec,
+) -> f64 {
+    let workers = match kind {
+        ScheduleKind::GroupMapped(_) => a.rows.max(1), // one tile per group, oversubscribed
+        _ => gpu.sms * cost.block_threads,
+    };
+    let t = spmv::modeled_time(a, &kind.assign(a, workers), Some(kind), cost, gpu);
+    t * (1.0 + cub_spmv::FRAMEWORK_OVERHEAD)
+}
+
+/// The §4.5.2 heuristic-combined framework SpMV.
+fn framework_heuristic_time(
+    a: &crate::sparse::Csr,
+    cost: &SpmvCost,
+    gpu: &GpuSpec,
+) -> (ScheduleKind, f64) {
+    let kind = balance::select_schedule(a, balance::HeuristicParams::default());
+    (kind, framework_time(a, kind, cost, gpu))
+}
+
+/// Stream-K (the paper's shipped configuration, §5.3.2): the two-tile
+/// hybrid whenever the problem has more tiles than the device has SMs
+/// (full DP waves + an iteration-balanced Stream-K region of one-to-two
+/// tiles per CTA), otherwise basic Stream-K at the model-selected grid
+/// size (the strong-scaling regime, where `g >= tiles` keeps the §5.3.1.1
+/// FixupPeers estimate exact).
+pub fn streamk_time(shape: GemmShape, gpu: &GpuSpec, prec: Precision) -> f64 {
+    let blk = Blocking::paper_default(prec);
+    let model = vendor_gemm::member_cost_model(gpu, blk, prec);
+    let p = gpu.sms;
+    let tiles = blk.tiles(shape);
+    // Candidate grid configurations the launcher's analytical model picks
+    // between.  Stream-K *generalizes* data-parallel (g == tiles), so "no
+    // splitting" is itself a grid choice within the same single kernel —
+    // this is the §5.3.1 dynamic configuration that replaces ensemble
+    // kernel-selection heuristics.
+    let mut candidates = vec![Decomposition::DataParallel];
+    if tiles > p {
+        candidates.push(Decomposition::HybridTwoTile { p });
+    } else {
+        let g = streamk::best_grid(shape, blk, p, &model).max(tiles.min(p));
+        candidates.push(Decomposition::StreamK { g });
+    }
+    candidates
+        .into_iter()
+        .map(|d| {
+            let plan = decomp::plan(shape, blk, d);
+            crate::exec::gemm::simulate_plan(&plan, &model, gpu, prec).makespan
+        })
+        .fold(f64::INFINITY, f64::min)
+}
+
+/// CUTLASS data-parallel with the same (ideal) blocking factor.
+fn dp_same_blocking_time(shape: GemmShape, gpu: &GpuSpec, prec: Precision) -> f64 {
+    vendor_gemm::member_time(shape, Blocking::paper_default(prec), 1, gpu, prec)
+}
+
+// ---------------------------------------------------------------------------
+// Chapter 4 figures
+// ---------------------------------------------------------------------------
+
+/// Fig. 4.2 — framework merge-path vs hardwired CUB merge-path overhead.
+pub fn fig4_2(scale: Scale) -> Table {
+    let gpu = GpuSpec::v100();
+    let cost = SpmvCost::calibrate(&gpu);
+    let corpus = sparse_corpus(scale.sparse_scale());
+    let mut t = Table::new(
+        "Fig 4.2 — abstraction overhead: framework merge-path vs CUB (V100 sim)",
+        &["matrix", "nnz", "cub_us", "ours_us", "ours/cub"],
+    );
+    let mut ratios = Vec::new();
+    for e in &corpus {
+        // CUB special-cases columns==1 (thread-mapped sparse-vector
+        // kernel); the framework always runs its general merge-path —
+        // that population is Fig. 4.2's outlier tail.
+        let cub = cub_spmv::modeled_time(&e.matrix, &cost, &gpu);
+        let ours = cub_spmv::framework_merge_path_time(&e.matrix, &cost, &gpu);
+        ratios.push(ours / cub);
+        t.row(vec![
+            e.name.clone(),
+            e.matrix.nnz().to_string(),
+            fmt(cub * 1e6),
+            fmt(ours * 1e6),
+            fmt(ours / cub),
+        ]);
+    }
+    let geo = metrics::geomean(&ratios);
+    let within90 = metrics::fraction(&ratios, |r| r <= 1.0 / 0.9);
+    t.row(vec![
+        "GEOMEAN (paper: 1.025; ≥90% of CUB on 92% of datasets)".into(),
+        String::new(),
+        String::new(),
+        format!("{:.1}% within 90%", within90 * 100.0),
+        fmt(geo),
+    ]);
+    t
+}
+
+/// Fig. 4.3 — SpMV landscape: three schedules vs cuSparse.
+pub fn fig4_3(scale: Scale) -> Table {
+    let gpu = GpuSpec::v100();
+    let cost = SpmvCost::calibrate(&gpu);
+    let corpus = sparse_corpus(scale.sparse_scale());
+    let mut t = Table::new(
+        "Fig 4.3 — SpMV landscape: framework schedules vs cuSparse (us, V100 sim)",
+        &[
+            "matrix",
+            "nnz",
+            "cv",
+            "thread_mapped",
+            "group_mapped",
+            "merge_path",
+            "cusparse",
+        ],
+    );
+    for e in &corpus {
+        let a = &e.matrix;
+        let tm = framework_time(a, ScheduleKind::ThreadMapped, &cost, &gpu);
+        let gm = framework_time(a, ScheduleKind::GroupMapped(32), &cost, &gpu);
+        let mp = framework_time(a, ScheduleKind::MergePath, &cost, &gpu);
+        let vendor = vendor_spmv::modeled_time(a, &cost, &gpu);
+        t.row(vec![
+            e.name.clone(),
+            a.nnz().to_string(),
+            fmt(e.stats().cv),
+            fmt(tm * 1e6),
+            fmt(gm * 1e6),
+            fmt(mp * 1e6),
+            fmt(vendor * 1e6),
+        ]);
+    }
+    t
+}
+
+/// Fig. 4.4 — heuristic-combined framework SpMV speedup vs cuSparse.
+pub fn fig4_4(scale: Scale) -> Table {
+    let gpu = GpuSpec::v100();
+    let cost = SpmvCost::calibrate(&gpu);
+    let corpus = sparse_corpus(scale.sparse_scale());
+    let mut t = Table::new(
+        "Fig 4.4 — framework (heuristic) SpMV speedup vs cuSparse (V100 sim)",
+        &["matrix", "family", "schedule", "speedup"],
+    );
+    let mut speedups = Vec::new();
+    for e in &corpus {
+        let (kind, ours) = framework_heuristic_time(&e.matrix, &cost, &gpu);
+        let vendor = vendor_spmv::modeled_time(&e.matrix, &cost, &gpu);
+        let s = vendor / ours;
+        speedups.push(s);
+        t.row(vec![
+            e.name.clone(),
+            e.family.into(),
+            kind.name().into(),
+            fmt(s),
+        ]);
+    }
+    let sum = metrics::speedup_summary(&speedups);
+    t.row(vec![
+        "SUMMARY (paper: geomean 2.7x, peak 39x)".into(),
+        String::new(),
+        format!("peak {:.1}x, min {:.2}x", sum.peak, sum.min),
+        format!("geomean {:.2}x", sum.geomean),
+    ]);
+    t
+}
+
+/// Table 4.1 — lines of code per schedule, counted from this repo's source
+/// (non-comment, non-blank, non-test), against the paper's CUB numbers.
+pub fn table4_1() -> Table {
+    fn loc(src: &str) -> usize {
+        let mut count = 0usize;
+        let mut in_tests = false;
+        for line in src.lines() {
+            let l = line.trim();
+            if l.starts_with("#[cfg(test)]") {
+                in_tests = true;
+            }
+            if in_tests {
+                continue;
+            }
+            if l.is_empty() || l.starts_with("//") || l.starts_with("//!") {
+                continue;
+            }
+            count += 1;
+        }
+        count
+    }
+    let merge = loc(include_str!("../balance/merge_path.rs"));
+    let thread = loc(include_str!("../balance/thread_mapped.rs"));
+    let group = loc(include_str!("../balance/group_mapped.rs"));
+    let mut t = Table::new(
+        "Table 4.1 — schedule implementation LoC: CUB (paper) vs this framework",
+        &["schedule", "CUB (paper)", "paper framework", "this repo"],
+    );
+    t.row(vec![
+        "merge-path".into(),
+        "503".into(),
+        "36".into(),
+        merge.to_string(),
+    ]);
+    t.row(vec![
+        "thread-mapped".into(),
+        "22".into(),
+        "21".into(),
+        thread.to_string(),
+    ]);
+    t.row(vec![
+        "group-mapped".into(),
+        "N/A".into(),
+        "30".into(),
+        group.to_string(),
+    ]);
+    t.row(vec![
+        "warp-mapped".into(),
+        "N/A".into(),
+        "30 (free)".into(),
+        "0 (free)".into(),
+    ]);
+    t.row(vec![
+        "block-mapped".into(),
+        "N/A".into(),
+        "30 (free)".into(),
+        "0 (free)".into(),
+    ]);
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Chapter 5 figures
+// ---------------------------------------------------------------------------
+
+/// Fig. 5.1 — data-parallel execution schedules on the 4-SM toy GPU.
+pub fn fig5_1() -> Table {
+    use crate::streamk::quantization::*;
+    let mut t = Table::new(
+        "Fig 5.1 — data-parallel schedules, 384x384x128 GEMM, 4-SM GPU",
+        &["variant", "tiles", "waves", "quantization_eff"],
+    );
+    // (a) 128x128 tiles: 9 tiles, 3 waves, 75%.
+    let s = GemmShape::new(384, 384, 128);
+    let full = Blocking::new(128, 128, 4);
+    t.row(vec![
+        "(a) 128x128 tiles".into(),
+        full.tiles(s).to_string(),
+        waves(full.tiles(s), 4).to_string(),
+        fmt(wave_quantization_efficiency(full.tiles(s), 4)),
+    ]);
+    // (b) halved tiles (128x64): 18 tiles, 5 waves, 90%.
+    let half = Blocking::new(128, 64, 4);
+    t.row(vec![
+        "(b) 128x64 tiles".into(),
+        half.tiles(s).to_string(),
+        waves(half.tiles(s), 4).to_string(),
+        fmt(wave_quantization_efficiency(half.tiles(s), 4)),
+    ]);
+    t
+}
+
+/// Fig. 5.2 — tile-splitting schedules on the toy GPU.
+pub fn fig5_2() -> Table {
+    use crate::streamk::quantization::*;
+    let s = GemmShape::new(384, 384, 128);
+    let blk = Blocking::new(128, 128, 4);
+    let mut t = Table::new(
+        "Fig 5.2 — tile-splitting schedules, 384x384x128 GEMM, 4-SM GPU",
+        &["variant", "ctas", "quantization_eff"],
+    );
+    let tiles = blk.tiles(s);
+    t.row(vec![
+        "(a) fixed-split s=2".into(),
+        (tiles * 2).to_string(),
+        fmt(wave_quantization_efficiency(tiles * 2, 4)),
+    ]);
+    let sk = decomp::plan(s, blk, Decomposition::StreamK { g: 4 });
+    t.row(vec![
+        "(b) stream-k g=4".into(),
+        sk.ctas.len().to_string(),
+        fmt({
+            let iters: Vec<u64> = sk.ctas.iter().map(|c| c.iters()).collect();
+            let max = *iters.iter().max().unwrap() as f64;
+            let total: u64 = iters.iter().sum();
+            total as f64 / (max * 4.0)
+        }),
+    ]);
+    t
+}
+
+/// Fig. 5.3 — basic Stream-K vs hybrid schedules, 896x384x128 on 4 SMs.
+pub fn fig5_3() -> Table {
+    let gpu = GpuSpec::toy(4);
+    let prec = Precision::F16F32;
+    let blk = Blocking::new(128, 128, 4);
+    let model = vendor_gemm::member_cost_model(&gpu, blk, prec);
+    let s = GemmShape::new(896, 384, 128);
+    let mut t = Table::new(
+        "Fig 5.3 — basic Stream-K vs hybrid schedules, 896x384x128, 4-SM GPU",
+        &["schedule", "ctas", "iter_imbalance", "makespan_us", "vs_basic"],
+    );
+    let mut base = 0.0;
+    for d in [
+        Decomposition::StreamK { g: 4 },
+        Decomposition::HybridOneTile { p: 4 },
+        Decomposition::HybridTwoTile { p: 4 },
+    ] {
+        let plan = decomp::plan(s, blk, d);
+        let r = crate::exec::gemm::simulate_plan(&plan, &model, &gpu, prec);
+        if base == 0.0 {
+            base = r.makespan;
+        }
+        t.row(vec![
+            d.name().into(),
+            plan.ctas.len().to_string(),
+            plan.iter_imbalance().to_string(),
+            fmt(r.makespan * 1e6),
+            fmt(base / r.makespan),
+        ]);
+    }
+    t
+}
+
+/// Fig. 5.4 — modeled Stream-K runtime vs grid size for three shapes (A100).
+pub fn fig5_4() -> Table {
+    let gpu = GpuSpec::a100();
+    let prec = Precision::F16F32;
+    let blk = Blocking::paper_default(prec);
+    let model = vendor_gemm::member_cost_model(&gpu, blk, prec);
+    let shapes = [
+        ("short-wide, large-k", GemmShape::new(128, 8192, 8192)),
+        ("square, medium-k", GemmShape::new(1024, 1024, 2048)),
+        ("one-tile, huge-k", GemmShape::new(128, 128, 16384)),
+    ];
+    let mut t = Table::new(
+        "Fig 5.4 — modeled Stream-K runtime (us) vs grid size g (A100, 128x128x32)",
+        &["g", shapes[0].0, shapes[1].0, shapes[2].0],
+    );
+    for g in (1..=gpu.sms).step_by(3) {
+        t.row(vec![
+            g.to_string(),
+            fmt(streamk::model::time_cta(shapes[0].1, blk, g, &model) * 1e6),
+            fmt(streamk::model::time_cta(shapes[1].1, blk, g, &model) * 1e6),
+            fmt(streamk::model::time_cta(shapes[2].1, blk, g, &model) * 1e6),
+        ]);
+    }
+    let mut best = vec!["best_g".to_string()];
+    for (_, s) in &shapes {
+        best.push(streamk::best_grid(*s, blk, gpu.sms, &model).to_string());
+    }
+    t.row(best);
+    t
+}
+
+/// Fig. 5.5 — strong scaling: data-parallel vs Stream-K, 128x128x(12288).
+pub fn fig5_5() -> Table {
+    let gpu = GpuSpec::toy(4);
+    let prec = Precision::F16F32;
+    let blk = Blocking::new(128, 128, 32);
+    let model = vendor_gemm::member_cost_model(&gpu, blk, prec);
+    let s = GemmShape::new(128, 128, 384 * 32);
+    let mut t = Table::new(
+        "Fig 5.5 — strong scaling on one deep-k tile, 4-SM GPU",
+        &["schedule", "ctas", "makespan_us", "speedup_vs_dp"],
+    );
+    let dp = decomp::plan(s, blk, Decomposition::DataParallel);
+    let dp_r = crate::exec::gemm::simulate_plan(&dp, &model, &gpu, prec);
+    t.row(vec![
+        "data-parallel".into(),
+        dp.ctas.len().to_string(),
+        fmt(dp_r.makespan * 1e6),
+        fmt(1.0),
+    ]);
+    for g in [2usize, 4] {
+        let plan = decomp::plan(s, blk, Decomposition::StreamK { g });
+        let r = crate::exec::gemm::simulate_plan(&plan, &model, &gpu, prec);
+        t.row(vec![
+            format!("stream-k g={g}"),
+            plan.ctas.len().to_string(),
+            fmt(r.makespan * 1e6),
+            fmt(dp_r.makespan / r.makespan),
+        ]);
+    }
+    t
+}
+
+/// Fig. 5.6 — the GEMM shape corpus.
+pub fn fig5_6() -> Table {
+    let corpus = gemm_shapes::gemm_corpus();
+    let ms: Vec<f64> = corpus.iter().map(|s| s.m as f64).collect();
+    let ns: Vec<f64> = corpus.iter().map(|s| s.n as f64).collect();
+    let ks: Vec<f64> = corpus.iter().map(|s| s.k as f64).collect();
+    let vols: Vec<f64> = corpus.iter().map(|s| s.flops()).collect();
+    let mut t = Table::new(
+        "Fig 5.6 — GEMM shape test domain (32,824 problems, log-sampled)",
+        &["quantity", "min", "p25", "median", "p75", "max"],
+    );
+    for (name, xs) in [("m", &ms), ("n", &ns), ("k", &ks), ("flops", &vols)] {
+        t.row(vec![
+            name.into(),
+            fmt(metrics::min(xs)),
+            fmt(metrics::percentile(xs, 25.0)),
+            fmt(metrics::percentile(xs, 50.0)),
+            fmt(metrics::percentile(xs, 75.0)),
+            fmt(metrics::max(xs)),
+        ]);
+    }
+    t.row(vec![
+        "count".into(),
+        corpus.len().to_string(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+    ]);
+    t
+}
+
+/// Per-shape GEMM landscape record.
+struct LandscapePoint {
+    shape: GemmShape,
+    streamk: f64,
+    dp: f64,
+    cublas: f64,
+    oracle: f64,
+}
+
+fn landscape(prec: Precision, scale: Scale) -> Vec<LandscapePoint> {
+    let gpu = GpuSpec::a100();
+    gemm_shapes::gemm_corpus_sample(scale.gemm_samples())
+        .into_iter()
+        .map(|shape| LandscapePoint {
+            shape,
+            streamk: streamk_time(shape, &gpu, prec),
+            dp: dp_same_blocking_time(shape, &gpu, prec),
+            cublas: vendor_gemm::cublas_like_time(shape, &gpu, prec),
+            oracle: vendor_gemm::oracle_time(shape, &gpu, prec),
+        })
+        .collect()
+}
+
+fn landscape_table(title: &str, prec: Precision, scale: Scale) -> Table {
+    let gpu = GpuSpec::a100();
+    let peak = gpu.peak_tflops(prec);
+    let pts = landscape(prec, scale);
+    let mut t = Table::new(
+        title,
+        &[
+            "series",
+            "mean_util",
+            "p5_util",
+            "median_util",
+            "p95_util",
+        ],
+    );
+    let util = |times: Vec<f64>| -> Vec<f64> {
+        pts.iter()
+            .zip(&times)
+            .map(|(p, &tm)| p.shape.flops() / tm / 1e12 / peak)
+            .collect()
+    };
+    for (name, times) in [
+        ("stream-k", pts.iter().map(|p| p.streamk).collect::<Vec<_>>()),
+        ("data-parallel", pts.iter().map(|p| p.dp).collect()),
+        ("cublas-like", pts.iter().map(|p| p.cublas).collect()),
+        ("oracle", pts.iter().map(|p| p.oracle).collect()),
+    ] {
+        let u = util(times);
+        t.row(vec![
+            name.into(),
+            fmt(metrics::mean(&u)),
+            fmt(metrics::percentile(&u, 5.0)),
+            fmt(metrics::percentile(&u, 50.0)),
+            fmt(metrics::percentile(&u, 95.0)),
+        ]);
+    }
+    t
+}
+
+/// Fig. 5.7 — FP16->32 GEMM utilization landscape.
+pub fn fig5_7(scale: Scale) -> Table {
+    landscape_table(
+        "Fig 5.7 — FP16->32 GEMM roofline-utilization landscape (A100 sim)",
+        Precision::F16F32,
+        scale,
+    )
+}
+
+/// Fig. 5.8 — FP64 GEMM utilization landscape.
+pub fn fig5_8(scale: Scale) -> Table {
+    landscape_table(
+        "Fig 5.8 — FP64 GEMM roofline-utilization landscape (A100 sim)",
+        Precision::F64,
+        scale,
+    )
+}
+
+/// Fig. 5.9 — Stream-K speedup vs cuBLAS-like + vs data-parallel.
+pub fn fig5_9(scale: Scale) -> Table {
+    let mut t = Table::new(
+        "Fig 5.9 — Stream-K speedup (A100 sim; paper: peak 6.7x vs cuBLAS, 14x vs DP)",
+        &["comparison", "geomean", "peak", "min", "frac>=1"],
+    );
+    for prec in [Precision::F16F32, Precision::F64] {
+        let pts = landscape(prec, scale);
+        let vs_cublas: Vec<f64> = pts.iter().map(|p| p.cublas / p.streamk).collect();
+        let vs_dp: Vec<f64> = pts.iter().map(|p| p.dp / p.streamk).collect();
+        for (name, s) in [
+            (
+                format!("{} vs cuBLAS-like", prec.name()),
+                metrics::speedup_summary(&vs_cublas),
+            ),
+            (
+                format!("{} vs data-parallel", prec.name()),
+                metrics::speedup_summary(&vs_dp),
+            ),
+        ] {
+            t.row(vec![
+                name,
+                fmt(s.geomean),
+                fmt(s.peak),
+                fmt(s.min),
+                fmt(s.frac_at_least_one),
+            ]);
+        }
+    }
+    t
+}
+
+/// Tables 5.1/5.2 — relative performance summaries.
+fn rel_perf_table(title: &str, prec: Precision, scale: Scale) -> Table {
+    let pts = landscape(prec, scale);
+    let mut t = Table::new(title, &["baseline", "avg", "p25", "median", "p75", "peak"]);
+    for (name, rel) in [
+        (
+            "vs cuBLAS-like",
+            pts.iter().map(|p| p.cublas / p.streamk).collect::<Vec<_>>(),
+        ),
+        (
+            "vs data-parallel (same blocking)",
+            pts.iter().map(|p| p.dp / p.streamk).collect(),
+        ),
+        (
+            "vs CUTLASS oracle",
+            pts.iter().map(|p| p.oracle / p.streamk).collect(),
+        ),
+    ] {
+        t.row(vec![
+            name.into(),
+            fmt(metrics::geomean(&rel)),
+            fmt(metrics::percentile(&rel, 25.0)),
+            fmt(metrics::percentile(&rel, 50.0)),
+            fmt(metrics::percentile(&rel, 75.0)),
+            fmt(metrics::max(&rel)),
+        ]);
+    }
+    t
+}
+
+/// Table 5.1 — Stream-K FP64 relative performance.
+pub fn table5_1(scale: Scale) -> Table {
+    rel_perf_table(
+        "Table 5.1 — Stream-K FP64 relative performance (A100 sim)",
+        Precision::F64,
+        scale,
+    )
+}
+
+/// Table 5.2 — Stream-K FP16->32 relative performance.
+pub fn table5_2(scale: Scale) -> Table {
+    rel_perf_table(
+        "Table 5.2 — Stream-K FP16->32 relative performance (A100 sim)",
+        Precision::F16F32,
+        scale,
+    )
+}
+
+/// Fig. 6.1 — oracle SpMV (best schedule per dataset) vs cuSparse.
+pub fn fig6_1(scale: Scale) -> Table {
+    let gpu = GpuSpec::v100();
+    let cost = SpmvCost::calibrate(&gpu);
+    let corpus = sparse_corpus(scale.sparse_scale());
+    let kinds = [
+        ScheduleKind::ThreadMapped,
+        ScheduleKind::GroupMapped(32),
+        ScheduleKind::GroupMapped(128),
+        ScheduleKind::MergePath,
+        ScheduleKind::NonzeroSplit,
+        ScheduleKind::Binning,
+        ScheduleKind::Lrb,
+    ];
+    let mut oracle_speedups = Vec::new();
+    let mut heuristic_speedups = Vec::new();
+    let mut t = Table::new(
+        "Fig 6.1 — oracle SpMV (best framework schedule) vs cuSparse (V100 sim)",
+        &["matrix", "best_schedule", "oracle_speedup", "heuristic_speedup"],
+    );
+    for e in &corpus {
+        let vendor = vendor_spmv::modeled_time(&e.matrix, &cost, &gpu);
+        let (mut best_kind, mut best_t) = (kinds[0], f64::INFINITY);
+        for &k in &kinds {
+            let tk = framework_time(&e.matrix, k, &cost, &gpu);
+            if tk < best_t {
+                best_t = tk;
+                best_kind = k;
+            }
+        }
+        let (_, heur) = framework_heuristic_time(&e.matrix, &cost, &gpu);
+        oracle_speedups.push(vendor / best_t);
+        heuristic_speedups.push(vendor / heur);
+        t.row(vec![
+            e.name.clone(),
+            best_kind.name().into(),
+            fmt(vendor / best_t),
+            fmt(vendor / heur),
+        ]);
+    }
+    let os = metrics::speedup_summary(&oracle_speedups);
+    let hs = metrics::speedup_summary(&heuristic_speedups);
+    t.row(vec![
+        "SUMMARY".into(),
+        "oracle >= heuristic".into(),
+        format!("geomean {:.2}x peak {:.1}x", os.geomean, os.peak),
+        format!("geomean {:.2}x peak {:.1}x", hs.geomean, hs.peak),
+    ]);
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
+
+/// All experiment ids.
+pub const ALL: &[&str] = &[
+    "fig4_2", "fig4_3", "fig4_4", "table4_1", "fig5_1", "fig5_2", "fig5_3", "fig5_4",
+    "fig5_5", "fig5_6", "fig5_7", "fig5_8", "fig5_9", "table5_1", "table5_2", "fig6_1",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, scale: Scale) -> Option<Table> {
+    Some(match id {
+        "fig4_2" => fig4_2(scale),
+        "fig4_3" => fig4_3(scale),
+        "fig4_4" => fig4_4(scale),
+        "table4_1" => table4_1(),
+        "fig5_1" => fig5_1(),
+        "fig5_2" => fig5_2(),
+        "fig5_3" => fig5_3(),
+        "fig5_4" => fig5_4(),
+        "fig5_5" => fig5_5(),
+        "fig5_6" => fig5_6(),
+        "fig5_7" => fig5_7(scale),
+        "fig5_8" => fig5_8(scale),
+        "fig5_9" => fig5_9(scale),
+        "table5_1" => table5_1(scale),
+        "table5_2" => table5_2(scale),
+        "fig6_1" => fig6_1(scale),
+        _ => return None,
+    })
+}
+
+/// Run all experiments; optionally write CSVs into `out_dir`.
+pub fn run_all(scale: Scale, out_dir: Option<&Path>) -> crate::Result<Vec<Table>> {
+    let mut tables = Vec::new();
+    for id in ALL {
+        let t = run(id, scale).expect("known id");
+        if let Some(dir) = out_dir {
+            t.write_csv(dir.join(format!("{id}.csv")))?;
+        }
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SMOKE: Scale = Scale(0);
+
+    #[test]
+    fn structural_figures_run() {
+        for id in ["fig5_1", "fig5_2", "fig5_3", "fig5_5", "table4_1"] {
+            let t = run(id, SMOKE).unwrap();
+            assert!(!t.rows.is_empty(), "{id}");
+        }
+    }
+
+    #[test]
+    fn fig5_1_matches_paper_arithmetic() {
+        let t = fig5_1();
+        assert!(t.rows[0][3].starts_with("0.75"));
+        assert!(t.rows[1][3].starts_with("0.9"));
+    }
+
+    #[test]
+    fn fig5_2_stream_k_is_perfect() {
+        let t = fig5_2();
+        // Stream-K row quantization efficiency == 1.
+        assert!(t.rows[1][2].starts_with('1'), "{:?}", t.rows[1]);
+    }
+
+    #[test]
+    fn unknown_id_is_none() {
+        assert!(run("fig9_9", SMOKE).is_none());
+    }
+}

@@ -1,0 +1,220 @@
+//! Deterministic pseudo-random numbers (splitmix64 + xoshiro256**).
+//!
+//! Every corpus, matrix generator and sampled experiment in this repo is
+//! seeded, so figures regenerate bit-identically.  We implement the
+//! generators locally to keep the runtime dependency surface at just the
+//! PJRT crate.
+
+/// xoshiro256** with splitmix64 seeding — fast, high-quality, deterministic.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        Self {
+            s: [
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ],
+        }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform integer in [lo, hi).
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi > lo);
+        lo + self.below(hi - lo)
+    }
+
+    /// Log-uniform in [lo, hi) — the sampling law of the paper's Fig. 5.6
+    /// GEMM-shape domain ("log-sampled at random ... six orders of
+    /// magnitude").
+    pub fn log_uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        (self.range_f64(lo.ln(), hi.ln())).exp()
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Zipf-like sample in [1, n] with exponent `alpha` (rejection-free
+    /// inverse-CDF approximation) — drives the power-law row-length
+    /// distributions of scale-free graphs.
+    pub fn zipf(&mut self, n: usize, alpha: f64) -> usize {
+        // Inverse-transform on the continuous bounded Pareto envelope.
+        let n = n as f64;
+        let a1 = 1.0 - alpha;
+        let u = self.f64();
+        let x = if (a1.abs()) < 1e-9 {
+            n.powf(u)
+        } else {
+            (u * (n.powf(a1) - 1.0) + 1.0).powf(1.0 / a1)
+        };
+        (x.floor() as usize).clamp(1, n as usize)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        debug_assert!(k <= n);
+        // For small k relative to n use a set-based approach.
+        if k * 4 < n {
+            let mut seen = std::collections::HashSet::with_capacity(k);
+            let mut out = Vec::with_capacity(k);
+            while out.len() < k {
+                let v = self.below(n);
+                if seen.insert(v) {
+                    out.push(v);
+                }
+            }
+            out
+        } else {
+            let mut idx: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut idx);
+            idx.truncate(k);
+            idx
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(43);
+        assert_ne!(Rng::new(42).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn f64_mean_near_half() {
+        let mut r = Rng::new(11);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn log_uniform_spans_orders_of_magnitude() {
+        let mut r = Rng::new(3);
+        let mut lo_hits = 0;
+        let mut hi_hits = 0;
+        for _ in 0..10_000 {
+            let v = r.log_uniform(128.0, 8192.0);
+            assert!((128.0..8192.0).contains(&v));
+            if v < 256.0 {
+                lo_hits += 1;
+            }
+            if v > 4096.0 {
+                hi_hits += 1;
+            }
+        }
+        // log-uniform: each octave equally likely (6 octaves in range).
+        assert!(lo_hits > 1000 && hi_hits > 1000, "{lo_hits} {hi_hits}");
+    }
+
+    #[test]
+    fn zipf_bounds_and_skew() {
+        let mut r = Rng::new(5);
+        let mut ones = 0;
+        for _ in 0..10_000 {
+            let v = r.zipf(1000, 2.0);
+            assert!((1..=1000).contains(&v));
+            if v == 1 {
+                ones += 1;
+            }
+        }
+        // alpha=2 Zipf: P(1) dominates.
+        assert!(ones > 4000, "ones={ones}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(9);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(13);
+        for &(n, k) in &[(1000usize, 10usize), (100, 90), (50, 50)] {
+            let s = r.sample_indices(n, k);
+            assert_eq!(s.len(), k);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), k);
+            assert!(s.iter().all(|&i| i < n));
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Artifact manifest — the contract between `python/compile/aot.py` (which
+//! writes it) and the Rust runtime (which reads it).  Parsed with the
+//! in-repo [`crate::jsonlite`] parser (offline build: no serde).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context};
+
+use crate::jsonlite::{self, Json};
+use crate::Result;
+
+/// Shape/dtype spec of one artifact input.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT-exported computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<InputSpec>,
+    pub meta: BTreeMap<String, Json>,
+    pub sha256: String,
+}
+
+impl ArtifactSpec {
+    /// Integer metadata field (blocking factors etc.).
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key)?.as_u64().map(|v| v as usize)
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let str_field = |k: &str| -> Result<String> {
+            Ok(v.get(k)
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing `{k}`"))?
+                .to_string())
+        };
+        let inputs = v
+            .get("inputs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("artifact missing `inputs`"))?
+            .iter()
+            .map(|i| -> Result<InputSpec> {
+                let shape = i
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("input missing `shape`"))?
+                    .iter()
+                    .map(|d| d.as_u64().map(|v| v as usize))
+                    .collect::<Option<Vec<_>>>()
+                    .ok_or_else(|| anyhow!("non-integer shape dim"))?;
+                let dtype = i
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("input missing `dtype`"))?
+                    .to_string();
+                Ok(InputSpec { shape, dtype })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArtifactSpec {
+            name: str_field("name")?,
+            file: str_field("file")?,
+            inputs,
+            meta: v
+                .get("meta")
+                .and_then(Json::as_obj)
+                .cloned()
+                .unwrap_or_default(),
+            sha256: v
+                .get("sha256")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string(),
+        })
+    }
+}
+
+/// The parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = jsonlite::parse(text)?;
+        let artifacts = v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing `artifacts`"))?
+            .iter()
+            .map(ArtifactSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.iter().map(|a| a.name.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_json() {
+        let json = r#"{
+          "artifacts": [
+            {"name": "k1", "file": "k1.hlo.txt",
+             "inputs": [{"shape": [2, 3], "dtype": "float32"}],
+             "meta": {"blk_m": 128}, "sha256": "abc"}
+          ]
+        }"#;
+        let m = Manifest::parse(json).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.get("k1").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![2, 3]);
+        assert_eq!(a.inputs[0].dtype, "float32");
+        assert_eq!(a.meta_usize("blk_m"), Some(128));
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn scalar_input_empty_shape() {
+        let json = r#"{"artifacts": [{"name": "s", "file": "s.hlo.txt",
+            "inputs": [{"shape": [], "dtype": "float32"}]}]}"#;
+        let m = Manifest::parse(json).unwrap();
+        assert!(m.get("s").unwrap().inputs[0].shape.is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"artifacts": [{"file": "x"}]}"#).is_err());
+    }
+}

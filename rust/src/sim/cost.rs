@@ -1,0 +1,174 @@
+//! Analytical cost models.
+//!
+//! * [`CostModel`] — the paper's own Stream-K CTA runtime model (§5.3.1.1):
+//!   `time_CTA(g) = a + b·[FixupPeers(g)>1] + c·ItersPerCta(g) + d·(FixupPeers(g)−1)`.
+//!   The workload constants {a,b,c,d} are unique per (blocking factors,
+//!   dtype, microarchitecture) and are "determined empirically via
+//!   microbenchmarks" — here they are derived from the [`GpuSpec`]'s peak
+//!   math and bandwidth, which is the same calibration the paper performs.
+//! * [`SpmvCost`] — bandwidth-bound cost model for the Chapter-4 SpMV
+//!   schedules (warp-lockstep serialization, search/prefix-sum overheads).
+
+use super::gpu::{GpuSpec, Precision};
+
+/// Stream-K workload constants, all in seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    /// Fixed per-CTA cost: launch latency, compulsory misses, output-tile
+    /// store.
+    pub a: f64,
+    /// Conditional cost of writing temporary partial sums (incurred once
+    /// when the CTA shares a tile).
+    pub b: f64,
+    /// Cost of one MAC-loop iteration (BLK_M x BLK_N x BLK_K volume).
+    pub c: f64,
+    /// Cost of reading + accumulating one peer CTA's partial sums.
+    pub d: f64,
+    /// Tile-processing skew penalty (§5.3.2): a CTA whose share starts
+    /// mid-tile runs at a staggered k-offset for its whole duration, losing
+    /// cross-CTA L2 reuse of input fragments — modeled as a fractional
+    /// slowdown of its MAC iterations.  This is what the hybrid schedules
+    /// exist to bound.
+    pub skew: f64,
+}
+
+impl CostModel {
+    /// Calibrate {a,b,c,d} for a blocking factor on a device.
+    ///
+    /// * `c` = MAC-iteration FLOPs / per-SM peak FLOP/s (the kernel runs at
+    ///   ~99% peak for the paper's chosen tiles, §5.3.1).
+    /// * `a` = launch constant + output-tile store (device bandwidth — tile
+    ///   stores are streaming writes, not per-SM-share bound).
+    /// * `b` = partial-tile store + memory fence + flag-signal latency.
+    /// * `d` = synchronization wait (`Wait(flags)` poll) + partial-tile
+    ///   load + serial accumulate, per peer CTA.
+    ///
+    /// The fence/wait latency constants dominate `b` and `d`; they are the
+    /// "extra overheads of communication and synchronization" (§5.2.3)
+    /// that make naive tile-splitting a losing proposition, and what the
+    /// grid-size model (§5.3.1.1) trades against MAC-loop savings.
+    pub fn calibrate(gpu: &GpuSpec, blk: (usize, usize, usize), prec: Precision) -> Self {
+        let (bm, bn, bk) = blk;
+        let elem_bytes = match prec {
+            Precision::F16F32 => 4.0, // fp32 accumulators / partials
+            Precision::F64 => 8.0,
+        };
+        let per_sm_flops = gpu.peak_tflops(prec) * 1e12 / gpu.sms as f64;
+        let dev_bw = gpu.mem_bw_gbs * 1e9;
+
+        let mac_flops = 2.0 * (bm * bn * bk) as f64;
+        let tile_bytes = (bm * bn) as f64 * elem_bytes;
+
+        let launch = 2.0e-6; // grid-launch + cold-miss constant
+        let c = mac_flops / per_sm_flops;
+        let a = launch + tile_bytes / dev_bw;
+        // b: one-time cost of making partials globally visible (store +
+        // memory fence + flag signal) — the big fixed toll for splitting.
+        let b = tile_bytes / dev_bw + 13.5e-6;
+        // d: per-peer accumulate (partials land in L2, reads are cheap).
+        let d = tile_bytes / dev_bw + 0.45e-6;
+        CostModel {
+            a,
+            b,
+            c,
+            d,
+            skew: 0.08,
+        }
+    }
+
+    /// CTA runtime for a tile-outputting CTA given its iteration count and
+    /// the number of CTAs covering its tile (`peers` = FixupPeers).
+    pub fn cta_time(&self, iters: u64, peers: u64) -> f64 {
+        let shared = peers > 1;
+        self.a
+            + if shared { self.b } else { 0.0 }
+            + self.c * iters as f64
+            + self.d * peers.saturating_sub(1) as f64
+    }
+}
+
+/// Cost model for Chapter-4 SpMV schedules (bandwidth-bound).
+#[derive(Debug, Clone, Copy)]
+pub struct SpmvCost {
+    /// Seconds to stream one nonzero's working set (value + col index + x
+    /// gather) through an SM at its bandwidth share.
+    pub t_item: f64,
+    /// Per-row epilogue (y store + offsets read), seconds.
+    pub t_row: f64,
+    /// One binary-search probe (shared-memory staged), seconds.
+    pub t_search: f64,
+    /// Block-level constant: launch slot + prefix-sum barrier.
+    pub t_block: f64,
+    /// Threads per CTA for the SpMV kernels.
+    pub block_threads: usize,
+}
+
+impl SpmvCost {
+    pub fn calibrate(gpu: &GpuSpec) -> Self {
+        let per_sm_bw = gpu.mem_bw_gbs * 1e9 / gpu.sms as f64;
+        // value (4B) + column index (4B) + x gather (4B, partially cached).
+        let item_bytes = 12.0;
+        let row_bytes = 8.0; // y write + offset read
+        SpmvCost {
+            t_item: item_bytes / per_sm_bw,
+            t_row: row_bytes / per_sm_bw,
+            t_search: 6.0 / per_sm_bw * 4.0, // few dependent L2 probes
+            t_block: 1.2e-6,
+            block_threads: 128,
+        }
+    }
+
+    /// Device-level bandwidth floor: no schedule can beat streaming the
+    /// matrix once through DRAM.
+    pub fn bandwidth_floor(&self, gpu: &GpuSpec, rows: usize, nnz: usize) -> f64 {
+        let bytes = nnz as f64 * 12.0 + rows as f64 * 8.0;
+        bytes / (gpu.mem_bw_gbs * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_orders_of_magnitude() {
+        let gpu = GpuSpec::a100();
+        let m = CostModel::calibrate(&gpu, (128, 128, 32), Precision::F16F32);
+        // One 128x128x32 MAC iter at 2.06 TFLOP/s/SM ~ 0.5 us.
+        assert!(m.c > 0.2e-6 && m.c < 1.0e-6, "c={}", m.c);
+        assert!(m.a > 1.0e-6 && m.a < 20.0e-6, "a={}", m.a);
+
+        let m64 = CostModel::calibrate(&gpu, (64, 64, 16), Precision::F64);
+        assert!(m64.c > 0.5e-6 && m64.c < 2.0e-6, "c={}", m64.c);
+    }
+
+    #[test]
+    fn cta_time_monotone_in_iters_and_peers() {
+        let m = CostModel::calibrate(&GpuSpec::a100(), (128, 128, 32), Precision::F16F32);
+        assert!(m.cta_time(10, 1) < m.cta_time(11, 1));
+        assert!(m.cta_time(10, 1) < m.cta_time(10, 2));
+        assert!(m.cta_time(10, 2) < m.cta_time(10, 3));
+    }
+
+    #[test]
+    fn single_cta_no_fixup_terms() {
+        let m = CostModel {
+            a: 1.0,
+            b: 10.0,
+            c: 0.1,
+            d: 100.0,
+            skew: 0.0,
+        };
+        assert!((m.cta_time(5, 1) - 1.5).abs() < 1e-12);
+        assert!((m.cta_time(5, 2) - (1.0 + 10.0 + 0.5 + 100.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spmv_bandwidth_floor_scales_with_nnz() {
+        let gpu = GpuSpec::a100();
+        let c = SpmvCost::calibrate(&gpu);
+        let t1 = c.bandwidth_floor(&gpu, 1000, 10_000);
+        let t2 = c.bandwidth_floor(&gpu, 1000, 20_000);
+        assert!(t2 > 1.5 * t1);
+    }
+}

@@ -1,0 +1,124 @@
+//! Device descriptions for the execution-model simulator.
+
+/// Floating-point precision of a GEMM problem (paper Ch. 5 evaluates two).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Mixed FP16 inputs -> FP32 accumulate (tensor-core path).
+    F16F32,
+    /// Double precision (FP64 tensor-core path).
+    F64,
+}
+
+impl Precision {
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F16F32 => "fp16->32",
+            Precision::F64 => "fp64",
+        }
+    }
+
+    /// Artifact suffix used by the runtime (`f32` stands in for fp16->32 on
+    /// the CPU-interpret path; see DESIGN.md §Hardware-Adaptation).
+    pub fn artifact_suffix(self) -> &'static str {
+        match self {
+            Precision::F16F32 => "f32",
+            Precision::F64 => "f64",
+        }
+    }
+}
+
+/// A simulated GPU: the quantities the paper's models consume.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Physical streaming multiprocessors (the paper's `p`).
+    pub sms: usize,
+    /// SM clock in GHz (paper locks the A100 at 1.005 GHz).
+    pub clock_ghz: f64,
+    /// Peak tensor-core TFLOP/s at the locked clock, per precision.
+    pub peak_tflops_f16f32: f64,
+    pub peak_tflops_f64: f64,
+    /// Global memory bandwidth, GB/s.
+    pub mem_bw_gbs: f64,
+    /// L2 capacity in MiB (locality effects).
+    pub l2_mib: f64,
+    /// Max concurrently resident CTAs per SM for the GEMM kernels
+    /// (occupancy; 1 for the big tiles the paper uses).
+    pub ctas_per_sm: usize,
+}
+
+impl GpuSpec {
+    /// NVIDIA A100 as configured in §5.4: 108 SMs, 400 W, clocks locked at
+    /// 1005 MHz => 13.9 TFLOP/s FP64, 222.3 TFLOP/s FP16->32, 1555 GB/s.
+    pub fn a100() -> Self {
+        GpuSpec {
+            name: "A100 (sim)",
+            sms: 108,
+            clock_ghz: 1.005,
+            peak_tflops_f16f32: 222.3,
+            peak_tflops_f64: 13.9,
+            mem_bw_gbs: 1555.0,
+            l2_mib: 40.0,
+            ctas_per_sm: 1,
+        }
+    }
+
+    /// NVIDIA V100 as used in §4.5 (Chapter-4 experiments).
+    pub fn v100() -> Self {
+        GpuSpec {
+            name: "V100 (sim)",
+            sms: 80,
+            clock_ghz: 1.38,
+            peak_tflops_f16f32: 112.0,
+            peak_tflops_f64: 7.0,
+            mem_bw_gbs: 900.0,
+            l2_mib: 6.0,
+            ctas_per_sm: 2,
+        }
+    }
+
+    /// The hypothetical four-SM GPU of Figures 5.1–5.3 and 5.5.
+    pub fn toy(sms: usize) -> Self {
+        GpuSpec {
+            name: "toy",
+            sms,
+            clock_ghz: 1.0,
+            peak_tflops_f16f32: 1.0,
+            peak_tflops_f64: 0.5,
+            mem_bw_gbs: 100.0,
+            l2_mib: 4.0,
+            ctas_per_sm: 1,
+        }
+    }
+
+    pub fn peak_tflops(&self, prec: Precision) -> f64 {
+        match prec {
+            Precision::F16F32 => self.peak_tflops_f16f32,
+            Precision::F64 => self.peak_tflops_f64,
+        }
+    }
+
+    /// Maximum concurrently executing CTAs ("grid-filling" size).
+    pub fn concurrent_ctas(&self) -> usize {
+        self.sms * self.ctas_per_sm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_matches_paper_parameters() {
+        let g = GpuSpec::a100();
+        assert_eq!(g.sms, 108);
+        assert!((g.peak_tflops(Precision::F64) - 13.9).abs() < 1e-9);
+        assert!((g.peak_tflops(Precision::F16F32) - 222.3).abs() < 1e-9);
+        assert!((g.mem_bw_gbs - 1555.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn toy_gpu_sizes() {
+        assert_eq!(GpuSpec::toy(4).concurrent_ctas(), 4);
+    }
+}

@@ -1,0 +1,21 @@
+//! GPU execution-model simulator — the hardware substitution (DESIGN.md).
+//!
+//! The paper's phenomena are scheduling-model properties: wave quantization
+//! (Ch. 5), warp-lockstep serialization under row-length imbalance (Ch. 4),
+//! and fixup/synchronization overheads (§5.3.1).  This module implements the
+//! machine those phenomena live on:
+//!
+//! * [`GpuSpec`] — the device (SM count, clocks, peak math, bandwidth).
+//! * [`scheduler`] — the hardware block scheduler: greedy dispatch of an
+//!   oversubscribed CTA list onto SMs, producing an event timeline.
+//! * [`cost`] — the paper's own analytical CTA cost model
+//!   (`a + b·[peers>1] + c·iters + d·(peers−1)`, §5.3.1.1) plus the
+//!   bandwidth-bound SpMV cost model for Chapter 4.
+
+pub mod cost;
+pub mod gpu;
+pub mod scheduler;
+
+pub use cost::{CostModel, SpmvCost};
+pub use gpu::GpuSpec;
+pub use scheduler::{simulate, simulate_persistent, CtaWork, Timeline};

@@ -1,0 +1,74 @@
+//! Coordinate (COO) format — a plain list of (row, col, value) triplets
+//! (§3.1.1).  COO splits trivially by nonzero count but pays to recover row
+//! membership; CSR is the opposite trade-off.
+
+/// COO sparse matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Coo {
+    pub rows: usize,
+    pub cols: usize,
+    pub entries: Vec<(u32, u32, f64)>,
+}
+
+impl Coo {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Coo {
+            rows,
+            cols,
+            entries: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.entries.push((r as u32, c as u32, v));
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Sort by (row, col) — the optional preprocessing step in §3.1.1.
+    pub fn sort(&mut self) {
+        self.entries.sort_unstable_by_key(|&(r, c, _)| (r, c));
+    }
+
+    /// Reference SpMV directly off the triplet list.
+    pub fn spmv_ref(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0f64; self.rows];
+        for &(r, c, v) in &self.entries {
+            y[r as usize] += v * x[c as usize];
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_spmv() {
+        let mut a = Coo::new(2, 3);
+        a.push(0, 1, 2.0);
+        a.push(1, 2, 3.0);
+        a.push(0, 0, 1.0);
+        assert_eq!(a.nnz(), 3);
+        let y = a.spmv_ref(&[1.0, 1.0, 1.0]);
+        assert_eq!(y, vec![3.0, 3.0]);
+    }
+
+    #[test]
+    fn sort_orders_row_major() {
+        let mut a = Coo::new(2, 2);
+        a.push(1, 0, 1.0);
+        a.push(0, 1, 2.0);
+        a.push(0, 0, 3.0);
+        a.sort();
+        assert_eq!(
+            a.entries,
+            vec![(0, 0, 3.0), (0, 1, 2.0), (1, 0, 1.0)]
+        );
+    }
+}

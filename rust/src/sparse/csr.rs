@@ -1,0 +1,262 @@
+//! Compressed Sparse Row format (§3.1.1).
+//!
+//! CSR stores a row-major list of nonzero column indices and values plus a
+//! prefix-sum (`offsets`) of nonzeros over rows.  `offsets` is exactly the
+//! "atoms-per-tile prefix sum" the Chapter-4 schedules search.
+
+use super::Coo;
+
+/// CSR sparse matrix with `f64` values (converted at the runtime boundary).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    /// len == rows + 1; `offsets[r]..offsets[r+1]` spans row r's nonzeros.
+    pub offsets: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from an (unsorted) COO triplet list; duplicates are summed.
+    pub fn from_coo(coo: &Coo) -> Self {
+        let mut entries = coo.entries.clone();
+        entries.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        // Sum duplicates.
+        let mut dedup: Vec<(u32, u32, f64)> = Vec::with_capacity(entries.len());
+        for (r, c, v) in entries {
+            match dedup.last_mut() {
+                Some(last) if last.0 == r && last.1 == c => last.2 += v,
+                _ => dedup.push((r, c, v)),
+            }
+        }
+        let mut offsets = vec![0usize; coo.rows + 1];
+        for &(r, _, _) in &dedup {
+            offsets[r as usize + 1] += 1;
+        }
+        for r in 0..coo.rows {
+            offsets[r + 1] += offsets[r];
+        }
+        let indices = dedup.iter().map(|&(_, c, _)| c).collect();
+        let values = dedup.iter().map(|&(_, _, v)| v).collect();
+        Csr {
+            rows: coo.rows,
+            cols: coo.cols,
+            offsets,
+            indices,
+            values,
+        }
+    }
+
+    /// Build directly from parts (validated).
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        offsets: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f64>,
+    ) -> crate::Result<Self> {
+        use anyhow::ensure;
+        ensure!(offsets.len() == rows + 1, "offsets len != rows+1");
+        ensure!(offsets[0] == 0, "offsets[0] != 0");
+        ensure!(
+            offsets.windows(2).all(|w| w[0] <= w[1]),
+            "offsets not monotone"
+        );
+        ensure!(*offsets.last().unwrap() == indices.len(), "offsets tail");
+        ensure!(indices.len() == values.len(), "indices/values mismatch");
+        ensure!(
+            indices.iter().all(|&c| (c as usize) < cols),
+            "column index out of range"
+        );
+        Ok(Csr {
+            rows,
+            cols,
+            offsets,
+            indices,
+            values,
+        })
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Nonzeros in row `r` — one subtraction, the CSR selling point.
+    pub fn row_nnz(&self, r: usize) -> usize {
+        self.offsets[r + 1] - self.offsets[r]
+    }
+
+    /// (column indices, values) of row `r`.
+    pub fn row(&self, r: usize) -> (&[u32], &[f64]) {
+        let (s, e) = (self.offsets[r], self.offsets[r + 1]);
+        (&self.indices[s..e], &self.values[s..e])
+    }
+
+    pub fn to_coo(&self) -> Coo {
+        let mut entries = Vec::with_capacity(self.nnz());
+        for r in 0..self.rows {
+            for k in self.offsets[r]..self.offsets[r + 1] {
+                entries.push((r as u32, self.indices[k], self.values[k]));
+            }
+        }
+        Coo {
+            rows: self.rows,
+            cols: self.cols,
+            entries,
+        }
+    }
+
+    /// Transpose (i.e., CSC of the original viewed as CSR).
+    pub fn transpose(&self) -> Csr {
+        let mut offsets = vec![0usize; self.cols + 1];
+        for &c in &self.indices {
+            offsets[c as usize + 1] += 1;
+        }
+        for c in 0..self.cols {
+            offsets[c + 1] += offsets[c];
+        }
+        let mut cursor = offsets.clone();
+        let mut indices = vec![0u32; self.nnz()];
+        let mut values = vec![0f64; self.nnz()];
+        for r in 0..self.rows {
+            for k in self.offsets[r]..self.offsets[r + 1] {
+                let c = self.indices[k] as usize;
+                let dst = cursor[c];
+                cursor[c] += 1;
+                indices[dst] = r as u32;
+                values[dst] = self.values[k];
+            }
+        }
+        Csr {
+            rows: self.cols,
+            cols: self.rows,
+            offsets,
+            indices,
+            values,
+        }
+    }
+
+    /// Reference sequential SpMV: y = A x (ground truth for every schedule).
+    pub fn spmv_ref(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0f64; self.rows];
+        for r in 0..self.rows {
+            let mut sum = 0f64;
+            for k in self.offsets[r]..self.offsets[r + 1] {
+                sum += self.values[k] * x[self.indices[k] as usize];
+            }
+            y[r] = sum;
+        }
+        y
+    }
+
+    /// Reference SpMM: Y = A X where X is (cols x n) row-major.
+    pub fn spmm_ref(&self, x: &[f64], n: usize) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols * n);
+        let mut y = vec![0f64; self.rows * n];
+        for r in 0..self.rows {
+            for k in self.offsets[r]..self.offsets[r + 1] {
+                let c = self.indices[k] as usize;
+                let v = self.values[k];
+                for j in 0..n {
+                    y[r * n + j] += v * x[c * n + j];
+                }
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Csr {
+        // [1 0 2]
+        // [0 0 0]
+        // [3 4 0]
+        Csr::from_parts(
+            3,
+            3,
+            vec![0, 2, 2, 4],
+            vec![0, 2, 0, 1],
+            vec![1.0, 2.0, 3.0, 4.0],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn row_access() {
+        let a = small();
+        assert_eq!(a.nnz(), 4);
+        assert_eq!(a.row_nnz(0), 2);
+        assert_eq!(a.row_nnz(1), 0);
+        assert_eq!(a.row(2), (&[0u32, 1u32][..], &[3.0, 4.0][..]));
+    }
+
+    #[test]
+    fn spmv_reference() {
+        let a = small();
+        let y = a.spmv_ref(&[1.0, 2.0, 3.0]);
+        assert_eq!(y, vec![7.0, 0.0, 11.0]);
+    }
+
+    #[test]
+    fn coo_roundtrip() {
+        let a = small();
+        assert_eq!(Csr::from_coo(&a.to_coo()), a);
+    }
+
+    #[test]
+    fn coo_duplicates_sum() {
+        let coo = Coo {
+            rows: 2,
+            cols: 2,
+            entries: vec![(0, 0, 1.0), (0, 0, 2.0), (1, 1, 5.0)],
+        };
+        let a = Csr::from_coo(&coo);
+        assert_eq!(a.nnz(), 2);
+        assert_eq!(a.row(0), (&[0u32][..], &[3.0][..]));
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = small();
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn transpose_spmv_consistency() {
+        let a = small();
+        let at = a.transpose();
+        // (A^T x)_c == sum_r A[r,c] x[r]
+        let x = vec![1.0, 10.0, 100.0];
+        let y = at.spmv_ref(&x);
+        assert_eq!(y, vec![301.0, 400.0, 2.0]);
+    }
+
+    #[test]
+    fn from_parts_validation() {
+        assert!(Csr::from_parts(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err());
+        assert!(Csr::from_parts(1, 1, vec![0, 1], vec![5], vec![1.0]).is_err());
+        assert!(Csr::from_parts(1, 2, vec![0, 2, 1], vec![0], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn spmm_matches_column_spmv() {
+        let a = small();
+        let x = vec![
+            1.0, 4.0, //
+            2.0, 5.0, //
+            3.0, 6.0,
+        ];
+        let y = a.spmm_ref(&x, 2);
+        let col0 = a.spmv_ref(&[1.0, 2.0, 3.0]);
+        let col1 = a.spmv_ref(&[4.0, 5.0, 6.0]);
+        for r in 0..3 {
+            assert_eq!(y[r * 2], col0[r]);
+            assert_eq!(y[r * 2 + 1], col1[r]);
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Synthetic sparse-matrix generators — the SuiteSparse substitution.
+//!
+//! The paper evaluates over the SuiteSparse Matrix Collection; its figures
+//! are driven by the *diversity of row-length distributions* across HPC
+//! domains.  These generators span the same regimes:
+//!
+//! * [`uniform`]      — regular rows (FEM-style meshes): thread-mapped wins.
+//! * [`power_law`]    — scale-free graphs (web/social): the load-imbalance
+//!                      stress case where merge-path dominates.
+//! * [`banded`]       — stencils/banded solvers: perfectly regular.
+//! * [`block_diag`]   — circuit-simulation-style block structure.
+//! * [`rmat`]         — Kronecker/R-MAT graphs (GraphBLAS-style corpora).
+//! * [`tall_skinny`] / [`wide_short`] — the degenerate aspect ratios CUB's
+//!                      column heuristic special-cases (Fig. 4.2 tail).
+
+use crate::rng::Rng;
+use crate::sparse::{Coo, Csr};
+
+/// Uniform-random: every row gets ~`nnz_per_row` nonzeros at random columns.
+pub fn uniform(rows: usize, cols: usize, nnz_per_row: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::new(rows, cols);
+    for r in 0..rows {
+        let k = nnz_per_row.min(cols);
+        for c in rng.sample_indices(cols, k) {
+            coo.push(r, c, rng.range_f64(-1.0, 1.0));
+        }
+    }
+    Csr::from_coo(&coo)
+}
+
+/// Power-law row lengths (Zipf exponent `alpha`, typical 1.6–2.2): a few
+/// enormous rows, a long tail of tiny ones — the scale-free imbalance case.
+pub fn power_law(rows: usize, cols: usize, max_degree: usize, alpha: f64, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::new(rows, cols);
+    for r in 0..rows {
+        let deg = rng.zipf(max_degree.min(cols).max(1), alpha);
+        for c in rng.sample_indices(cols, deg) {
+            coo.push(r, c, rng.range_f64(-1.0, 1.0));
+        }
+    }
+    Csr::from_coo(&coo)
+}
+
+/// Banded matrix with semi-bandwidth `bw` (diagonal ± bw).
+pub fn banded(n: usize, bw: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::new(n, n);
+    for r in 0..n {
+        let lo = r.saturating_sub(bw);
+        let hi = (r + bw + 1).min(n);
+        for c in lo..hi {
+            coo.push(r, c, rng.range_f64(-1.0, 1.0));
+        }
+    }
+    Csr::from_coo(&coo)
+}
+
+/// Block-diagonal with dense `block`-sized blocks (circuit-sim style).
+pub fn block_diag(n: usize, block: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::new(n, n);
+    let mut start = 0;
+    while start < n {
+        let end = (start + block).min(n);
+        for r in start..end {
+            for c in start..end {
+                coo.push(r, c, rng.range_f64(-1.0, 1.0));
+            }
+        }
+        start = end;
+    }
+    Csr::from_coo(&coo)
+}
+
+/// R-MAT / Kronecker-style graph generator (a=0.57, b=c=0.19, d=0.05 gives
+/// Graph500-like skew).  `scale` = log2(vertices), `edge_factor` edges/vertex.
+pub fn rmat(scale: u32, edge_factor: usize, seed: u64) -> Csr {
+    let n = 1usize << scale;
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::new(n, n);
+    let (a, b, c) = (0.57, 0.19, 0.19);
+    for _ in 0..n * edge_factor {
+        let (mut r, mut col) = (0usize, 0usize);
+        let mut half = n >> 1;
+        while half > 0 {
+            let p = rng.f64();
+            if p < a {
+                // top-left
+            } else if p < a + b {
+                col += half;
+            } else if p < a + b + c {
+                r += half;
+            } else {
+                r += half;
+                col += half;
+            }
+            half >>= 1;
+        }
+        coo.push(r, col, 1.0);
+    }
+    Csr::from_coo(&coo)
+}
+
+/// Tall-skinny: many rows, 1 column (the "sparse vector" CUB special-cases
+/// with its columns==1 heuristic — Fig. 4.2's outlier population).
+pub fn tall_skinny(rows: usize, density: f64, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::new(rows, 1);
+    for r in 0..rows {
+        if rng.f64() < density {
+            coo.push(r, 0, rng.range_f64(-1.0, 1.0));
+        }
+    }
+    Csr::from_coo(&coo)
+}
+
+/// Wide-short: few rows, many columns, moderately dense rows.
+pub fn wide_short(rows: usize, cols: usize, nnz_per_row: usize, seed: u64) -> Csr {
+    uniform(rows, cols, nnz_per_row, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::stats;
+
+    #[test]
+    fn uniform_row_lengths_regular() {
+        let a = uniform(256, 256, 8, 1);
+        assert_eq!(a.rows, 256);
+        for r in 0..a.rows {
+            assert_eq!(a.row_nnz(r), 8);
+        }
+    }
+
+    #[test]
+    fn power_law_is_skewed() {
+        let a = power_law(2048, 2048, 1024, 1.8, 2);
+        let s = stats::row_stats(&a);
+        // Scale-free: max row far above mean.
+        assert!(s.max as f64 > 8.0 * s.mean, "max={} mean={}", s.max, s.mean);
+        assert!(a.nnz() > 0);
+    }
+
+    #[test]
+    fn banded_structure() {
+        let a = banded(64, 2, 3);
+        assert_eq!(a.row_nnz(0), 3); // row 0: cols 0..=2
+        assert_eq!(a.row_nnz(32), 5); // interior: 5-point band
+        for r in 0..64 {
+            let (cols, _) = a.row(r);
+            for &c in cols {
+                assert!((c as i64 - r as i64).abs() <= 2);
+            }
+        }
+    }
+
+    #[test]
+    fn block_diag_dense_blocks() {
+        let a = block_diag(16, 4, 4);
+        assert_eq!(a.nnz(), 4 * 16);
+        for r in 0..16 {
+            assert_eq!(a.row_nnz(r), 4);
+        }
+    }
+
+    #[test]
+    fn rmat_shape_and_determinism() {
+        let a = rmat(8, 4, 5);
+        let b = rmat(8, 4, 5);
+        assert_eq!(a, b);
+        assert_eq!(a.rows, 256);
+        assert!(a.nnz() <= 256 * 4); // duplicates merged
+        assert!(a.nnz() > 128);
+    }
+
+    #[test]
+    fn tall_skinny_single_column() {
+        let a = tall_skinny(512, 0.5, 6);
+        assert_eq!(a.cols, 1);
+        assert!(a.nnz() > 128 && a.nnz() < 384);
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        assert_eq!(uniform(64, 64, 4, 9), uniform(64, 64, 4, 9));
+        assert_eq!(
+            power_law(64, 64, 32, 2.0, 9),
+            power_law(64, 64, 32, 2.0, 9)
+        );
+    }
+}

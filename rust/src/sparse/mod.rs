@@ -1,0 +1,15 @@
+//! Sparse-matrix substrate: formats (CSR/COO/CSC), synthetic generators,
+//! MatrixMarket IO, and imbalance statistics.
+//!
+//! These are the "tile sets" of the Chapter-4 abstraction — CSR's row
+//! offsets array *is* the prefix-sum over atoms-per-tile that every
+//! load-balancing schedule consumes (§3.1.1, Listing 4.1).
+
+mod coo;
+mod csr;
+pub mod gen;
+pub mod mtx;
+pub mod stats;
+
+pub use coo::Coo;
+pub use csr::Csr;

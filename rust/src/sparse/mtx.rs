@@ -1,0 +1,140 @@
+//! MatrixMarket (`.mtx`) IO — so real SuiteSparse files can be dropped in
+//! for the Chapter-4 experiments when available.
+//!
+//! Supports `matrix coordinate real|integer|pattern general|symmetric`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, ensure, Context};
+
+use crate::sparse::{Coo, Csr};
+use crate::Result;
+
+/// Read a MatrixMarket coordinate file into CSR.
+pub fn read(path: impl AsRef<Path>) -> Result<Csr> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    read_from(BufReader::new(f))
+}
+
+/// Read MatrixMarket text from any reader.
+pub fn read_from(reader: impl BufRead) -> Result<Csr> {
+    let mut lines = reader.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| anyhow!("empty mtx file"))??
+        .to_lowercase();
+    ensure!(
+        header.starts_with("%%matrixmarket matrix coordinate"),
+        "unsupported MatrixMarket header: {header}"
+    );
+    let pattern = header.contains("pattern");
+    let symmetric = header.contains("symmetric");
+
+    let mut size_line = None;
+    for line in lines.by_ref() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        size_line = Some(t.to_string());
+        break;
+    }
+    let size_line = size_line.ok_or_else(|| anyhow!("missing size line"))?;
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .map(|t| t.parse::<usize>())
+        .collect::<std::result::Result<_, _>>()?;
+    ensure!(dims.len() == 3, "bad size line: {size_line}");
+    let (rows, cols, nnz) = (dims[0], dims[1], dims[2]);
+
+    let mut coo = Coo::new(rows, cols);
+    let mut seen = 0usize;
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let r: usize = it.next().ok_or_else(|| anyhow!("bad entry"))?.parse()?;
+        let c: usize = it.next().ok_or_else(|| anyhow!("bad entry"))?.parse()?;
+        let v: f64 = if pattern {
+            1.0
+        } else {
+            it.next().ok_or_else(|| anyhow!("bad entry"))?.parse()?
+        };
+        ensure!(r >= 1 && r <= rows && c >= 1 && c <= cols, "entry oob: {t}");
+        coo.push(r - 1, c - 1, v);
+        if symmetric && r != c {
+            coo.push(c - 1, r - 1, v);
+        }
+        seen += 1;
+    }
+    ensure!(seen == nnz, "expected {nnz} entries, saw {seen}");
+    Ok(Csr::from_coo(&coo))
+}
+
+/// Write a CSR matrix as MatrixMarket coordinate real general.
+pub fn write(a: &Csr, path: impl AsRef<Path>) -> Result<()> {
+    let mut f = std::fs::File::create(path.as_ref())?;
+    writeln!(f, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(f, "{} {} {}", a.rows, a.cols, a.nnz())?;
+    for r in 0..a.rows {
+        let (cols, vals) = a.row(r);
+        for (c, v) in cols.iter().zip(vals) {
+            writeln!(f, "{} {} {}", r + 1, c + 1, v)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn roundtrip_via_tempfile() {
+        let a = crate::sparse::gen::uniform(32, 24, 3, 7);
+        let path = std::env::temp_dir().join("gpulb_test_roundtrip.mtx");
+        write(&a, &path).unwrap();
+        let b = read(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn parses_pattern_and_comments() {
+        let text = "%%MatrixMarket matrix coordinate pattern general\n\
+                    % a comment\n\
+                    2 2 2\n\
+                    1 1\n\
+                    2 2\n";
+        let a = read_from(Cursor::new(text)).unwrap();
+        assert_eq!(a.nnz(), 2);
+        assert_eq!(a.row(0), (&[0u32][..], &[1.0][..]));
+    }
+
+    #[test]
+    fn parses_symmetric() {
+        let text = "%%MatrixMarket matrix coordinate real symmetric\n\
+                    2 2 2\n\
+                    1 1 5.0\n\
+                    2 1 3.0\n";
+        let a = read_from(Cursor::new(text)).unwrap();
+        assert_eq!(a.nnz(), 3); // diag + mirrored off-diag
+        assert_eq!(a.row(0), (&[0u32, 1u32][..], &[5.0, 3.0][..]));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(read_from(Cursor::new("hello\n")).is_err());
+        assert!(read_from(Cursor::new(
+            "%%MatrixMarket matrix coordinate real general\n1 1 1\n5 5 1.0\n"
+        ))
+        .is_err());
+    }
+}

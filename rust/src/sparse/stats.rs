@@ -1,0 +1,134 @@
+//! Row-length / imbalance statistics — the quantities load-balancing
+//! heuristics key on (§3.2.2's cost functions, §4.5.2's α/β heuristic).
+
+use crate::sparse::Csr;
+
+/// Summary of the atoms-per-tile (row-length) distribution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowStats {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    pub mean: f64,
+    pub std: f64,
+    /// Coefficient of variation (std/mean) — the irregularity signal.
+    pub cv: f64,
+    pub min: usize,
+    pub max: usize,
+    pub empty_rows: usize,
+    /// Gini coefficient of row lengths in [0,1]; 0 = perfectly regular.
+    pub gini: f64,
+}
+
+/// Compute row statistics for a CSR matrix.
+pub fn row_stats(a: &Csr) -> RowStats {
+    let lens: Vec<usize> = (0..a.rows).map(|r| a.row_nnz(r)).collect();
+    let n = lens.len().max(1) as f64;
+    let nnz: usize = lens.iter().sum();
+    let mean = nnz as f64 / n;
+    let var = lens
+        .iter()
+        .map(|&l| {
+            let d = l as f64 - mean;
+            d * d
+        })
+        .sum::<f64>()
+        / n;
+    let std = var.sqrt();
+    let mut sorted = lens.clone();
+    sorted.sort_unstable();
+    let gini = if nnz == 0 {
+        0.0
+    } else {
+        // G = (2*sum_i i*x_i) / (n*sum x) - (n+1)/n with 1-based i on sorted x.
+        let weighted: f64 = sorted
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| (i + 1) as f64 * x as f64)
+            .sum();
+        (2.0 * weighted) / (n * nnz as f64) - (n + 1.0) / n
+    };
+    RowStats {
+        rows: a.rows,
+        cols: a.cols,
+        nnz,
+        mean,
+        std,
+        cv: if mean > 0.0 { std / mean } else { 0.0 },
+        min: sorted.first().copied().unwrap_or(0),
+        max: sorted.last().copied().unwrap_or(0),
+        empty_rows: sorted.iter().take_while(|&&l| l == 0).count(),
+        gini,
+    }
+}
+
+/// Warp-level imbalance: mean over warps of (max row in warp / mean row in
+/// warp).  This is the quantity thread-mapped scheduling is punished by —
+/// lockstep threads wait on the warp's largest row (§3.3.1).
+pub fn warp_imbalance(a: &Csr, warp: usize) -> f64 {
+    if a.rows == 0 {
+        return 1.0;
+    }
+    let mut total = 0f64;
+    let mut warps = 0usize;
+    for w in (0..a.rows).step_by(warp) {
+        let end = (w + warp).min(a.rows);
+        let lens: Vec<usize> = (w..end).map(|r| a.row_nnz(r)).collect();
+        let max = *lens.iter().max().unwrap() as f64;
+        let mean = lens.iter().sum::<usize>() as f64 / lens.len() as f64;
+        total += if mean > 0.0 { max / mean } else { 1.0 };
+        warps += 1;
+    }
+    total / warps.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn regular_matrix_stats() {
+        let a = gen::uniform(128, 128, 4, 1);
+        let s = row_stats(&a);
+        assert_eq!(s.nnz, 128 * 4);
+        assert!((s.mean - 4.0).abs() < 1e-9);
+        assert!(s.std < 1e-9);
+        assert!(s.gini.abs() < 1e-9);
+        assert!((warp_imbalance(&a, 32) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn skewed_matrix_has_high_cv_and_gini() {
+        let a = gen::power_law(1024, 1024, 512, 1.8, 2);
+        let s = row_stats(&a);
+        assert!(s.cv > 0.5, "cv={}", s.cv);
+        assert!(s.gini > 0.2, "gini={}", s.gini);
+        assert!(warp_imbalance(&a, 32) > 1.5);
+    }
+
+    #[test]
+    fn gini_bounds() {
+        for seed in 0..5 {
+            let a = gen::power_law(256, 256, 128, 2.0, seed);
+            let g = row_stats(&a).gini;
+            assert!((0.0..=1.0).contains(&g), "gini={g}");
+        }
+    }
+
+    #[test]
+    fn empty_rows_counted() {
+        let a = crate::sparse::Csr::from_parts(
+            3,
+            2,
+            vec![0, 0, 1, 1],
+            vec![0],
+            vec![1.0],
+        )
+        .unwrap();
+        let s = row_stats(&a);
+        assert_eq!(s.empty_rows, 2);
+        assert_eq!(s.min, 0);
+        assert_eq!(s.max, 1);
+    }
+}

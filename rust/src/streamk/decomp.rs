@@ -1,0 +1,411 @@
+//! Work decomposition strategies (§5.2) as explicit per-CTA iteration plans.
+//!
+//! Every strategy produces a [`Plan`]: for each CTA, the list of
+//! `(tile, local iteration range)` it executes, in order.  The plan is what
+//! both the executor (real numerics through the PJRT MacLoop artifacts) and
+//! the simulator (cost model + block scheduler) consume — one source of
+//! truth for "who computes what".
+
+use super::{Blocking, GemmShape};
+
+/// A CTA's contiguous run of MAC-loop iterations within one output tile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileRange {
+    pub tile: usize,
+    /// Local iteration range within the tile: `[iter_begin, iter_end)`,
+    /// `iter_end <= iters_per_tile`.
+    pub iter_begin: u64,
+    pub iter_end: u64,
+}
+
+impl TileRange {
+    pub fn iters(&self) -> u64 {
+        self.iter_end - self.iter_begin
+    }
+
+    /// Does this range start the tile (k=0)?  The starting CTA owns the
+    /// output and accumulates peers' partials (Algorithm 10).
+    pub fn starts_tile(&self) -> bool {
+        self.iter_begin == 0
+    }
+}
+
+/// One CTA's full workload.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct CtaPlan {
+    pub ranges: Vec<TileRange>,
+}
+
+impl CtaPlan {
+    pub fn iters(&self) -> u64 {
+        self.ranges.iter().map(TileRange::iters).sum()
+    }
+}
+
+/// The decomposition strategies of §5.2 (+ §5.3.2 hybrids).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decomposition {
+    /// §5.2.2 — one CTA per output tile.
+    DataParallel,
+    /// §5.2.3 — each tile split across `s` CTAs along k.
+    FixedSplit { s: usize },
+    /// §5.2.4 / Algorithm 10 — even iteration share over `g` CTAs.
+    StreamK { g: usize },
+    /// §5.3.2 — "data-parallel + one-tile Stream-K": full DP waves, the
+    /// final partial wave's tiles iteration-balanced over `p` CTAs.
+    HybridOneTile { p: usize },
+    /// §5.3.2 — "two-tile Stream-K + data-parallel": one fewer DP wave;
+    /// each Stream-K CTA gets one-to-two tiles' worth of iterations.
+    HybridTwoTile { p: usize },
+}
+
+impl Decomposition {
+    pub fn name(self) -> &'static str {
+        match self {
+            Decomposition::DataParallel => "data-parallel",
+            Decomposition::FixedSplit { .. } => "fixed-split",
+            Decomposition::StreamK { .. } => "stream-k",
+            Decomposition::HybridOneTile { .. } => "dp+one-tile-sk",
+            Decomposition::HybridTwoTile { .. } => "two-tile-sk+dp",
+        }
+    }
+}
+
+/// A full decomposition plan for one GEMM launch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    pub shape: GemmShape,
+    pub blocking: Blocking,
+    pub decomposition: Decomposition,
+    pub ctas: Vec<CtaPlan>,
+    pub num_tiles: usize,
+    pub iters_per_tile: u64,
+}
+
+impl Plan {
+    /// CTAs covering each tile (FixupPeers per tile).
+    pub fn peers_per_tile(&self) -> Vec<u32> {
+        let mut peers = vec![0u32; self.num_tiles];
+        for cta in &self.ctas {
+            for r in &cta.ranges {
+                peers[r.tile] += 1;
+            }
+        }
+        peers
+    }
+
+    /// Validate: every tile's iterations covered exactly once.
+    pub fn validate(&self) -> crate::Result<()> {
+        use anyhow::ensure;
+        let mut covered = vec![0u64; self.num_tiles];
+        for cta in &self.ctas {
+            for r in &cta.ranges {
+                ensure!(r.tile < self.num_tiles, "tile {} oob", r.tile);
+                ensure!(
+                    r.iter_begin < r.iter_end && r.iter_end <= self.iters_per_tile,
+                    "bad range {r:?}"
+                );
+                covered[r.tile] += r.iters();
+            }
+        }
+        for (t, &c) in covered.iter().enumerate() {
+            ensure!(
+                c == self.iters_per_tile,
+                "tile {t}: covered {c} of {} iters",
+                self.iters_per_tile
+            );
+        }
+        // Ranges within a tile must not overlap: since totals match and all
+        // ranges are sub-intervals, verify pairwise disjointness per tile.
+        let mut by_tile: Vec<Vec<(u64, u64)>> = vec![Vec::new(); self.num_tiles];
+        for cta in &self.ctas {
+            for r in &cta.ranges {
+                by_tile[r.tile].push((r.iter_begin, r.iter_end));
+            }
+        }
+        for (t, ranges) in by_tile.iter_mut().enumerate() {
+            ranges.sort_unstable();
+            for w in ranges.windows(2) {
+                ensure!(
+                    w[0].1 <= w[1].0,
+                    "tile {t}: overlapping ranges {w:?}"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Max absolute difference in iterations across CTAs (Stream-K's
+    /// headline guarantee: <= 1 for the basic decomposition).
+    pub fn iter_imbalance(&self) -> u64 {
+        let iters: Vec<u64> = self.ctas.iter().map(CtaPlan::iters).collect();
+        let max = iters.iter().copied().max().unwrap_or(0);
+        let min = iters.iter().copied().min().unwrap_or(0);
+        max - min
+    }
+}
+
+/// Build the plan for a decomposition.
+pub fn plan(shape: GemmShape, blocking: Blocking, decomposition: Decomposition) -> Plan {
+    let num_tiles = blocking.tiles(shape);
+    let iters_per_tile = blocking.iters_per_tile(shape);
+    let ctas = match decomposition {
+        Decomposition::DataParallel => plan_dp(num_tiles, iters_per_tile),
+        Decomposition::FixedSplit { s } => plan_fixed_split(num_tiles, iters_per_tile, s),
+        Decomposition::StreamK { g } => plan_stream_k(num_tiles, iters_per_tile, g, 0),
+        Decomposition::HybridOneTile { p } => plan_hybrid(num_tiles, iters_per_tile, p, false),
+        Decomposition::HybridTwoTile { p } => plan_hybrid(num_tiles, iters_per_tile, p, true),
+    };
+    Plan {
+        shape,
+        blocking,
+        decomposition,
+        ctas,
+        num_tiles,
+        iters_per_tile,
+    }
+}
+
+fn plan_dp(tiles: usize, ipt: u64) -> Vec<CtaPlan> {
+    (0..tiles)
+        .map(|t| CtaPlan {
+            ranges: vec![TileRange {
+                tile: t,
+                iter_begin: 0,
+                iter_end: ipt,
+            }],
+        })
+        .collect()
+}
+
+fn plan_fixed_split(tiles: usize, ipt: u64, s: usize) -> Vec<CtaPlan> {
+    let s = s.max(1) as u64;
+    let per = ipt.div_ceil(s);
+    let mut ctas = Vec::new();
+    // CTA (x, y): tile x, split y — matches Algorithm 9's fork order.
+    for y in 0..s {
+        for t in 0..tiles {
+            let begin = y * per;
+            let end = ((y + 1) * per).min(ipt);
+            if begin < end {
+                ctas.push(CtaPlan {
+                    ranges: vec![TileRange {
+                        tile: t,
+                        iter_begin: begin,
+                        iter_end: end,
+                    }],
+                });
+            }
+        }
+    }
+    ctas
+}
+
+/// Basic Stream-K over `g` CTAs covering tiles `[tile_base, tile_base + tiles)`.
+fn plan_stream_k(tiles: usize, ipt: u64, g: usize, tile_base: usize) -> Vec<CtaPlan> {
+    let g = g.max(1) as u64;
+    let total = tiles as u64 * ipt;
+    if total == 0 {
+        return Vec::new();
+    }
+    // Even share within one: first `rem` CTAs take `per + 1`.
+    let per = total / g;
+    let rem = total % g;
+    let mut ctas = Vec::new();
+    let mut iter = 0u64;
+    for x in 0..g {
+        let share = per + if x < rem { 1 } else { 0 };
+        if share == 0 {
+            continue;
+        }
+        let iter_end_cta = iter + share;
+        let mut ranges = Vec::new();
+        let mut cur = iter;
+        while cur < iter_end_cta {
+            let tile = (cur / ipt) as usize;
+            let tile_start = tile as u64 * ipt;
+            let local_begin = cur - tile_start;
+            let local_end = (iter_end_cta - tile_start).min(ipt);
+            ranges.push(TileRange {
+                tile: tile + tile_base,
+                iter_begin: local_begin,
+                iter_end: local_end,
+            });
+            cur = tile_start + local_end;
+        }
+        ctas.push(CtaPlan { ranges });
+        iter = iter_end_cta;
+    }
+    ctas
+}
+
+/// Hybrid schedules (§5.3.2).  `two_tile` selects the "two-tile Stream-K +
+/// data-parallel" variant; otherwise "data-parallel + one-tile Stream-K".
+fn plan_hybrid(tiles: usize, ipt: u64, p: usize, two_tile: bool) -> Vec<CtaPlan> {
+    let p = p.max(1);
+    let full_waves = tiles / p;
+    if tiles % p == 0 {
+        // Perfect quantization: pure data-parallel is optimal (Stream-K
+        // generalizes to DP here, §5.2.4).
+        return plan_dp(tiles, ipt);
+    }
+    // Waves to run data-parallel; the rest is the Stream-K region.
+    let dp_waves = if two_tile {
+        full_waves.saturating_sub(1)
+    } else {
+        full_waves
+    };
+    let dp_tiles = dp_waves * p;
+    let sk_tiles = tiles - dp_tiles;
+
+    // Stream-K region first (tiles [0, sk_tiles)), then full DP waves — the
+    // skewed region runs while DP waves fill the machine behind it.
+    let sk_iters = sk_tiles as u64 * ipt;
+    let g = p.min(sk_iters.max(1) as usize);
+    let mut ctas = plan_stream_k(sk_tiles, ipt, g, 0);
+    for t in sk_tiles..tiles {
+        ctas.push(CtaPlan {
+            ranges: vec![TileRange {
+                tile: t,
+                iter_begin: 0,
+                iter_end: ipt,
+            }],
+        });
+    }
+    ctas
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SHAPE: GemmShape = GemmShape {
+        m: 384,
+        n: 384,
+        k: 128,
+    };
+    const BLK: Blocking = Blocking::new(128, 128, 4);
+
+    #[test]
+    fn dp_one_cta_per_tile() {
+        let p = plan(SHAPE, BLK, Decomposition::DataParallel);
+        assert_eq!(p.ctas.len(), 9);
+        p.validate().unwrap();
+        assert_eq!(p.iter_imbalance(), 0);
+        assert!(p.peers_per_tile().iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn fixed_split_splits_every_tile() {
+        let p = plan(SHAPE, BLK, Decomposition::FixedSplit { s: 4 });
+        assert_eq!(p.ctas.len(), 36);
+        p.validate().unwrap();
+        assert!(p.peers_per_tile().iter().all(|&x| x == 4));
+    }
+
+    #[test]
+    fn fixed_split_s1_equals_dp() {
+        // "it functions identically to the data-parallel decomposition when
+        // the splitting factor s = 1" (§5.2.3).
+        let a = plan(SHAPE, BLK, Decomposition::FixedSplit { s: 1 });
+        let b = plan(SHAPE, BLK, Decomposition::DataParallel);
+        assert_eq!(a.ctas, b.ctas);
+    }
+
+    #[test]
+    fn stream_k_even_share_within_one() {
+        // The worked §5.2.4 example: g=4 CTAs, 9 tiles x 32 iters = 288
+        // iterations => exactly 72 per CTA (100% quantization).
+        let p = plan(SHAPE, BLK, Decomposition::StreamK { g: 4 });
+        assert_eq!(p.ctas.len(), 4);
+        p.validate().unwrap();
+        for cta in &p.ctas {
+            assert_eq!(cta.iters(), 72);
+        }
+        assert_eq!(p.iter_imbalance(), 0);
+    }
+
+    #[test]
+    fn stream_k_generalizes_to_dp() {
+        // "when g equals the number of output tiles, Stream-K behaves
+        // identically to the data-parallel decomposition" (§5.2.4).
+        let p = plan(SHAPE, BLK, Decomposition::StreamK { g: 9 });
+        let dp = plan(SHAPE, BLK, Decomposition::DataParallel);
+        assert_eq!(p.ctas, dp.ctas);
+    }
+
+    #[test]
+    fn stream_k_generalizes_to_fixed_split() {
+        // "When the grid size g is an even multiple of the number of output
+        // tiles, Stream-K functions exactly as the fixed-split
+        // decomposition" — iterations per CTA match (CTA *ordering*
+        // differs: fixed-split forks (x, y) tile-major).
+        let sk = plan(SHAPE, BLK, Decomposition::StreamK { g: 18 });
+        let fs = plan(SHAPE, BLK, Decomposition::FixedSplit { s: 2 });
+        sk.validate().unwrap();
+        fs.validate().unwrap();
+        assert_eq!(sk.ctas.len(), fs.ctas.len());
+        assert!(sk.ctas.iter().all(|c| c.iters() == 16));
+        assert!(fs.ctas.iter().all(|c| c.iters() == 16));
+        assert!(sk.peers_per_tile().iter().all(|&x| x == 2));
+    }
+
+    #[test]
+    fn stream_k_imbalance_at_most_one() {
+        for (m, n, k) in [(300, 500, 700), (128, 128, 8192), (1000, 1000, 96)] {
+            let s = GemmShape::new(m, n, k);
+            let blk = Blocking::new(128, 128, 32);
+            let p = plan(s, blk, Decomposition::StreamK { g: 108 });
+            p.validate().unwrap();
+            assert!(p.iter_imbalance() <= 1, "imbalance {}", p.iter_imbalance());
+        }
+    }
+
+    #[test]
+    fn hybrid_two_tile_structure() {
+        // Fig 5.3c: 896x384x128 => 21 tiles on p=4: 4 full DP waves + 5
+        // tiles stream-k'd... two-tile: w = floor(21/4) = 5, dp_waves = 4,
+        // sk tiles = 21 - 16 = 5 over 4 CTAs (1.25 tiles each).
+        let s = GemmShape::new(896, 384, 128);
+        let p = plan(s, BLK, Decomposition::HybridTwoTile { p: 4 });
+        assert_eq!(p.num_tiles, 21);
+        p.validate().unwrap();
+        // 4 SK CTAs + 16 DP CTAs.
+        assert_eq!(p.ctas.len(), 20);
+        let sk_iters: Vec<u64> = p.ctas[..4].iter().map(CtaPlan::iters).collect();
+        for &i in &sk_iters {
+            // 5 tiles * 32 iters / 4 = 40: one-to-two tiles' worth.
+            assert_eq!(i, 40);
+        }
+    }
+
+    #[test]
+    fn hybrid_one_tile_structure() {
+        let s = GemmShape::new(896, 384, 128);
+        let p = plan(s, BLK, Decomposition::HybridOneTile { p: 4 });
+        p.validate().unwrap();
+        // w = 5 full waves DP (20 tiles) + 1 tile stream-k'd over 4 CTAs.
+        assert_eq!(p.ctas.len(), 4 + 20);
+        let sk_iters: Vec<u64> = p.ctas[..4].iter().map(CtaPlan::iters).collect();
+        assert_eq!(sk_iters.iter().sum::<u64>(), 32);
+    }
+
+    #[test]
+    fn hybrid_perfect_quantization_degenerates_to_dp() {
+        let s = GemmShape::new(512, 384, 128); // 4*3 = 12 tiles on p=4
+        let h = plan(s, BLK, Decomposition::HybridTwoTile { p: 4 });
+        let dp = plan(s, BLK, Decomposition::DataParallel);
+        assert_eq!(h.ctas, dp.ctas);
+    }
+
+    #[test]
+    fn single_tile_huge_k_strong_scaling() {
+        // Fig 5.5: one output tile, deep k: Stream-K exposes k-parallelism.
+        let s = GemmShape::new(128, 128, 384 * 32);
+        let p = plan(s, BLK, Decomposition::StreamK { g: 4 });
+        assert_eq!(p.num_tiles, 1);
+        p.validate().unwrap();
+        assert_eq!(p.ctas.len(), 4);
+        assert_eq!(p.peers_per_tile(), vec![4]);
+    }
+}

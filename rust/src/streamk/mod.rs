@@ -1,0 +1,116 @@
+//! Chapter 5 — *Stream-K*: work-centric parallel decomposition for GEMM.
+//!
+//! Classic decompositions tile the output and dispatch tiles in waves; when
+//! the tile count doesn't quantize over the SMs, the last partial wave
+//! strands cores (Fig. 5.1).  Stream-K instead partitions the *aggregate
+//! MAC-loop iteration space* evenly (within one) over a fixed,
+//! device-filling grid of CTAs, crossing tile boundaries as needed and
+//! reconciling shared tiles with a partial-sum fixup.
+//!
+//! * [`decomp`] — data-parallel, fixed-split, basic Stream-K, and the
+//!   one-tile / two-tile hybrids (§5.2, §5.3.2) as explicit per-CTA
+//!   iteration plans.
+//! * [`model`]  — the §5.3.1.1 analytical grid-size model.
+//! * [`quantization`] — wave/tile quantization-efficiency arithmetic.
+
+pub mod decomp;
+pub mod model;
+pub mod multi_gpu;
+pub mod quantization;
+
+pub use decomp::{CtaPlan, Decomposition, Plan, TileRange};
+pub use model::best_grid;
+
+use crate::sim::gpu::Precision;
+
+/// A GEMM problem shape: `C (m x n) = A (m x k) · B (k x n)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GemmShape {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl GemmShape {
+    pub fn new(m: usize, n: usize, k: usize) -> Self {
+        GemmShape { m, n, k }
+    }
+
+    /// Total multiply-accumulate volume (FLOPs = 2·m·n·k).
+    pub fn flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+}
+
+/// CTA-wide blocking factors (BLK_M, BLK_N, BLK_K).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Blocking {
+    pub bm: usize,
+    pub bn: usize,
+    pub bk: usize,
+}
+
+impl Blocking {
+    pub const fn new(bm: usize, bn: usize, bk: usize) -> Self {
+        Blocking { bm, bn, bk }
+    }
+
+    /// The paper's single tile size per precision (§5.3.1): the smallest
+    /// CTA-wide tile achieving ~99% of peak for large volumes.
+    pub fn paper_default(prec: Precision) -> Self {
+        match prec {
+            Precision::F16F32 => Blocking::new(128, 128, 32),
+            Precision::F64 => Blocking::new(64, 64, 16),
+        }
+    }
+
+    /// Output tiles for a shape (ceiling division on both axes).
+    pub fn tiles(&self, s: GemmShape) -> usize {
+        s.m.div_ceil(self.bm) * s.n.div_ceil(self.bn)
+    }
+
+    /// MAC-loop iterations per output tile.
+    pub fn iters_per_tile(&self, s: GemmShape) -> u64 {
+        s.k.div_ceil(self.bk) as u64
+    }
+
+    /// Aggregate MAC-loop iterations for a shape.
+    pub fn total_iters(&self, s: GemmShape) -> u64 {
+        self.tiles(s) as u64 * self.iters_per_tile(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_blocking_factors() {
+        assert_eq!(
+            Blocking::paper_default(Precision::F16F32),
+            Blocking::new(128, 128, 32)
+        );
+        assert_eq!(
+            Blocking::paper_default(Precision::F64),
+            Blocking::new(64, 64, 16)
+        );
+    }
+
+    #[test]
+    fn fig51_tile_count() {
+        // The worked example: 384x384x128 at 128x128 blocking = 9 tiles.
+        let blk = Blocking::new(128, 128, 4);
+        let s = GemmShape::new(384, 384, 128);
+        assert_eq!(blk.tiles(s), 9);
+        assert_eq!(blk.iters_per_tile(s), 32);
+        assert_eq!(blk.total_iters(s), 288);
+    }
+
+    #[test]
+    fn ceiling_division_on_ragged_shapes() {
+        let blk = Blocking::new(128, 128, 32);
+        let s = GemmShape::new(129, 1, 33);
+        assert_eq!(blk.tiles(s), 2);
+        assert_eq!(blk.iters_per_tile(s), 2);
+    }
+}

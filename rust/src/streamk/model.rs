@@ -1,0 +1,133 @@
+//! The §5.3.1.1 analytical grid-size model.
+//!
+//! `time_CTA(g) = a + b·[FixupPeers(g) > 1] + c·ItersPerCta(g)
+//!              + d·(FixupPeers(g) − 1)`
+//!
+//! with
+//!
+//! `ItersPerCta(g) = ceil(total_iters / g)`
+//! `FixupPeers(g)  = ceil(iters_per_tile / ItersPerCta(g))`
+//!
+//! The runtime of the whole Stream-K schedule equals the runtime of one of
+//! its tile-outputting CTAs, so the best grid size is the argmin of
+//! `time_CTA` over `g in [1, p]` — evaluated in closed form before launch,
+//! replacing ensemble kernel-selection heuristics.
+
+use super::{Blocking, GemmShape};
+use crate::sim::CostModel;
+
+/// `ceil(total_iters / g)` — even iteration share.
+pub fn iters_per_cta(shape: GemmShape, blk: Blocking, g: usize) -> u64 {
+    blk.total_iters(shape).div_ceil(g.max(1) as u64)
+}
+
+/// `ceil(iters_per_tile / iters_per_cta)` — CTAs covering one tile.
+pub fn fixup_peers(shape: GemmShape, blk: Blocking, g: usize) -> u64 {
+    let ipc = iters_per_cta(shape, blk, g);
+    blk.iters_per_tile(shape).div_ceil(ipc.max(1))
+}
+
+/// Modeled runtime of the Stream-K schedule at grid size `g`.
+pub fn time_cta(shape: GemmShape, blk: Blocking, g: usize, m: &CostModel) -> f64 {
+    let iters = iters_per_cta(shape, blk, g);
+    let peers = fixup_peers(shape, blk, g);
+    m.cta_time(iters, peers)
+}
+
+/// Grid-size selection: argmin of [`time_cta`] over `g in [1, p]`
+/// (ties -> smallest `g`, which minimizes fixup storage).
+pub fn best_grid(shape: GemmShape, blk: Blocking, p: usize, m: &CostModel) -> usize {
+    let mut best_g = 1;
+    let mut best_t = f64::INFINITY;
+    let max_g = p.max(1).min(blk.total_iters(shape).max(1) as usize);
+    for g in 1..=max_g {
+        let t = time_cta(shape, blk, g, m);
+        if t < best_t - 1e-15 {
+            best_t = t;
+            best_g = g;
+        }
+    }
+    best_g
+}
+
+/// The modeled runtime curve over `g in [1, p]` (Fig. 5.4's series).
+pub fn model_curve(shape: GemmShape, blk: Blocking, p: usize, m: &CostModel) -> Vec<(usize, f64)> {
+    (1..=p.max(1))
+        .map(|g| (g, time_cta(shape, blk, g, m)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::gpu::{GpuSpec, Precision};
+
+    fn a100_model() -> CostModel {
+        CostModel::calibrate(&GpuSpec::a100(), (128, 128, 32), Precision::F16F32)
+    }
+
+    const BLK: Blocking = Blocking::new(128, 128, 32);
+
+    #[test]
+    fn iters_per_cta_even_share() {
+        let s = GemmShape::new(384, 384, 128);
+        // 9 tiles * 4 iters = 36 total.
+        assert_eq!(iters_per_cta(s, BLK, 4), 9);
+        assert_eq!(iters_per_cta(s, BLK, 36), 1);
+        assert_eq!(iters_per_cta(s, BLK, 1), 36);
+    }
+
+    #[test]
+    fn fixup_peers_at_dp_grid_is_one() {
+        let s = GemmShape::new(1024, 1024, 4096);
+        let tiles = BLK.tiles(s);
+        assert_eq!(fixup_peers(s, BLK, tiles), 1);
+    }
+
+    #[test]
+    fn fig54_wide_output_prefers_max_grid() {
+        // Shape 1 analogue: large k, short-wide output, 64 tiles on 108
+        // SMs (under one wave): monotone improvement to g = p.
+        let m = a100_model();
+        let s = GemmShape::new(128, 8192, 8192); // 64 tiles, 256 iters/tile
+        let g = best_grid(s, BLK, 108, &m);
+        assert_eq!(g, 108, "expected max parallelism, got {g}");
+    }
+
+    #[test]
+    fn fig54_square_dips_at_tile_count() {
+        // Shape 2 analogue: 64 output tiles, medium k => global minimum at
+        // g = 64 (no splitting: fixup outweighs MAC savings).
+        let m = a100_model();
+        let s = GemmShape::new(1024, 1024, 2048); // 64 tiles, 64 iters/tile
+        let g = best_grid(s, BLK, 108, &m);
+        assert_eq!(g, 64, "expected dip at tile count, got {g}");
+    }
+
+    #[test]
+    fn fig54_single_tile_diminishing_returns() {
+        // Shape 3 analogue: one tile, enormous k: optimum well below p —
+        // serial reduction cost caps useful splitting.
+        let m = a100_model();
+        let s = GemmShape::new(128, 128, 1 << 14); // 1 tile, 512 iters
+        let g = best_grid(s, BLK, 108, &m);
+        assert!(g > 1, "some splitting must win");
+        assert!(g < 108, "serial fixup must cap the split, got {g}");
+    }
+
+    #[test]
+    fn curve_is_finite_and_positive() {
+        let m = a100_model();
+        let s = GemmShape::new(999, 777, 555);
+        for (g, t) in model_curve(s, BLK, 108, &m) {
+            assert!(t.is_finite() && t > 0.0, "g={g} t={t}");
+        }
+    }
+
+    #[test]
+    fn best_grid_never_exceeds_total_iters() {
+        let m = a100_model();
+        let s = GemmShape::new(128, 128, 64); // 1 tile, 2 iters
+        assert!(best_grid(s, BLK, 108, &m) <= 2);
+    }
+}

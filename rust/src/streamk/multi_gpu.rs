@@ -1,0 +1,229 @@
+//! Multi-GPU load balancing (§6.1.1 — the dissertation's first future-work
+//! direction, implemented here as an extension).
+//!
+//! The insight transfers directly: a multi-GPU GEMM is the same
+//! quantization problem one level up.  Splitting *tiles* across devices
+//! re-introduces wave quantization per device; splitting the aggregate
+//! *MAC-iteration space* evenly across the device pool (device-level
+//! Stream-K) keeps every GPU busy within one iteration share, at the cost
+//! of inter-device fixup for boundary tiles (which crosses NVLink/PCIe and
+//! is charged accordingly).
+
+use super::{decomp, Blocking, Decomposition, GemmShape};
+use crate::sim::gpu::{GpuSpec, Precision};
+use crate::sim::CostModel;
+
+/// How work is divided among devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MultiGpuPolicy {
+    /// Contiguous tile ranges per device (tile-split): each device gets
+    /// `ceil(tiles / n)` tiles — quantizes badly when tiles ~ n * p.
+    TileSplit,
+    /// Device-level Stream-K: the aggregate iteration space is split
+    /// evenly (within one) across devices; boundary tiles incur an
+    /// inter-device reduction.
+    IterSplit,
+}
+
+/// Outcome of a multi-GPU schedule.
+#[derive(Debug, Clone)]
+pub struct MultiGpuSim {
+    pub makespan: f64,
+    pub per_device: Vec<f64>,
+    /// Tiles whose partials cross a device boundary (IterSplit only).
+    pub boundary_tiles: usize,
+}
+
+/// Simulate an `n_gpus`-device GEMM under a policy.  `interconnect_us` is
+/// the one-way cost of moving one output tile's partials between devices
+/// (NVLink-class ~3 us for a 64 KiB tile).
+pub fn simulate_multi_gpu(
+    shape: GemmShape,
+    blk: Blocking,
+    model: &CostModel,
+    gpu: &GpuSpec,
+    prec: Precision,
+    n_gpus: usize,
+    policy: MultiGpuPolicy,
+    interconnect_us: f64,
+) -> MultiGpuSim {
+    let n = n_gpus.max(1);
+    let tiles = blk.tiles(shape);
+    let ipt = blk.iters_per_tile(shape);
+    let _ = prec;
+
+    match policy {
+        MultiGpuPolicy::TileSplit => {
+            // Device d gets a contiguous chunk of tiles; within a device,
+            // the best single-GPU schedule (two-tile hybrid / model grid).
+            let per = tiles.div_ceil(n);
+            let mut per_device = Vec::with_capacity(n);
+            for d in 0..n {
+                let start = d * per;
+                let end = ((d + 1) * per).min(tiles);
+                if start >= end {
+                    per_device.push(0.0);
+                    continue;
+                }
+                let dev_tiles = end - start;
+                // Shape covering exactly dev_tiles (1-D tiling along m).
+                let sub = GemmShape::new(dev_tiles * blk.bm, blk.bn, shape.k);
+                let d_plan = if dev_tiles > gpu.sms {
+                    Decomposition::HybridTwoTile { p: gpu.sms }
+                } else {
+                    Decomposition::StreamK {
+                        g: super::best_grid(sub, blk, gpu.sms, model).max(dev_tiles.min(gpu.sms)),
+                    }
+                };
+                let plan = decomp::plan(sub, blk, d_plan);
+                let t = crate::exec::gemm::simulate_plan(&plan, model, gpu, prec).makespan;
+                let dp = crate::exec::gemm::simulate_plan(
+                    &decomp::plan(sub, blk, Decomposition::DataParallel),
+                    model,
+                    gpu,
+                    prec,
+                )
+                .makespan;
+                per_device.push(t.min(dp));
+            }
+            MultiGpuSim {
+                makespan: per_device.iter().cloned().fold(0.0, f64::max),
+                per_device,
+                boundary_tiles: 0,
+            }
+        }
+        MultiGpuPolicy::IterSplit => {
+            // Aggregate iterations split evenly (within one) over devices;
+            // each device runs its share through its own Stream-K.  Tiles
+            // straddling a device boundary pay one interconnect fixup.
+            let total = tiles as u64 * ipt;
+            let per = total / n as u64;
+            let rem = total % n as u64;
+            let mut per_device = Vec::with_capacity(n);
+            let mut boundary_tiles = 0usize;
+            let mut cursor = 0u64;
+            for d in 0..n {
+                let share = per + if (d as u64) < rem { 1 } else { 0 };
+                let start = cursor;
+                let end = cursor + share;
+                cursor = end;
+                if share == 0 {
+                    per_device.push(0.0);
+                    continue;
+                }
+                // Device-local iteration share expressed as an equivalent
+                // single-device problem with the same iteration count.
+                let dev_tiles = (end.div_ceil(ipt) - start / ipt) as usize;
+                let crosses_start = start % ipt != 0;
+                let crosses_end = end % ipt != 0 && end < total;
+                boundary_tiles += crosses_start as usize + crosses_end as usize;
+                let sub = GemmShape::new(dev_tiles * blk.bm, blk.bn, shape.k);
+                let d_plan = if dev_tiles > gpu.sms {
+                    Decomposition::HybridTwoTile { p: gpu.sms }
+                } else {
+                    Decomposition::StreamK {
+                        g: super::best_grid(sub, blk, gpu.sms, model).max(dev_tiles.min(gpu.sms)),
+                    }
+                };
+                let plan = decomp::plan(sub, blk, d_plan);
+                // Scale the makespan to the actual share (the equivalent
+                // problem rounds up to whole tiles).
+                let t = crate::exec::gemm::simulate_plan(&plan, model, gpu, prec).makespan;
+                let scale = share as f64 / (dev_tiles as u64 * ipt).max(1) as f64;
+                let fixup = (crosses_start as usize + crosses_end as usize) as f64
+                    * interconnect_us
+                    * 1e-6;
+                per_device.push(t * scale + fixup);
+            }
+            MultiGpuSim {
+                makespan: per_device.iter().cloned().fold(0.0, f64::max),
+                per_device,
+                boundary_tiles,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::vendor_gemm;
+
+    fn setup() -> (GpuSpec, Blocking, CostModel) {
+        let gpu = GpuSpec::a100();
+        let blk = Blocking::paper_default(Precision::F16F32);
+        let model = vendor_gemm::member_cost_model(&gpu, blk, Precision::F16F32);
+        (gpu, blk, model)
+    }
+
+    #[test]
+    fn iter_split_wins_on_deep_k_few_tiles() {
+        // The device-level quantization failure for tile-split: fewer
+        // tiles than devices.  One device gets everything, three idle.
+        // Iter-split spreads the k-dimension across the pool.
+        let (gpu, blk, model) = setup();
+        let shape = GemmShape::new(256, 128, 1 << 16); // 2 tiles, deep k
+        assert_eq!(blk.tiles(shape), 2);
+        let ts = simulate_multi_gpu(
+            shape, blk, &model, &gpu, Precision::F16F32, 4,
+            MultiGpuPolicy::TileSplit, 3.0,
+        );
+        let is = simulate_multi_gpu(
+            shape, blk, &model, &gpu, Precision::F16F32, 4,
+            MultiGpuPolicy::IterSplit, 3.0,
+        );
+        assert!(
+            is.makespan < ts.makespan * 0.7,
+            "iter-split {} vs tile-split {}",
+            is.makespan,
+            ts.makespan
+        );
+    }
+
+    #[test]
+    fn single_gpu_policies_agree() {
+        let (gpu, blk, model) = setup();
+        let shape = GemmShape::new(2048, 2048, 2048);
+        let a = simulate_multi_gpu(
+            shape, blk, &model, &gpu, Precision::F16F32, 1,
+            MultiGpuPolicy::TileSplit, 3.0,
+        );
+        let b = simulate_multi_gpu(
+            shape, blk, &model, &gpu, Precision::F16F32, 1,
+            MultiGpuPolicy::IterSplit, 3.0,
+        );
+        assert!((a.makespan - b.makespan).abs() / a.makespan < 0.05);
+        assert_eq!(b.boundary_tiles, 0);
+    }
+
+    #[test]
+    fn scaling_with_device_count() {
+        let (gpu, blk, model) = setup();
+        let shape = GemmShape::new(8192, 8192, 4096);
+        let t1 = simulate_multi_gpu(
+            shape, blk, &model, &gpu, Precision::F16F32, 1,
+            MultiGpuPolicy::IterSplit, 3.0,
+        )
+        .makespan;
+        let t4 = simulate_multi_gpu(
+            shape, blk, &model, &gpu, Precision::F16F32, 4,
+            MultiGpuPolicy::IterSplit, 3.0,
+        )
+        .makespan;
+        let speedup = t1 / t4;
+        assert!(speedup > 2.8 && speedup <= 4.2, "4-GPU speedup {speedup}");
+    }
+
+    #[test]
+    fn boundary_tiles_bounded_by_device_count() {
+        let (gpu, blk, model) = setup();
+        let shape = GemmShape::new(1000, 1000, 1000);
+        for n in [2usize, 4, 8] {
+            let r = simulate_multi_gpu(
+                shape, blk, &model, &gpu, Precision::F16F32, n,
+                MultiGpuPolicy::IterSplit, 3.0,
+            );
+            assert!(r.boundary_tiles <= 2 * n, "{} > {}", r.boundary_tiles, 2 * n);
+        }
+    }
+}

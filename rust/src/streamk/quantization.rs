@@ -1,0 +1,85 @@
+//! Wave/tile quantization-efficiency arithmetic (§5.1's worked examples).
+//!
+//! A data-parallel launch of `t` equal tiles over `p` cores runs
+//! `ceil(t/p)` waves and achieves `t / (ceil(t/p) · p)` of peak — the
+//! number Figures 5.1–5.2 annotate.
+
+/// Quantization efficiency of a tile-per-CTA launch: `t / (ceil(t/p)·p)`.
+pub fn wave_quantization_efficiency(tiles: usize, p: usize) -> f64 {
+    if tiles == 0 || p == 0 {
+        return 1.0;
+    }
+    let waves = tiles.div_ceil(p);
+    tiles as f64 / (waves * p) as f64
+}
+
+/// Number of full + partial waves.
+pub fn waves(tiles: usize, p: usize) -> usize {
+    tiles.div_ceil(p.max(1))
+}
+
+/// Occupancy of the final wave in [1/p, 1].
+pub fn last_wave_fill(tiles: usize, p: usize) -> f64 {
+    if tiles == 0 || p == 0 {
+        return 1.0;
+    }
+    let rem = tiles % p;
+    if rem == 0 {
+        1.0
+    } else {
+        rem as f64 / p as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig51a_nine_tiles_four_sms() {
+        // "a data-parallel decomposition cannot achieve more than 75% of
+        // the processor's rated throughput" — 9 tiles / (3 waves * 4 SMs).
+        assert!((wave_quantization_efficiency(9, 4) - 0.75).abs() < 1e-12);
+        assert_eq!(waves(9, 4), 3);
+    }
+
+    #[test]
+    fn fig51b_halved_tiles() {
+        // Halving the tile size: 36 quarter-tiles => ceil(36/4)=9 waves of
+        // quarter-tile work = 90% efficiency in the paper's accounting
+        // (same MACs over 9 waves x 4 SMs of quarter-tile throughput).
+        // With 18 half-tiles: 18/(5*4) = 90%.
+        assert!((wave_quantization_efficiency(18, 4) - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fig52a_fixed_split() {
+        // Fixed-split s=2 of 9 tiles => 18 CTAs on 4 SMs => 90%.
+        assert!((wave_quantization_efficiency(9 * 2, 4) - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perfect_multiples_are_full() {
+        for p in 1..=16 {
+            for w in 1..=4 {
+                assert!((wave_quantization_efficiency(p * w, p) - 1.0).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn efficiency_bounds() {
+        for tiles in 1..200 {
+            for p in 1..32 {
+                let e = wave_quantization_efficiency(tiles, p);
+                assert!(e > 0.0 && e <= 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn last_wave_fill_matches() {
+        assert!((last_wave_fill(9, 4) - 0.25).abs() < 1e-12);
+        assert!((last_wave_fill(8, 4) - 1.0).abs() < 1e-12);
+    }
+}

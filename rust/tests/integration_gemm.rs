@@ -1,0 +1,82 @@
+//! Integration: full Chapter-5 pipeline — Stream-K plan executed through
+//! the PJRT MacLoop artifacts, compared against the host reference GEMM.
+//! Uses the artifact blocking geometries (128x128x32 f32, 64x64x16 f64).
+
+use gpulb::exec::dense::DenseMat;
+use gpulb::exec::gemm;
+use gpulb::runtime::Runtime;
+use gpulb::sim::gpu::Precision;
+use gpulb::streamk::{decomp, Blocking, Decomposition, GemmShape};
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::open("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping (no artifacts): {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn streamk_f64_through_pjrt_exact() {
+    let Some(rt) = runtime() else { return };
+    // f64 artifacts: 64x64x16 blocking.  2x2 tiles, 4 iters/tile.
+    let shape = GemmShape::new(128, 128, 64);
+    let blk = Blocking::new(64, 64, 16);
+    let a = DenseMat::random(shape.m, shape.k, 11);
+    let b = DenseMat::random(shape.k, shape.n, 12);
+    let want = DenseMat::matmul_ref(&a, &b);
+    for d in [
+        Decomposition::DataParallel,
+        Decomposition::StreamK { g: 3 },
+        Decomposition::FixedSplit { s: 2 },
+    ] {
+        let plan = decomp::plan(shape, blk, d);
+        let got = gemm::execute_plan_runtime(&a, &b, &plan, &rt, Precision::F64).unwrap();
+        let err = got.max_abs_diff(&want);
+        assert!(err < 1e-10, "{d:?}: err {err}");
+    }
+}
+
+#[test]
+fn streamk_f32_through_pjrt_with_slabs() {
+    let Some(rt) = runtime() else { return };
+    // f32 artifacts: 128x128x32 blocking; k=512 => 16 iters/tile, so the
+    // slab8 fused path gets exercised (16 = 2 slabs).
+    let shape = GemmShape::new(128, 256, 512);
+    let blk = Blocking::new(128, 128, 32);
+    let a = DenseMat::random(shape.m, shape.k, 21);
+    let b = DenseMat::random(shape.k, shape.n, 22);
+    let want = DenseMat::matmul_ref(&a, &b);
+    let plan = decomp::plan(shape, blk, Decomposition::StreamK { g: 5 });
+    let got = gemm::execute_plan_runtime(&a, &b, &plan, &rt, Precision::F16F32).unwrap();
+    // f32 accumulation over k=512 with inputs in [-1,1]: tolerance ~1e-3.
+    let err = got.max_abs_diff(&want);
+    assert!(err < 5e-3, "err {err}");
+}
+
+#[test]
+fn ragged_shape_through_pjrt() {
+    let Some(rt) = runtime() else { return };
+    // Not divisible by the blocking: windows zero-pad, output clips.
+    let shape = GemmShape::new(100, 90, 40);
+    let blk = Blocking::new(64, 64, 16);
+    let a = DenseMat::random(shape.m, shape.k, 31);
+    let b = DenseMat::random(shape.k, shape.n, 32);
+    let want = DenseMat::matmul_ref(&a, &b);
+    let plan = decomp::plan(shape, blk, Decomposition::HybridTwoTile { p: 3 });
+    let got = gemm::execute_plan_runtime(&a, &b, &plan, &rt, Precision::F64).unwrap();
+    assert!(got.max_abs_diff(&want) < 1e-10);
+}
+
+#[test]
+fn blocking_mismatch_is_rejected() {
+    let Some(rt) = runtime() else { return };
+    let shape = GemmShape::new(64, 64, 32);
+    let blk = Blocking::new(32, 32, 8); // no artifact with this geometry
+    let a = DenseMat::random(64, 32, 41);
+    let b = DenseMat::random(32, 64, 42);
+    let plan = decomp::plan(shape, blk, Decomposition::DataParallel);
+    assert!(gemm::execute_plan_runtime(&a, &b, &plan, &rt, Precision::F64).is_err());
+}

@@ -1,0 +1,183 @@
+//! Integration: the PJRT runtime loads every AOT artifact and produces
+//! numerics matching known values — the same round trip the coordinators
+//! take on the request path.
+//!
+//! Requires `make artifacts` (skips gracefully if absent, but CI always
+//! builds them first).
+
+use gpulb::runtime::{HostTensor, Runtime};
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::open("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping runtime integration test (no artifacts): {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_contains_all_expected_artifacts() {
+    let Some(rt) = runtime() else { return };
+    for name in [
+        "gemm_mac_iter_f32",
+        "gemm_mac_slab8_f32",
+        "tile_add_f32",
+        "gemm_mac_iter_f64",
+        "gemm_mac_slab8_f64",
+        "tile_add_f64",
+        "spmv_rowblock_f32",
+        "spmv_rowblock_f64",
+        "dot_chunk_f32",
+        "dot_chunk_f64",
+        "saxpy_f32",
+    ] {
+        assert!(rt.manifest().get(name).is_some(), "missing {name}");
+    }
+}
+
+#[test]
+fn gemm_mac_iter_known_values() {
+    let Some(rt) = runtime() else { return };
+    // ones(128,32) @ ones(32,128) + zeros = 32 everywhere.
+    let a = HostTensor::F32(vec![1.0; 128 * 32], vec![128, 32]);
+    let b = HostTensor::F32(vec![1.0; 32 * 128], vec![32, 128]);
+    let acc = HostTensor::F32(vec![0.0; 128 * 128], vec![128, 128]);
+    let out = rt.execute("gemm_mac_iter_f32", &[a, b, acc]).unwrap();
+    let v = out.as_f32().unwrap();
+    assert_eq!(v.len(), 128 * 128);
+    assert!(v.iter().all(|&x| x == 32.0), "got {:?}...", &v[..4]);
+}
+
+#[test]
+fn gemm_mac_iter_f64_accumulates() {
+    let Some(rt) = runtime() else { return };
+    let a = HostTensor::F64(vec![1.0; 64 * 16], vec![64, 16]);
+    let b = HostTensor::F64(vec![2.0; 16 * 64], vec![16, 64]);
+    let acc = HostTensor::F64(vec![5.0; 64 * 64], vec![64, 64]);
+    let out = rt.execute("gemm_mac_iter_f64", &[a, b, acc]).unwrap();
+    let v = out.as_f64().unwrap();
+    assert!(v.iter().all(|&x| x == 16.0 * 2.0 + 5.0));
+}
+
+#[test]
+fn slab8_equals_eight_single_iters() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = gpulb::rng::Rng::new(1);
+    let a: Vec<f32> = (0..128 * 256)
+        .map(|_| rng.range_f64(-1.0, 1.0) as f32)
+        .collect();
+    let b: Vec<f32> = (0..256 * 128)
+        .map(|_| rng.range_f64(-1.0, 1.0) as f32)
+        .collect();
+    let slab = rt
+        .execute(
+            "gemm_mac_slab8_f32",
+            &[
+                HostTensor::F32(a.clone(), vec![128, 256]),
+                HostTensor::F32(b.clone(), vec![256, 128]),
+                HostTensor::F32(vec![0.0; 128 * 128], vec![128, 128]),
+            ],
+        )
+        .unwrap();
+
+    // Iterate the single-step kernel 8 times over 32-wide K slices.
+    let mut acc = HostTensor::F32(vec![0.0; 128 * 128], vec![128, 128]);
+    for i in 0..8 {
+        let a_blk: Vec<f32> = (0..128)
+            .flat_map(|r| (0..32).map(move |c| (r, c)))
+            .map(|(r, c)| a[r * 256 + i * 32 + c])
+            .collect();
+        let b_blk: Vec<f32> = (0..32)
+            .flat_map(|r| (0..128).map(move |c| (r, c)))
+            .map(|(r, c)| b[(i * 32 + r) * 128 + c])
+            .collect();
+        acc = rt
+            .execute(
+                "gemm_mac_iter_f32",
+                &[
+                    HostTensor::F32(a_blk, vec![128, 32]),
+                    HostTensor::F32(b_blk, vec![32, 128]),
+                    acc,
+                ],
+            )
+            .unwrap();
+    }
+    let s = slab.as_f32().unwrap();
+    let t = acc.as_f32().unwrap();
+    let max_diff = s
+        .iter()
+        .zip(t)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-3, "slab vs iterated diff {max_diff}");
+}
+
+#[test]
+fn spmv_rowblock_matches_host_math() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = gpulb::rng::Rng::new(2);
+    let v: Vec<f64> = (0..128 * 32).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let xg: Vec<f64> = (0..128 * 32).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let out = rt
+        .execute(
+            "spmv_rowblock_f64",
+            &[
+                HostTensor::F64(v.clone(), vec![128, 32]),
+                HostTensor::F64(xg.clone(), vec![128, 32]),
+            ],
+        )
+        .unwrap();
+    let y = out.as_f64().unwrap();
+    for r in 0..128 {
+        let want: f64 = (0..32).map(|j| v[r * 32 + j] * xg[r * 32 + j]).sum();
+        assert!((y[r] - want).abs() < 1e-12, "row {r}: {} vs {want}", y[r]);
+    }
+}
+
+#[test]
+fn tile_add_fixup_artifact() {
+    let Some(rt) = runtime() else { return };
+    let x = HostTensor::F32(vec![1.5; 128 * 128], vec![128, 128]);
+    let y = HostTensor::F32(vec![2.25; 128 * 128], vec![128, 128]);
+    let out = rt.execute("tile_add_f32", &[x, y]).unwrap();
+    assert!(out.as_f32().unwrap().iter().all(|&v| v == 3.75));
+}
+
+#[test]
+fn saxpy_scalar_input_roundtrip() {
+    let Some(rt) = runtime() else { return };
+    let alpha = HostTensor::F32(vec![2.0], vec![]);
+    let x = HostTensor::F32(vec![1.0; 4096], vec![4096]);
+    let y = HostTensor::F32(vec![3.0; 4096], vec![4096]);
+    let out = rt.execute("saxpy_f32", &[alpha, x, y]).unwrap();
+    assert!(out.as_f32().unwrap().iter().all(|&v| v == 5.0));
+}
+
+#[test]
+fn shape_mismatch_rejected() {
+    let Some(rt) = runtime() else { return };
+    let bad = HostTensor::F32(vec![0.0; 4], vec![2, 2]);
+    let err = rt.execute("gemm_mac_iter_f32", &[bad.clone(), bad.clone(), bad]);
+    assert!(err.is_err());
+}
+
+#[test]
+fn unknown_artifact_rejected() {
+    let Some(rt) = runtime() else { return };
+    assert!(rt.execute("nonexistent_kernel", &[]).is_err());
+}
+
+#[test]
+fn executables_cached_across_calls() {
+    let Some(rt) = runtime() else { return };
+    let a = HostTensor::F32(vec![1.0; 128 * 32], vec![128, 32]);
+    let b = HostTensor::F32(vec![1.0; 32 * 128], vec![32, 128]);
+    let acc = HostTensor::F32(vec![0.0; 128 * 128], vec![128, 128]);
+    for _ in 0..3 {
+        rt.execute("gemm_mac_iter_f32", &[a.clone(), b.clone(), acc.clone()])
+            .unwrap();
+    }
+    assert_eq!(rt.call_counts()["gemm_mac_iter_f32"], 3);
+}

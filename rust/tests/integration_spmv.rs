@@ -1,0 +1,83 @@
+//! Integration: full Chapter-4 pipeline — generate matrix, pick schedule,
+//! build assignment, execute through the PJRT artifact path, compare with
+//! the sequential reference.  Exercises sparse + balance + exec + runtime
+//! together.
+
+use gpulb::balance::{self, ScheduleKind};
+use gpulb::exec::spmv;
+use gpulb::runtime::Runtime;
+use gpulb::sparse::gen;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::open("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping (no artifacts): {e:#}");
+            None
+        }
+    }
+}
+
+fn max_err(a: &[f64], b: &[f64]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+#[test]
+fn spmv_through_pjrt_all_schedules() {
+    let Some(rt) = runtime() else { return };
+    let a = gen::power_law(600, 600, 300, 1.7, 97);
+    let x: Vec<f64> = (0..a.cols).map(|i| ((i as f64) * 0.29).cos()).collect();
+    let want = a.spmv_ref(&x);
+    for kind in [
+        ScheduleKind::ThreadMapped,
+        ScheduleKind::GroupMapped(32),
+        ScheduleKind::MergePath,
+        ScheduleKind::NonzeroSplit,
+        ScheduleKind::Binning,
+        ScheduleKind::Lrb,
+    ] {
+        let asg = kind.assign(&a, 48);
+        asg.validate(&a).unwrap();
+        let y = spmv::execute_runtime(&a, &x, &asg, &rt).unwrap();
+        let err = max_err(&y, &want);
+        assert!(err < 1e-9, "{kind:?}: PJRT err {err}");
+    }
+}
+
+#[test]
+fn spmv_through_pjrt_heuristic_choice() {
+    let Some(rt) = runtime() else { return };
+    for (name, a) in [
+        ("small-regular", gen::uniform(120, 120, 4, 5)),
+        ("large-irregular", gen::power_law(2000, 2000, 900, 1.5, 6)),
+        ("banded", gen::banded(512, 3, 7)),
+    ] {
+        let kind = balance::select_schedule(&a, balance::HeuristicParams::default());
+        let asg = kind.assign(&a, 64);
+        let x: Vec<f64> = (0..a.cols).map(|i| (i as f64 * 0.11).sin()).collect();
+        let y = spmv::execute_runtime(&a, &x, &asg, &rt).unwrap();
+        let err = max_err(&y, &a.spmv_ref(&x));
+        assert!(err < 1e-9, "{name} via {kind:?}: err {err}");
+    }
+}
+
+#[test]
+fn spmv_pjrt_handles_empty_and_wide_rows() {
+    let Some(rt) = runtime() else { return };
+    // Matrix with empty rows and one row wider than the 32-lane slab.
+    let mut coo = gpulb::sparse::Coo::new(8, 64);
+    for c in 0..50 {
+        coo.push(3, c, (c + 1) as f64 * 0.5);
+    }
+    coo.push(7, 0, 2.0);
+    let a = gpulb::sparse::Csr::from_coo(&coo);
+    let x: Vec<f64> = (0..64).map(|i| 1.0 + i as f64 * 0.01).collect();
+    let want = a.spmv_ref(&x);
+    let asg = ScheduleKind::MergePath.assign(&a, 4);
+    let y = spmv::execute_runtime(&a, &x, &asg, &rt).unwrap();
+    assert!(max_err(&y, &want) < 1e-12);
+    assert_eq!(y[0], 0.0);
+}

@@ -1,0 +1,188 @@
+//! Property tests over the Chapter-4 schedules (seeded randomized cases —
+//! the offline environment has no proptest crate, so case generation uses
+//! the repo's deterministic RNG; every failure reproduces from its printed
+//! seed).
+//!
+//! Invariants:
+//! * exact cover — every atom assigned exactly once, segments in-bounds;
+//! * numerics — every schedule's execution equals the sequential reference;
+//! * merge-path even-share bound;
+//! * nonzero-split atom-share bound;
+//! * schedule interchangeability (identical y for all schedules).
+
+use gpulb::balance::{merge_path, OffsetsSource, ScheduleKind};
+use gpulb::exec::spmv;
+use gpulb::rng::Rng;
+use gpulb::sparse::{gen, Csr};
+
+const CASES: usize = 60;
+
+fn random_offsets(rng: &mut Rng) -> Vec<usize> {
+    let tiles = rng.range(0, 60);
+    let mut offsets = Vec::with_capacity(tiles + 1);
+    offsets.push(0usize);
+    for _ in 0..tiles {
+        // Mix of empty, tiny, and giant tiles.
+        let len = match rng.below(10) {
+            0..=2 => 0,
+            3..=7 => rng.range(1, 12),
+            8 => rng.range(12, 80),
+            _ => rng.range(80, 1200),
+        };
+        offsets.push(offsets.last().unwrap() + len);
+    }
+    offsets
+}
+
+fn random_matrix(rng: &mut Rng) -> Csr {
+    let seed = rng.next_u64();
+    match rng.below(5) {
+        0 => gen::uniform(rng.range(1, 200), rng.range(1, 200), rng.range(1, 9), seed),
+        1 => gen::power_law(
+            rng.range(2, 300),
+            rng.range(2, 300),
+            rng.range(1, 150),
+            1.2 + rng.f64(),
+            seed,
+        ),
+        2 => gen::banded(rng.range(2, 200), rng.range(1, 6), seed),
+        3 => gen::block_diag(rng.range(2, 128), rng.range(1, 9), seed),
+        _ => gen::tall_skinny(rng.range(1, 400), rng.f64(), seed),
+    }
+}
+
+const ALL_SCHEDULES: [ScheduleKind; 7] = [
+    ScheduleKind::ThreadMapped,
+    ScheduleKind::GroupMapped(32),
+    ScheduleKind::GroupMapped(128),
+    ScheduleKind::MergePath,
+    ScheduleKind::NonzeroSplit,
+    ScheduleKind::Binning,
+    ScheduleKind::Lrb,
+];
+
+#[test]
+fn prop_exact_cover_on_random_offsets() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for case in 0..CASES {
+        let offsets = random_offsets(&mut rng);
+        let src = OffsetsSource::new(&offsets);
+        let workers = 1 + rng.below(300);
+        for kind in ALL_SCHEDULES {
+            let asg = kind.assign(&src, workers);
+            asg.validate(&src)
+                .unwrap_or_else(|e| panic!("case {case} {kind:?} workers={workers}: {e:#}"));
+        }
+    }
+}
+
+#[test]
+fn prop_numerics_match_reference_on_random_matrices() {
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..CASES {
+        let a = random_matrix(&mut rng);
+        let workers = 1 + rng.below(200);
+        let x: Vec<f64> = (0..a.cols).map(|i| ((i * 7 + case) as f64 * 0.13).sin()).collect();
+        let want = a.spmv_ref(&x);
+        for kind in ALL_SCHEDULES {
+            let asg = kind.assign(&a, workers);
+            let got = spmv::execute_host(&a, &x, &asg);
+            let err = got
+                .iter()
+                .zip(&want)
+                .map(|(g, w)| (g - w).abs())
+                .fold(0.0, f64::max);
+            assert!(
+                err < 1e-9,
+                "case {case} {kind:?} workers={workers}: err {err}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_merge_path_even_share() {
+    let mut rng = Rng::new(0xDEAD);
+    for case in 0..CASES {
+        let offsets = random_offsets(&mut rng);
+        let src = OffsetsSource::new(&offsets);
+        let workers = 1 + rng.below(128);
+        let asg = merge_path::assign(&src, workers);
+        let per = merge_path::work_per_worker(&src, workers);
+        for (i, w) in asg.workers.iter().enumerate() {
+            let work = w.atoms() + w.segments.len();
+            assert!(
+                work <= per + 1,
+                "case {case} worker {i}: work {work} > share {per}+1"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_nonzero_split_share_bound() {
+    let mut rng = Rng::new(0xF00D);
+    for case in 0..CASES {
+        let offsets = random_offsets(&mut rng);
+        let src = OffsetsSource::new(&offsets);
+        let atoms = *offsets.last().unwrap();
+        let workers = 1 + rng.below(128);
+        let asg = ScheduleKind::NonzeroSplit.assign(&src, workers);
+        let per = atoms.div_ceil(workers.max(1)).max(1);
+        for w in &asg.workers {
+            assert!(w.atoms() <= per, "case {case}: {} > {per}", w.atoms());
+        }
+    }
+}
+
+#[test]
+fn prop_schedules_interchangeable() {
+    // The paper's core claim: swapping the schedule never changes results.
+    let mut rng = Rng::new(0xFACE);
+    for _ in 0..20 {
+        let a = random_matrix(&mut rng);
+        let x: Vec<f64> = (0..a.cols).map(|i| (i as f64).cos()).collect();
+        let baseline = spmv::execute_host(&a, &x, &ALL_SCHEDULES[0].assign(&a, 33));
+        for kind in &ALL_SCHEDULES[1..] {
+            let y = spmv::execute_host(&a, &x, &kind.assign(&a, 77));
+            let err = baseline
+                .iter()
+                .zip(&y)
+                .map(|(b, v)| (b - v).abs())
+                .fold(0.0, f64::max);
+            assert!(err < 1e-9, "{kind:?} diverged: {err}");
+        }
+    }
+}
+
+#[test]
+fn prop_queue_policies_conserve_tasks() {
+    use gpulb::balance::queue::{simulate, QueueParams, QueuePolicy};
+    let mut rng = Rng::new(0xAB1E);
+    for case in 0..30 {
+        let n = 1 + rng.below(200);
+        let tasks: Vec<usize> = (0..n).map(|_| rng.below(500)).collect();
+        let workers = 1 + rng.below(16);
+        for policy in [
+            QueuePolicy::StaticList,
+            QueuePolicy::Centralized,
+            QueuePolicy::Stealing,
+            QueuePolicy::Donation { capacity: 1 + rng.below(8) },
+            QueuePolicy::ChunkedFetch { chunk: 1 + rng.below(16) },
+        ] {
+            let r = simulate(
+                policy,
+                workers,
+                tasks.clone(),
+                |_| Vec::new(),
+                QueueParams::default(),
+            );
+            assert_eq!(r.processed, n, "case {case} {policy:?}");
+            let u = r.utilization();
+            assert!(
+                (0.0..=1.0 + 1e-9).contains(&u),
+                "case {case} {policy:?}: u={u}"
+            );
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Property tests over the Stream-K decompositions (seeded randomized
+//! shapes; failures reproduce from the printed case index).
+//!
+//! Invariants:
+//! * every decomposition covers each tile's iteration space exactly once;
+//! * basic Stream-K's iteration imbalance is <= 1;
+//! * Stream-K generalizes to data-parallel (g == tiles) and fixed-split
+//!   (g == s * tiles) in per-CTA iteration counts;
+//! * host numerics of every decomposition equal the reference GEMM;
+//! * grid-size model consistency: ItersPerCta * g covers total iters.
+
+use gpulb::exec::dense::DenseMat;
+use gpulb::exec::gemm;
+use gpulb::rng::Rng;
+use gpulb::sim::gpu::{GpuSpec, Precision};
+use gpulb::streamk::{decomp, model, Blocking, Decomposition, GemmShape};
+
+const CASES: usize = 80;
+
+fn random_shape(rng: &mut Rng) -> GemmShape {
+    GemmShape::new(
+        rng.range(1, 1500),
+        rng.range(1, 1500),
+        rng.range(1, 8000),
+    )
+}
+
+fn random_blocking(rng: &mut Rng) -> Blocking {
+    let opts = [
+        Blocking::new(128, 128, 32),
+        Blocking::new(64, 64, 16),
+        Blocking::new(32, 64, 8),
+        Blocking::new(16, 16, 4),
+    ];
+    opts[rng.below(opts.len())]
+}
+
+#[test]
+fn prop_all_decompositions_cover_exactly() {
+    let mut rng = Rng::new(0x51EE);
+    for case in 0..CASES {
+        let shape = random_shape(&mut rng);
+        let blk = random_blocking(&mut rng);
+        let g = 1 + rng.below(256);
+        let s = 1 + rng.below(8);
+        let p = 1 + rng.below(128);
+        for d in [
+            Decomposition::DataParallel,
+            Decomposition::FixedSplit { s },
+            Decomposition::StreamK { g },
+            Decomposition::HybridOneTile { p },
+            Decomposition::HybridTwoTile { p },
+        ] {
+            let plan = decomp::plan(shape, blk, d);
+            plan.validate()
+                .unwrap_or_else(|e| panic!("case {case} {d:?} {shape:?}: {e:#}"));
+        }
+    }
+}
+
+#[test]
+fn prop_stream_k_imbalance_at_most_one() {
+    let mut rng = Rng::new(0x51EF);
+    for case in 0..CASES {
+        let shape = random_shape(&mut rng);
+        let blk = random_blocking(&mut rng);
+        let g = 1 + rng.below(256);
+        let plan = decomp::plan(shape, blk, Decomposition::StreamK { g });
+        assert!(
+            plan.iter_imbalance() <= 1,
+            "case {case} {shape:?} g={g}: imbalance {}",
+            plan.iter_imbalance()
+        );
+    }
+}
+
+#[test]
+fn prop_stream_k_generalizes_dp_and_fixed_split() {
+    let mut rng = Rng::new(0x51F0);
+    for _ in 0..40 {
+        let shape = random_shape(&mut rng);
+        let blk = random_blocking(&mut rng);
+        let tiles = blk.tiles(shape);
+        let ipt = blk.iters_per_tile(shape);
+
+        // g == tiles: identical CTA set to data-parallel.
+        let sk = decomp::plan(shape, blk, Decomposition::StreamK { g: tiles });
+        let dp = decomp::plan(shape, blk, Decomposition::DataParallel);
+        assert_eq!(sk.ctas, dp.ctas);
+
+        // g == s*tiles with s | ipt: same per-CTA iteration multiset as
+        // fixed-split.
+        let s = 2usize;
+        if ipt % (s as u64) == 0 && tiles > 0 {
+            let sk = decomp::plan(shape, blk, Decomposition::StreamK { g: s * tiles });
+            let fs = decomp::plan(shape, blk, Decomposition::FixedSplit { s });
+            let mut a: Vec<u64> = sk.ctas.iter().map(|c| c.iters()).collect();
+            let mut b: Vec<u64> = fs.ctas.iter().map(|c| c.iters()).collect();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b, "{shape:?} blk={blk:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_host_numerics_all_decompositions() {
+    let mut rng = Rng::new(0x51F1);
+    for case in 0..12 {
+        // Small shapes (host GEMM is O(mnk)).
+        let shape = GemmShape::new(rng.range(1, 90), rng.range(1, 90), rng.range(1, 120));
+        let blk = Blocking::new(32, 32, 16);
+        let a = DenseMat::random(shape.m, shape.k, rng.next_u64());
+        let b = DenseMat::random(shape.k, shape.n, rng.next_u64());
+        let want = DenseMat::matmul_ref(&a, &b);
+        for d in [
+            Decomposition::DataParallel,
+            Decomposition::FixedSplit { s: 1 + rng.below(4) },
+            Decomposition::StreamK { g: 1 + rng.below(12) },
+            Decomposition::HybridTwoTile { p: 1 + rng.below(8) },
+        ] {
+            let plan = decomp::plan(shape, blk, d);
+            let got = gemm::execute_plan_host(&a, &b, &plan);
+            let err = got.max_abs_diff(&want);
+            assert!(err < 1e-9, "case {case} {d:?} {shape:?}: err {err}");
+        }
+    }
+}
+
+#[test]
+fn prop_model_share_covers_total() {
+    let mut rng = Rng::new(0x51F2);
+    for _ in 0..CASES {
+        let shape = random_shape(&mut rng);
+        let blk = random_blocking(&mut rng);
+        let g = 1 + rng.below(256);
+        let total = blk.total_iters(shape);
+        let ipc = model::iters_per_cta(shape, blk, g);
+        assert!(ipc * g as u64 >= total);
+        assert!(ipc.saturating_sub(1) * (g as u64) < total || g as u64 > total);
+        let peers = model::fixup_peers(shape, blk, g);
+        assert!(peers >= 1 && peers <= blk.iters_per_tile(shape).max(1));
+    }
+}
+
+#[test]
+fn prop_best_grid_is_argmin() {
+    let mut rng = Rng::new(0x51F3);
+    let gpu = GpuSpec::a100();
+    for _ in 0..30 {
+        let shape = random_shape(&mut rng);
+        let blk = Blocking::paper_default(Precision::F16F32);
+        let m = gpulb::sim::CostModel::calibrate(&gpu, (blk.bm, blk.bn, blk.bk), Precision::F16F32);
+        let best = model::best_grid(shape, blk, gpu.sms, &m);
+        let t_best = model::time_cta(shape, blk, best, &m);
+        for g in 1..=gpu.sms.min(blk.total_iters(shape) as usize) {
+            assert!(
+                t_best <= model::time_cta(shape, blk, g, &m) + 1e-15,
+                "{shape:?}: best_grid {best} not argmin (g={g} better)"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_streamk_never_slower_than_dp_in_sim() {
+    // The headline property on the simulator: the shipped Stream-K policy
+    // (two-tile hybrid / model-selected grid, as in §5.3.2) is never
+    // materially slower than the same-blocking data-parallel schedule.
+    let mut rng = Rng::new(0x51F4);
+    let gpu = GpuSpec::a100();
+    let prec = Precision::F16F32;
+    let blk = Blocking::paper_default(prec);
+    for case in 0..40 {
+        let shape = GemmShape::new(
+            rng.range(128, 8192),
+            rng.range(128, 8192),
+            rng.range(128, 8192),
+        );
+        let sk = gpulb::report::figures::streamk_time(shape, &gpu, prec);
+        let dp = gpulb::baselines::vendor_gemm::member_time(shape, blk, 1, &gpu, prec);
+        assert!(
+            sk <= dp * 1.05,
+            "case {case} {shape:?}: sk {sk} vs dp {dp}"
+        );
+    }
+}
