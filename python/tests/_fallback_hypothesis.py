@@ -1,0 +1,55 @@
+"""Deterministic stand-in for the `hypothesis` API used by test_kernel.
+
+Offline environments cannot install hypothesis, so this module provides the
+same decorator surface (`given`, `settings`, `strategies.integers`) backed
+by a fixed-seed random sweep: each `@given` test runs `max_examples` times
+with independently sampled arguments.  With real hypothesis installed (CI),
+this module is never imported.
+"""
+
+import random
+
+
+class _Integers:
+    def __init__(self, min_value, max_value):
+        self.min_value = min_value
+        self.max_value = max_value
+
+    def sample(self, rng):
+        return rng.randint(self.min_value, self.max_value)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Integers(min_value, max_value)
+
+
+def settings(max_examples=10, deadline=None, **_ignored):
+    """Record max_examples on the (already `given`-wrapped) test."""
+
+    def decorate(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def given(**strats):
+    """Run the test once per sampled argument set (fixed seed)."""
+
+    def decorate(fn):
+        def runner():
+            rng = random.Random(0xA0C)
+            examples = getattr(runner, "_max_examples", 10)
+            for _ in range(examples):
+                kwargs = {name: s.sample(rng) for name, s in strats.items()}
+                fn(**kwargs)
+
+        # No functools.wraps: copying __wrapped__ would make pytest resolve
+        # the original parameters as fixtures.
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        return runner
+
+    return decorate

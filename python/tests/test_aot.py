@@ -4,6 +4,11 @@ correct numerics (the same path the Rust runtime takes)."""
 
 import json
 import pathlib
+import sys
+
+# Make `compile` importable when discovery starts inside python/tests
+# (e.g. `python -m unittest discover python/tests` from the repo root).
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
 import jax
 import jax.numpy as jnp

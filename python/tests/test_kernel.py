@@ -4,11 +4,25 @@ Hypothesis sweeps shapes/values; fixed-shape cases pin the exact artifact
 geometries that the Rust coordinator executes.
 """
 
+import pathlib
+import sys
+
+# Make `compile` importable when discovery starts inside python/tests
+# (e.g. `python -m unittest discover python/tests` from the repo root).
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    # Offline environments lack hypothesis; fall back to a deterministic
+    # sampled sweep with the same decorator API (see _fallback_hypothesis).
+    from _fallback_hypothesis import given, settings, strategies as st
 
 from compile.kernels import gemm_tile, ref, spmv
 from compile.kernels.gemm_tile import BLOCKING, DTYPES

@@ -1,0 +1,22 @@
+//! Serve-engine throughput (`cargo bench --bench serve_throughput [scale]`):
+//! the heterogeneous corpus mix executed at 1, 2, 4 and 8 worker threads,
+//! written to `BENCH_serve.json` (the CI bench artifact).
+//!
+//! Checksums are asserted equal across thread counts, so every run doubles
+//! as a concurrency correctness check of the pool + plan cache.
+
+use gpulb::serve;
+
+fn main() {
+    let scale: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+    let batches = 2usize;
+    let mix = serve::corpus_mix(scale);
+    println!(
+        "# serve throughput — {} problems/batch (scale {scale}), {batches} batches per point",
+        mix.len()
+    );
+    serve::run_bench(&mix, &[1, 2, 4, 8], batches, "BENCH_serve.json").unwrap();
+}

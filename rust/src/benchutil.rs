@@ -119,6 +119,68 @@ impl Bencher {
     }
 }
 
+/// One throughput measurement for the JSON bench artifacts
+/// (`BENCH_serve.json` in CI): a thread count, how many problems it
+/// processed, and how long it took.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ThroughputPoint {
+    pub threads: usize,
+    pub problems: usize,
+    pub elapsed_s: f64,
+}
+
+impl ThroughputPoint {
+    pub fn problems_per_sec(&self) -> f64 {
+        self.problems as f64 / self.elapsed_s.max(1e-12)
+    }
+}
+
+/// Render throughput points as a JSON document (hand-rolled: the offline
+/// build has no serde; [`crate::jsonlite`] parses it back in tests).
+/// `speedup_vs_base` is relative to the first point, so a 1-thread first
+/// entry makes the scaling trajectory directly readable.
+pub fn throughput_json(bench: &str, points: &[ThroughputPoint]) -> String {
+    let base = points
+        .first()
+        .map(ThroughputPoint::problems_per_sec)
+        .unwrap_or(0.0);
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"bench\": \"{bench}\",\n"));
+    out.push_str("  \"unit\": \"problems/sec\",\n");
+    out.push_str("  \"results\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        let speedup = if base > 0.0 {
+            p.problems_per_sec() / base
+        } else {
+            0.0
+        };
+        let sep = if i + 1 == points.len() { "" } else { "," };
+        out.push_str(&format!(
+            "    {{\"threads\": {}, \"problems\": {}, \"elapsed_s\": {:.6}, \
+             \"problems_per_sec\": {:.3}, \"speedup_vs_base\": {:.3}}}{}\n",
+            p.threads,
+            p.problems,
+            p.elapsed_s,
+            p.problems_per_sec(),
+            speedup,
+            sep
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write [`throughput_json`] to `path`.
+pub fn write_throughput_json(
+    path: impl AsRef<std::path::Path>,
+    bench: &str,
+    points: &[ThroughputPoint],
+) -> crate::Result<()> {
+    std::fs::write(path, throughput_json(bench, points))?;
+    Ok(())
+}
+
 fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.0} ns")
@@ -146,6 +208,37 @@ mod tests {
         let r = b.bench("noop-sum", || (0..100u64).sum::<u64>());
         assert!(r.ns_per_iter_median > 0.0);
         assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn throughput_json_round_trips_through_jsonlite() {
+        let points = [
+            ThroughputPoint {
+                threads: 1,
+                problems: 100,
+                elapsed_s: 2.0,
+            },
+            ThroughputPoint {
+                threads: 4,
+                problems: 100,
+                elapsed_s: 0.5,
+            },
+        ];
+        let text = throughput_json("serve", &points);
+        let v = crate::jsonlite::parse(&text).unwrap();
+        assert_eq!(v.get("bench").unwrap().as_str(), Some("serve"));
+        let results = v.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[1].get("threads").unwrap().as_u64(), Some(4));
+        let speedup = results[1].get("speedup_vs_base").unwrap().as_f64().unwrap();
+        assert!((speedup - 4.0).abs() < 1e-6, "speedup {speedup}");
+    }
+
+    #[test]
+    fn throughput_json_empty_points() {
+        let text = throughput_json("serve", &[]);
+        let v = crate::jsonlite::parse(&text).unwrap();
+        assert!(v.get("results").unwrap().as_arr().unwrap().is_empty());
     }
 
     #[test]

@@ -12,7 +12,12 @@
 //!
 //! The GPU itself is substituted by an execution-model simulator ([`sim`]);
 //! real numerics flow through AOT-compiled JAX/Pallas kernels executed via
-//! PJRT ([`runtime`]).  See DESIGN.md for the substitution rationale.
+//! PJRT ([`runtime`], behind the `pjrt` feature).  See DESIGN.md for the
+//! substitution rationale.
+//!
+//! On top of both sits [`serve`]: a multi-threaded, plan-cached batch
+//! execution engine that serves heterogeneous problem streams through the
+//! load-balancing abstraction on real host threads.
 
 pub mod balance;
 pub mod benchutil;
@@ -25,6 +30,7 @@ pub mod exec;
 pub mod metrics;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod sparse;
 pub mod streamk;

@@ -4,6 +4,8 @@
 //! gpulb figures [ID|all] [--scale 0|1|2] [--out DIR]
 //! gpulb spmv  [--matrix SPEC] [--schedule NAME] [--check-runtime]
 //! gpulb gemm  [--m M --n N --k K] [--decomp NAME] [--prec P] [--check-runtime]
+//! gpulb serve [--threads N] [--batches B] [--scale 0|1] [--schedule NAME]
+//! gpulb serve --bench [--out FILE]
 //! gpulb info
 //! ```
 
@@ -14,6 +16,7 @@ use gpulb::exec::{dense::DenseMat, gemm as gemm_exec, spmv as spmv_exec};
 use gpulb::report::figures::{self, Scale};
 use gpulb::report::fmt;
 use gpulb::runtime::Runtime;
+use gpulb::serve;
 use gpulb::sim::gpu::{GpuSpec, Precision};
 use gpulb::sim::SpmvCost;
 use gpulb::sparse::{gen, mtx};
@@ -30,6 +33,9 @@ USAGE:
               [--check-runtime]
   gpulb gemm  [--m M --n N --k K] [--decomp streamk|dp|fixed:S|hybrid1|hybrid2]
               [--prec f16f32|f64] [--check-runtime]
+  gpulb serve [--threads N] [--batches B] [--scale 0|1] [--plan-workers W]
+              [--schedule auto|thread|warp|block|merge|nzsplit|binning|lrb]
+  gpulb serve --bench [--batches B] [--scale 0|1] [--out FILE]
   gpulb info
 ";
 
@@ -51,16 +57,8 @@ fn parse_matrix(spec: &str) -> gpulb::Result<gpulb::sparse::Csr> {
 }
 
 fn parse_schedule(s: &str, a: &gpulb::sparse::Csr) -> ScheduleKind {
-    match s {
-        "thread" => ScheduleKind::ThreadMapped,
-        "warp" => ScheduleKind::GroupMapped(32),
-        "block" => ScheduleKind::GroupMapped(128),
-        "merge" => ScheduleKind::MergePath,
-        "nzsplit" => ScheduleKind::NonzeroSplit,
-        "binning" => ScheduleKind::Binning,
-        "lrb" => ScheduleKind::Lrb,
-        _ => balance::select_schedule(a, balance::HeuristicParams::default()),
-    }
+    parse_schedule_name(s)
+        .unwrap_or_else(|| balance::select_schedule(a, balance::HeuristicParams::default()))
 }
 
 fn cmd_figures(args: &Args) -> gpulb::Result<()> {
@@ -209,6 +207,72 @@ fn cmd_gemm(args: &Args) -> gpulb::Result<()> {
     Ok(())
 }
 
+/// Schedule names accepted by `serve --schedule` ("auto" / unknown = None,
+/// meaning the per-family default).
+fn parse_schedule_name(s: &str) -> Option<ScheduleKind> {
+    match s {
+        "thread" => Some(ScheduleKind::ThreadMapped),
+        "warp" => Some(ScheduleKind::GroupMapped(32)),
+        "block" => Some(ScheduleKind::GroupMapped(128)),
+        "merge" => Some(ScheduleKind::MergePath),
+        "nzsplit" => Some(ScheduleKind::NonzeroSplit),
+        "binning" => Some(ScheduleKind::Binning),
+        "lrb" => Some(ScheduleKind::Lrb),
+        _ => None,
+    }
+}
+
+fn cmd_serve(args: &Args) -> gpulb::Result<()> {
+    let scale = args.opt_usize("scale", 1);
+    let batches = args.opt_usize("batches", 3);
+    let mix = serve::corpus_mix(scale);
+    let atoms: usize = mix.iter().map(|p| p.atoms()).sum();
+    println!(
+        "mix: {} problems ({} spmv, {} gemm, {} frontier), {} atoms total",
+        mix.len(),
+        mix.iter().filter(|p| p.kind_name() == "spmv").count(),
+        mix.iter().filter(|p| p.kind_name() == "gemm").count(),
+        mix.iter().filter(|p| p.kind_name() == "frontier").count(),
+        atoms
+    );
+
+    if args.has_flag("bench") {
+        let out = args.opt_or("out", "BENCH_serve.json");
+        serve::run_bench(&mix, &[1, 2, 4, 8], batches, &out)?;
+        return Ok(());
+    }
+
+    let default_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let cfg = serve::ServeConfig {
+        threads: args.opt_usize("threads", default_threads),
+        plan_workers: args.opt_usize("plan-workers", 256),
+        schedule: args.opt("schedule").and_then(parse_schedule_name),
+        cache_capacity: args.opt_usize("cache-capacity", 1024),
+    };
+    println!(
+        "engine: {} threads, {} plan workers, schedule {}",
+        cfg.threads,
+        cfg.plan_workers,
+        cfg.schedule.map(|k| k.name()).unwrap_or("auto")
+    );
+    let engine = serve::ServeEngine::new(cfg);
+    for batch_no in 1..=batches.max(1) {
+        let report = engine.execute_batch(&mix);
+        println!(
+            "batch {batch_no}: {:>8.1} problems/sec  \
+             (cache {:.0}% hit, {} entries; pool {} pops / {} steals)",
+            report.problems_per_sec(),
+            report.cache.hit_rate() * 100.0,
+            report.cache.entries,
+            report.pool.pops,
+            report.pool.steals
+        );
+    }
+    Ok(())
+}
+
 fn cmd_info() -> gpulb::Result<()> {
     let rt = Runtime::open_default()?;
     println!("PJRT platform: {}", rt.platform());
@@ -242,6 +306,7 @@ fn main() -> gpulb::Result<()> {
         }
         "spmv" => cmd_spmv(&args),
         "gemm" => cmd_gemm(&args),
+        "serve" => cmd_serve(&args),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");

@@ -8,16 +8,28 @@
 //! Python never runs here: `make artifacts` is the only Python step, and the
 //! compiled executables are cached per artifact name for the lifetime of the
 //! [`Runtime`].
+//!
+//! The PJRT dependency is feature-gated: with `--features pjrt` this module
+//! compiles the real client ([`pjrt`], backed by the `xla` crate); by
+//! default it compiles a dependency-free stub whose [`Runtime::open`] fails
+//! gracefully, so every caller (CLI `--check-runtime`, integration tests,
+//! examples) skips the artifact path instead of breaking the build.
 
 mod artifact;
 
 pub use artifact::{ArtifactSpec, Manifest};
 
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{DevInput, DeviceTensor, Runtime};
 
-use anyhow::{anyhow, Context};
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{DevInput, DeviceTensor, Runtime};
+
+use anyhow::anyhow;
 
 use crate::Result;
 
@@ -57,270 +69,6 @@ impl HostTensor {
             other => Err(anyhow!("expected f64 tensor, got {other:?}")),
         }
     }
-
-    /// Synchronous host->device upload.  Uses `buffer_from_host_buffer`
-    /// (kImmutableOnlyDuringCall semantics: PJRT copies during the call) —
-    /// NOT `buffer_from_host_literal`, whose TFRT-CPU implementation is
-    /// asynchronous and requires the literal to outlive the transfer.
-    fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
-        let buf = match self {
-            HostTensor::F32(v, shape) => client.buffer_from_host_buffer(v, shape, None),
-            HostTensor::F64(v, shape) => client.buffer_from_host_buffer(v, shape, None),
-            HostTensor::I32(v, shape) => client.buffer_from_host_buffer(v, shape, None),
-        };
-        buf.map_err(|e| anyhow!("host->device upload: {e:?}"))
-    }
-
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let lit = match self {
-            HostTensor::F32(v, shape) => {
-                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                if dims.is_empty() {
-                    xla::Literal::scalar(v[0])
-                } else {
-                    xla::Literal::vec1(v).reshape(&dims)?
-                }
-            }
-            HostTensor::F64(v, shape) => {
-                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                if dims.is_empty() {
-                    xla::Literal::scalar(v[0])
-                } else {
-                    xla::Literal::vec1(v).reshape(&dims)?
-                }
-            }
-            HostTensor::I32(v, shape) => {
-                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                if dims.is_empty() {
-                    xla::Literal::scalar(v[0])
-                } else {
-                    xla::Literal::vec1(v).reshape(&dims)?
-                }
-            }
-        };
-        Ok(lit)
-    }
-}
-
-/// The PJRT runtime: one CPU client + a cache of compiled executables.
-///
-/// Compilation happens lazily on first use of each artifact and is amortized
-/// across the whole run (one compile per artifact name, ever).
-pub struct Runtime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    dir: PathBuf,
-    exes: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
-    /// Execution counters for the perf report (calls per artifact).
-    calls: RefCell<HashMap<String, u64>>,
-}
-
-impl Runtime {
-    /// Open the artifact directory (default `artifacts/`), read the
-    /// manifest, and initialize the PJRT CPU client.
-    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&dir.join("manifest.json"))
-            .with_context(|| format!("loading manifest from {}", dir.display()))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Self {
-            client,
-            manifest,
-            dir,
-            exes: RefCell::new(HashMap::new()),
-            calls: RefCell::new(HashMap::new()),
-        })
-    }
-
-    /// Locate `artifacts/` near the current exe / cwd (repo root layout).
-    pub fn open_default() -> Result<Self> {
-        for cand in ["artifacts", "../artifacts", "../../artifacts"] {
-            if Path::new(cand).join("manifest.json").exists() {
-                return Self::open(cand);
-            }
-        }
-        Err(anyhow!(
-            "artifacts/manifest.json not found — run `make artifacts` first"
-        ))
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Number of `execute` calls issued per artifact so far.
-    pub fn call_counts(&self) -> HashMap<String, u64> {
-        self.calls.borrow().clone()
-    }
-
-    fn executable(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.exes.borrow().get(name) {
-            return Ok(exe.clone());
-        }
-        let spec = self
-            .manifest
-            .get(name)
-            .ok_or_else(|| anyhow!("artifact `{name}` not in manifest"))?;
-        let path = self.dir.join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling `{name}`: {e:?}"))?;
-        let exe = std::rc::Rc::new(exe);
-        self.exes.borrow_mut().insert(name.to_string(), exe.clone());
-        Ok(exe)
-    }
-
-    /// Pre-compile a set of artifacts (hoists compile cost off the hot path).
-    pub fn warmup(&self, names: &[&str]) -> Result<()> {
-        for name in names {
-            self.executable(name)?;
-        }
-        Ok(())
-    }
-
-    /// Execute an artifact with host inputs; returns the (single) output
-    /// tensor.  Artifacts are lowered untupled (`return_tuple=False`); a
-    /// tuple root from hand-supplied HLO is tolerated and unwrapped.
-    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<HostTensor> {
-        let spec = self
-            .manifest
-            .get(name)
-            .ok_or_else(|| anyhow!("artifact `{name}` not in manifest"))?;
-        if spec.inputs.len() != inputs.len() {
-            return Err(anyhow!(
-                "artifact `{name}` expects {} inputs, got {}",
-                spec.inputs.len(),
-                inputs.len()
-            ));
-        }
-        for (i, (spec_in, got)) in spec.inputs.iter().zip(inputs).enumerate() {
-            if spec_in.shape != got.shape() {
-                return Err(anyhow!(
-                    "artifact `{name}` input {i}: expected shape {:?}, got {:?}",
-                    spec_in.shape,
-                    got.shape()
-                ));
-            }
-        }
-
-        let exe = self.executable(name)?;
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("executing `{name}`: {e:?}"))?;
-        *self.calls.borrow_mut().entry(name.to_string()).or_insert(0) += 1;
-
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching result of `{name}`: {e:?}"))?;
-        // Artifacts are lowered untupled; tolerate tuple roots for
-        // compatibility with hand-supplied HLO.
-        let out = match lit.shape() {
-            Ok(xla::Shape::Tuple(_)) => lit.to_tuple1().map_err(|e| anyhow!("{e:?}"))?,
-            _ => lit,
-        };
-        literal_to_host(&out)
-    }
-
-    /// Execute with mixed host/device inputs, keeping the result on device —
-    /// the hot-path variant that lets the coordinator chain kernel calls
-    /// (e.g. the Stream-K accumulator) without host round trips.
-    pub fn execute_dev(&self, name: &str, inputs: &[DevInput]) -> Result<DeviceTensor> {
-        let exe = self.executable(name)?;
-        // Upload host inputs; borrow device inputs.
-        let mut uploaded: Vec<xla::PjRtBuffer> = Vec::new();
-        for inp in inputs {
-            if let DevInput::Host(t) = inp {
-                uploaded.push(t.to_buffer(&self.client)?);
-            }
-        }
-        let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
-        let mut up = 0usize;
-        for inp in inputs {
-            match inp {
-                DevInput::Dev(d) => refs.push(&d.buffer),
-                DevInput::Host(_) => {
-                    refs.push(&uploaded[up]);
-                    up += 1;
-                }
-            }
-        }
-        let mut result = exe
-            .execute_b::<&xla::PjRtBuffer>(&refs)
-            .map_err(|e| anyhow!("executing `{name}` (dev): {e:?}"))?;
-        *self.calls.borrow_mut().entry(name.to_string()).or_insert(0) += 1;
-        let buffer = result
-            .swap_remove(0)
-            .into_iter()
-            .next()
-            .ok_or_else(|| anyhow!("no output buffer from `{name}`"))?;
-        Ok(DeviceTensor { buffer })
-    }
-
-    /// Upload a host tensor to the device.
-    pub fn to_device(&self, t: &HostTensor) -> Result<DeviceTensor> {
-        Ok(DeviceTensor {
-            buffer: t.to_buffer(&self.client)?,
-        })
-    }
-
-    /// Download a device tensor.
-    pub fn to_host(&self, t: &DeviceTensor) -> Result<HostTensor> {
-        let lit = t
-            .buffer
-            .to_literal_sync()
-            .map_err(|e| anyhow!("download: {e:?}"))?;
-        let out = match lit.shape() {
-            Ok(xla::Shape::Tuple(_)) => lit.to_tuple1().map_err(|e| anyhow!("{e:?}"))?,
-            _ => lit,
-        };
-        literal_to_host(&out)
-    }
-}
-
-/// A tensor resident on the PJRT device (no host copy).
-pub struct DeviceTensor {
-    buffer: xla::PjRtBuffer,
-}
-
-/// Input to [`Runtime::execute_dev`]: host data (uploaded per call) or an
-/// already-resident device tensor (zero-copy).
-pub enum DevInput<'a> {
-    Host(HostTensor),
-    Dev(&'a DeviceTensor),
-}
-
-fn literal_to_host(lit: &xla::Literal) -> Result<HostTensor> {
-    let shape = lit
-        .array_shape()
-        .map_err(|e| anyhow!("result shape: {e:?}"))?;
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    match shape.primitive_type() {
-        xla::PrimitiveType::F32 => Ok(HostTensor::F32(
-            lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
-            dims,
-        )),
-        xla::PrimitiveType::F64 => Ok(HostTensor::F64(
-            lit.to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?,
-            dims,
-        )),
-        xla::PrimitiveType::S32 => Ok(HostTensor::I32(
-            lit.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?,
-            dims,
-        )),
-        other => Err(anyhow!("unsupported result element type {other:?}")),
-    }
 }
 
 #[cfg(test)]
@@ -340,5 +88,12 @@ mod tests {
         let t = HostTensor::F32(vec![1.0], vec![1]);
         assert!(t.as_f32().is_ok());
         assert!(t.as_f64().is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_open_fails_gracefully() {
+        assert!(Runtime::open("artifacts").is_err());
+        assert!(Runtime::open_default().is_err());
     }
 }

@@ -1,0 +1,80 @@
+//! Stub runtime compiled when the `pjrt` feature is disabled.
+//!
+//! Keeps the full [`Runtime`] API surface so every caller type-checks on
+//! the default (dependency-light) build, while guaranteeing at the type
+//! level that no artifact execution can happen: [`Runtime::open`] always
+//! fails, and the struct contains an uninhabited field, so the remaining
+//! methods are statically unreachable.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::anyhow;
+
+use super::{HostTensor, Manifest};
+use crate::Result;
+
+/// Uninhabited: proves stub runtimes can never be constructed.
+enum Never {}
+
+fn disabled() -> anyhow::Error {
+    anyhow!("PJRT runtime unavailable: gpulb was built without the `pjrt` feature")
+}
+
+/// Always-unavailable runtime (see module docs).
+pub struct Runtime {
+    never: Never,
+}
+
+impl Runtime {
+    pub fn open(_dir: impl AsRef<Path>) -> Result<Self> {
+        Err(disabled())
+    }
+
+    pub fn open_default() -> Result<Self> {
+        Err(disabled())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        match self.never {}
+    }
+
+    pub fn platform(&self) -> String {
+        match self.never {}
+    }
+
+    pub fn call_counts(&self) -> HashMap<String, u64> {
+        match self.never {}
+    }
+
+    pub fn warmup(&self, _names: &[&str]) -> Result<()> {
+        match self.never {}
+    }
+
+    pub fn execute(&self, _name: &str, _inputs: &[HostTensor]) -> Result<HostTensor> {
+        match self.never {}
+    }
+
+    pub fn execute_dev(&self, _name: &str, _inputs: &[DevInput]) -> Result<DeviceTensor> {
+        match self.never {}
+    }
+
+    pub fn to_device(&self, _t: &HostTensor) -> Result<DeviceTensor> {
+        match self.never {}
+    }
+
+    pub fn to_host(&self, t: &DeviceTensor) -> Result<HostTensor> {
+        match t.never {}
+    }
+}
+
+/// Device tensor stand-in (uninhabited for the same reason as [`Runtime`]).
+pub struct DeviceTensor {
+    never: Never,
+}
+
+/// Input to [`Runtime::execute_dev`]: host data or a device-resident tensor.
+pub enum DevInput<'a> {
+    Host(HostTensor),
+    Dev(&'a DeviceTensor),
+}

@@ -1,0 +1,416 @@
+//! The problems a batch can carry and their execution semantics.
+//!
+//! A [`Problem`] is one request: SpMV over a corpus matrix, GEMM over a
+//! corpus shape, or a graph-frontier expansion.  All three expose their
+//! irregular work as an atoms-per-tile prefix sum, get planned by a
+//! Chapter-4 schedule through the [`PlanCache`], and execute the resulting
+//! [`Assignment`] with the uniform accumulate-into-tile semantics — the
+//! serving-layer restatement of the paper's claim that one load-balancing
+//! abstraction covers heterogeneous irregular workloads.
+//!
+//! GEMM rides the same machinery by treating its *aggregate MAC-loop
+//! iteration space* as the tile set (tiles = output tiles, atoms = MAC
+//! iterations): an even atom split over workers is exactly the Stream-K
+//! decomposition, now produced by the generic `NonzeroSplit` schedule.
+
+use std::sync::Arc;
+
+use crate::balance::{self, OffsetsSource, ScheduleKind};
+use crate::corpus::{gemm_shapes, sparse_corpus};
+use crate::exec::{dense::DenseMat, graph, spmv};
+use crate::sparse::{gen, Coo, Csr};
+use crate::streamk::{Blocking, GemmShape};
+
+use super::plan_cache::{fingerprint, PlanCache, PlanKey};
+use super::ServeConfig;
+
+/// Fingerprint salts, one per problem family (see [`fingerprint`]).
+pub const SALT_SPMV: u64 = 0x51;
+pub const SALT_GEMM: u64 = 0x6e;
+pub const SALT_FRONTIER: u64 = 0xf0;
+
+/// One request in a batch.
+#[derive(Clone)]
+pub enum Problem {
+    /// y = A x over the load-balancing framework.
+    Spmv {
+        matrix: Arc<Csr>,
+        x: Arc<Vec<f64>>,
+        fingerprint: u64,
+    },
+    /// C = A B via the MAC-iteration tile set (host Stream-K analogue).
+    Gemm {
+        a: Arc<DenseMat>,
+        b: Arc<DenseMat>,
+        shape: GemmShape,
+        blocking: Blocking,
+        /// Prefix sum of MAC iterations per output tile.
+        offsets: Arc<Vec<usize>>,
+        fingerprint: u64,
+    },
+    /// One frontier-expansion step (per-vertex neighbor reduction).
+    Frontier {
+        graph: Arc<Csr>,
+        frontier: Arc<Vec<u32>>,
+        /// Prefix sum of neighbor-list lengths over the frontier.
+        offsets: Arc<Vec<usize>>,
+        fingerprint: u64,
+    },
+}
+
+impl Problem {
+    /// SpMV request; `x` is derived deterministically from the column count.
+    pub fn spmv(matrix: Arc<Csr>) -> Problem {
+        let x: Vec<f64> = (0..matrix.cols).map(|i| (i as f64 * 0.37).sin()).collect();
+        let fp = fingerprint(SALT_SPMV, &*matrix);
+        Problem::Spmv {
+            matrix,
+            x: Arc::new(x),
+            fingerprint: fp,
+        }
+    }
+
+    /// GEMM request with seeded random operands.
+    pub fn gemm(shape: GemmShape, blocking: Blocking, seed: u64) -> Problem {
+        let a = DenseMat::random(shape.m, shape.k, seed);
+        let b = DenseMat::random(shape.k, shape.n, seed.wrapping_add(1));
+        let tiles = blocking.tiles(shape);
+        let ipt = blocking.iters_per_tile(shape) as usize;
+        let offsets: Vec<usize> = (0..=tiles).map(|t| t * ipt).collect();
+        let fp = fingerprint(SALT_GEMM, &OffsetsSource::new(&offsets));
+        Problem::Gemm {
+            a: Arc::new(a),
+            b: Arc::new(b),
+            shape,
+            blocking,
+            offsets: Arc::new(offsets),
+            fingerprint: fp,
+        }
+    }
+
+    /// Frontier-expansion request over `graph` from the given frontier.
+    pub fn frontier(graph: Arc<Csr>, frontier: Vec<u32>) -> Problem {
+        let lens: Vec<usize> = frontier
+            .iter()
+            .map(|&v| graph.row_nnz(v as usize))
+            .collect();
+        let offsets = balance::prefix::exclusive(&lens);
+        let fp = fingerprint(SALT_FRONTIER, &OffsetsSource::new(&offsets));
+        Problem::Frontier {
+            graph,
+            frontier: Arc::new(frontier),
+            offsets: Arc::new(offsets),
+            fingerprint: fp,
+        }
+    }
+
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Problem::Spmv { .. } => "spmv",
+            Problem::Gemm { .. } => "gemm",
+            Problem::Frontier { .. } => "frontier",
+        }
+    }
+
+    /// Work atoms in this problem (nonzeros / MAC iterations / edges).
+    pub fn atoms(&self) -> usize {
+        match self {
+            Problem::Spmv { matrix, .. } => matrix.nnz(),
+            Problem::Gemm { offsets, .. } | Problem::Frontier { offsets, .. } => {
+                *offsets.last().unwrap_or(&0)
+            }
+        }
+    }
+
+    pub fn fingerprint(&self) -> u64 {
+        match self {
+            Problem::Spmv { fingerprint, .. }
+            | Problem::Gemm { fingerprint, .. }
+            | Problem::Frontier { fingerprint, .. } => *fingerprint,
+        }
+    }
+
+    /// Schedule for this problem: the config override, else a per-family
+    /// default (the §4.5.2 heuristic for SpMV; `NonzeroSplit` for GEMM —
+    /// the Stream-K-equivalent even iteration split; merge-path for
+    /// frontiers, whose tile sets are the most skewed).
+    pub fn schedule(&self, cfg: &ServeConfig) -> ScheduleKind {
+        if let Some(kind) = cfg.schedule {
+            return kind;
+        }
+        match self {
+            Problem::Spmv { matrix, .. } => {
+                balance::select_schedule(matrix, balance::HeuristicParams::default())
+            }
+            Problem::Gemm { .. } => ScheduleKind::NonzeroSplit,
+            Problem::Frontier { .. } => ScheduleKind::MergePath,
+        }
+    }
+}
+
+/// Plan (through the cache) and execute one problem; returns its checksum
+/// (a deterministic reduction of the full result, independent of thread
+/// count and schedule — the serving-layer numerics witness).
+pub fn execute(problem: &Problem, cache: &PlanCache, cfg: &ServeConfig) -> f64 {
+    let kind = problem.schedule(cfg);
+    let workers = cfg.plan_workers.max(1);
+    let key = PlanKey {
+        fingerprint: problem.fingerprint(),
+        schedule: kind,
+        workers,
+    };
+    match problem {
+        Problem::Spmv { matrix, x, .. } => {
+            let plan = cache.get_or_compute(key, || kind.assign(&**matrix, workers));
+            let y = spmv::execute_host(matrix, x, &plan);
+            y.iter().sum()
+        }
+        Problem::Gemm {
+            a,
+            b,
+            shape,
+            blocking,
+            offsets,
+            ..
+        } => {
+            let plan =
+                cache.get_or_compute(key, || kind.assign(&OffsetsSource::new(offsets), workers));
+            let c = execute_gemm_assignment(a, b, *shape, *blocking, &plan);
+            c.data.iter().sum()
+        }
+        Problem::Frontier {
+            graph,
+            frontier,
+            offsets,
+            ..
+        } => {
+            let plan =
+                cache.get_or_compute(key, || kind.assign(&OffsetsSource::new(offsets), workers));
+            let out = execute_frontier_assignment(graph, frontier, offsets, &plan);
+            out.iter().sum()
+        }
+    }
+}
+
+/// Execute a GEMM through a generic [`Assignment`] over the MAC-iteration
+/// tile set: each segment accumulates its share of one output tile's
+/// k-iterations (Algorithm 10's fixup realized as commutative accumulation,
+/// like [`crate::exec::gemm::execute_plan_host`]).
+pub fn execute_gemm_assignment(
+    a: &DenseMat,
+    b: &DenseMat,
+    shape: GemmShape,
+    blk: Blocking,
+    asg: &balance::Assignment,
+) -> DenseMat {
+    let (bm, bn, bk) = (blk.bm, blk.bn, blk.bk);
+    let ipt = blk.iters_per_tile(shape) as usize;
+    let tiles_n = shape.n.div_ceil(bn);
+    let mut c = DenseMat::zeros(shape.m, shape.n);
+    for w in &asg.workers {
+        for s in &w.segments {
+            let tile = s.tile as usize;
+            let tile_r = (tile / tiles_n) * bm;
+            let tile_c = (tile % tiles_n) * bn;
+            let base = tile * ipt;
+            let mut acc = vec![0.0f64; bm * bn];
+            for it in (s.atom_begin - base)..(s.atom_end - base) {
+                let k0 = it * bk;
+                let a_blk = a.window(tile_r, k0, bm, bk);
+                let b_blk = b.window(k0, tile_c, bk, bn);
+                for i in 0..bm {
+                    for l in 0..bk {
+                        let av = a_blk[i * bk + l];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        for j in 0..bn {
+                            acc[i * bn + j] += av * b_blk[l * bn + j];
+                        }
+                    }
+                }
+            }
+            c.add_window(&acc, tile_r, tile_c, bm, bn);
+        }
+    }
+    c
+}
+
+/// Execute a frontier expansion through an [`Assignment`]: per frontier
+/// vertex, reduce the absolute edge weights of its neighbor list (the
+/// balanced "advance" of §4.4.3, with the same accumulate-into-tile
+/// semantics as SpMV).
+pub fn execute_frontier_assignment(
+    graph: &Csr,
+    frontier: &[u32],
+    offsets: &[usize],
+    asg: &balance::Assignment,
+) -> Vec<f64> {
+    let mut out = vec![0.0f64; frontier.len()];
+    for w in &asg.workers {
+        for s in &w.segments {
+            let v = frontier[s.tile as usize] as usize;
+            let (_, weights) = graph.row(v);
+            let base = offsets[s.tile as usize];
+            let mut sum = 0.0;
+            for atom in s.atom_begin..s.atom_end {
+                sum += weights[atom - base].abs();
+            }
+            out[s.tile as usize] += sum;
+        }
+    }
+    out
+}
+
+/// An R-MAT graph unioned with a ring (guarantees every vertex has a
+/// neighbor, so BFS from vertex 0 reaches the whole graph).
+fn connected_rmat(scale: u32, edge_factor: usize, seed: u64) -> Csr {
+    let base = gen::rmat(scale, edge_factor, seed);
+    let n = base.rows;
+    let mut coo = Coo::new(n, n);
+    for v in 0..n {
+        coo.push(v, (v + 1) % n, 1.0);
+    }
+    for r in 0..n {
+        let (cols, vals) = base.row(r);
+        for (c, v) in cols.iter().zip(vals) {
+            coo.push(r, *c as usize, *v);
+        }
+    }
+    Csr::from_coo(&coo)
+}
+
+/// Deterministic heterogeneous batch over the evaluation corpora.
+///
+/// `scale` 0 is the smoke mix (fast under `cargo test`); `scale >= 1` is
+/// the bench mix.  GEMM shapes come from the Fig. 5.6 corpus restricted to
+/// host-executable sizes; SpMV matrices are the SuiteSparse substitution;
+/// frontier problems replay the BFS levels of an R-MAT graph.
+pub fn corpus_mix(scale: usize) -> Vec<Problem> {
+    let mut out = Vec::new();
+
+    // SpMV over the sparse corpus.
+    for entry in sparse_corpus(scale.min(1)) {
+        out.push(Problem::spmv(Arc::new(entry.matrix)));
+    }
+
+    // GEMM over the small end of the Fig. 5.6 shape corpus (host numerics
+    // cap the affordable FLOP volume; the shapes are still corpus members).
+    let (max_dim, take) = if scale == 0 { (160, 6) } else { (256, 24) };
+    let blocking = Blocking::new(64, 64, 16);
+    for (i, shape) in gemm_shapes::gemm_corpus()
+        .into_iter()
+        .filter(|s| s.m <= max_dim && s.n <= max_dim && s.k <= max_dim)
+        .take(take)
+        .enumerate()
+    {
+        out.push(Problem::gemm(shape, blocking, 0x9e3779b9 + i as u64));
+    }
+
+    // Frontier expansions: every BFS level of a connected R-MAT graph.
+    let rmat_scale = if scale == 0 { 9 } else { 12 };
+    let graph = Arc::new(connected_rmat(rmat_scale, 8, 2022));
+    let depth = graph::bfs_ref(&graph, 0);
+    let max_depth = depth.iter().filter(|&&d| d != u32::MAX).max().copied();
+    for level in 0..=max_depth.unwrap_or(0) {
+        let frontier: Vec<u32> = (0..graph.rows as u32)
+            .filter(|&v| depth[v as usize] == level)
+            .collect();
+        if !frontier.is_empty() {
+            out.push(Problem::frontier(graph.clone(), frontier));
+        }
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::plan_cache::PlanCache;
+
+    fn cfg_with(schedule: Option<ScheduleKind>) -> ServeConfig {
+        ServeConfig {
+            threads: 1,
+            plan_workers: 64,
+            schedule,
+            cache_capacity: 256,
+        }
+    }
+
+    #[test]
+    fn gemm_assignment_matches_reference_all_schedules() {
+        let shape = GemmShape::new(96, 80, 72);
+        let blk = Blocking::new(32, 32, 16);
+        let problem = Problem::gemm(shape, blk, 7);
+        let Problem::Gemm { a, b, offsets, .. } = &problem else {
+            unreachable!()
+        };
+        let (a, b) = (a.as_ref(), b.as_ref());
+        let want = DenseMat::matmul_ref(a, b);
+        for kind in [
+            ScheduleKind::ThreadMapped,
+            ScheduleKind::GroupMapped(32),
+            ScheduleKind::MergePath,
+            ScheduleKind::NonzeroSplit,
+            ScheduleKind::Binning,
+            ScheduleKind::Lrb,
+        ] {
+            let asg = kind.assign(&OffsetsSource::new(offsets), 16);
+            asg.validate(&OffsetsSource::new(offsets)).unwrap();
+            let got = execute_gemm_assignment(a, b, shape, blk, &asg);
+            assert!(
+                got.max_abs_diff(&want) < 1e-9,
+                "{kind:?} diff {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn spmv_checksum_schedule_invariant() {
+        let matrix = Arc::new(gen::power_law(300, 300, 150, 1.6, 11));
+        let problem = Problem::spmv(matrix.clone());
+        let cache = PlanCache::new(64);
+        let auto = execute(&problem, &cache, &cfg_with(None));
+        for kind in [
+            ScheduleKind::ThreadMapped,
+            ScheduleKind::MergePath,
+            ScheduleKind::NonzeroSplit,
+        ] {
+            let got = execute(&problem, &cache, &cfg_with(Some(kind)));
+            assert!((got - auto).abs() < 1e-9, "{kind:?}: {got} vs {auto}");
+        }
+    }
+
+    #[test]
+    fn frontier_checksum_matches_direct_reduction() {
+        let graph = Arc::new(connected_rmat(8, 4, 5));
+        let frontier: Vec<u32> = (0..graph.rows as u32).step_by(3).collect();
+        let problem = Problem::frontier(graph.clone(), frontier.clone());
+        let cache = PlanCache::new(64);
+        let got = execute(&problem, &cache, &cfg_with(None));
+        let want: f64 = frontier
+            .iter()
+            .map(|&v| graph.row(v as usize).1.iter().map(|w| w.abs()).sum::<f64>())
+            .sum();
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+    }
+
+    #[test]
+    fn corpus_mix_is_deterministic_and_heterogeneous() {
+        let a = corpus_mix(0);
+        let b = corpus_mix(0);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.fingerprint(), y.fingerprint());
+            assert_eq!(x.atoms(), y.atoms());
+        }
+        for kind in ["spmv", "gemm", "frontier"] {
+            assert!(
+                a.iter().any(|p| p.kind_name() == kind),
+                "mix lacks {kind} problems"
+            );
+        }
+    }
+}

@@ -1,0 +1,253 @@
+//! Host-side batch execution engine: the serving layer over the Chapter-4
+//! load-balancing abstraction.
+//!
+//! A [`ServeEngine`] accepts batches of heterogeneous [`Problem`]s (SpMV,
+//! GEMM, graph frontiers), plans each one through a schedule (the §4.5.2
+//! heuristic by default), caches the computed [`crate::balance::Assignment`]
+//! plans in a concurrent [`PlanCache`] keyed by
+//! (work-source fingerprint, schedule, worker count), and executes the
+//! batch across a `std::thread` worker pool with per-worker deques and work
+//! stealing — the host-level analogue of
+//! [`crate::balance::queue::QueuePolicy::Stealing`], lifted from simulated
+//! device time to real threads (the Atos direction, arXiv:2112.00132).
+//!
+//! Layering:
+//!
+//! * [`batch`]      — problem definitions, execution semantics, corpus mix;
+//! * [`plan_cache`] — the concurrent Assignment cache;
+//! * [`pool`]       — the work-stealing thread pool;
+//! * this module    — the engine, batch reports, and the bench sweep.
+
+pub mod batch;
+pub mod plan_cache;
+pub mod pool;
+
+pub use batch::{corpus_mix, Problem};
+pub use plan_cache::{CacheStats, PlanCache, PlanKey};
+pub use pool::PoolStats;
+
+use std::time::{Duration, Instant};
+
+use crate::balance::ScheduleKind;
+use crate::benchutil;
+
+/// Engine configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Worker threads executing problems (clamped to the batch size).
+    pub threads: usize,
+    /// Workers each *plan* targets — the simulated device parallelism each
+    /// Assignment is built for, independent of host thread count.
+    pub plan_workers: usize,
+    /// Force one schedule for every problem (`None` = per-family default).
+    pub schedule: Option<ScheduleKind>,
+    /// Plan-cache capacity in entries.
+    pub cache_capacity: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            plan_workers: 256,
+            schedule: None,
+            cache_capacity: 1024,
+        }
+    }
+}
+
+/// Outcome of one batch execution.
+#[derive(Debug, Clone)]
+pub struct BatchReport {
+    pub problems: usize,
+    pub elapsed: Duration,
+    /// Per-problem checksums in submission order (deterministic across
+    /// thread counts — the correctness witness the tests pin).
+    pub checksums: Vec<f64>,
+    pub pool: PoolStats,
+    /// Cumulative cache counters at batch end.
+    pub cache: CacheStats,
+}
+
+impl BatchReport {
+    pub fn problems_per_sec(&self) -> f64 {
+        self.problems as f64 / self.elapsed.as_secs_f64().max(1e-12)
+    }
+
+    pub fn checksum(&self) -> f64 {
+        self.checksums.iter().sum()
+    }
+}
+
+/// The batch execution engine (see module docs).
+pub struct ServeEngine {
+    cfg: ServeConfig,
+    cache: PlanCache,
+}
+
+impl ServeEngine {
+    pub fn new(cfg: ServeConfig) -> Self {
+        let cache = PlanCache::new(cfg.cache_capacity);
+        ServeEngine { cfg, cache }
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    pub fn cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
+    /// Execute every problem in the batch across the worker pool; plans are
+    /// fetched from (or inserted into) the engine's cache, so repeated
+    /// batches over recurring problem shapes skip planning entirely.
+    pub fn execute_batch(&self, problems: &[Problem]) -> BatchReport {
+        let start = Instant::now();
+        let (checksums, pool) = pool::execute(self.cfg.threads, problems, |p| {
+            batch::execute(p, &self.cache, &self.cfg)
+        });
+        BatchReport {
+            problems: problems.len(),
+            elapsed: start.elapsed(),
+            checksums,
+            pool,
+            cache: self.cache.stats(),
+        }
+    }
+}
+
+/// One point of the bench sweep: `batches` runs of `mix` at `threads`.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub threads: usize,
+    pub problems: usize,
+    pub elapsed: Duration,
+    pub checksum: f64,
+}
+
+impl SweepPoint {
+    pub fn problems_per_sec(&self) -> f64 {
+        self.problems as f64 / self.elapsed.as_secs_f64().max(1e-12)
+    }
+}
+
+/// Run the same mix at each thread count with a fresh engine (cold cache),
+/// returning one [`SweepPoint`] per count.  Checksums must agree across
+/// points — callers assert this to turn every bench run into a concurrency
+/// correctness check.
+pub fn throughput_sweep(
+    mix: &[Problem],
+    thread_counts: &[usize],
+    batches: usize,
+) -> Vec<SweepPoint> {
+    thread_counts
+        .iter()
+        .map(|&threads| {
+            let engine = ServeEngine::new(ServeConfig {
+                threads,
+                ..ServeConfig::default()
+            });
+            let start = Instant::now();
+            let mut problems = 0usize;
+            let mut checksum = 0.0f64;
+            for _ in 0..batches.max(1) {
+                let report = engine.execute_batch(mix);
+                problems += report.problems;
+                checksum += report.checksum();
+            }
+            SweepPoint {
+                threads,
+                problems,
+                elapsed: start.elapsed(),
+                checksum,
+            }
+        })
+        .collect()
+}
+
+/// Run the full bench: sweep `thread_counts`, assert checksum invariance
+/// across them (every bench run doubles as a concurrency correctness
+/// check), print per-point throughput, and write the JSON artifact to
+/// `out_path`.  Shared by `gpulb serve --bench` and the
+/// `serve_throughput` bench target.
+pub fn run_bench(
+    mix: &[Problem],
+    thread_counts: &[usize],
+    batches: usize,
+    out_path: &str,
+) -> crate::Result<Vec<SweepPoint>> {
+    let points = throughput_sweep(mix, thread_counts, batches);
+    for pair in points.windows(2) {
+        anyhow::ensure!(
+            pair[0].checksum == pair[1].checksum,
+            "checksum diverged across thread counts: {} vs {}",
+            pair[0].checksum,
+            pair[1].checksum
+        );
+    }
+    let base = points
+        .first()
+        .map(SweepPoint::problems_per_sec)
+        .unwrap_or(0.0);
+    let json_points: Vec<benchutil::ThroughputPoint> = points
+        .iter()
+        .map(|p| {
+            println!(
+                "bench serve/threads_{:<2} {:>10.1} problems/sec  (speedup x{:.2})",
+                p.threads,
+                p.problems_per_sec(),
+                if base > 0.0 { p.problems_per_sec() / base } else { 0.0 }
+            );
+            benchutil::ThroughputPoint {
+                threads: p.threads,
+                problems: p.problems,
+                elapsed_s: p.elapsed.as_secs_f64(),
+            }
+        })
+        .collect();
+    benchutil::write_throughput_json(out_path, "serve", &json_points)?;
+    println!("wrote {out_path}");
+    Ok(points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use std::sync::Arc;
+
+    fn tiny_mix() -> Vec<Problem> {
+        vec![
+            Problem::spmv(Arc::new(gen::uniform(64, 64, 4, 1))),
+            Problem::spmv(Arc::new(gen::power_law(80, 80, 40, 1.5, 2))),
+        ]
+    }
+
+    #[test]
+    fn batch_report_counts_and_cache_growth() {
+        let engine = ServeEngine::new(ServeConfig {
+            threads: 2,
+            ..ServeConfig::default()
+        });
+        let mix = tiny_mix();
+        let first = engine.execute_batch(&mix);
+        assert_eq!(first.problems, 2);
+        assert_eq!(first.checksums.len(), 2);
+        assert_eq!(first.cache.misses, 2);
+        let second = engine.execute_batch(&mix);
+        assert_eq!(second.cache.hits, 2);
+        assert_eq!(first.checksums, second.checksums);
+    }
+
+    #[test]
+    fn sweep_checksums_agree_across_thread_counts() {
+        let mix = tiny_mix();
+        let points = throughput_sweep(&mix, &[1, 2], 2);
+        assert_eq!(points.len(), 2);
+        assert_eq!(points[0].problems, points[1].problems);
+        assert_eq!(points[0].checksum, points[1].checksum);
+    }
+}

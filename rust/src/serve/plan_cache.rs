@@ -1,0 +1,231 @@
+//! Concurrent plan cache: computed [`Assignment`]s keyed by
+//! (work-source fingerprint, schedule, worker count).
+//!
+//! Schedules are pure functions of the atoms-per-tile prefix sum (the
+//! [`WorkSource::offsets`] array), the schedule kind, and the worker count —
+//! nothing else.  Two sources with identical offsets therefore share a plan
+//! by construction, so the cache key is a fingerprint of exactly those
+//! inputs, and a cache hit is guaranteed bit-identical to a fresh
+//! computation (the property `tests/serve_plan_cache.rs` pins).
+//!
+//! Concurrency: a read-mostly `RwLock<HashMap>` with relaxed counters.  Two
+//! workers racing on the same missing key may both compute the plan; the
+//! first insert wins and the loser adopts it — benign, because both plans
+//! are identical by determinism.  Eviction is insertion-order (FIFO) with a
+//! fixed capacity, which is plenty for corpus-shaped traffic where the hot
+//! set is "every distinct problem shape seen recently".
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::balance::{Assignment, ScheduleKind, WorkSource};
+
+/// Cache key: everything a schedule's output depends on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// Fingerprint of the work source's offsets array (see [`fingerprint`]).
+    pub fingerprint: u64,
+    pub schedule: ScheduleKind,
+    pub workers: usize,
+}
+
+/// Point-in-time cache counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: usize,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Thread-safe Assignment cache (see module docs).
+pub struct PlanCache {
+    map: RwLock<HashMap<PlanKey, Arc<Assignment>>>,
+    /// Insertion order for FIFO eviction; locked after `map`'s write lock.
+    order: Mutex<VecDeque<PlanKey>>,
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl PlanCache {
+    /// Create a cache holding at most `capacity` plans (min 1).
+    pub fn new(capacity: usize) -> Self {
+        PlanCache {
+            map: RwLock::new(HashMap::new()),
+            order: Mutex::new(VecDeque::new()),
+            capacity: capacity.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Fetch the plan for `key`, computing and inserting it on a miss.
+    pub fn get_or_compute(
+        &self,
+        key: PlanKey,
+        compute: impl FnOnce() -> Assignment,
+    ) -> Arc<Assignment> {
+        if let Some(plan) = self.map.read().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return plan.clone();
+        }
+        // Compute outside any lock: plans can be expensive and the racing
+        // duplicate (see module docs) is cheaper than serializing planners.
+        let plan = Arc::new(compute());
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.map.write().unwrap();
+        if let Some(existing) = map.get(&key) {
+            // A racing worker inserted first; adopt its (identical) plan.
+            return existing.clone();
+        }
+        map.insert(key, plan.clone());
+        let mut order = self.order.lock().unwrap();
+        order.push_back(key);
+        while map.len() > self.capacity {
+            match order.pop_front() {
+                Some(old) => {
+                    if map.remove(&old).is_some() {
+                        self.evictions.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                None => break,
+            }
+        }
+        plan
+    }
+
+    /// Cached plan count.
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every cached plan (counters are kept).
+    pub fn clear(&self) {
+        let mut map = self.map.write().unwrap();
+        map.clear();
+        self.order.lock().unwrap().clear();
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: self.len(),
+        }
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv(h: u64, v: u64) -> u64 {
+    (h ^ v).wrapping_mul(FNV_PRIME)
+}
+
+/// FNV-1a fingerprint of a work source's offsets array, salted per problem
+/// family so e.g. an SpMV source and a GEMM iteration-space source with
+/// coincidentally equal offsets stay distinguishable in reports (sharing
+/// would still be correct — plans depend only on offsets).
+pub fn fingerprint(salt: u64, src: &impl WorkSource) -> u64 {
+    let mut h = fnv(FNV_OFFSET, salt);
+    h = fnv(h, src.num_tiles() as u64);
+    for &o in src.offsets() {
+        h = fnv(h, o as u64);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balance::OffsetsSource;
+
+    fn key(fp: u64) -> PlanKey {
+        PlanKey {
+            fingerprint: fp,
+            schedule: ScheduleKind::ThreadMapped,
+            workers: 4,
+        }
+    }
+
+    fn tiny_plan() -> Assignment {
+        let offsets = vec![0usize, 2, 5];
+        ScheduleKind::ThreadMapped.assign(&OffsetsSource::new(&offsets), 4)
+    }
+
+    #[test]
+    fn hit_returns_same_arc() {
+        let cache = PlanCache::new(16);
+        let a = cache.get_or_compute(key(1), tiny_plan);
+        let b = cache.get_or_compute(key(1), || panic!("must not recompute"));
+        assert!(Arc::ptr_eq(&a, &b));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn distinct_keys_distinct_entries() {
+        let cache = PlanCache::new(16);
+        cache.get_or_compute(key(1), tiny_plan);
+        cache.get_or_compute(key(2), tiny_plan);
+        let other = PlanKey {
+            fingerprint: 1,
+            schedule: ScheduleKind::MergePath,
+            workers: 4,
+        };
+        cache.get_or_compute(other, tiny_plan);
+        assert_eq!(cache.len(), 3);
+        assert_eq!(cache.stats().misses, 3);
+    }
+
+    #[test]
+    fn capacity_bounds_entries_fifo() {
+        let cache = PlanCache::new(4);
+        for fp in 0..20 {
+            cache.get_or_compute(key(fp), tiny_plan);
+        }
+        assert_eq!(cache.len(), 4);
+        assert_eq!(cache.stats().evictions, 16);
+        // Oldest keys were evicted; the newest survive.
+        cache.get_or_compute(key(19), || panic!("19 should be cached"));
+    }
+
+    #[test]
+    fn clear_empties_cache() {
+        let cache = PlanCache::new(8);
+        cache.get_or_compute(key(1), tiny_plan);
+        cache.clear();
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn fingerprint_separates_offsets_and_salt() {
+        let a = vec![0usize, 2, 5];
+        let b = vec![0usize, 3, 5];
+        let sa = OffsetsSource::new(&a);
+        let sb = OffsetsSource::new(&b);
+        assert_ne!(fingerprint(0, &sa), fingerprint(0, &sb));
+        assert_ne!(fingerprint(0, &sa), fingerprint(1, &sa));
+        assert_eq!(fingerprint(7, &sa), fingerprint(7, &OffsetsSource::new(&a)));
+    }
+}

@@ -1,0 +1,194 @@
+//! Work-stealing host thread pool — the host-level realization of
+//! [`crate::balance::queue::QueuePolicy::Stealing`].
+//!
+//! The queue module *simulates* per-worker deques with steal-from-richest
+//! over virtual device time; this module runs the same policy on real
+//! `std::thread` workers.  Jobs are seeded round-robin into per-worker
+//! deques; a worker pops its own queue from the front (cheap, uncontended
+//! in the common case) and, when empty, steals from the back of the richest
+//! victim — the Tzeng et al. discipline the paper surveys in §3.3.5.
+//!
+//! Built on `std` only (Mutex-guarded deques plus atomic length mirrors, so
+//! victim selection never takes a lock): the offline build has no rayon or
+//! crossbeam, and the batch workloads here are coarse enough (>= tens of
+//! microseconds per job) that a lock per pop is noise.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::thread;
+
+/// Aggregate pop/steal counters for one batch execution.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Jobs taken from the worker's own deque.
+    pub pops: u64,
+    /// Jobs stolen from another worker's deque.
+    pub steals: u64,
+    /// Workers that actually ran (after clamping to the job count).
+    pub threads: usize,
+}
+
+/// Execute `run` over every job on `threads` workers with work stealing.
+///
+/// Results come back in job order.  `threads` is clamped to `[1, jobs]`;
+/// with one worker the jobs run inline on the caller's thread.
+pub fn execute<J, T, F>(threads: usize, jobs: &[J], run: F) -> (Vec<T>, PoolStats)
+where
+    J: Sync,
+    T: Send,
+    F: Fn(&J) -> T + Sync,
+{
+    let threads = threads.max(1).min(jobs.len().max(1));
+    if threads == 1 {
+        let results = jobs.iter().map(&run).collect();
+        let stats = PoolStats {
+            pops: jobs.len() as u64,
+            steals: 0,
+            threads: 1,
+        };
+        return (results, stats);
+    }
+
+    // Round-robin seeding: the static half of the policy.  Length mirrors
+    // are only decremented after a removal, so `lens[w] == 0` proves the
+    // deque is drained — the termination condition below relies on it.
+    let deques: Vec<Mutex<VecDeque<usize>>> = (0..threads)
+        .map(|_| Mutex::new(VecDeque::new()))
+        .collect();
+    let lens: Vec<AtomicUsize> = (0..threads).map(|_| AtomicUsize::new(0)).collect();
+    for i in 0..jobs.len() {
+        let w = i % threads;
+        deques[w].lock().unwrap().push_back(i);
+        lens[w].fetch_add(1, Ordering::Release);
+    }
+    let pops = AtomicU64::new(0);
+    let steals = AtomicU64::new(0);
+
+    let mut slots: Vec<Option<T>> = Vec::with_capacity(jobs.len());
+    slots.resize_with(jobs.len(), || None);
+
+    thread::scope(|scope| {
+        let deques = &deques;
+        let lens = &lens;
+        let run = &run;
+        let pops = &pops;
+        let steals = &steals;
+        let handles: Vec<_> = (0..threads)
+            .map(|w| {
+                scope.spawn(move || {
+                    let mut done: Vec<(usize, T)> = Vec::new();
+                    let mut my_pops = 0u64;
+                    let mut my_steals = 0u64;
+                    loop {
+                        if let Some(i) = pop_own(deques, lens, w) {
+                            my_pops += 1;
+                            done.push((i, run(&jobs[i])));
+                        } else if let Some(i) = steal(deques, lens, w) {
+                            my_steals += 1;
+                            done.push((i, run(&jobs[i])));
+                        } else if lens.iter().all(|l| l.load(Ordering::Acquire) == 0) {
+                            // Every job has been removed from every deque;
+                            // nothing spawns new work, so we are done.
+                            break;
+                        } else {
+                            thread::yield_now();
+                        }
+                    }
+                    pops.fetch_add(my_pops, Ordering::Relaxed);
+                    steals.fetch_add(my_steals, Ordering::Relaxed);
+                    done
+                })
+            })
+            .collect();
+        for handle in handles {
+            for (i, value) in handle.join().expect("pool worker panicked") {
+                slots[i] = Some(value);
+            }
+        }
+    });
+
+    let results = slots
+        .into_iter()
+        .map(|slot| slot.expect("job left unexecuted"))
+        .collect();
+    let stats = PoolStats {
+        pops: pops.load(Ordering::Relaxed),
+        steals: steals.load(Ordering::Relaxed),
+        threads,
+    };
+    (results, stats)
+}
+
+/// Pop the front of the worker's own deque.
+fn pop_own(deques: &[Mutex<VecDeque<usize>>], lens: &[AtomicUsize], w: usize) -> Option<usize> {
+    if lens[w].load(Ordering::Acquire) == 0 {
+        return None;
+    }
+    let mut deque = deques[w].lock().unwrap();
+    let job = deque.pop_front();
+    if job.is_some() {
+        lens[w].fetch_sub(1, Ordering::Release);
+    }
+    job
+}
+
+/// Steal from the back of the richest non-empty victim, rescanning until a
+/// steal lands or every queue reads empty.
+fn steal(deques: &[Mutex<VecDeque<usize>>], lens: &[AtomicUsize], w: usize) -> Option<usize> {
+    loop {
+        let victim = (0..deques.len())
+            .filter(|&v| v != w)
+            .map(|v| (v, lens[v].load(Ordering::Acquire)))
+            .filter(|&(_, len)| len > 0)
+            .max_by_key(|&(_, len)| len);
+        let (v, _) = victim?;
+        let mut deque = deques[v].lock().unwrap();
+        if let Some(job) = deque.pop_back() {
+            lens[v].fetch_sub(1, Ordering::Release);
+            return Some(job);
+        }
+        // Raced with the owner draining the deque; rescan for a new victim.
+        drop(deque);
+        thread::yield_now();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_job_order() {
+        let jobs: Vec<u64> = (0..257).collect();
+        let (got, stats) = execute(4, &jobs, |&j| j * 2 + 1);
+        let want: Vec<u64> = jobs.iter().map(|&j| j * 2 + 1).collect();
+        assert_eq!(got, want);
+        assert_eq!(stats.pops + stats.steals, jobs.len() as u64);
+        assert_eq!(stats.threads, 4);
+    }
+
+    #[test]
+    fn zero_jobs_and_zero_threads() {
+        let jobs: Vec<u64> = Vec::new();
+        let (got, stats) = execute(0, &jobs, |&j| j);
+        assert!(got.is_empty());
+        assert_eq!(stats.pops + stats.steals, 0);
+    }
+
+    #[test]
+    fn single_thread_runs_inline() {
+        let jobs = vec![1u64, 2, 3];
+        let (got, stats) = execute(1, &jobs, |&j| j + 10);
+        assert_eq!(got, vec![11, 12, 13]);
+        assert_eq!((stats.pops, stats.steals), (3, 0));
+    }
+
+    #[test]
+    fn threads_clamped_to_jobs() {
+        let jobs = vec![5u64, 6];
+        let (got, stats) = execute(64, &jobs, |&j| j);
+        assert_eq!(got, vec![5, 6]);
+        assert!(stats.threads <= 2);
+    }
+}

@@ -1,0 +1,97 @@
+//! Concurrency smoke tests: the work-stealing pool and the serve engine
+//! driven with >= 4 threads under plain `cargo test`, checking that
+//! parallel execution is a pure throughput optimization — results and
+//! checksums are bit-identical to sequential execution.
+
+use gpulb::serve::{batch, pool, Problem, ServeConfig, ServeEngine};
+use gpulb::sparse::gen;
+use std::sync::Arc;
+
+#[test]
+fn pool_matches_sequential_map_at_4_threads() {
+    let jobs: Vec<u64> = (0..500).collect();
+    let (got, stats) = pool::execute(4, &jobs, |&j| j.wrapping_mul(j) ^ 0xABCD);
+    let want: Vec<u64> = jobs.iter().map(|&j| j.wrapping_mul(j) ^ 0xABCD).collect();
+    assert_eq!(got, want);
+    assert_eq!(stats.pops + stats.steals, jobs.len() as u64);
+    assert_eq!(stats.threads, 4);
+}
+
+#[test]
+fn pool_steals_rebalance_skewed_work() {
+    // Round-robin seeding puts every heavy job (multiples of 4) on worker 0;
+    // the other workers drain their light queues and must steal.
+    let jobs: Vec<usize> = (0..64).collect();
+    let (got, stats) = pool::execute(4, &jobs, |&i| {
+        let iters: u64 = if i % 4 == 0 { 2_000_000 } else { 500 };
+        (0..iters).fold(0u64, |acc, x| acc.wrapping_add(x ^ i as u64))
+    });
+    assert_eq!(got.len(), 64);
+    assert_eq!(stats.pops + stats.steals, 64);
+    assert!(stats.steals > 0, "expected steals, got {stats:?}");
+}
+
+#[test]
+fn pool_handles_more_threads_than_jobs() {
+    let jobs: Vec<u32> = (0..3).collect();
+    let (got, _) = pool::execute(8, &jobs, |&j| j + 1);
+    assert_eq!(got, vec![1, 2, 3]);
+}
+
+#[test]
+fn engine_checksums_invariant_across_thread_counts() {
+    let mix = batch::corpus_mix(0);
+    assert!(mix.len() >= 10, "smoke mix too small: {}", mix.len());
+    let reports: Vec<_> = [1usize, 2, 4, 8]
+        .iter()
+        .map(|&threads| {
+            let engine = ServeEngine::new(ServeConfig {
+                threads,
+                ..ServeConfig::default()
+            });
+            engine.execute_batch(&mix)
+        })
+        .collect();
+    for r in &reports[1..] {
+        assert_eq!(
+            r.checksums, reports[0].checksums,
+            "thread count changed numerics"
+        );
+    }
+}
+
+#[test]
+fn engine_reuses_plans_across_batches() {
+    let mix = batch::corpus_mix(0);
+    let engine = ServeEngine::new(ServeConfig {
+        threads: 4,
+        ..ServeConfig::default()
+    });
+    let first = engine.execute_batch(&mix);
+    assert!(first.cache.misses > 0);
+    let misses_after_first = first.cache.misses;
+    let second = engine.execute_batch(&mix);
+    assert_eq!(
+        second.cache.misses, misses_after_first,
+        "second batch should plan nothing"
+    );
+    assert!(second.cache.hits >= mix.len() as u64);
+    assert_eq!(first.checksums, second.checksums);
+}
+
+#[test]
+fn engine_concurrent_cold_cache_is_consistent() {
+    // Many threads racing the same cold cache: duplicates are benign and
+    // the cached plans still serve identical results afterwards.
+    let problems: Vec<Problem> = (0..24)
+        .map(|i| Problem::spmv(Arc::new(gen::power_law(200, 200, 100, 1.4, i))))
+        .collect();
+    let engine = ServeEngine::new(ServeConfig {
+        threads: 8,
+        ..ServeConfig::default()
+    });
+    let cold = engine.execute_batch(&problems);
+    let warm = engine.execute_batch(&problems);
+    assert_eq!(cold.checksums, warm.checksums);
+    assert!(warm.cache.hits >= problems.len() as u64);
+}

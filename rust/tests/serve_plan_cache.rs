@@ -1,0 +1,112 @@
+//! Property tests for the serve plan cache (seeded randomized cases, like
+//! `prop_schedules.rs`): a cached [`Assignment`] must be bit-identical to a
+//! freshly computed one for **every** schedule, work source, and worker
+//! count — the invariant that makes plan caching a pure optimization.
+
+use std::sync::Arc;
+
+use gpulb::balance::{OffsetsSource, ScheduleKind};
+use gpulb::rng::Rng;
+use gpulb::serve::plan_cache::{fingerprint, PlanCache, PlanKey};
+use gpulb::sparse::{gen, Csr};
+
+const SCHEDULES: [ScheduleKind; 7] = [
+    ScheduleKind::ThreadMapped,
+    ScheduleKind::GroupMapped(32),
+    ScheduleKind::GroupMapped(128),
+    ScheduleKind::MergePath,
+    ScheduleKind::NonzeroSplit,
+    ScheduleKind::Binning,
+    ScheduleKind::Lrb,
+];
+
+fn random_matrix(rng: &mut Rng) -> Csr {
+    let seed = rng.next_u64();
+    match rng.below(4) {
+        0 => gen::uniform(rng.range(1, 150), rng.range(1, 150), rng.range(1, 8), seed),
+        1 => {
+            let n = rng.range(2, 200);
+            gen::power_law(n, n, (n / 2).max(1), 1.2 + rng.f64(), seed)
+        }
+        2 => gen::banded(rng.range(1, 200), rng.range(1, 6), seed),
+        _ => gen::rmat(rng.range(4, 8) as u32, rng.range(1, 6), seed),
+    }
+}
+
+#[test]
+fn prop_cached_plan_bit_identical_to_fresh() {
+    let mut rng = Rng::new(0x5EED_CAC8);
+    let cache = PlanCache::new(4096);
+    for case in 0..10 {
+        let a = random_matrix(&mut rng);
+        let fp = fingerprint(0, &a);
+        for kind in SCHEDULES {
+            for workers in [1usize, 7, 64, 256] {
+                let key = PlanKey {
+                    fingerprint: fp,
+                    schedule: kind,
+                    workers,
+                };
+                let cached = cache.get_or_compute(key, || kind.assign(&a, workers));
+                let fresh = kind.assign(&a, workers);
+                assert_eq!(
+                    *cached, fresh,
+                    "case {case}: {kind:?} x{workers} cached plan diverged"
+                );
+                cached.validate(&a).unwrap();
+                // Refetching must hit and return the same plan.
+                let again = cache.get_or_compute(key, || panic!("unexpected recompute"));
+                assert!(Arc::ptr_eq(&cached, &again), "case {case}: cache missed");
+            }
+        }
+    }
+    let stats = cache.stats();
+    // Every key is refetched once after insertion (distinct sources can
+    // legitimately share offsets, hence ">=" rather than "==").
+    assert!(stats.hits >= stats.misses, "stats: {stats:?}");
+    assert_eq!(stats.evictions, 0);
+}
+
+#[test]
+fn prop_fingerprint_keys_offsets_exactly() {
+    // Same offsets => same fingerprint (plans shareable); any tweak to one
+    // tile's atom count => different fingerprint.
+    let mut rng = Rng::new(0xF16E_4011);
+    for _ in 0..20 {
+        let tiles = rng.range(1, 40);
+        let mut lens: Vec<usize> = (0..tiles).map(|_| rng.below(9)).collect();
+        let offsets = gpulb::balance::prefix::exclusive(&lens);
+        let fp = fingerprint(3, &OffsetsSource::new(&offsets));
+        assert_eq!(fp, fingerprint(3, &OffsetsSource::new(&offsets)));
+
+        let t = rng.below(tiles);
+        lens[t] += 1;
+        let tweaked = gpulb::balance::prefix::exclusive(&lens);
+        assert_ne!(fp, fingerprint(3, &OffsetsSource::new(&tweaked)));
+    }
+}
+
+#[test]
+fn workers_and_schedule_are_part_of_the_key() {
+    let a = gen::power_law(120, 120, 60, 1.5, 9);
+    let cache = PlanCache::new(64);
+    let fp = fingerprint(0, &a);
+    let plan_64 = cache.get_or_compute(
+        PlanKey {
+            fingerprint: fp,
+            schedule: ScheduleKind::MergePath,
+            workers: 64,
+        },
+        || ScheduleKind::MergePath.assign(&a, 64),
+    );
+    let plan_128 = cache.get_or_compute(
+        PlanKey {
+            fingerprint: fp,
+            schedule: ScheduleKind::MergePath,
+            workers: 128,
+        },
+        || ScheduleKind::MergePath.assign(&a, 128),
+    );
+    assert_eq!(cache.stats().misses, 2, "worker count must key separately");
+    assert_ne!(plan_64.workers.len(), plan_128.workers.len());
+}

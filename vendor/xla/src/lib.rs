@@ -1,0 +1,230 @@
+//! Offline API stub of the `xla-rs` PJRT bindings.
+//!
+//! The workspace's `pjrt` feature compiles the real runtime coordination
+//! code (`gpulb::runtime::pjrt`) against this crate so the PJRT path keeps
+//! type-checking in environments without the XLA extension library.  Every
+//! entry point that would touch PJRT returns [`Error::Unavailable`];
+//! [`PjRtClient::cpu`] fails first, so a stub-backed `Runtime::open` errors
+//! gracefully and callers fall back exactly like the non-`pjrt` build.
+//!
+//! To execute AOT artifacts for real, replace the contents of `vendor/xla`
+//! with a checkout of `xla-rs` (the crate this API mirrors) and rebuild
+//! with `--features pjrt`.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: the operation needs the real XLA bindings.
+#[derive(Debug, Clone)]
+pub enum Error {
+    Unavailable(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "xla stub: {what} requires the real xla-rs bindings (see vendor/xla)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error::Unavailable(what.to_string()))
+}
+
+/// Element types representable on the host side of the bindings.
+pub trait NativeType: Copy {
+    const PRIMITIVE_TYPE: PrimitiveType;
+}
+
+macro_rules! native {
+    ($ty:ty, $prim:ident) => {
+        impl NativeType for $ty {
+            const PRIMITIVE_TYPE: PrimitiveType = PrimitiveType::$prim;
+        }
+    };
+}
+
+native!(f32, F32);
+native!(f64, F64);
+native!(i32, S32);
+native!(i64, S64);
+native!(u8, U8);
+native!(u32, U32);
+
+/// XLA primitive element types (subset).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+/// Array shape: dimensions plus element type.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: PrimitiveType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn primitive_type(&self) -> PrimitiveType {
+        self.ty
+    }
+}
+
+/// Shape of a value: an array or a tuple of shapes.
+#[derive(Debug, Clone)]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
+
+/// Host-side literal (stub: carries no data).
+pub struct Literal {
+    _stub: (),
+}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(_value: T) -> Literal {
+        Literal { _stub: () }
+    }
+
+    pub fn vec1<T: NativeType>(_values: &[T]) -> Literal {
+        Literal { _stub: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        unavailable("Literal::shape")
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        unavailable("Literal::array_shape")
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        unavailable("Literal::to_tuple1")
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto {
+    _stub: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation built from an HLO module (stub).
+pub struct XlaComputation {
+    _stub: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _stub: () }
+    }
+}
+
+/// PJRT client (stub: construction always fails).
+pub struct PjRtClient {
+    _stub: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Device-resident buffer (stub).
+pub struct PjRtBuffer {
+    _stub: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable {
+    _stub: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+
+    pub fn execute_b<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_gracefully() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{err}").contains("xla stub"));
+    }
+
+    #[test]
+    fn literal_constructors_exist_but_io_fails() {
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.shape().is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        assert!(Literal::scalar(1.0f64).reshape(&[1]).is_err());
+    }
+}
