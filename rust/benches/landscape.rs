@@ -1,0 +1,25 @@
+//! Deterministic landscape bench (`cargo bench --bench landscape [scale]`):
+//! the adaptive tuner swept over the sparse corpus + downscaled GEMM
+//! geometry grid with proxy cost feedback, written to
+//! `BENCH_landscape.json` — the artifact the CI perf-regression gate diffs
+//! against the committed `BENCH_baseline.json`.
+//!
+//! Proxy metrics (plan shape, not wall-clock) make the output bit-stable
+//! on shared runners; see `serve::landscape`.
+
+use gpulb::serve::landscape;
+
+fn main() {
+    let scale: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+    println!("# landscape — scale {scale}, {} rounds", landscape::DEFAULT_ROUNDS);
+    landscape::run_bench(
+        scale,
+        landscape::DEFAULT_ROUNDS,
+        landscape::DEFAULT_PLAN_WORKERS,
+        "BENCH_landscape.json",
+    )
+    .unwrap();
+}

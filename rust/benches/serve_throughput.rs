@@ -18,5 +18,12 @@ fn main() {
         "# serve throughput — {} problems/batch (scale {scale}), {batches} batches per point",
         mix.len()
     );
-    serve::run_bench(&mix, &[1, 2, 4, 8], batches, "BENCH_serve.json").unwrap();
+    serve::run_bench(
+        &mix,
+        &[1, 2, 4, 8],
+        batches,
+        serve::ServeConfig::default(),
+        "BENCH_serve.json",
+    )
+    .unwrap();
 }

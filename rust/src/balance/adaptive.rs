@@ -1,0 +1,364 @@
+//! Measured-feedback schedule selection: the data structures behind the
+//! online tuner ([`crate::serve::tuner`]).
+//!
+//! The §4.5.2 heuristic and the roofline model ([`super::roofline`]) pick a
+//! schedule from *shape priors*; the related systems we track (Atos,
+//! arXiv:2112.00132; the in-situ assessment work, arXiv:2104.11385) show
+//! the next win comes from choosing with *measured* runtime feedback
+//! instead.  This module provides:
+//!
+//! * [`PerfHistory`] — a concurrent, lock-striped store of per-
+//!   (work-source fingerprint, schedule, worker count) cost samples,
+//!   folded into an EWMA so drifting behavior (cache effects, host load)
+//!   is tracked without unbounded memory;
+//! * [`CANDIDATES`] — the candidate set an adaptive selector explores;
+//! * [`proxy_cost`] — a deterministic makespan proxy for an
+//!   [`Assignment`], the wall-clock substitute that keeps CI perf gates
+//!   and convergence tests stable on shared runners.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use super::{Assignment, ScheduleKind};
+
+/// The schedules an adaptive selector explores.  Binning/LRB are excluded:
+/// their reordering changes plan shape radically per matrix and the four
+/// below already span the static/exact × flat/hierarchical design space
+/// the dissertation evaluates head-to-head.
+pub const CANDIDATES: [ScheduleKind; 4] = [
+    ScheduleKind::ThreadMapped,
+    ScheduleKind::GroupMapped(32),
+    ScheduleKind::MergePath,
+    ScheduleKind::NonzeroSplit,
+];
+
+/// Everything a measured cost depends on (mirrors
+/// [`crate::serve::plan_cache::PlanKey`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PerfKey {
+    pub fingerprint: u64,
+    pub schedule: ScheduleKind,
+    pub workers: usize,
+}
+
+/// EWMA cost estimate for one key.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostEstimate {
+    /// Exponentially-weighted moving average of recorded costs.
+    pub value: f64,
+    /// How many samples have been folded in (saturating).
+    pub samples: u32,
+}
+
+/// Concurrent performance history: lock-striped `HashMap`s (the same
+/// read-mostly discipline as [`crate::serve::plan_cache::PlanCache`],
+/// sharded so recording from many workers doesn't serialize on one lock).
+pub struct PerfHistory {
+    stripes: Vec<Mutex<HashMap<PerfKey, CostEstimate>>>,
+    /// EWMA smoothing factor in (0, 1]; 1 = keep only the last sample.
+    alpha: f64,
+}
+
+impl PerfHistory {
+    /// `stripes` is rounded up to at least 1; `alpha` clamped to (0, 1].
+    pub fn new(stripes: usize, alpha: f64) -> Self {
+        PerfHistory {
+            stripes: (0..stripes.max(1))
+                .map(|_| Mutex::new(HashMap::new()))
+                .collect(),
+            alpha: alpha.clamp(1e-6, 1.0),
+        }
+    }
+
+    fn stripe(&self, key: &PerfKey) -> &Mutex<HashMap<PerfKey, CostEstimate>> {
+        // FNV-style mix of the key fields; stripe count is small so any
+        // reasonable spread works.
+        let mut h = key.fingerprint ^ 0x9e37_79b9_7f4a_7c15;
+        h = h.wrapping_mul(0x100_0000_01b3) ^ key.workers as u64;
+        h = h.wrapping_mul(0x100_0000_01b3) ^ schedule_tag(key.schedule);
+        &self.stripes[(h % self.stripes.len() as u64) as usize]
+    }
+
+    /// Fold one cost sample into the key's EWMA.
+    pub fn record(&self, key: PerfKey, cost: f64) {
+        if !cost.is_finite() {
+            return;
+        }
+        let mut map = self.stripe(&key).lock().unwrap();
+        let e = map.entry(key).or_insert(CostEstimate {
+            value: cost,
+            samples: 0,
+        });
+        if e.samples > 0 {
+            e.value = self.alpha * cost + (1.0 - self.alpha) * e.value;
+        } else {
+            e.value = cost;
+        }
+        e.samples = e.samples.saturating_add(1);
+    }
+
+    /// Current estimate for a key.
+    pub fn get(&self, key: &PerfKey) -> Option<CostEstimate> {
+        self.stripe(key).lock().unwrap().get(key).copied()
+    }
+
+    /// Samples recorded for a key (0 when never seen).
+    pub fn samples(&self, key: &PerfKey) -> u32 {
+        self.get(key).map(|e| e.samples).unwrap_or(0)
+    }
+
+    /// One estimate per [`CANDIDATES`] entry for a (fingerprint, workers)
+    /// pair — the selector's working set, fetched in a single pass.
+    pub fn snapshot(&self, fingerprint: u64, workers: usize) -> CandidateSnapshot {
+        CANDIDATES.map(|kind| {
+            let key = PerfKey {
+                fingerprint,
+                schedule: kind,
+                workers,
+            };
+            (kind, self.get(&key))
+        })
+    }
+
+    /// The candidate with the lowest EWMA cost among those with at least
+    /// `min_samples` samples (ties keep the earlier [`CANDIDATES`] entry).
+    pub fn best(&self, fingerprint: u64, workers: usize, min_samples: u32) -> Option<ScheduleKind> {
+        best_of(&self.snapshot(fingerprint, workers), min_samples)
+    }
+
+    /// Total keys tracked across all stripes.
+    pub fn len(&self) -> usize {
+        self.stripes.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One [`CostEstimate`] (or none) per [`CANDIDATES`] entry, in order.
+pub type CandidateSnapshot = [(ScheduleKind, Option<CostEstimate>); 4];
+
+/// EWMA argmin over a snapshot, considering only candidates with at least
+/// `min_samples` samples (ties keep the earlier entry).
+pub fn best_of(
+    estimates: &[(ScheduleKind, Option<CostEstimate>)],
+    min_samples: u32,
+) -> Option<ScheduleKind> {
+    let mut best: Option<(ScheduleKind, f64)> = None;
+    for &(kind, e) in estimates {
+        if let Some(e) = e {
+            if e.samples >= min_samples.max(1) && best.map(|(_, v)| e.value < v).unwrap_or(true) {
+                best = Some((kind, e.value));
+            }
+        }
+    }
+    best.map(|(k, _)| k)
+}
+
+/// The candidate with the fewest samples, if any is still below
+/// `min_samples` (ties keep the earlier entry) — the forced-exploration
+/// driver of the tuner's warmup phase.
+pub fn least_sampled_of(
+    estimates: &[(ScheduleKind, Option<CostEstimate>)],
+    min_samples: u32,
+) -> Option<ScheduleKind> {
+    let mut least: Option<(ScheduleKind, u32)> = None;
+    for &(kind, e) in estimates {
+        let n = e.map(|e| e.samples).unwrap_or(0);
+        if n < min_samples && least.map(|(_, m)| n < m).unwrap_or(true) {
+            least = Some((kind, n));
+        }
+    }
+    least.map(|(k, _)| k)
+}
+
+fn schedule_tag(kind: ScheduleKind) -> u64 {
+    match kind {
+        ScheduleKind::ThreadMapped => 1,
+        ScheduleKind::GroupMapped(g) => 0x100 | g as u64,
+        ScheduleKind::MergePath => 2,
+        ScheduleKind::NonzeroSplit => 3,
+        ScheduleKind::Binning => 4,
+        ScheduleKind::Lrb => 5,
+    }
+}
+
+/// Per-segment bookkeeping charge in the proxy model (row start + fixup).
+pub const SEG_OVERHEAD: u64 = 2;
+
+/// Deterministic makespan proxy for an assignment, in abstract step units.
+///
+/// Each worker pays [`SEG_OVERHEAD`] per segment plus `ceil(len / g)` steps
+/// per segment (a group of `g` threads consumes `g` atoms per step — the
+/// lane parallelism group-mapped buys, and the padding it pays on short
+/// tiles); the makespan is the slowest worker.  On top rides a per-schedule
+/// setup charge mirroring each schedule's search cost: merge-path's 2-D
+/// diagonal search, nonzero-split's 1-D lower bound, group-mapped's
+/// shared-memory prefix sum.
+///
+/// This is the wall-clock substitute used wherever determinism matters —
+/// tuner convergence tests and the `landscape` CI perf gate — so its value
+/// must depend only on (offsets, schedule, workers), never on the host.
+pub fn proxy_cost(kind: ScheduleKind, asg: &Assignment, tiles: usize, atoms: usize) -> f64 {
+    let mut makespan: u64 = 0;
+    for w in &asg.workers {
+        let g = w.granularity.threads().max(1) as u64;
+        let mut steps: u64 = 0;
+        for s in &w.segments {
+            steps += SEG_OVERHEAD + (s.len() as u64).div_ceil(g);
+        }
+        makespan = makespan.max(steps);
+    }
+    let setup = match kind {
+        ScheduleKind::ThreadMapped => 0.0,
+        ScheduleKind::GroupMapped(_) => 4.0,
+        ScheduleKind::MergePath => 2.0 * ((tiles + atoms) as f64 + 1.0).log2(),
+        ScheduleKind::NonzeroSplit => (tiles as f64 + 1.0).log2(),
+        ScheduleKind::Binning | ScheduleKind::Lrb => 8.0 + (tiles as f64 + 1.0).log2(),
+    };
+    setup + makespan as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balance::{OffsetsSource, WorkSource};
+
+    fn key(fp: u64, kind: ScheduleKind) -> PerfKey {
+        PerfKey {
+            fingerprint: fp,
+            schedule: kind,
+            workers: 8,
+        }
+    }
+
+    #[test]
+    fn record_and_ewma_fold() {
+        let h = PerfHistory::new(4, 0.5);
+        let k = key(1, ScheduleKind::MergePath);
+        h.record(k, 10.0);
+        assert_eq!(h.get(&k).unwrap().value, 10.0);
+        h.record(k, 20.0);
+        let e = h.get(&k).unwrap();
+        assert!((e.value - 15.0).abs() < 1e-12, "{e:?}");
+        assert_eq!(e.samples, 2);
+    }
+
+    #[test]
+    fn non_finite_samples_ignored() {
+        let h = PerfHistory::new(2, 0.3);
+        let k = key(2, ScheduleKind::ThreadMapped);
+        h.record(k, f64::NAN);
+        h.record(k, f64::INFINITY);
+        assert_eq!(h.samples(&k), 0);
+    }
+
+    #[test]
+    fn best_requires_min_samples_and_picks_argmin() {
+        let h = PerfHistory::new(4, 1.0);
+        for &(kind, cost) in &[
+            (ScheduleKind::ThreadMapped, 30.0),
+            (ScheduleKind::MergePath, 10.0),
+            (ScheduleKind::NonzeroSplit, 20.0),
+        ] {
+            h.record(key(7, kind), cost);
+            h.record(key(7, kind), cost);
+        }
+        assert_eq!(h.best(7, 8, 2), Some(ScheduleKind::MergePath));
+        // min_samples above what we recorded: nothing qualifies.
+        assert_eq!(h.best(7, 8, 3), None);
+        // Unknown fingerprint: no estimate at all.
+        assert_eq!(h.best(8, 8, 1), None);
+    }
+
+    #[test]
+    fn least_sampled_drives_warmup_coverage() {
+        let h = PerfHistory::new(4, 1.0);
+        // Nothing sampled: first candidate.
+        assert_eq!(
+            least_sampled_of(&h.snapshot(3, 8), 2),
+            Some(ScheduleKind::ThreadMapped)
+        );
+        h.record(key(3, ScheduleKind::ThreadMapped), 5.0);
+        h.record(key(3, ScheduleKind::ThreadMapped), 5.0);
+        assert_eq!(
+            least_sampled_of(&h.snapshot(3, 8), 2),
+            Some(ScheduleKind::GroupMapped(32))
+        );
+        for &kind in &CANDIDATES {
+            h.record(key(3, kind), 5.0);
+            h.record(key(3, kind), 5.0);
+        }
+        assert_eq!(least_sampled_of(&h.snapshot(3, 8), 2), None);
+    }
+
+    #[test]
+    fn striping_keeps_keys_separate() {
+        let h = PerfHistory::new(7, 1.0);
+        for fp in 0..100u64 {
+            h.record(key(fp, ScheduleKind::MergePath), fp as f64);
+        }
+        assert_eq!(h.len(), 100);
+        for fp in 0..100u64 {
+            let e = h.get(&key(fp, ScheduleKind::MergePath)).unwrap();
+            assert_eq!(e.value, fp as f64);
+        }
+    }
+
+    #[test]
+    fn proxy_cost_prefers_thread_mapped_on_uniform_tiny_tiles() {
+        // 256 tiles x 1 atom, 64 workers: no setup + short serial chains
+        // beat every searched schedule.
+        let offsets: Vec<usize> = (0..=256).collect();
+        let src = OffsetsSource::new(&offsets);
+        let costs: Vec<(ScheduleKind, f64)> = CANDIDATES
+            .iter()
+            .map(|&k| {
+                let asg = k.assign(&src, 64);
+                (k, proxy_cost(k, &asg, src.num_tiles(), src.num_atoms()))
+            })
+            .collect();
+        let best = costs
+            .iter()
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .unwrap()
+            .0;
+        assert_eq!(best, ScheduleKind::ThreadMapped, "{costs:?}");
+    }
+
+    #[test]
+    fn proxy_cost_prefers_merge_path_on_mixed_skew() {
+        // A few huge tiles next to thousands of tiny ones: merge-path's
+        // row+atom split is the only schedule balancing both regions.
+        let mut lens = vec![4096usize; 4];
+        lens.resize(4 + 4096, 1);
+        let offsets = crate::balance::prefix::exclusive(&lens);
+        let src = OffsetsSource::new(&offsets);
+        let costs: Vec<(ScheduleKind, f64)> = CANDIDATES
+            .iter()
+            .map(|&k| {
+                let asg = k.assign(&src, 64);
+                (k, proxy_cost(k, &asg, src.num_tiles(), src.num_atoms()))
+            })
+            .collect();
+        let best = costs
+            .iter()
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .unwrap()
+            .0;
+        assert_eq!(best, ScheduleKind::MergePath, "{costs:?}");
+    }
+
+    #[test]
+    fn proxy_cost_is_deterministic() {
+        let offsets = vec![0usize, 5, 5, 80, 81];
+        let src = OffsetsSource::new(&offsets);
+        for &k in &CANDIDATES {
+            let a = proxy_cost(k, &k.assign(&src, 16), src.num_tiles(), src.num_atoms());
+            let b = proxy_cost(k, &k.assign(&src, 16), src.num_tiles(), src.num_atoms());
+            assert_eq!(a, b);
+            assert!(a > 0.0);
+        }
+    }
+}

@@ -16,6 +16,7 @@
 //! produce bit-identical numerics to the sequential reference, so schedules
 //! are interchangeable — the paper's core programmability claim.
 
+pub mod adaptive;
 pub mod binning;
 pub mod group_mapped;
 pub mod heuristic;

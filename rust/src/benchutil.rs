@@ -76,7 +76,7 @@ impl Bencher {
             }
             sample_ns.push(t0.elapsed().as_nanos() as f64 / iters as f64);
         }
-        sample_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sample_ns.sort_by(|a, b| a.total_cmp(b));
         let median = sample_ns[sample_ns.len() / 2];
         let mean = sample_ns.iter().sum::<f64>() / sample_ns.len() as f64;
         let min = sample_ns[0];
@@ -181,6 +181,143 @@ pub fn write_throughput_json(
     Ok(())
 }
 
+/// One per-family aggregate for the landscape bench artifact
+/// (`BENCH_landscape.json` and the committed `BENCH_baseline.json`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FamilyPoint {
+    pub family: String,
+    pub problems: usize,
+    /// Geomean throughput in deterministic proxy units (atoms/proxy-step).
+    pub geomean_throughput: f64,
+}
+
+/// Render family points as a JSON document (hand-rolled like
+/// [`throughput_json`]; [`crate::jsonlite`] parses it back in
+/// [`diff_family_json`] and the tests).
+pub fn family_json(bench: &str, scale: usize, points: &[FamilyPoint]) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"bench\": \"{bench}\",\n"));
+    out.push_str("  \"unit\": \"atoms/proxy-step\",\n");
+    out.push_str(&format!("  \"scale\": {scale},\n"));
+    out.push_str("  \"families\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        let sep = if i + 1 == points.len() { "" } else { "," };
+        out.push_str(&format!(
+            "    {{\"family\": \"{}\", \"problems\": {}, \"geomean_throughput\": {:.6}}}{}\n",
+            p.family, p.problems, p.geomean_throughput, sep
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write [`family_json`] to `path`.
+pub fn write_family_json(
+    path: impl AsRef<std::path::Path>,
+    bench: &str,
+    scale: usize,
+    points: &[FamilyPoint],
+) -> crate::Result<()> {
+    std::fs::write(path, family_json(bench, scale, points))?;
+    Ok(())
+}
+
+/// One row of a baseline-vs-current comparison.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FamilyDiff {
+    pub family: String,
+    pub base: f64,
+    pub current: f64,
+    /// `current / base` — < 1 means the family got slower.
+    pub ratio: f64,
+}
+
+impl FamilyDiff {
+    /// A regression under `tolerance` (e.g. 0.2 = fail below 80% of base).
+    pub fn is_regression(&self, tolerance: f64) -> bool {
+        self.ratio < 1.0 - tolerance
+    }
+}
+
+struct FamilyDoc {
+    scale: u64,
+    /// (family, problems, geomean_throughput) in document order.
+    families: Vec<(String, u64, f64)>,
+}
+
+fn parse_families(text: &str) -> crate::Result<FamilyDoc> {
+    let doc = crate::jsonlite::parse(text)?;
+    let scale = doc
+        .get("scale")
+        .and_then(|v| v.as_u64())
+        .ok_or_else(|| anyhow::anyhow!("missing \"scale\" field"))?;
+    let entries = doc
+        .get("families")
+        .and_then(|f| f.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("missing \"families\" array"))?;
+    let mut families = Vec::with_capacity(entries.len());
+    for f in entries {
+        let name = f
+            .get("family")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("family entry missing \"family\""))?;
+        let problems = f
+            .get("problems")
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| anyhow::anyhow!("family {name} missing \"problems\""))?;
+        let value = f
+            .get("geomean_throughput")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("family {name} missing \"geomean_throughput\""))?;
+        families.push((name.to_string(), problems, value));
+    }
+    Ok(FamilyDoc { scale, families })
+}
+
+/// Compare two [`family_json`] documents: one [`FamilyDiff`] per baseline
+/// family, in baseline order.  Guards against apples-to-oranges
+/// comparisons: mismatched `scale` fields or per-family `problems` counts
+/// are errors, as is a family missing from `current` (the bench stopped
+/// covering it — that hides regressions).  Families only in `current` are
+/// ignored (new coverage is free).
+pub fn diff_family_json(base_text: &str, current_text: &str) -> crate::Result<Vec<FamilyDiff>> {
+    let base = parse_families(base_text)?;
+    let current = parse_families(current_text)?;
+    anyhow::ensure!(
+        base.scale == current.scale,
+        "scale mismatch: baseline was generated at scale {}, current at scale {}",
+        base.scale,
+        current.scale
+    );
+    let mut out = Vec::with_capacity(base.families.len());
+    for (family, base_n, base_v) in base.families {
+        let (cur_n, cur_v) = current
+            .families
+            .iter()
+            .find(|(f, _, _)| *f == family)
+            .map(|&(_, n, v)| (n, v))
+            .ok_or_else(|| anyhow::anyhow!("family \"{family}\" missing from current results"))?;
+        anyhow::ensure!(
+            base_n == cur_n,
+            "family \"{family}\" problem count changed ({base_n} vs {cur_n}): \
+             not comparable — refresh the baseline"
+        );
+        let ratio = if base_v > 0.0 {
+            cur_v / base_v
+        } else {
+            f64::INFINITY
+        };
+        out.push(FamilyDiff {
+            family,
+            base: base_v,
+            current: cur_v,
+            ratio,
+        });
+    }
+    Ok(out)
+}
+
 fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.0} ns")
@@ -239,6 +376,84 @@ mod tests {
         let text = throughput_json("serve", &[]);
         let v = crate::jsonlite::parse(&text).unwrap();
         assert!(v.get("results").unwrap().as_arr().unwrap().is_empty());
+    }
+
+    fn family_points() -> Vec<FamilyPoint> {
+        vec![
+            FamilyPoint {
+                family: "uniform".to_string(),
+                problems: 6,
+                geomean_throughput: 50.0,
+            },
+            FamilyPoint {
+                family: "power-law".to_string(),
+                problems: 6,
+                geomean_throughput: 40.0,
+            },
+        ]
+    }
+
+    #[test]
+    fn family_json_round_trips_through_jsonlite() {
+        let text = family_json("landscape", 1, &family_points());
+        let v = crate::jsonlite::parse(&text).unwrap();
+        assert_eq!(v.get("bench").unwrap().as_str(), Some("landscape"));
+        assert_eq!(v.get("scale").unwrap().as_u64(), Some(1));
+        let families = v.get("families").unwrap().as_arr().unwrap();
+        assert_eq!(families.len(), 2);
+        assert_eq!(
+            families[1].get("family").unwrap().as_str(),
+            Some("power-law")
+        );
+        let t = families[1]
+            .get("geomean_throughput")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!((t - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn diff_detects_injected_regression() {
+        let base = family_json("landscape", 1, &family_points());
+        let mut slower = family_points();
+        slower[1].geomean_throughput = 28.0; // 30% regression
+        let current = family_json("landscape", 1, &slower);
+        let diffs = diff_family_json(&base, &current).unwrap();
+        assert_eq!(diffs.len(), 2);
+        assert!(!diffs[0].is_regression(0.2), "{:?}", diffs[0]);
+        assert!(diffs[1].is_regression(0.2), "{:?}", diffs[1]);
+        assert!((diffs[1].ratio - 0.7).abs() < 1e-9);
+        // Tolerance wide enough: not a regression.
+        assert!(!diffs[1].is_regression(0.35));
+    }
+
+    #[test]
+    fn diff_passes_on_identical_results() {
+        let base = family_json("landscape", 1, &family_points());
+        let diffs = diff_family_json(&base, &base).unwrap();
+        assert!(diffs.iter().all(|d| !d.is_regression(0.0)));
+        assert!(diffs.iter().all(|d| (d.ratio - 1.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn diff_fails_on_missing_family() {
+        let base = family_json("landscape", 1, &family_points());
+        let current = family_json("landscape", 1, &family_points()[..1]);
+        assert!(diff_family_json(&base, &current).is_err());
+    }
+
+    #[test]
+    fn diff_fails_on_scale_or_problem_count_mismatch() {
+        let base = family_json("landscape", 1, &family_points());
+        // Baseline accidentally regenerated at a different scale.
+        let other_scale = family_json("landscape", 0, &family_points());
+        assert!(diff_family_json(&base, &other_scale).is_err());
+        // Same scale but a family's membership changed.
+        let mut fewer = family_points();
+        fewer[0].problems = 3;
+        let current = family_json("landscape", 1, &fewer);
+        assert!(diff_family_json(&base, &current).is_err());
     }
 
     #[test]

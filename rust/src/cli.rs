@@ -46,6 +46,10 @@ impl Args {
         self.opt(key).unwrap_or(default).to_string()
     }
 
+    /// `--key value` parsed as usize, falling back to `default` when the
+    /// option is absent or unparseable.  Knobs where a silent fallback
+    /// could misattribute a benchmark or gate run should be parsed
+    /// strictly at the call site instead (see `opt_strict` in `main.rs`).
     pub fn opt_usize(&self, key: &str, default: usize) -> usize {
         self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }

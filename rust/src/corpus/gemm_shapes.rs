@@ -73,6 +73,44 @@ pub fn gemm_corpus() -> Vec<GemmShape> {
     out
 }
 
+/// Downscaled Stream-K-style geometry grid for the deterministic
+/// `landscape` bench: every (m, n, k) combination over a small
+/// power-of-two-ish axis set, plus the aspect-ratio extremes (deep-k,
+/// tall-m, wide-n) that stress the MAC-iteration tile set the way Fig. 5.6
+/// stresses full Stream-K.  Host-affordable (plans only, no numerics) and
+/// fully enumerable — the CI perf gate diffs per-family geomeans over it,
+/// so membership must never depend on sampling.
+pub fn gemm_landscape_grid(scale: usize) -> Vec<GemmShape> {
+    let axis: &[usize] = if scale == 0 {
+        &[64, 128]
+    } else {
+        &[64, 128, 192, 256]
+    };
+    let mut out = Vec::new();
+    for &m in axis {
+        for &n in axis {
+            for &k in axis {
+                out.push(GemmShape::new(m, n, k));
+            }
+        }
+    }
+    if scale >= 1 {
+        // Downscaled Fig. 5.6 extremes: one long axis against two short.
+        let extremes = [
+            (64, 64, 1024),
+            (1024, 64, 64),
+            (64, 1024, 64),
+            (512, 64, 256),
+            (64, 512, 256),
+            (96, 96, 96),
+        ];
+        for &(m, n, k) in &extremes {
+            out.push(GemmShape::new(m, n, k));
+        }
+    }
+    out
+}
+
 /// Deterministic sub-sample (stride) for heavier per-shape evaluations.
 pub fn gemm_corpus_sample(n: usize) -> Vec<GemmShape> {
     let full = gemm_corpus();
@@ -121,5 +159,19 @@ mod tests {
     fn sample_is_subset_and_sized() {
         let s = gemm_corpus_sample(500);
         assert!(s.len() >= 500 && s.len() <= 520);
+    }
+
+    #[test]
+    fn landscape_grid_deterministic_and_scaled() {
+        let small = gemm_landscape_grid(0);
+        let full = gemm_landscape_grid(1);
+        assert_eq!(small.len(), 8);
+        assert_eq!(full.len(), 64 + 6);
+        assert_eq!(full, gemm_landscape_grid(1));
+        // Extremes give the grid real aspect-ratio spread.
+        let max_k = full.iter().map(|s| s.k).max().unwrap();
+        let max_m = full.iter().map(|s| s.m).max().unwrap();
+        assert_eq!(max_k, 1024);
+        assert_eq!(max_m, 1024);
     }
 }

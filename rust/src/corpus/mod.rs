@@ -9,5 +9,5 @@
 pub mod gemm_shapes;
 pub mod sparse_corpus;
 
-pub use gemm_shapes::{gemm_corpus, GEMM_CORPUS_SIZE};
+pub use gemm_shapes::{gemm_corpus, gemm_landscape_grid, GEMM_CORPUS_SIZE};
 pub use sparse_corpus::{sparse_corpus, SparseEntry};

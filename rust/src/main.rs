@@ -4,8 +4,10 @@
 //! gpulb figures [ID|all] [--scale 0|1|2] [--out DIR]
 //! gpulb spmv  [--matrix SPEC] [--schedule NAME] [--check-runtime]
 //! gpulb gemm  [--m M --n N --k K] [--decomp NAME] [--prec P] [--check-runtime]
-//! gpulb serve [--threads N] [--batches B] [--scale 0|1] [--schedule NAME]
+//! gpulb serve [--threads N] [--batches B] [--scale 0|1] [--schedule NAME|adaptive]
 //! gpulb serve --bench [--out FILE]
+//! gpulb landscape [--scale 0|1] [--rounds R] [--out FILE]
+//! gpulb bench-diff BASE.json CURRENT.json [--tolerance 0.2]
 //! gpulb info
 //! ```
 
@@ -34,8 +36,11 @@ USAGE:
   gpulb gemm  [--m M --n N --k K] [--decomp streamk|dp|fixed:S|hybrid1|hybrid2]
               [--prec f16f32|f64] [--check-runtime]
   gpulb serve [--threads N] [--batches B] [--scale 0|1] [--plan-workers W]
-              [--schedule auto|thread|warp|block|merge|nzsplit|binning|lrb]
+              [--schedule auto|adaptive|thread|warp|block|merge|nzsplit|binning|lrb]
+              [--epsilon E] [--min-samples S] [--seed SEED] [--proxy-feedback]
   gpulb serve --bench [--batches B] [--scale 0|1] [--out FILE]
+  gpulb landscape  [--scale 0|1] [--rounds R] [--plan-workers W] [--out FILE]
+  gpulb bench-diff BASE.json CURRENT.json [--tolerance 0.2]
   gpulb info
 ";
 
@@ -222,9 +227,57 @@ fn parse_schedule_name(s: &str) -> Option<ScheduleKind> {
     }
 }
 
+/// Parse `--key` as `T`, erroring on a malformed value (absent = default).
+/// Used for the knobs where a silent fallback would run a benchmark or
+/// gate at an unintended setting.
+fn opt_strict<T: std::str::FromStr>(args: &Args, key: &str, default: T) -> gpulb::Result<T> {
+    match args.opt(key) {
+        None => Ok(default),
+        Some(s) => s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid --{key} value `{s}`")),
+    }
+}
+
+/// Schedule policy from `--schedule` plus the adaptive knobs
+/// (`--epsilon`, `--min-samples`, `--seed`).  Unknown names and malformed
+/// knob values are errors — silently falling back would attribute a
+/// benchmark run to a policy that never executed.
+fn parse_schedule_policy(args: &Args) -> gpulb::Result<serve::SchedulePolicy> {
+    Ok(match args.opt("schedule") {
+        Some("adaptive") => serve::SchedulePolicy::Adaptive {
+            epsilon: opt_strict(args, "epsilon", serve::tuner::DEFAULT_EPSILON)?,
+            min_samples: opt_strict(args, "min-samples", serve::tuner::DEFAULT_MIN_SAMPLES)?,
+            seed: opt_strict(args, "seed", serve::tuner::DEFAULT_SEED)?,
+        },
+        Some("auto") | None => serve::SchedulePolicy::Auto,
+        Some(name) => match parse_schedule_name(name) {
+            Some(kind) => serve::SchedulePolicy::Fixed(kind),
+            None => anyhow::bail!(
+                "unknown --schedule `{name}`; expected \
+                 auto|adaptive|thread|warp|block|merge|nzsplit|binning|lrb"
+            ),
+        },
+    })
+}
+
+fn policy_name(policy: serve::SchedulePolicy) -> String {
+    match policy {
+        serve::SchedulePolicy::Auto => "auto".to_string(),
+        serve::SchedulePolicy::Fixed(kind) => kind.name().to_string(),
+        serve::SchedulePolicy::Adaptive {
+            epsilon,
+            min_samples,
+            ..
+        } => format!("adaptive (epsilon {epsilon}, min samples {min_samples})"),
+    }
+}
+
 fn cmd_serve(args: &Args) -> gpulb::Result<()> {
-    let scale = args.opt_usize("scale", 1);
-    let batches = args.opt_usize("batches", 3);
+    // Strict parsing: a typo'd knob must not silently write BENCH_serve.json
+    // (or print batch reports) for a run the user never asked for.
+    let scale = opt_strict(args, "scale", 1)?;
+    let batches = opt_strict(args, "batches", 3)?;
     let mix = serve::corpus_mix(scale);
     let atoms: usize = mix.iter().map(|p| p.atoms()).sum();
     println!(
@@ -236,26 +289,43 @@ fn cmd_serve(args: &Args) -> gpulb::Result<()> {
         atoms
     );
 
-    if args.has_flag("bench") {
-        let out = args.opt_or("out", "BENCH_serve.json");
-        serve::run_bench(&mix, &[1, 2, 4, 8], batches, &out)?;
-        return Ok(());
-    }
-
     let default_threads = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
+    let policy = parse_schedule_policy(args)?;
     let cfg = serve::ServeConfig {
-        threads: args.opt_usize("threads", default_threads),
-        plan_workers: args.opt_usize("plan-workers", 256),
-        schedule: args.opt("schedule").and_then(parse_schedule_name),
-        cache_capacity: args.opt_usize("cache-capacity", 1024),
+        threads: opt_strict(args, "threads", default_threads)?,
+        plan_workers: opt_strict(args, "plan-workers", 256)?,
+        schedule: policy,
+        feedback: if args.has_flag("proxy-feedback") {
+            serve::CostFeedback::Proxy
+        } else {
+            serve::CostFeedback::Measured
+        },
+        cache_capacity: opt_strict(args, "cache-capacity", 1024)?,
     };
+
+    if args.has_flag("bench") {
+        let mut bench_cfg = cfg;
+        if matches!(bench_cfg.schedule, serve::SchedulePolicy::Adaptive { .. })
+            && bench_cfg.feedback == serve::CostFeedback::Measured
+        {
+            // The sweep asserts bit-equal checksums across thread counts,
+            // which needs replayable schedule traces — wall-clock feedback
+            // would let sweep points diverge.
+            bench_cfg.feedback = serve::CostFeedback::Proxy;
+            println!("note: adaptive bench forces --proxy-feedback for deterministic traces");
+        }
+        let out = args.opt_or("out", "BENCH_serve.json");
+        serve::run_bench(&mix, &[1, 2, 4, 8], batches, bench_cfg, &out)?;
+        return Ok(());
+    }
+
     println!(
         "engine: {} threads, {} plan workers, schedule {}",
         cfg.threads,
         cfg.plan_workers,
-        cfg.schedule.map(|k| k.name()).unwrap_or("auto")
+        policy_name(policy)
     );
     let engine = serve::ServeEngine::new(cfg);
     for batch_no in 1..=batches.max(1) {
@@ -269,7 +339,72 @@ fn cmd_serve(args: &Args) -> gpulb::Result<()> {
             report.pool.pops,
             report.pool.steals
         );
+        if report.tuner.adaptive > 0 {
+            println!(
+                "         tuner: {:.0}% converged ({} exploits, {} explorations, {} priors)",
+                report.tuner.convergence_fraction() * 100.0,
+                report.tuner.exploits,
+                report.tuner.explorations,
+                report.tuner.priors
+            );
+        }
     }
+    Ok(())
+}
+
+fn cmd_landscape(args: &Args) -> gpulb::Result<()> {
+    // Strict parsing throughout: this command generates the artifacts the
+    // CI gate diffs, so a typo must not silently run at default knobs.
+    let scale = opt_strict(args, "scale", 1)?;
+    let rounds = opt_strict(args, "rounds", serve::landscape::DEFAULT_ROUNDS)?;
+    let plan_workers = opt_strict(args, "plan-workers", serve::landscape::DEFAULT_PLAN_WORKERS)?;
+    let out = args.opt_or("out", "BENCH_landscape.json");
+    serve::landscape::run_bench(scale, rounds, plan_workers, &out)?;
+    Ok(())
+}
+
+fn cmd_bench_diff(args: &Args) -> gpulb::Result<()> {
+    let (Some(base_path), Some(current_path)) = (args.positional.first(), args.positional.get(1))
+    else {
+        anyhow::bail!("usage: gpulb bench-diff BASE.json CURRENT.json [--tolerance 0.2]");
+    };
+    let tolerance = opt_strict(args, "tolerance", 0.2)?;
+    let base = std::fs::read_to_string(base_path)
+        .map_err(|e| anyhow::anyhow!("reading {base_path}: {e}"))?;
+    let current = std::fs::read_to_string(current_path)
+        .map_err(|e| anyhow::anyhow!("reading {current_path}: {e}"))?;
+    let diffs = gpulb::benchutil::diff_family_json(&base, &current)?;
+    println!(
+        "{:<16} {:>12} {:>12} {:>8}  status (tolerance {:.0}%)",
+        "family",
+        "base",
+        "current",
+        "ratio",
+        tolerance * 100.0
+    );
+    let mut regressions = Vec::new();
+    for d in &diffs {
+        let status = if d.is_regression(tolerance) {
+            regressions.push(d.family.clone());
+            "REGRESSED"
+        } else {
+            "ok"
+        };
+        println!(
+            "{:<16} {:>12.3} {:>12.3} {:>8.3}  {status}",
+            d.family, d.base, d.current, d.ratio
+        );
+    }
+    if !regressions.is_empty() {
+        anyhow::bail!(
+            "{} of {} families regressed beyond {:.0}%: {}",
+            regressions.len(),
+            diffs.len(),
+            tolerance * 100.0,
+            regressions.join(", ")
+        );
+    }
+    println!("all {} families within tolerance", diffs.len());
     Ok(())
 }
 
@@ -307,6 +442,8 @@ fn main() -> gpulb::Result<()> {
         "spmv" => cmd_spmv(&args),
         "gemm" => cmd_gemm(&args),
         "serve" => cmd_serve(&args),
+        "landscape" => cmd_landscape(&args),
+        "bench-diff" => cmd_bench_diff(&args),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");

@@ -19,12 +19,16 @@ pub fn mean(xs: &[f64]) -> f64 {
 }
 
 /// p-th percentile (linear interpolation), p in [0, 100].
+///
+/// NaN inputs (either sign) are ignored — the percentile is taken over the
+/// remaining values; empty or all-NaN input returns NaN.  This function
+/// must never panic: measurement pipelines feed it raw data.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if v.is_empty() {
         return f64::NAN;
     }
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -102,6 +106,18 @@ mod tests {
     fn percentile_interpolates() {
         let xs = [0.0, 10.0];
         assert!((percentile(&xs, 50.0) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_inputs() {
+        // Regression: `partial_cmp(..).unwrap()` panicked here.  NaNs of
+        // either sign are now filtered before the `total_cmp` sort.
+        let xs = [2.0, f64::NAN, 1.0, -f64::NAN];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert!((percentile(&xs, 50.0) - 1.5).abs() < 1e-12);
+        assert_eq!(percentile(&xs, 100.0), 2.0);
+        // All-NaN input: still no panic.
+        assert!(percentile(&[f64::NAN, f64::NAN], 50.0).is_nan());
     }
 
     #[test]

@@ -15,13 +15,14 @@
 
 use std::sync::Arc;
 
-use crate::balance::{self, OffsetsSource, ScheduleKind};
+use crate::balance::{self, adaptive, OffsetsSource, ScheduleKind};
 use crate::corpus::{gemm_shapes, sparse_corpus};
 use crate::exec::{dense::DenseMat, graph, spmv};
 use crate::sparse::{gen, Coo, Csr};
 use crate::streamk::{Blocking, GemmShape};
 
 use super::plan_cache::{fingerprint, PlanCache, PlanKey};
+use super::tuner::CostFeedback;
 use super::ServeConfig;
 
 /// Fingerprint salts, one per problem family (see [`fingerprint`]).
@@ -130,14 +131,11 @@ impl Problem {
         }
     }
 
-    /// Schedule for this problem: the config override, else a per-family
-    /// default (the §4.5.2 heuristic for SpMV; `NonzeroSplit` for GEMM —
-    /// the Stream-K-equivalent even iteration split; merge-path for
-    /// frontiers, whose tile sets are the most skewed).
-    pub fn schedule(&self, cfg: &ServeConfig) -> ScheduleKind {
-        if let Some(kind) = cfg.schedule {
-            return kind;
-        }
+    /// Per-family static default schedule (the `Auto` policy): the §4.5.2
+    /// heuristic for SpMV; `NonzeroSplit` for GEMM — the Stream-K-
+    /// equivalent even iteration split; merge-path for frontiers, whose
+    /// tile sets are the most skewed.
+    pub fn static_schedule(&self) -> ScheduleKind {
         match self {
             Problem::Spmv { matrix, .. } => {
                 balance::select_schedule(matrix, balance::HeuristicParams::default())
@@ -146,35 +144,66 @@ impl Problem {
             Problem::Frontier { .. } => ScheduleKind::MergePath,
         }
     }
+
+    /// (tiles, atoms) of this problem's tile set — the proxy-cost inputs.
+    pub fn tile_set_size(&self) -> (usize, usize) {
+        match self {
+            Problem::Spmv { matrix, .. } => (matrix.rows, matrix.nnz()),
+            Problem::Gemm { offsets, .. } | Problem::Frontier { offsets, .. } => {
+                (offsets.len() - 1, *offsets.last().unwrap_or(&0))
+            }
+        }
+    }
 }
 
-/// Plan (through the cache) and execute one problem; returns its checksum
-/// (a deterministic reduction of the full result, independent of thread
-/// count and schedule — the serving-layer numerics witness).
-pub fn execute(problem: &Problem, cache: &PlanCache, cfg: &ServeConfig) -> f64 {
-    let kind = problem.schedule(cfg);
+/// One executed problem: its checksum (a deterministic reduction of the
+/// full result, independent of thread count and schedule — the
+/// serving-layer numerics witness) plus the cost sample fed back to the
+/// tuner (wall-clock seconds or the deterministic proxy, per
+/// [`CostFeedback`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExecSample {
+    pub checksum: f64,
+    pub cost: f64,
+}
+
+/// Plan (through the cache) and execute one problem with the given
+/// schedule.
+///
+/// The measured cost covers *execution only*: a cache-miss plan
+/// construction is a one-time cost that would otherwise inflate a
+/// schedule's first EWMA sample and bias the tuner against schedules
+/// with expensive planning but fast cached execution.
+pub fn execute(
+    problem: &Problem,
+    kind: ScheduleKind,
+    cache: &PlanCache,
+    cfg: &ServeConfig,
+) -> ExecSample {
     let workers = cfg.plan_workers.max(1);
     let key = PlanKey {
         fingerprint: problem.fingerprint(),
         schedule: kind,
         workers,
     };
-    match problem {
-        Problem::Spmv { matrix, x, .. } => {
-            let plan = cache.get_or_compute(key, || kind.assign(&**matrix, workers));
-            let y = spmv::execute_host(matrix, x, &plan);
-            y.iter().sum()
+    let plan = match problem {
+        Problem::Spmv { matrix, .. } => {
+            cache.get_or_compute(key, || kind.assign(&**matrix, workers))
         }
+        Problem::Gemm { offsets, .. } | Problem::Frontier { offsets, .. } => {
+            cache.get_or_compute(key, || kind.assign(&OffsetsSource::new(offsets), workers))
+        }
+    };
+    let start = std::time::Instant::now();
+    let checksum: f64 = match problem {
+        Problem::Spmv { matrix, x, .. } => spmv::execute_host(matrix, x, &plan).iter().sum(),
         Problem::Gemm {
             a,
             b,
             shape,
             blocking,
-            offsets,
             ..
         } => {
-            let plan =
-                cache.get_or_compute(key, || kind.assign(&OffsetsSource::new(offsets), workers));
             let c = execute_gemm_assignment(a, b, *shape, *blocking, &plan);
             c.data.iter().sum()
         }
@@ -183,13 +212,18 @@ pub fn execute(problem: &Problem, cache: &PlanCache, cfg: &ServeConfig) -> f64 {
             frontier,
             offsets,
             ..
-        } => {
-            let plan =
-                cache.get_or_compute(key, || kind.assign(&OffsetsSource::new(offsets), workers));
-            let out = execute_frontier_assignment(graph, frontier, offsets, &plan);
-            out.iter().sum()
+        } => execute_frontier_assignment(graph, frontier, offsets, &plan)
+            .iter()
+            .sum(),
+    };
+    let cost = match cfg.feedback {
+        CostFeedback::Measured => start.elapsed().as_secs_f64(),
+        CostFeedback::Proxy => {
+            let (tiles, atoms) = problem.tile_set_size();
+            adaptive::proxy_cost(kind, &plan, tiles, atoms)
         }
-    }
+    };
+    ExecSample { checksum, cost }
 }
 
 /// Execute a GEMM through a generic [`Assignment`] over the MAC-iteration
@@ -329,12 +363,11 @@ mod tests {
     use super::*;
     use crate::serve::plan_cache::PlanCache;
 
-    fn cfg_with(schedule: Option<ScheduleKind>) -> ServeConfig {
+    fn cfg() -> ServeConfig {
         ServeConfig {
             threads: 1,
             plan_workers: 64,
-            schedule,
-            cache_capacity: 256,
+            ..ServeConfig::default()
         }
     }
 
@@ -372,15 +405,30 @@ mod tests {
         let matrix = Arc::new(gen::power_law(300, 300, 150, 1.6, 11));
         let problem = Problem::spmv(matrix.clone());
         let cache = PlanCache::new(64);
-        let auto = execute(&problem, &cache, &cfg_with(None));
+        let auto = execute(&problem, problem.static_schedule(), &cache, &cfg()).checksum;
         for kind in [
             ScheduleKind::ThreadMapped,
             ScheduleKind::MergePath,
             ScheduleKind::NonzeroSplit,
         ] {
-            let got = execute(&problem, &cache, &cfg_with(Some(kind)));
+            let got = execute(&problem, kind, &cache, &cfg()).checksum;
             assert!((got - auto).abs() < 1e-9, "{kind:?}: {got} vs {auto}");
         }
+    }
+
+    #[test]
+    fn proxy_feedback_is_deterministic_and_positive() {
+        let matrix = Arc::new(gen::uniform(128, 128, 4, 3));
+        let problem = Problem::spmv(matrix);
+        let cache = PlanCache::new(64);
+        let cfg = ServeConfig {
+            feedback: CostFeedback::Proxy,
+            ..cfg()
+        };
+        let a = execute(&problem, ScheduleKind::MergePath, &cache, &cfg);
+        let b = execute(&problem, ScheduleKind::MergePath, &cache, &cfg);
+        assert_eq!(a, b, "proxy cost must not depend on the host");
+        assert!(a.cost > 0.0);
     }
 
     #[test]
@@ -389,7 +437,7 @@ mod tests {
         let frontier: Vec<u32> = (0..graph.rows as u32).step_by(3).collect();
         let problem = Problem::frontier(graph.clone(), frontier.clone());
         let cache = PlanCache::new(64);
-        let got = execute(&problem, &cache, &cfg_with(None));
+        let got = execute(&problem, problem.static_schedule(), &cache, &cfg()).checksum;
         let want: f64 = frontier
             .iter()
             .map(|&v| graph.row(v as usize).1.iter().map(|w| w.abs()).sum::<f64>())

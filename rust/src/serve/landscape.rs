@@ -1,0 +1,251 @@
+//! The deterministic problem landscape behind the CI perf-regression gate.
+//!
+//! A landscape is a fixed set of tile sets — the sparse evaluation corpus
+//! plus a downscaled Stream-K-style GEMM geometry grid
+//! ([`crate::corpus::gemm_landscape_grid`]) — swept by the adaptive tuner
+//! with **proxy** cost feedback ([`crate::balance::adaptive::proxy_cost`]).
+//! After the tuner converges, every entry reports its throughput
+//! (atoms per proxy step) under the learned best schedule, and entries
+//! aggregate into per-family geomeans written to `BENCH_landscape.json`.
+//!
+//! Everything in the pipeline is deterministic — seeded corpora, integer-
+//! dominated proxy costs, seeded exploration — so two runs of the same
+//! code produce byte-equal JSON on any host.  That is the property the CI
+//! gate relies on: `gpulb bench-diff BENCH_baseline.json
+//! BENCH_landscape.json --tolerance 0.2` fails only when the *code*
+//! (schedules, planner, selector) regresses a family, never because a
+//! shared runner was slow.
+
+use crate::balance::adaptive::{proxy_cost, CANDIDATES};
+use crate::balance::{self, OffsetsSource, ScheduleKind, WorkSource};
+use crate::benchutil::{self, FamilyPoint};
+use crate::corpus::{gemm_landscape_grid, sparse_corpus};
+use crate::metrics;
+use crate::streamk::Blocking;
+
+use super::batch::{SALT_GEMM, SALT_SPMV};
+use super::plan_cache::{fingerprint, PlanCache, PlanKey};
+use super::tuner::{ScheduleTuner, DEFAULT_EPSILON, DEFAULT_MIN_SAMPLES, DEFAULT_SEED};
+
+/// Default tuner rounds: enough for warmup
+/// (`|CANDIDATES| * min_samples` selections per entry) plus steady state.
+pub const DEFAULT_ROUNDS: usize = 10;
+/// Default plan worker count (matches [`super::ServeConfig::default`]).
+pub const DEFAULT_PLAN_WORKERS: usize = 256;
+/// Blocking for the GEMM grid's MAC-iteration tile sets.
+const GRID_BLOCKING: Blocking = Blocking::new(32, 32, 16);
+
+/// One landscape member: a named tile set with a cold-start prior.
+pub struct LandscapeEntry {
+    pub name: String,
+    pub family: &'static str,
+    /// Atoms-per-tile prefix sum (the full work-source description).
+    pub offsets: Vec<usize>,
+    pub fingerprint: u64,
+    pub prior: ScheduleKind,
+}
+
+impl LandscapeEntry {
+    pub fn tiles(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn atoms(&self) -> usize {
+        *self.offsets.last().unwrap_or(&0)
+    }
+}
+
+/// Build the landscape: the sparse corpus (each entry keeps its corpus
+/// family) plus the GEMM geometry grid (family `gemm-grid`).  `scale` is
+/// clamped to `[0, 1]` — the gate's landscape has exactly two sizes, and
+/// a larger value must not relabel identical data.
+pub fn build_landscape(scale: usize) -> Vec<LandscapeEntry> {
+    let scale = scale.min(1);
+    let mut out = Vec::new();
+    for entry in sparse_corpus(scale) {
+        let prior = balance::select_schedule(&entry.matrix, balance::HeuristicParams::default());
+        let fp = fingerprint(SALT_SPMV, &entry.matrix);
+        out.push(LandscapeEntry {
+            name: entry.name,
+            family: entry.family,
+            offsets: entry.matrix.offsets.clone(),
+            fingerprint: fp,
+            prior,
+        });
+    }
+    for shape in gemm_landscape_grid(scale) {
+        let tiles = GRID_BLOCKING.tiles(shape);
+        let ipt = GRID_BLOCKING.iters_per_tile(shape) as usize;
+        let offsets: Vec<usize> = (0..=tiles).map(|t| t * ipt).collect();
+        let fp = fingerprint(SALT_GEMM, &OffsetsSource::new(&offsets));
+        out.push(LandscapeEntry {
+            name: format!("gemm_{}x{}x{}", shape.m, shape.n, shape.k),
+            family: "gemm-grid",
+            offsets,
+            fingerprint: fp,
+            prior: ScheduleKind::NonzeroSplit,
+        });
+    }
+    out
+}
+
+/// Sweep the landscape with the adaptive tuner for `rounds` rounds, then
+/// report each family's converged geomean throughput (atoms per proxy
+/// step under the learned best schedule) as the bench-artifact rows.
+pub fn run_landscape(scale: usize, rounds: usize, plan_workers: usize) -> Vec<FamilyPoint> {
+    let entries = build_landscape(scale.min(1));
+    let workers = plan_workers.max(1);
+    let tuner = ScheduleTuner::new(DEFAULT_EPSILON, DEFAULT_MIN_SAMPLES, DEFAULT_SEED);
+    let cache = PlanCache::new(entries.len() * CANDIDATES.len() + 16);
+
+    let plan_and_cost = |entry: &LandscapeEntry, kind: ScheduleKind| -> f64 {
+        let src = OffsetsSource::new(&entry.offsets);
+        let key = PlanKey {
+            fingerprint: entry.fingerprint,
+            schedule: kind,
+            workers,
+        };
+        let plan = cache.get_or_compute(key, || kind.assign(&src, workers));
+        proxy_cost(kind, &plan, src.num_tiles(), src.num_atoms())
+    };
+
+    for _ in 0..rounds.max(1) {
+        for entry in &entries {
+            let (kind, _) = tuner.select(entry.fingerprint, workers, || entry.prior);
+            let cost = plan_and_cost(entry, kind);
+            tuner.record(entry.fingerprint, kind, workers, cost);
+        }
+    }
+
+    // Converged pass: exploit-only selection, first-seen family order.
+    let mut families: Vec<(&'static str, Vec<f64>)> = Vec::new();
+    for entry in &entries {
+        let kind = tuner.best(entry.fingerprint, workers).unwrap_or(entry.prior);
+        let cost = plan_and_cost(entry, kind);
+        let throughput = entry.atoms() as f64 / cost.max(1e-9);
+        match families.iter().position(|(f, _)| *f == entry.family) {
+            Some(i) => families[i].1.push(throughput),
+            None => families.push((entry.family, vec![throughput])),
+        }
+    }
+    families
+        .into_iter()
+        .map(|(family, v)| FamilyPoint {
+            family: family.to_string(),
+            problems: v.len(),
+            geomean_throughput: metrics::geomean(&v),
+        })
+        .collect()
+}
+
+/// Run the landscape sweep, print per-family throughput, and write the
+/// JSON artifact the CI gate diffs.  Shared by `gpulb landscape` and the
+/// `landscape` bench target.
+pub fn run_bench(
+    scale: usize,
+    rounds: usize,
+    plan_workers: usize,
+    out_path: &str,
+) -> crate::Result<Vec<FamilyPoint>> {
+    // Clamp before stamping the artifact: the JSON "scale" label must
+    // describe the data (diff_family_json refuses mismatched scales).
+    let scale = scale.min(1);
+    let points = run_landscape(scale, rounds, plan_workers);
+    for p in &points {
+        println!(
+            "bench landscape/{:<14} {:>10.3} atoms/proxy-step  ({} problems)",
+            p.family, p.geomean_throughput, p.problems
+        );
+    }
+    benchutil::write_family_json(out_path, "landscape", scale, &points)?;
+    println!("wrote {out_path}");
+    Ok(points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn landscape_is_deterministic() {
+        let a = run_landscape(0, DEFAULT_ROUNDS, 64);
+        let b = run_landscape(0, DEFAULT_ROUNDS, 64);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.family, y.family);
+            assert_eq!(x.problems, y.problems);
+            assert_eq!(
+                x.geomean_throughput.to_bits(),
+                y.geomean_throughput.to_bits(),
+                "{} not bit-deterministic",
+                x.family
+            );
+        }
+    }
+
+    #[test]
+    fn landscape_covers_sparse_and_gemm_families() {
+        let entries = build_landscape(0);
+        assert!(entries.iter().any(|e| e.family == "gemm-grid"));
+        assert!(entries.iter().any(|e| e.family == "uniform"));
+        assert!(entries.iter().any(|e| e.family == "power-law"));
+        for e in &entries {
+            assert!(e.tiles() > 0, "{} empty tile set", e.name);
+            assert_eq!(e.offsets[0], 0, "{} offsets must start at 0", e.name);
+        }
+    }
+
+    #[test]
+    fn family_throughputs_positive() {
+        for r in run_landscape(0, DEFAULT_ROUNDS, 64) {
+            assert!(
+                r.geomean_throughput > 0.0,
+                "{}: {}",
+                r.family,
+                r.geomean_throughput
+            );
+            assert!(r.problems > 0);
+        }
+    }
+
+    #[test]
+    fn converged_pick_beats_or_matches_the_prior() {
+        // The whole point of measured feedback: the learned schedule's
+        // proxy cost is never worse than the shape prior's.
+        let entries = build_landscape(0);
+        let workers = 64;
+        let tuner = ScheduleTuner::new(0.1, 2, 3);
+        let cache = PlanCache::new(4096);
+        for _ in 0..DEFAULT_ROUNDS {
+            for e in &entries {
+                let (kind, _) = tuner.select(e.fingerprint, workers, || e.prior);
+                let src = OffsetsSource::new(&e.offsets);
+                let plan = cache.get_or_compute(
+                    PlanKey {
+                        fingerprint: e.fingerprint,
+                        schedule: kind,
+                        workers,
+                    },
+                    || kind.assign(&src, workers),
+                );
+                let cost = proxy_cost(kind, &plan, src.num_tiles(), src.num_atoms());
+                tuner.record(e.fingerprint, kind, workers, cost);
+            }
+        }
+        for e in &entries {
+            let src = OffsetsSource::new(&e.offsets);
+            let best = tuner.best(e.fingerprint, workers).unwrap_or(e.prior);
+            let cost_of = |kind: ScheduleKind| {
+                let plan = kind.assign(&src, workers);
+                proxy_cost(kind, &plan, src.num_tiles(), src.num_atoms())
+            };
+            assert!(
+                cost_of(best) <= cost_of(e.prior) + 1e-9,
+                "{}: learned {:?} worse than prior {:?}",
+                e.name,
+                best,
+                e.prior
+            );
+        }
+    }
+}

@@ -16,15 +16,22 @@
 //! * [`batch`]      — problem definitions, execution semantics, corpus mix;
 //! * [`plan_cache`] — the concurrent Assignment cache;
 //! * [`pool`]       — the work-stealing thread pool;
+//! * [`tuner`]      — online ε-greedy schedule selection over measured
+//!   feedback (the [`SchedulePolicy::Adaptive`] policy);
+//! * [`landscape`]  — the deterministic problem landscape behind the CI
+//!   perf-regression gate;
 //! * this module    — the engine, batch reports, and the bench sweep.
 
 pub mod batch;
+pub mod landscape;
 pub mod plan_cache;
 pub mod pool;
+pub mod tuner;
 
-pub use batch::{corpus_mix, Problem};
+pub use batch::{corpus_mix, ExecSample, Problem};
 pub use plan_cache::{CacheStats, PlanCache, PlanKey};
 pub use pool::PoolStats;
+pub use tuner::{CostFeedback, Decision, SchedulePolicy, ScheduleTuner};
 
 use std::time::{Duration, Instant};
 
@@ -39,8 +46,12 @@ pub struct ServeConfig {
     /// Workers each *plan* targets — the simulated device parallelism each
     /// Assignment is built for, independent of host thread count.
     pub plan_workers: usize,
-    /// Force one schedule for every problem (`None` = per-family default).
-    pub schedule: Option<ScheduleKind>,
+    /// How schedules are chosen: static per-family default, one fixed
+    /// schedule, or the online ε-greedy tuner.
+    pub schedule: SchedulePolicy,
+    /// What cost sample each execution feeds the tuner (wall-clock or the
+    /// deterministic proxy).
+    pub feedback: CostFeedback,
     /// Plan-cache capacity in entries.
     pub cache_capacity: usize,
 }
@@ -52,8 +63,34 @@ impl Default for ServeConfig {
                 .map(|n| n.get())
                 .unwrap_or(1),
             plan_workers: 256,
-            schedule: None,
+            schedule: SchedulePolicy::Auto,
+            feedback: CostFeedback::Measured,
             cache_capacity: 1024,
+        }
+    }
+}
+
+/// Tuner counters for one batch (all zero under `Auto`/`Fixed`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TunerBatchStats {
+    /// Problems routed through the adaptive selector.
+    pub adaptive: u64,
+    /// Cold-start selections (shape prior, no samples yet).
+    pub priors: u64,
+    /// Warmup + ε-branch selections.
+    pub explorations: u64,
+    /// EWMA-argmin selections.
+    pub exploits: u64,
+}
+
+impl TunerBatchStats {
+    /// Fraction of adaptive selections that exploited the learned best —
+    /// approaches `1 - ε` as the tuner converges.
+    pub fn convergence_fraction(&self) -> f64 {
+        if self.adaptive == 0 {
+            0.0
+        } else {
+            self.exploits as f64 / self.adaptive as f64
         }
     }
 }
@@ -66,6 +103,11 @@ pub struct BatchReport {
     /// Per-problem checksums in submission order (deterministic across
     /// thread counts — the correctness witness the tests pin).
     pub checksums: Vec<f64>,
+    /// Per-problem chosen schedule in submission order (the trace the
+    /// adaptive determinism tests pin).
+    pub schedules: Vec<ScheduleKind>,
+    /// Tuner selection counters for this batch.
+    pub tuner: TunerBatchStats,
     pub pool: PoolStats,
     /// Cumulative cache counters at batch end.
     pub cache: CacheStats,
@@ -85,12 +127,14 @@ impl BatchReport {
 pub struct ServeEngine {
     cfg: ServeConfig,
     cache: PlanCache,
+    tuner: Option<ScheduleTuner>,
 }
 
 impl ServeEngine {
     pub fn new(cfg: ServeConfig) -> Self {
         let cache = PlanCache::new(cfg.cache_capacity);
-        ServeEngine { cfg, cache }
+        let tuner = ScheduleTuner::from_policy(cfg.schedule);
+        ServeEngine { cfg, cache, tuner }
     }
 
     pub fn config(&self) -> &ServeConfig {
@@ -101,18 +145,62 @@ impl ServeEngine {
         &self.cache
     }
 
+    /// The tuner, when the policy is `Adaptive`.
+    pub fn tuner(&self) -> Option<&ScheduleTuner> {
+        self.tuner.as_ref()
+    }
+
     /// Execute every problem in the batch across the worker pool; plans are
     /// fetched from (or inserted into) the engine's cache, so repeated
     /// batches over recurring problem shapes skip planning entirely.
+    ///
+    /// Three phases: (1) schedules are selected serially in submission
+    /// order (so adaptive selection is deterministic at any thread count),
+    /// (2) the pool executes the batch, (3) every execution's cost sample
+    /// is fed back to the tuner, again in submission order.
     pub fn execute_batch(&self, problems: &[Problem]) -> BatchReport {
         let start = Instant::now();
-        let (checksums, pool) = pool::execute(self.cfg.threads, problems, |p| {
-            batch::execute(p, &self.cache, &self.cfg)
+        let workers = self.cfg.plan_workers.max(1);
+        let mut stats = TunerBatchStats::default();
+        let schedules: Vec<ScheduleKind> = problems
+            .iter()
+            .map(|p| match self.cfg.schedule {
+                SchedulePolicy::Auto => p.static_schedule(),
+                SchedulePolicy::Fixed(kind) => kind,
+                SchedulePolicy::Adaptive { .. } => {
+                    let selector = self.tuner.as_ref().expect("adaptive policy builds a tuner");
+                    let (kind, decision) = selector.select(p.fingerprint(), workers, || {
+                        tuner::cold_start_prior(p, workers)
+                    });
+                    stats.adaptive += 1;
+                    match decision {
+                        Decision::Prior => stats.priors += 1,
+                        Decision::Explore => stats.explorations += 1,
+                        Decision::Exploit => stats.exploits += 1,
+                    }
+                    kind
+                }
+            })
+            .collect();
+
+        let jobs: Vec<(&Problem, ScheduleKind)> =
+            problems.iter().zip(schedules.iter().copied()).collect();
+        let (samples, pool) = pool::execute(self.cfg.threads, &jobs, |&(p, kind)| {
+            batch::execute(p, kind, &self.cache, &self.cfg)
         });
+
+        if let Some(tuner) = &self.tuner {
+            for (&(p, kind), sample) in jobs.iter().zip(&samples) {
+                tuner.record(p.fingerprint(), kind, workers, sample.cost);
+            }
+        }
+
         BatchReport {
             problems: problems.len(),
             elapsed: start.elapsed(),
-            checksums,
+            checksums: samples.iter().map(|s| s.checksum).collect(),
+            schedules,
+            tuner: stats,
             pool,
             cache: self.cache.stats(),
         }
@@ -134,22 +222,23 @@ impl SweepPoint {
     }
 }
 
-/// Run the same mix at each thread count with a fresh engine (cold cache),
-/// returning one [`SweepPoint`] per count.  Checksums must agree across
-/// points — callers assert this to turn every bench run into a concurrency
-/// correctness check.
+/// Run the same mix at each thread count with a fresh engine (cold cache,
+/// `base` config with only `threads` overridden per point), returning one
+/// [`SweepPoint`] per count.  Checksums must agree across points — callers
+/// assert this to turn every bench run into a concurrency correctness
+/// check.  (An `Adaptive` policy stays comparable across points because
+/// each gets a fresh tuner with the same seed; pair it with
+/// [`CostFeedback::Proxy`] so traces replay identically.)
 pub fn throughput_sweep(
     mix: &[Problem],
     thread_counts: &[usize],
     batches: usize,
+    base: ServeConfig,
 ) -> Vec<SweepPoint> {
     thread_counts
         .iter()
         .map(|&threads| {
-            let engine = ServeEngine::new(ServeConfig {
-                threads,
-                ..ServeConfig::default()
-            });
+            let engine = ServeEngine::new(ServeConfig { threads, ..base });
             let start = Instant::now();
             let mut problems = 0usize;
             let mut checksum = 0.0f64;
@@ -177,9 +266,10 @@ pub fn run_bench(
     mix: &[Problem],
     thread_counts: &[usize],
     batches: usize,
+    base_cfg: ServeConfig,
     out_path: &str,
 ) -> crate::Result<Vec<SweepPoint>> {
-    let points = throughput_sweep(mix, thread_counts, batches);
+    let points = throughput_sweep(mix, thread_counts, batches, base_cfg);
     for pair in points.windows(2) {
         anyhow::ensure!(
             pair[0].checksum == pair[1].checksum,
@@ -245,9 +335,54 @@ mod tests {
     #[test]
     fn sweep_checksums_agree_across_thread_counts() {
         let mix = tiny_mix();
-        let points = throughput_sweep(&mix, &[1, 2], 2);
+        let points = throughput_sweep(&mix, &[1, 2], 2, ServeConfig::default());
         assert_eq!(points.len(), 2);
         assert_eq!(points[0].problems, points[1].problems);
         assert_eq!(points[0].checksum, points[1].checksum);
+    }
+
+    #[test]
+    fn fixed_policy_forces_one_schedule() {
+        let engine = ServeEngine::new(ServeConfig {
+            threads: 1,
+            schedule: SchedulePolicy::Fixed(ScheduleKind::MergePath),
+            ..ServeConfig::default()
+        });
+        let report = engine.execute_batch(&tiny_mix());
+        assert!(report
+            .schedules
+            .iter()
+            .all(|&k| k == ScheduleKind::MergePath));
+        assert_eq!(report.tuner, TunerBatchStats::default());
+    }
+
+    #[test]
+    fn adaptive_policy_counts_selections_and_converges_counterwise() {
+        let engine = ServeEngine::new(ServeConfig {
+            threads: 2,
+            schedule: SchedulePolicy::Adaptive {
+                epsilon: 0.05,
+                min_samples: 1,
+                seed: 11,
+            },
+            feedback: CostFeedback::Proxy,
+            ..ServeConfig::default()
+        });
+        let mix = tiny_mix();
+        let first = engine.execute_batch(&mix);
+        assert_eq!(first.tuner.adaptive, mix.len() as u64);
+        assert_eq!(first.tuner.priors, mix.len() as u64);
+        // Warmup (one sample per candidate) takes |CANDIDATES| - 1 more
+        // batches; after that the selector exploits almost always.
+        let mut last = first;
+        for _ in 0..8 {
+            last = engine.execute_batch(&mix);
+        }
+        assert!(
+            last.tuner.convergence_fraction() > 0.5,
+            "stats: {:?}",
+            last.tuner
+        );
+        assert_eq!(last.checksums.len(), mix.len());
     }
 }

@@ -1,0 +1,302 @@
+//! Online schedule tuner: ε-greedy selection over measured cost feedback.
+//!
+//! The engine's planning loop asks the tuner which schedule to use for each
+//! problem (keyed by work-source fingerprint + plan worker count) and feeds
+//! back the cost of every execution.  Selection policy, per fingerprint:
+//!
+//! 1. **Cold start** — no candidate has any sample: return the shape prior
+//!    (§4.5.2 heuristic refined by the roofline model, see
+//!    [`cold_start_prior`]).
+//! 2. **Warmup** — some candidate is below `min_samples` samples: force-
+//!    explore the least-sampled candidate, so every member of
+//!    [`CANDIDATES`] gets measured before the tuner commits.
+//! 3. **Steady state** — ε-greedy: with probability `epsilon` explore a
+//!    uniformly random candidate; otherwise exploit the EWMA argmin from
+//!    the [`PerfHistory`].
+//!
+//! Selections draw from a seeded [`Rng`] and the engine performs them
+//! serially in submission order, so a fixed seed yields the same schedule
+//! trace at any thread count — the determinism the adaptive tests pin.
+
+use std::sync::Mutex;
+
+use crate::balance::adaptive::{best_of, least_sampled_of, PerfHistory, PerfKey, CANDIDATES};
+use crate::balance::{self, roofline, ScheduleKind};
+use crate::rng::Rng;
+
+use super::batch::Problem;
+
+/// Default exploration probability in steady state.
+pub const DEFAULT_EPSILON: f64 = 0.1;
+/// Default samples required per candidate before its EWMA is trusted.
+pub const DEFAULT_MIN_SAMPLES: u32 = 2;
+/// Default exploration RNG seed.
+pub const DEFAULT_SEED: u64 = 0xADA9_715E;
+/// EWMA smoothing factor for recorded costs.
+pub const DEFAULT_ALPHA: f64 = 0.3;
+/// History stripes (see [`PerfHistory`]).
+const HISTORY_STRIPES: usize = 16;
+
+/// How the engine chooses a schedule for each problem.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum SchedulePolicy {
+    /// Per-family static default (the §4.5.2 heuristic for SpMV).
+    #[default]
+    Auto,
+    /// One schedule for every problem.
+    Fixed(ScheduleKind),
+    /// Online ε-greedy tuning over measured feedback.
+    Adaptive {
+        epsilon: f64,
+        min_samples: u32,
+        seed: u64,
+    },
+}
+
+impl SchedulePolicy {
+    /// The adaptive policy with default knobs.
+    pub fn adaptive() -> SchedulePolicy {
+        SchedulePolicy::Adaptive {
+            epsilon: DEFAULT_EPSILON,
+            min_samples: DEFAULT_MIN_SAMPLES,
+            seed: DEFAULT_SEED,
+        }
+    }
+}
+
+/// What cost sample each execution feeds back to the tuner.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CostFeedback {
+    /// Wall-clock seconds of execution (planning excluded: cache-miss
+    /// plan construction is one-time and would bias first samples).
+    #[default]
+    Measured,
+    /// The deterministic makespan proxy
+    /// ([`crate::balance::adaptive::proxy_cost`]) — bit-stable across
+    /// hosts and runs; used by convergence tests and the landscape bench.
+    Proxy,
+}
+
+/// Why a selection came out the way it did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// Cold start: shape prior used (no samples yet).
+    Prior,
+    /// Warmup or ε-branch: exploring a candidate.
+    Explore,
+    /// Steady state: EWMA argmin exploited.
+    Exploit,
+}
+
+/// The ε-greedy tuner (see module docs).
+pub struct ScheduleTuner {
+    history: PerfHistory,
+    epsilon: f64,
+    min_samples: u32,
+    rng: Mutex<Rng>,
+}
+
+impl ScheduleTuner {
+    pub fn new(epsilon: f64, min_samples: u32, seed: u64) -> Self {
+        ScheduleTuner {
+            history: PerfHistory::new(HISTORY_STRIPES, DEFAULT_ALPHA),
+            epsilon: epsilon.clamp(0.0, 1.0),
+            min_samples: min_samples.max(1),
+            rng: Mutex::new(Rng::new(seed)),
+        }
+    }
+
+    pub fn from_policy(policy: SchedulePolicy) -> Option<ScheduleTuner> {
+        match policy {
+            SchedulePolicy::Adaptive {
+                epsilon,
+                min_samples,
+                seed,
+            } => Some(ScheduleTuner::new(epsilon, min_samples, seed)),
+            _ => None,
+        }
+    }
+
+    pub fn history(&self) -> &PerfHistory {
+        &self.history
+    }
+
+    /// Choose a schedule for a fingerprint (see module docs for the
+    /// three-phase policy).
+    ///
+    /// `prior` is a thunk so callers don't pay its cost (row-stats scans
+    /// for SpMV priors) once the history has samples and the prior is
+    /// never consulted.
+    pub fn select(
+        &self,
+        fingerprint: u64,
+        workers: usize,
+        prior: impl FnOnce() -> ScheduleKind,
+    ) -> (ScheduleKind, Decision) {
+        // One snapshot of the candidate set (one stripe access per
+        // candidate); cold start, warmup target and EWMA argmin are all
+        // answered from it — this runs serially per problem on the
+        // engine's pre-dispatch path.
+        let estimates = self.history.snapshot(fingerprint, workers);
+        let no_samples = estimates
+            .iter()
+            .all(|(_, e)| e.map(|e| e.samples).unwrap_or(0) == 0);
+        if no_samples {
+            return (prior(), Decision::Prior);
+        }
+        if let Some(kind) = least_sampled_of(&estimates, self.min_samples) {
+            return (kind, Decision::Explore);
+        }
+        let mut rng = self.rng.lock().unwrap();
+        if rng.f64() < self.epsilon {
+            let kind = CANDIDATES[rng.below(CANDIDATES.len())];
+            return (kind, Decision::Explore);
+        }
+        drop(rng);
+        match best_of(&estimates, self.min_samples) {
+            Some(kind) => (kind, Decision::Exploit),
+            None => (prior(), Decision::Prior),
+        }
+    }
+
+    /// Feed back the cost of one execution.
+    pub fn record(&self, fingerprint: u64, kind: ScheduleKind, workers: usize, cost: f64) {
+        self.history.record(
+            PerfKey {
+                fingerprint,
+                schedule: kind,
+                workers,
+            },
+            cost,
+        );
+    }
+
+    /// Current converged pick for a fingerprint, if the history supports
+    /// one (exploit-only, no exploration draw).
+    pub fn best(&self, fingerprint: u64, workers: usize) -> Option<ScheduleKind> {
+        self.history.best(fingerprint, workers, self.min_samples)
+    }
+}
+
+/// Shape prior for the cold-start phase: the §4.5.2 α/β heuristic, refined
+/// by the roofline traffic model in the large-matrix regime the heuristic
+/// lumps into merge-path (§6.1.2's future-work direction); per-family
+/// defaults for the tile sets that carry no row statistics.
+pub fn cold_start_prior(problem: &Problem, plan_workers: usize) -> ScheduleKind {
+    match problem {
+        Problem::Spmv { matrix, .. } => {
+            let h = balance::select_schedule(matrix, balance::HeuristicParams::default());
+            if h == ScheduleKind::MergePath {
+                roofline::select_schedule_roofline(matrix, plan_workers)
+            } else {
+                h
+            }
+        }
+        Problem::Gemm { .. } => ScheduleKind::NonzeroSplit,
+        Problem::Frontier { .. } => ScheduleKind::MergePath,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FP: u64 = 0xF00D;
+    const W: usize = 64;
+
+    fn warmed_tuner(costs: &[(ScheduleKind, f64)]) -> ScheduleTuner {
+        let t = ScheduleTuner::new(0.1, 2, 42);
+        for &(kind, cost) in costs {
+            t.record(FP, kind, W, cost);
+            t.record(FP, kind, W, cost);
+        }
+        t
+    }
+
+    fn all_candidates_cost(best: ScheduleKind) -> Vec<(ScheduleKind, f64)> {
+        CANDIDATES
+            .iter()
+            .map(|&k| (k, if k == best { 1.0 } else { 10.0 }))
+            .collect()
+    }
+
+    #[test]
+    fn cold_start_returns_prior() {
+        let t = ScheduleTuner::new(0.5, 2, 7);
+        let (kind, decision) = t.select(FP, W, || ScheduleKind::GroupMapped(32));
+        assert_eq!(kind, ScheduleKind::GroupMapped(32));
+        assert_eq!(decision, Decision::Prior);
+    }
+
+    #[test]
+    fn warmup_forces_every_candidate() {
+        let t = ScheduleTuner::new(0.0, 2, 7);
+        t.record(FP, ScheduleKind::MergePath, W, 5.0);
+        let mut seen = Vec::new();
+        // Drive selection+record until warmup completes; every candidate
+        // must be visited min_samples times before any exploit happens.
+        for _ in 0..16 {
+            let (kind, decision) = t.select(FP, W, || ScheduleKind::MergePath);
+            if decision == Decision::Exploit {
+                break;
+            }
+            assert_eq!(decision, Decision::Explore);
+            seen.push(kind);
+            t.record(FP, kind, W, 5.0);
+        }
+        for &kind in &CANDIDATES {
+            assert!(
+                t.history().samples(&PerfKey {
+                    fingerprint: FP,
+                    schedule: kind,
+                    workers: W
+                }) >= 2,
+                "{kind:?} under-sampled after warmup: {seen:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn steady_state_exploits_argmin() {
+        let t = warmed_tuner(&all_candidates_cost(ScheduleKind::NonzeroSplit));
+        let mut exploits = 0;
+        let mut best_hits = 0;
+        for _ in 0..100 {
+            let (kind, decision) = t.select(FP, W, || ScheduleKind::MergePath);
+            if decision == Decision::Exploit {
+                exploits += 1;
+                assert_eq!(kind, ScheduleKind::NonzeroSplit);
+            }
+            if kind == ScheduleKind::NonzeroSplit {
+                best_hits += 1;
+            }
+        }
+        // ε = 0.1: the large majority of draws exploit the argmin.
+        assert!(exploits >= 70, "exploits={exploits}");
+        assert!(best_hits >= exploits);
+    }
+
+    #[test]
+    fn selection_trace_is_seed_deterministic() {
+        let mk = || warmed_tuner(&all_candidates_cost(ScheduleKind::ThreadMapped));
+        let (a, b) = (mk(), mk());
+        for _ in 0..200 {
+            assert_eq!(
+                a.select(FP, W, || ScheduleKind::MergePath),
+                b.select(FP, W, || ScheduleKind::MergePath)
+            );
+        }
+    }
+
+    #[test]
+    fn feedback_shifts_the_winner() {
+        let t = warmed_tuner(&all_candidates_cost(ScheduleKind::ThreadMapped));
+        assert_eq!(t.best(FP, W), Some(ScheduleKind::ThreadMapped));
+        // ThreadMapped degrades (e.g. the matrix stream got skewed): enough
+        // bad samples move the EWMA past MergePath's.
+        for _ in 0..20 {
+            t.record(FP, ScheduleKind::ThreadMapped, W, 100.0);
+        }
+        assert_ne!(t.best(FP, W), Some(ScheduleKind::ThreadMapped));
+    }
+}

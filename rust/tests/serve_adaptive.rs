@@ -1,0 +1,268 @@
+//! Adaptive schedule selection, end to end through the serve engine.
+//!
+//! A synthetic two-fingerprint landscape where the deterministic proxy
+//! meter makes `ThreadMapped` measurably best for one work source (a ring
+//! of 1-atom tiles) and `MergePath` for the other (a few huge tiles next
+//! to thousands of tiny ones).  The adaptive engine must converge to the
+//! per-fingerprint best for >= 90% of post-warmup executions, keep
+//! checksums bit-identical to every `Fixed` run across 1/2/4/8 threads
+//! (weights are 1.0, so all reductions are exact integer sums), replay the
+//! same schedule trace for the same seed at any thread count, and use the
+//! shape prior on a cold start.
+
+use std::sync::Arc;
+
+use gpulb::balance::adaptive::{proxy_cost, CANDIDATES};
+use gpulb::balance::{OffsetsSource, ScheduleKind, WorkSource};
+use gpulb::serve::{tuner, CostFeedback, Problem, SchedulePolicy, ServeConfig, ServeEngine};
+use gpulb::sparse::Csr;
+
+const PLAN_WORKERS: usize = 64;
+const SEED: u64 = 0xC0FFEE;
+
+fn adaptive_cfg(threads: usize) -> ServeConfig {
+    ServeConfig {
+        threads,
+        plan_workers: PLAN_WORKERS,
+        schedule: SchedulePolicy::Adaptive {
+            epsilon: 0.02,
+            min_samples: 2,
+            seed: SEED,
+        },
+        feedback: CostFeedback::Proxy,
+        cache_capacity: 1024,
+    }
+}
+
+fn fixed_cfg(threads: usize, kind: ScheduleKind) -> ServeConfig {
+    ServeConfig {
+        threads,
+        plan_workers: PLAN_WORKERS,
+        schedule: SchedulePolicy::Fixed(kind),
+        feedback: CostFeedback::Proxy,
+        cache_capacity: 1024,
+    }
+}
+
+/// Ring graph: every vertex has exactly one unit-weight neighbor — a
+/// perfectly uniform 1-atom-per-tile work source.
+fn ring_graph(n: usize) -> Arc<Csr> {
+    let offsets: Vec<usize> = (0..=n).collect();
+    let indices: Vec<u32> = (0..n).map(|v| ((v + 1) % n) as u32).collect();
+    let values = vec![1.0; n];
+    Arc::new(Csr::from_parts(n, n, offsets, indices, values).unwrap())
+}
+
+/// A few hub vertices with huge unit-weight neighbor lists next to a long
+/// tail of degree-1 vertices: the mixed-skew source merge-path wins.
+fn hub_tail_graph(hubs: usize, hub_degree: usize, tail: usize) -> Arc<Csr> {
+    let rows = hubs + tail;
+    let cols = hub_degree;
+    let mut offsets = Vec::with_capacity(rows + 1);
+    let mut indices = Vec::new();
+    offsets.push(0);
+    for r in 0..rows {
+        let len = if r < hubs { hub_degree } else { 1 };
+        for i in 0..len {
+            indices.push((i % cols) as u32);
+        }
+        offsets.push(indices.len());
+    }
+    let values = vec![1.0; indices.len()];
+    Arc::new(Csr::from_parts(rows, cols, offsets, indices, values).unwrap())
+}
+
+fn uniform_problem() -> Problem {
+    let graph = ring_graph(256);
+    let frontier: Vec<u32> = (0..graph.rows as u32).collect();
+    Problem::frontier(graph, frontier)
+}
+
+fn skewed_problem() -> Problem {
+    let graph = hub_tail_graph(4, 4096, 4096);
+    let frontier: Vec<u32> = (0..graph.rows as u32).collect();
+    Problem::frontier(graph, frontier)
+}
+
+fn problem_offsets(p: &Problem) -> Vec<usize> {
+    match p {
+        Problem::Frontier { offsets, .. } => offsets.as_ref().clone(),
+        _ => panic!("expected frontier problem"),
+    }
+}
+
+/// Proxy-cost argmin over the candidate set — the schedule a converged
+/// tuner must settle on.
+fn proxy_argmin(offsets: &[usize]) -> ScheduleKind {
+    let src = OffsetsSource::new(offsets);
+    let cost = |kind: ScheduleKind| {
+        let plan = kind.assign(&src, PLAN_WORKERS);
+        proxy_cost(kind, &plan, src.num_tiles(), src.num_atoms())
+    };
+    CANDIDATES
+        .iter()
+        .copied()
+        .min_by(|&a, &b| cost(a).total_cmp(&cost(b)))
+        .unwrap()
+}
+
+/// The mix: 4 copies of each problem, interleaved, so every batch gives
+/// the tuner several samples per fingerprint.
+fn two_fingerprint_mix() -> Vec<Problem> {
+    let (u, s) = (uniform_problem(), skewed_problem());
+    let mut mix = Vec::new();
+    for _ in 0..4 {
+        mix.push(u.clone());
+        mix.push(s.clone());
+    }
+    mix
+}
+
+#[test]
+fn landscape_has_distinct_per_fingerprint_winners() {
+    // The premise of every test below: the proxy meter separates the two
+    // fingerprints with different best schedules.
+    let u = proxy_argmin(&problem_offsets(&uniform_problem()));
+    let s = proxy_argmin(&problem_offsets(&skewed_problem()));
+    assert_eq!(u, ScheduleKind::ThreadMapped);
+    assert_eq!(s, ScheduleKind::MergePath);
+}
+
+#[test]
+fn adaptive_converges_to_per_fingerprint_best() {
+    let mix = two_fingerprint_mix();
+    let uniform_fp = mix[0].fingerprint();
+    let skewed_fp = mix[1].fingerprint();
+    assert_ne!(uniform_fp, skewed_fp);
+    let want_uniform = proxy_argmin(&problem_offsets(&mix[0]));
+    let want_skewed = proxy_argmin(&problem_offsets(&mix[1]));
+
+    let engine = ServeEngine::new(adaptive_cfg(2));
+    // Warmup: cold-start prior + forced exploration of all candidates
+    // (4 candidates x min_samples 2 = 8 selections per fingerprint; the
+    // mix supplies 4 per batch).
+    for _ in 0..5 {
+        engine.execute_batch(&mix);
+    }
+    // Post-warmup window.
+    let (mut best_hits, mut total, mut exploits, mut adaptive) = (0usize, 0usize, 0u64, 0u64);
+    for _ in 0..10 {
+        let report = engine.execute_batch(&mix);
+        exploits += report.tuner.exploits;
+        adaptive += report.tuner.adaptive;
+        for (p, &kind) in mix.iter().zip(&report.schedules) {
+            let want = if p.fingerprint() == uniform_fp {
+                want_uniform
+            } else {
+                want_skewed
+            };
+            total += 1;
+            if kind == want {
+                best_hits += 1;
+            }
+        }
+    }
+    let fraction = best_hits as f64 / total as f64;
+    assert!(
+        fraction >= 0.9,
+        "converged to per-fingerprint best for only {:.0}% of {} executions",
+        fraction * 100.0,
+        total
+    );
+    assert!(
+        exploits as f64 / adaptive as f64 >= 0.9,
+        "exploit fraction {exploits}/{adaptive}"
+    );
+}
+
+#[test]
+fn adaptive_checksums_bit_identical_to_fixed_across_thread_counts() {
+    let mix = two_fingerprint_mix();
+    // Reference: Fixed(ThreadMapped) at 1 thread.
+    let reference = ServeEngine::new(fixed_cfg(1, ScheduleKind::ThreadMapped))
+        .execute_batch(&mix)
+        .checksums;
+    for threads in [1usize, 2, 4, 8] {
+        for &kind in &CANDIDATES {
+            let report = ServeEngine::new(fixed_cfg(threads, kind)).execute_batch(&mix);
+            assert_eq!(
+                report.checksums, reference,
+                "Fixed({kind:?}) at {threads} threads changed numerics"
+            );
+        }
+        let engine = ServeEngine::new(adaptive_cfg(threads));
+        for round in 0..12 {
+            let report = engine.execute_batch(&mix);
+            assert_eq!(
+                report.checksums, reference,
+                "adaptive at {threads} threads diverged in round {round}"
+            );
+        }
+    }
+}
+
+#[test]
+fn adaptive_trace_is_deterministic_across_seeds_and_threads() {
+    let mix = two_fingerprint_mix();
+    let collect_traces = |threads: usize| -> Vec<Vec<ScheduleKind>> {
+        let engine = ServeEngine::new(adaptive_cfg(threads));
+        (0..10)
+            .map(|_| engine.execute_batch(&mix).schedules)
+            .collect()
+    };
+    let base = collect_traces(1);
+    assert_eq!(base, collect_traces(1), "same seed must replay the trace");
+    assert_eq!(
+        base,
+        collect_traces(4),
+        "thread count must not affect selection"
+    );
+    // A different seed is allowed to explore differently — but only after
+    // the deterministic cold-start + warmup phases.
+    let other_cfg = ServeConfig {
+        schedule: SchedulePolicy::Adaptive {
+            epsilon: 0.02,
+            min_samples: 2,
+            seed: SEED + 1,
+        },
+        ..adaptive_cfg(1)
+    };
+    let other_engine = ServeEngine::new(other_cfg);
+    let other: Vec<Vec<ScheduleKind>> = (0..10)
+        .map(|_| other_engine.execute_batch(&mix).schedules)
+        .collect();
+    assert_eq!(base[0], other[0], "cold start is seed-independent");
+}
+
+#[test]
+fn cold_start_uses_shape_prior() {
+    let mix = two_fingerprint_mix();
+    let engine = ServeEngine::new(adaptive_cfg(1));
+    let report = engine.execute_batch(&mix);
+    assert_eq!(report.tuner.priors, mix.len() as u64);
+    assert_eq!(report.tuner.exploits, 0);
+    for (p, &kind) in mix.iter().zip(&report.schedules) {
+        assert_eq!(
+            kind,
+            tuner::cold_start_prior(p, PLAN_WORKERS),
+            "cold start must use the shape prior"
+        );
+    }
+    // Frontier problems' prior is merge-path (the most skew-tolerant).
+    assert!(report
+        .schedules
+        .iter()
+        .all(|&k| k == ScheduleKind::MergePath));
+}
+
+#[test]
+fn spmv_cold_start_prior_follows_heuristic() {
+    use gpulb::sparse::gen;
+    // Small regular matrix: §4.5.2 picks thread-mapped; the adaptive
+    // engine's first selection must match.
+    let problem = Problem::spmv(Arc::new(gen::uniform(100, 100, 4, 2)));
+    let engine = ServeEngine::new(adaptive_cfg(1));
+    let report = engine.execute_batch(std::slice::from_ref(&problem));
+    assert_eq!(report.schedules, vec![problem.static_schedule()]);
+    assert_eq!(report.tuner.priors, 1);
+}
