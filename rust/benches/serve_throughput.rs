@@ -2,17 +2,27 @@
 //! the heterogeneous corpus mix executed at 1, 2, 4 and 8 worker threads,
 //! written to `BENCH_serve.json` (the CI bench artifact).
 //!
+//! `cargo bench --bench serve_throughput -- single-large` runs the
+//! single-large-problem mode instead: one SpMV with >= 1M nonzeros, the
+//! case intra-problem worker-shard splitting exists for, written to
+//! `BENCH_serve_single.json`.
+//!
 //! Checksums are asserted equal across thread counts, so every run doubles
-//! as a concurrency correctness check of the pool + plan cache.
+//! as a concurrency correctness check of the pool + plan cache + two-phase
+//! shard reduction.
 
 use gpulb::serve;
 
 fn main() {
-    let scale: usize = std::env::args()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(1);
+    let arg = std::env::args().nth(1).unwrap_or_default();
     let batches = 2usize;
+    if arg == "single-large" {
+        let out = "BENCH_serve_single.json";
+        let speedup = serve::run_single_large_bench(&[1, 2, 4, 8], batches, out).unwrap();
+        println!("# single-large 8-vs-1 thread speedup: x{speedup:.2}");
+        return;
+    }
+    let scale: usize = arg.parse().ok().unwrap_or(1);
     let mix = serve::corpus_mix(scale);
     println!(
         "# serve throughput — {} problems/batch (scale {scale}), {batches} batches per point",

@@ -210,14 +210,41 @@ pub fn proxy_cost(kind: ScheduleKind, asg: &Assignment, tiles: usize, atoms: usi
         }
         makespan = makespan.max(steps);
     }
-    let setup = match kind {
+    setup_cost(kind, tiles, atoms) + makespan as f64
+}
+
+/// [`proxy_cost`] computed from a streaming descriptor, allocation-free:
+/// bit-identical to the materialized value by stream/materialized
+/// equivalence (same workers, same segments, same integer arithmetic) —
+/// the property `stream_proxy_matches_materialized` pins.
+pub fn proxy_cost_stream(
+    desc: &super::stream::ScheduleDescriptor,
+    offsets: &[usize],
+    tiles: usize,
+    atoms: usize,
+) -> f64 {
+    let g = desc.granularity().threads().max(1) as u64;
+    let mut makespan: u64 = 0;
+    for w in 0..desc.workers() {
+        let mut steps: u64 = 0;
+        for s in super::stream::worker_segments(*desc, offsets, w) {
+            steps += SEG_OVERHEAD + (s.len() as u64).div_ceil(g);
+        }
+        makespan = makespan.max(steps);
+    }
+    setup_cost(desc.kind(), tiles, atoms) + makespan as f64
+}
+
+/// Per-schedule setup charge mirroring each schedule's search cost (see
+/// [`proxy_cost`]).
+fn setup_cost(kind: ScheduleKind, tiles: usize, atoms: usize) -> f64 {
+    match kind {
         ScheduleKind::ThreadMapped => 0.0,
         ScheduleKind::GroupMapped(_) => 4.0,
         ScheduleKind::MergePath => 2.0 * ((tiles + atoms) as f64 + 1.0).log2(),
         ScheduleKind::NonzeroSplit => (tiles as f64 + 1.0).log2(),
         ScheduleKind::Binning | ScheduleKind::Lrb => 8.0 + (tiles as f64 + 1.0).log2(),
-    };
-    setup + makespan as f64
+    }
 }
 
 #[cfg(test)]
@@ -348,6 +375,36 @@ mod tests {
             .unwrap()
             .0;
         assert_eq!(best, ScheduleKind::MergePath, "{costs:?}");
+    }
+
+    #[test]
+    fn stream_proxy_matches_materialized() {
+        // The landscape gate's metric must not move when planning goes
+        // lazy: the stream proxy is bit-equal to the materialized one.
+        use crate::balance::stream::ScheduleDescriptor;
+        let cases: Vec<Vec<usize>> = vec![
+            vec![0],
+            vec![0, 0, 7, 7, 200, 201],
+            (0..=256).collect(),
+            crate::balance::prefix::exclusive(&{
+                let mut lens = vec![4096usize; 3];
+                lens.resize(3 + 1000, 2);
+                lens
+            }),
+        ];
+        for offsets in &cases {
+            let src = OffsetsSource::new(offsets);
+            for &kind in &CANDIDATES {
+                for workers in [1usize, 8, 64, 300] {
+                    let desc = ScheduleDescriptor::new(kind, &src, workers).unwrap();
+                    let asg = kind.assign(&src, workers);
+                    let a = proxy_cost(kind, &asg, src.num_tiles(), src.num_atoms());
+                    let b =
+                        proxy_cost_stream(&desc, offsets, src.num_tiles(), src.num_atoms());
+                    assert_eq!(a.to_bits(), b.to_bits(), "{kind:?} x{workers}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -33,30 +33,45 @@ pub fn assign(src: &impl WorkSource, workers: usize) -> Assignment {
     let offsets = src.offsets();
     let tiles = src.num_tiles();
 
-    let mut block_bin = Vec::new();
-    let mut warp_bin = Vec::new();
-    let mut thread_bin = Vec::new();
-    for t in 0..tiles {
+    // Flat counting sort into one buffer (counts → prefix → scatter):
+    // one allocation for all three bins instead of three growable Vecs —
+    // §Perf, O(1) allocations per plan.
+    let bin_of = |t: usize| -> usize {
         let n = offsets[t + 1] - offsets[t];
         if n >= BLOCK_THREADS as usize {
-            block_bin.push(t);
+            0
         } else if n >= WARP_THREADS as usize {
-            warp_bin.push(t);
+            1
         } else {
-            thread_bin.push(t);
+            2
         }
+    };
+    let mut counts = [0usize; 3];
+    for t in 0..tiles {
+        counts[bin_of(t)] += 1;
     }
+    let bounds = [0, counts[0], counts[0] + counts[1], tiles];
+    let mut cursor = [bounds[0], bounds[1], bounds[2]];
+    let mut flat = vec![0usize; tiles];
+    for t in 0..tiles {
+        let b = bin_of(t);
+        flat[cursor[b]] = t;
+        cursor[b] += 1;
+    }
+    let block_bin = &flat[bounds[0]..bounds[1]];
+    let warp_bin = &flat[bounds[1]..bounds[2]];
+    let thread_bin = &flat[bounds[2]..bounds[3]];
 
     let mut out = Vec::new();
     // Block bin: one block per tile (all threads cooperate).
-    for &t in &block_bin {
+    for &t in block_bin {
         out.push(WorkerAssignment {
             granularity: Granularity::Group(BLOCK_THREADS),
             segments: vec![seg(offsets, t)],
         });
     }
     // Warp bin: one warp per tile.
-    for &t in &warp_bin {
+    for &t in warp_bin {
         out.push(WorkerAssignment {
             granularity: Granularity::Group(WARP_THREADS),
             segments: vec![seg(offsets, t)],
@@ -96,9 +111,9 @@ pub fn assign_lrb(src: &impl WorkSource, workers: usize) -> Assignment {
     let offsets = src.offsets();
     let tiles = src.num_tiles();
 
-    // Two-pass histogram (the paper's atomic counting pass followed by the
-    // placement pass): count bin sizes first so every bin is allocated
-    // exactly once — §Perf, removes the Vec-growth copies on the hot path.
+    // Flat counting sort (the paper's atomic counting pass followed by
+    // the placement pass): counts → prefix → scatter into one buffer —
+    // §Perf, one allocation for all 32 bins instead of a Vec per bin.
     let bin_of = |t: usize| -> usize {
         let n = offsets[t + 1] - offsets[t];
         let b = if n <= 1 {
@@ -108,19 +123,26 @@ pub fn assign_lrb(src: &impl WorkSource, workers: usize) -> Assignment {
         };
         b.min(LRB_BINS - 1)
     };
-    let mut counts = [0usize; LRB_BINS];
+    let mut bin_offsets = [0usize; LRB_BINS + 1];
     for t in 0..tiles {
-        counts[bin_of(t)] += 1;
+        bin_offsets[bin_of(t) + 1] += 1;
     }
-    let mut bins: Vec<Vec<usize>> = counts.iter().map(|&c| Vec::with_capacity(c)).collect();
+    for b in 0..LRB_BINS {
+        bin_offsets[b + 1] += bin_offsets[b];
+    }
+    let mut cursor = bin_offsets;
+    let mut flat = vec![0usize; tiles];
     for t in 0..tiles {
-        bins[bin_of(t)].push(t);
+        let b = bin_of(t);
+        flat[cursor[b]] = t;
+        cursor[b] += 1;
     }
 
     let mut out = Vec::new();
     // Process from the heaviest bin down (reorder-without-sort property).
     for b in (0..LRB_BINS).rev() {
-        if bins[b].is_empty() {
+        let bin = &flat[bin_offsets[b]..bin_offsets[b + 1]];
+        if bin.is_empty() {
             continue;
         }
         let work_hi = 1usize << b; // bin holds tiles with work in (2^(b-1), 2^b]
@@ -135,7 +157,6 @@ pub fn assign_lrb(src: &impl WorkSource, workers: usize) -> Assignment {
             Granularity::Thread => {
                 // Strided across the worker budget: P-modulo assignment
                 // (indexed stride — §Perf).
-                let bin = &bins[b];
                 let tworkers = workers.max(1).min(bin.len());
                 for w in 0..tworkers {
                     let mut segments = Vec::with_capacity(bin.len().div_ceil(tworkers));
@@ -151,7 +172,7 @@ pub fn assign_lrb(src: &impl WorkSource, workers: usize) -> Assignment {
                 }
             }
             _ => {
-                for &t in &bins[b] {
+                for &t in bin {
                     out.push(WorkerAssignment {
                         granularity: gran,
                         segments: vec![seg(offsets, t)],

@@ -11,45 +11,20 @@
 //! per (tile, group) pair and the simulator charges the prefix-sum +
 //! search overhead.
 
-use super::{Assignment, Granularity, Segment, WorkSource, WorkerAssignment};
+use super::stream::{self, ScheduleDescriptor};
+use super::{Assignment, WorkSource};
 
-/// Assign an even share of tiles to each of `groups` groups of `g` threads.
+/// Assign an even share of tiles to each of `groups` groups of `g`
+/// threads — the `collect()` of the lazy per-worker streams (see
+/// [`crate::balance::stream`]).
 pub fn assign(src: &impl WorkSource, groups: usize, g: u32) -> Assignment {
-    let offsets = src.offsets();
-    let tiles = src.num_tiles();
-    let groups = groups.max(1);
-    let per_group = tiles.div_ceil(groups.max(1)).max(1);
-    let mut workers = Vec::new();
-    let mut start = 0usize;
-    while start < tiles {
-        let end = (start + per_group).min(tiles);
-        let segments = (start..end)
-            .map(|t| Segment {
-                tile: t as u32,
-                atom_begin: offsets[t],
-                atom_end: offsets[t + 1],
-            })
-            .collect();
-        workers.push(WorkerAssignment {
-            granularity: Granularity::Group(g),
-            segments,
-        });
-        start = end;
-    }
-    Assignment {
-        schedule: if g == 32 {
-            "warp-mapped"
-        } else {
-            "group-mapped"
-        },
-        workers,
-    }
+    stream::materialize(ScheduleDescriptor::group_mapped(src, groups, g), src)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::balance::OffsetsSource;
+    use crate::balance::{Granularity, OffsetsSource};
     use crate::sparse::gen;
 
     #[test]

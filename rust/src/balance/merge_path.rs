@@ -7,64 +7,15 @@
 //! and then consumes complete and partial rows, carrying out a fix-up for
 //! the row it splits with its successor.
 
-use super::search::merge_path_search;
-use super::{Assignment, Granularity, Segment, WorkSource, WorkerAssignment};
+use super::stream::{self, ScheduleDescriptor};
+use super::{Assignment, WorkSource};
 
-/// Even split of (tiles + atoms) merge-path work over `workers` threads.
+/// Even split of (tiles + atoms) merge-path work over `workers` threads —
+/// the `collect()` of the lazy per-worker streams: each worker runs the
+/// 2-D diagonal search for its own boundaries and walks its rows (see
+/// [`crate::balance::stream`]).
 pub fn assign(src: &impl WorkSource, workers: usize) -> Assignment {
-    let offsets = src.offsets();
-    let tiles = src.num_tiles();
-    let atoms = src.num_atoms();
-    let total = tiles + atoms;
-    let workers_n = workers.max(1);
-    let per = total.div_ceil(workers_n.max(1));
-
-    let mut out = Vec::with_capacity(workers_n);
-    let mut prev = merge_path_search(offsets, 0);
-    for w in 0..workers_n {
-        let d_end = ((w + 1) * per).min(total);
-        let (row_end, atom_end) = merge_path_search(offsets, d_end);
-        let (row_start, atom_start) = prev;
-
-        // Exact capacity: one segment per row touched (§Perf — avoids the
-        // per-worker Vec growth reallocations on the assignment hot path).
-        let mut segments = Vec::with_capacity(row_end.saturating_sub(row_start) + 1);
-        if atom_end > atom_start {
-            // Walk rows [row_start, row_end]; atoms consumed in this span.
-            let mut cursor = atom_start;
-            let mut row = row_start.min(tiles.saturating_sub(1));
-            // The starting row is the row containing `atom_start` (the path
-            // may have consumed row-ends past it only when those rows are
-            // complete).
-            while cursor < atom_end {
-                // Find the row owning `cursor`: rows advance while their end
-                // offset <= cursor.
-                while row + 1 <= tiles && offsets[row + 1] <= cursor {
-                    row += 1;
-                }
-                let seg_end = atom_end.min(offsets[row + 1]);
-                segments.push(Segment {
-                    tile: row as u32,
-                    atom_begin: cursor,
-                    atom_end: seg_end,
-                });
-                cursor = seg_end;
-            }
-        }
-        out.push(WorkerAssignment {
-            granularity: Granularity::Thread,
-            segments,
-        });
-        prev = (row_end, atom_end);
-        if d_end == total {
-            break;
-        }
-    }
-
-    Assignment {
-        schedule: "merge-path",
-        workers: out,
-    }
+    stream::materialize(ScheduleDescriptor::merge_path(src, workers), src)
 }
 
 /// Work per worker in merge-path units (rows + atoms touched) — used by the

@@ -27,9 +27,11 @@ pub mod queue;
 pub mod roofline;
 pub mod search;
 pub mod sorting;
+pub mod stream;
 pub mod thread_mapped;
 
 pub use heuristic::{select_schedule, HeuristicParams};
+pub use stream::ScheduleDescriptor;
 
 use crate::sparse::Csr;
 
@@ -224,6 +226,17 @@ impl ScheduleKind {
             ScheduleKind::Binning => binning::assign(src, workers),
             ScheduleKind::Lrb => binning::assign_lrb(src, workers),
         }
+    }
+
+    /// O(1) streaming descriptor of this schedule's plan, when the
+    /// schedule is streaming-capable (everything but Binning/LRB — see
+    /// [`stream::ScheduleDescriptor::new`]).
+    pub fn descriptor(
+        self,
+        src: &impl WorkSource,
+        workers: usize,
+    ) -> Option<stream::ScheduleDescriptor> {
+        stream::ScheduleDescriptor::new(self, src, workers)
     }
 }
 

@@ -7,51 +7,14 @@
 //! Cheaper setup than merge-path; slightly worse balance when rows are tiny
 //! (row epilogues aren't accounted).
 
-use super::search::tile_of_atom;
-use super::{Assignment, Granularity, Segment, WorkSource, WorkerAssignment};
+use super::stream::{self, ScheduleDescriptor};
+use super::{Assignment, WorkSource};
 
-/// Even split of atoms over `workers` threads.
+/// Even split of atoms over `workers` threads — the `collect()` of the
+/// lazy per-worker streams: each worker lower-bounds its starting tile
+/// from its atom range and walks forward (see [`crate::balance::stream`]).
 pub fn assign(src: &impl WorkSource, workers: usize) -> Assignment {
-    let offsets = src.offsets();
-    let atoms = src.num_atoms();
-    let tiles = src.num_tiles();
-    let workers_n = workers.max(1);
-    let per = atoms.div_ceil(workers_n.max(1)).max(1);
-
-    let mut out = Vec::with_capacity(workers_n);
-    for w in 0..workers_n {
-        let begin = (w * per).min(atoms);
-        let end = ((w + 1) * per).min(atoms);
-        let mut segments = Vec::new();
-        if begin < end {
-            let mut cursor = begin;
-            let mut row = tile_of_atom(offsets, cursor);
-            while cursor < end {
-                while row + 1 <= tiles && offsets[row + 1] <= cursor {
-                    row += 1;
-                }
-                let seg_end = end.min(offsets[row + 1]);
-                segments.push(Segment {
-                    tile: row as u32,
-                    atom_begin: cursor,
-                    atom_end: seg_end,
-                });
-                cursor = seg_end;
-            }
-        }
-        out.push(WorkerAssignment {
-            granularity: Granularity::Thread,
-            segments,
-        });
-        if end == atoms {
-            break;
-        }
-    }
-
-    Assignment {
-        schedule: "nonzero-split",
-        workers: out,
-    }
+    stream::materialize(ScheduleDescriptor::nonzero_split(src, workers), src)
 }
 
 #[cfg(test)]

@@ -17,11 +17,52 @@ pub fn sort_tiles_by_work_desc(src: &impl WorkSource) -> Vec<u32> {
     perm
 }
 
+/// Row bundles as a flat view: the heaviest-first tile permutation in one
+/// array, chunked into fixed-size bundles — one allocation instead of a
+/// `Vec` per bundle (§Perf), with each bundle borrowed as a slice.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RowBundles {
+    /// The full permutation, bundle-major (bundle `i` occupies
+    /// `[i·bundle, (i+1)·bundle) ∩ [0, tiles)`).
+    flat: Vec<u32>,
+    bundle: usize,
+}
+
+impl RowBundles {
+    /// Number of bundles.
+    pub fn len(&self) -> usize {
+        self.flat.len().div_ceil(self.bundle)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.flat.is_empty()
+    }
+
+    /// Total tiles across all bundles.
+    pub fn tiles(&self) -> usize {
+        self.flat.len()
+    }
+
+    /// Bundle `i` as a borrowed slice of tile ids.
+    pub fn get(&self, i: usize) -> &[u32] {
+        let lo = i * self.bundle;
+        let hi = ((i + 1) * self.bundle).min(self.flat.len());
+        &self.flat[lo..hi]
+    }
+
+    /// Iterate bundles as borrowed slices.
+    pub fn iter(&self) -> impl Iterator<Item = &[u32]> {
+        self.flat.chunks(self.bundle)
+    }
+}
+
 /// Bundle sorted tiles into groups of `bundle` with similar row lengths
-/// (Gale et al.'s row bundles for SpMM).
-pub fn row_bundles(src: &impl WorkSource, bundle: usize) -> Vec<Vec<u32>> {
-    let perm = sort_tiles_by_work_desc(src);
-    perm.chunks(bundle.max(1)).map(|c| c.to_vec()).collect()
+/// (Gale et al.'s row bundles for SpMM), as a flat borrowed view.
+pub fn row_bundles(src: &impl WorkSource, bundle: usize) -> RowBundles {
+    RowBundles {
+        flat: sort_tiles_by_work_desc(src),
+        bundle: bundle.max(1),
+    }
 }
 
 #[cfg(test)]
@@ -51,11 +92,35 @@ mod tests {
     fn bundles_group_like_sizes() {
         let a = gen::power_law(256, 256, 128, 1.7, 31);
         let bundles = row_bundles(&a, 32);
-        assert_eq!(bundles.iter().map(Vec::len).sum::<usize>(), 256);
+        assert_eq!(bundles.tiles(), 256);
+        assert_eq!(bundles.len(), 8);
+        assert_eq!(bundles.iter().map(|b| b.len()).sum::<usize>(), 256);
         // Monotone: first tile of each bundle no lighter than the next's.
         let len = |t: u32| a.row_nnz(t as usize);
-        for pair in bundles.windows(2) {
-            assert!(len(pair[0][0]) >= len(pair[1][0]));
+        let firsts: Vec<u32> = bundles.iter().map(|b| b[0]).collect();
+        for pair in firsts.windows(2) {
+            assert!(len(pair[0]) >= len(pair[1]));
         }
+    }
+
+    #[test]
+    fn ragged_last_bundle_and_indexing() {
+        let offs: Vec<usize> = (0..=10).collect(); // 10 tiles, 1 atom each
+        let src = OffsetsSource::new(&offs);
+        let bundles = row_bundles(&src, 4);
+        assert_eq!(bundles.len(), 3);
+        assert_eq!(bundles.get(0).len(), 4);
+        assert_eq!(bundles.get(2).len(), 2);
+        assert!(!bundles.is_empty());
+    }
+
+    #[test]
+    fn empty_source_has_no_bundles() {
+        let offs = vec![0usize];
+        let src = OffsetsSource::new(&offs);
+        let bundles = row_bundles(&src, 8);
+        assert_eq!(bundles.len(), 0);
+        assert!(bundles.is_empty());
+        assert_eq!(bundles.iter().count(), 0);
     }
 }

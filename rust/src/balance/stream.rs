@@ -1,0 +1,399 @@
+//! Zero-materialization schedule streams — the paper's *ranged iterator*
+//! view (§4.2) realized on the host: a [`ScheduleDescriptor`] is an O(1),
+//! `Copy`-able summary of a plan, and [`worker_segments`] reconstructs any
+//! worker's segment list lazily from it with O(1) state (a binary search
+//! at construction, then a linear walk) — exactly how a GPU thread
+//! computes its merge-path / even-split coordinates on the fly instead of
+//! reading a materialized work list.
+//!
+//! The materialized [`Assignment`] path is re-expressed as `collect()` of
+//! these streams ([`materialize`]), so the two views are equal by
+//! construction: `worker_segments(desc, offsets, w)` yields exactly
+//! `materialize(desc, src).workers[w].segments`.  That equivalence (and
+//! the exact-cover invariant on the streams themselves) is pinned by
+//! `tests/stream_schedules.rs` across schedules and source shapes.
+//!
+//! Binning/LRB are *not* streaming-capable: their tile reorder is a
+//! function of the whole offsets array, so they stay materialized
+//! ([`ScheduleDescriptor::new`] returns `None` and callers fall back to
+//! [`ScheduleKind::assign`]).
+
+use super::search::{merge_path_search, tile_of_atom};
+use super::{Assignment, Granularity, ScheduleKind, Segment, WorkSource, WorkerAssignment};
+
+/// O(1) descriptor of a streaming-capable schedule's plan: everything a
+/// worker needs to compute its own segments at execution time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ScheduleDescriptor {
+    /// Grid-stride tiles (§4.3.2): worker `w` owns tiles `w, w+T, w+2T, …`.
+    ThreadMapped { tiles: usize, threads: usize },
+    /// Contiguous tile shares (§4.4.2.2): worker `w` owns
+    /// `[w·per_group, (w+1)·per_group) ∩ [0, tiles)`.
+    GroupMapped {
+        tiles: usize,
+        per_group: usize,
+        group: u32,
+    },
+    /// Even (tiles + atoms) split (§4.4.2.1): worker `w` binary-searches
+    /// the 2-D diagonals `w·per_diag` and `(w+1)·per_diag`.
+    MergePath {
+        tiles: usize,
+        atoms: usize,
+        per_diag: usize,
+    },
+    /// Even atom split (Stream-K / nonzero splitting): worker `w`
+    /// lower-bounds its starting tile from its atom range.
+    NonzeroSplit { atoms: usize, per_worker: usize },
+}
+
+impl ScheduleDescriptor {
+    /// Descriptor for `kind` over `src` at `workers` parallel workers, or
+    /// `None` when the schedule is not streaming-capable (Binning/LRB).
+    pub fn new(kind: ScheduleKind, src: &impl WorkSource, workers: usize) -> Option<Self> {
+        Some(match kind {
+            ScheduleKind::ThreadMapped => Self::thread_mapped(src, workers),
+            ScheduleKind::GroupMapped(g) => Self::group_mapped(src, workers, g),
+            ScheduleKind::MergePath => Self::merge_path(src, workers),
+            ScheduleKind::NonzeroSplit => Self::nonzero_split(src, workers),
+            ScheduleKind::Binning | ScheduleKind::Lrb => return None,
+        })
+    }
+
+    pub fn thread_mapped(src: &impl WorkSource, threads: usize) -> Self {
+        ScheduleDescriptor::ThreadMapped {
+            tiles: src.num_tiles(),
+            threads: threads.max(1),
+        }
+    }
+
+    pub fn group_mapped(src: &impl WorkSource, groups: usize, g: u32) -> Self {
+        let tiles = src.num_tiles();
+        ScheduleDescriptor::GroupMapped {
+            tiles,
+            per_group: tiles.div_ceil(groups.max(1)).max(1),
+            group: g,
+        }
+    }
+
+    pub fn merge_path(src: &impl WorkSource, workers: usize) -> Self {
+        let (tiles, atoms) = (src.num_tiles(), src.num_atoms());
+        ScheduleDescriptor::MergePath {
+            tiles,
+            atoms,
+            per_diag: (tiles + atoms).div_ceil(workers.max(1)),
+        }
+    }
+
+    pub fn nonzero_split(src: &impl WorkSource, workers: usize) -> Self {
+        let atoms = src.num_atoms();
+        ScheduleDescriptor::NonzeroSplit {
+            atoms,
+            per_worker: atoms.div_ceil(workers.max(1)).max(1),
+        }
+    }
+
+    /// Number of workers the plan creates — what
+    /// `Assignment::workers.len()` reports after materialization.
+    pub fn workers(self) -> usize {
+        match self {
+            Self::ThreadMapped { tiles, threads } => threads.min(tiles.max(1)),
+            Self::GroupMapped {
+                tiles, per_group, ..
+            } => tiles.div_ceil(per_group),
+            Self::MergePath {
+                tiles,
+                atoms,
+                per_diag,
+            } => {
+                let total = tiles + atoms;
+                if total == 0 {
+                    1
+                } else {
+                    total.div_ceil(per_diag)
+                }
+            }
+            Self::NonzeroSplit { atoms, per_worker } => {
+                if atoms == 0 {
+                    1
+                } else {
+                    atoms.div_ceil(per_worker)
+                }
+            }
+        }
+    }
+
+    /// Compute perspective every worker of this plan occupies.
+    pub fn granularity(self) -> Granularity {
+        match self {
+            Self::GroupMapped { group, .. } => Granularity::Group(group),
+            _ => Granularity::Thread,
+        }
+    }
+
+    /// The schedule this descriptor was built from.
+    pub fn kind(self) -> ScheduleKind {
+        match self {
+            Self::ThreadMapped { .. } => ScheduleKind::ThreadMapped,
+            Self::GroupMapped { group, .. } => ScheduleKind::GroupMapped(group),
+            Self::MergePath { .. } => ScheduleKind::MergePath,
+            Self::NonzeroSplit { .. } => ScheduleKind::NonzeroSplit,
+        }
+    }
+
+    /// Human-readable schedule name (matches the materialized
+    /// `Assignment::schedule`).
+    pub fn name(self) -> &'static str {
+        self.kind().name()
+    }
+}
+
+/// Lazy segment stream for one worker: O(1) state, no allocation.
+#[derive(Debug, Clone)]
+pub struct SegmentIter<'a> {
+    offsets: &'a [usize],
+    state: IterState,
+}
+
+#[derive(Debug, Clone)]
+enum IterState {
+    /// Strided tile walk: one segment per owned tile (thread-mapped uses
+    /// stride = thread count; group-mapped stride 1 over its share).
+    Tiles {
+        next: usize,
+        stride: usize,
+        end: usize,
+    },
+    /// Atom-range walk (merge-path / nonzero-split): one segment per row
+    /// overlapped by `[cursor, end)`.
+    Atoms {
+        cursor: usize,
+        end: usize,
+        row: usize,
+    },
+    Done,
+}
+
+impl Iterator for SegmentIter<'_> {
+    type Item = Segment;
+
+    fn next(&mut self) -> Option<Segment> {
+        match &mut self.state {
+            IterState::Tiles { next, stride, end } => {
+                if *next >= *end {
+                    return None;
+                }
+                let t = *next;
+                *next += *stride;
+                Some(Segment {
+                    tile: t as u32,
+                    atom_begin: self.offsets[t],
+                    atom_end: self.offsets[t + 1],
+                })
+            }
+            IterState::Atoms { cursor, end, row } => {
+                if *cursor >= *end {
+                    return None;
+                }
+                // Advance to the row owning `cursor` (rows whose end
+                // offset is at or behind the cursor are complete).
+                while *row + 1 < self.offsets.len() && self.offsets[*row + 1] <= *cursor {
+                    *row += 1;
+                }
+                let seg_end = (*end).min(self.offsets[*row + 1]);
+                let s = Segment {
+                    tile: *row as u32,
+                    atom_begin: *cursor,
+                    atom_end: seg_end,
+                };
+                *cursor = seg_end;
+                Some(s)
+            }
+            IterState::Done => None,
+        }
+    }
+}
+
+/// Worker `w`'s lazy segment stream under `desc`.  `offsets` must be the
+/// prefix-sum array of the source the descriptor was built from.
+pub fn worker_segments(desc: ScheduleDescriptor, offsets: &[usize], w: usize) -> SegmentIter<'_> {
+    debug_assert!(w < desc.workers(), "worker {w} out of range");
+    let state = match desc {
+        ScheduleDescriptor::ThreadMapped { tiles, threads } => IterState::Tiles {
+            next: w,
+            stride: threads,
+            end: tiles,
+        },
+        ScheduleDescriptor::GroupMapped {
+            tiles, per_group, ..
+        } => IterState::Tiles {
+            next: (w * per_group).min(tiles),
+            stride: 1,
+            end: ((w + 1) * per_group).min(tiles),
+        },
+        ScheduleDescriptor::MergePath {
+            tiles,
+            atoms,
+            per_diag,
+        } => {
+            let total = tiles + atoms;
+            let d0 = (w * per_diag).min(total);
+            let d1 = ((w + 1) * per_diag).min(total);
+            let (row_start, atom_start) = merge_path_search(offsets, d0);
+            let (_, atom_end) = merge_path_search(offsets, d1);
+            if atom_end > atom_start {
+                IterState::Atoms {
+                    cursor: atom_start,
+                    end: atom_end,
+                    row: row_start.min(tiles.saturating_sub(1)),
+                }
+            } else {
+                IterState::Done
+            }
+        }
+        ScheduleDescriptor::NonzeroSplit { atoms, per_worker } => {
+            let begin = (w * per_worker).min(atoms);
+            let end = ((w + 1) * per_worker).min(atoms);
+            if begin < end {
+                IterState::Atoms {
+                    cursor: begin,
+                    end,
+                    row: tile_of_atom(offsets, begin),
+                }
+            } else {
+                IterState::Done
+            }
+        }
+    };
+    SegmentIter { offsets, state }
+}
+
+/// Visit every segment of `desc` in worker order — the sequential
+/// reference order — without materializing anything.
+pub fn for_each_segment(desc: ScheduleDescriptor, offsets: &[usize], mut f: impl FnMut(Segment)) {
+    for w in 0..desc.workers() {
+        for s in worker_segments(desc, offsets, w) {
+            f(s);
+        }
+    }
+}
+
+/// Materialize the full [`Assignment`] by collecting every worker's
+/// stream — the definition of stream/materialized equivalence, and what
+/// the four streaming schedules' `assign` functions now do.
+pub fn materialize(desc: ScheduleDescriptor, src: &impl WorkSource) -> Assignment {
+    let offsets = src.offsets();
+    let workers = (0..desc.workers())
+        .map(|w| WorkerAssignment {
+            granularity: desc.granularity(),
+            segments: worker_segments(desc, offsets, w).collect(),
+        })
+        .collect();
+    Assignment {
+        schedule: desc.name(),
+        workers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balance::OffsetsSource;
+
+    const STREAMING: [ScheduleKind; 4] = [
+        ScheduleKind::ThreadMapped,
+        ScheduleKind::GroupMapped(32),
+        ScheduleKind::MergePath,
+        ScheduleKind::NonzeroSplit,
+    ];
+
+    #[test]
+    fn descriptor_is_small_and_copy() {
+        // The whole point: a plan-cache entry is a few words, not O(nnz).
+        assert!(std::mem::size_of::<ScheduleDescriptor>() <= 32);
+        let offs = vec![0usize, 3, 7];
+        let src = OffsetsSource::new(&offs);
+        let d = ScheduleDescriptor::merge_path(&src, 4);
+        let copy = d; // Copy, not move
+        assert_eq!(d, copy);
+    }
+
+    #[test]
+    fn binning_is_not_streaming_capable() {
+        let offs = vec![0usize, 5];
+        let src = OffsetsSource::new(&offs);
+        assert!(ScheduleDescriptor::new(ScheduleKind::Binning, &src, 4).is_none());
+        assert!(ScheduleDescriptor::new(ScheduleKind::Lrb, &src, 4).is_none());
+    }
+
+    #[test]
+    fn streams_cover_exactly() {
+        // Exact cover straight from the streams (not via materialize).
+        let cases: Vec<Vec<usize>> = vec![
+            vec![0],
+            vec![0, 0, 0],
+            vec![0, 10_000],
+            vec![0, 0, 5, 5, 9, 9, 9],
+            (0..=64).collect(),
+        ];
+        for offsets in &cases {
+            let src = OffsetsSource::new(offsets);
+            for kind in STREAMING {
+                for workers in [1usize, 2, 7, 100] {
+                    let desc = ScheduleDescriptor::new(kind, &src, workers).unwrap();
+                    let mut covered = vec![false; src.num_atoms()];
+                    for_each_segment(desc, offsets, |s| {
+                        let t = s.tile as usize;
+                        assert!(s.atom_begin >= offsets[t] && s.atom_end <= offsets[t + 1]);
+                        for a in s.atom_begin..s.atom_end {
+                            assert!(!covered[a], "atom {a} covered twice");
+                            covered[a] = true;
+                        }
+                    });
+                    assert!(
+                        covered.iter().all(|&c| c),
+                        "{kind:?} x{workers} left atoms uncovered on {offsets:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn worker_count_matches_materialized() {
+        let offsets: Vec<usize> = vec![0, 2, 2, 9, 9, 14, 15];
+        let src = OffsetsSource::new(&offsets);
+        for kind in STREAMING {
+            for workers in [1usize, 3, 6, 50] {
+                let desc = ScheduleDescriptor::new(kind, &src, workers).unwrap();
+                let asg = materialize(desc, &src);
+                assert_eq!(desc.workers(), asg.workers.len(), "{kind:?} x{workers}");
+                assert_eq!(asg.schedule, desc.name());
+            }
+        }
+    }
+
+    #[test]
+    fn names_match_schedule_kind_names() {
+        let offs = vec![0usize, 4];
+        let src = OffsetsSource::new(&offs);
+        assert_eq!(ScheduleDescriptor::thread_mapped(&src, 2).name(), "thread-mapped");
+        assert_eq!(ScheduleDescriptor::group_mapped(&src, 2, 32).name(), "warp-mapped");
+        assert_eq!(ScheduleDescriptor::group_mapped(&src, 2, 64).name(), "group-mapped");
+        assert_eq!(ScheduleDescriptor::merge_path(&src, 2).name(), "merge-path");
+        assert_eq!(ScheduleDescriptor::nonzero_split(&src, 2).name(), "nonzero-split");
+    }
+
+    #[test]
+    fn empty_source_has_one_empty_worker_where_legacy_did() {
+        let offs = vec![0usize];
+        let src = OffsetsSource::new(&offs);
+        // Thread-mapped / merge-path / nonzero-split: one empty worker;
+        // group-mapped: zero workers — the legacy shapes, preserved.
+        assert_eq!(ScheduleDescriptor::thread_mapped(&src, 4).workers(), 1);
+        assert_eq!(ScheduleDescriptor::merge_path(&src, 4).workers(), 1);
+        assert_eq!(ScheduleDescriptor::nonzero_split(&src, 4).workers(), 1);
+        assert_eq!(ScheduleDescriptor::group_mapped(&src, 4, 32).workers(), 0);
+        let d = ScheduleDescriptor::thread_mapped(&src, 4);
+        assert_eq!(worker_segments(d, &offs, 0).count(), 0);
+    }
+}

@@ -5,34 +5,13 @@
 //! owns tiles `t, t + T, t + 2T, …` for `T` total threads — exactly the
 //! `range(begin, end).step(gridDim*blockDim)` of the paper's Listing 4.2.
 
-use super::{Assignment, Granularity, Segment, WorkSource, WorkerAssignment};
+use super::stream::{self, ScheduleDescriptor};
+use super::{Assignment, WorkSource};
 
-/// Assign tiles to `threads` workers, grid-strided.
+/// Assign tiles to `threads` workers, grid-strided — the `collect()` of
+/// the lazy per-worker streams (see [`crate::balance::stream`]).
 pub fn assign(src: &impl WorkSource, threads: usize) -> Assignment {
-    let offsets = src.offsets();
-    let tiles = src.num_tiles();
-    let threads = threads.max(1);
-    let mut workers = Vec::with_capacity(threads.min(tiles.max(1)));
-    for t in 0..threads.min(tiles.max(1)) {
-        let mut segments = Vec::new();
-        let mut tile = t;
-        while tile < tiles {
-            segments.push(Segment {
-                tile: tile as u32,
-                atom_begin: offsets[tile],
-                atom_end: offsets[tile + 1],
-            });
-            tile += threads;
-        }
-        workers.push(WorkerAssignment {
-            granularity: Granularity::Thread,
-            segments,
-        });
-    }
-    Assignment {
-        schedule: "thread-mapped",
-        workers,
-    }
+    stream::materialize(ScheduleDescriptor::thread_mapped(src, threads), src)
 }
 
 #[cfg(test)]

@@ -1,13 +1,125 @@
 //! GEMM execution over a Stream-K [`Plan`]: host numerics, PJRT numerics,
-//! and simulated timing.
+//! and simulated timing — plus the generic MAC-iteration tile-set path
+//! ([`execute_macs_stream`]) that runs a GEMM through any streaming
+//! Chapter-4 schedule descriptor with the §5-style two-phase tile fixup.
 
+use crate::balance::stream::{self, ScheduleDescriptor};
+use crate::balance::Segment;
 use crate::runtime::{HostTensor, Runtime};
 use crate::sim::gpu::Precision;
 use crate::sim::{self, CostModel, CtaWork, GpuSpec};
-use crate::streamk::{CtaPlan, Plan};
+use crate::streamk::{Blocking, CtaPlan, GemmShape, Plan};
 use crate::Result;
 
 use super::dense::DenseMat;
+
+/// One segment's partial-tile accumulator over the MAC-iteration tile set
+/// (tiles = output tiles, atoms = MAC iterations): the segment's share of
+/// its tile's k-iterations, folded into a bm×bn buffer — the Stream-K
+/// fixup unit of §5.
+pub fn mac_segment_acc(
+    a: &DenseMat,
+    b: &DenseMat,
+    shape: GemmShape,
+    blk: Blocking,
+    s: Segment,
+) -> Vec<f64> {
+    let (bm, bn, bk) = (blk.bm, blk.bn, blk.bk);
+    let ipt = blk.iters_per_tile(shape) as usize;
+    let tiles_n = shape.n.div_ceil(bn);
+    let tile = s.tile as usize;
+    let tile_r = (tile / tiles_n) * bm;
+    let tile_c = (tile % tiles_n) * bn;
+    let base = tile * ipt;
+    let mut acc = vec![0.0f64; bm * bn];
+    for it in (s.atom_begin - base)..(s.atom_end - base) {
+        let k0 = it * bk;
+        let a_blk = a.window(tile_r, k0, bm, bk);
+        let b_blk = b.window(k0, tile_c, bk, bn);
+        for i in 0..bm {
+            for l in 0..bk {
+                let av = a_blk[i * bk + l];
+                if av == 0.0 {
+                    continue;
+                }
+                for j in 0..bn {
+                    acc[i * bn + j] += av * b_blk[l * bn + j];
+                }
+            }
+        }
+    }
+    acc
+}
+
+/// Fold partial-tile accumulators into C in the order given — the
+/// deterministic phase-2 fixup (worker order reproduces the sequential
+/// reference's accumulation order bit for bit).
+pub fn apply_mac_partials(
+    c: &mut DenseMat,
+    shape: GemmShape,
+    blk: Blocking,
+    partials: &[(u32, Vec<f64>)],
+) {
+    let tiles_n = shape.n.div_ceil(blk.bn);
+    for (tile, acc) in partials {
+        let tile = *tile as usize;
+        c.add_window(
+            acc,
+            (tile / tiles_n) * blk.bm,
+            (tile % tiles_n) * blk.bn,
+            blk.bm,
+            blk.bn,
+        );
+    }
+}
+
+/// Phase 1 of the parallel MAC path: per-segment partial tiles for the
+/// descriptor's `workers` range, in (worker, segment) order.
+pub fn mac_shard_partials(
+    a: &DenseMat,
+    b: &DenseMat,
+    shape: GemmShape,
+    blk: Blocking,
+    desc: &ScheduleDescriptor,
+    offsets: &[usize],
+    workers: std::ops::Range<usize>,
+) -> Vec<(u32, Vec<f64>)> {
+    let mut out = Vec::new();
+    for w in workers.start..workers.end.min(desc.workers()) {
+        for s in stream::worker_segments(*desc, offsets, w) {
+            out.push((s.tile, mac_segment_acc(a, b, shape, blk, s)));
+        }
+    }
+    out
+}
+
+/// Execute a GEMM through a streaming schedule descriptor over its
+/// MAC-iteration tile set (Algorithm 10's fixup realized as commutative
+/// accumulation) — the stream twin of the serve layer's materialized
+/// assignment executor, bit-identical to it.
+pub fn execute_macs_stream(
+    a: &DenseMat,
+    b: &DenseMat,
+    shape: GemmShape,
+    blk: Blocking,
+    desc: &ScheduleDescriptor,
+    offsets: &[usize],
+) -> DenseMat {
+    let tiles_n = shape.n.div_ceil(blk.bn);
+    let mut c = DenseMat::zeros(shape.m, shape.n);
+    stream::for_each_segment(*desc, offsets, |s| {
+        let acc = mac_segment_acc(a, b, shape, blk, s);
+        let tile = s.tile as usize;
+        c.add_window(
+            &acc,
+            (tile / tiles_n) * blk.bm,
+            (tile % tiles_n) * blk.bn,
+            blk.bm,
+            blk.bn,
+        );
+    });
+    c
+}
 
 /// Execute a plan on host matrices: every CTA's MAC-loop iterations run in
 /// plan order; partial tiles accumulate — semantics of Algorithm 10 with
@@ -241,6 +353,41 @@ mod tests {
         let shape = GemmShape::new(50, 70, 90);
         let blk = Blocking::new(32, 32, 16);
         check_numerics(shape, blk, Decomposition::StreamK { g: 5 });
+    }
+
+    #[test]
+    fn mac_stream_and_shards_match_reference() {
+        use crate::balance::{OffsetsSource, ScheduleKind};
+        let shape = GemmShape::new(96, 80, 72);
+        let blk = Blocking::new(32, 32, 16);
+        let a = DenseMat::random(shape.m, shape.k, 5);
+        let b = DenseMat::random(shape.k, shape.n, 6);
+        let want = DenseMat::matmul_ref(&a, &b);
+        let tiles = blk.tiles(shape);
+        let ipt = blk.iters_per_tile(shape) as usize;
+        let offsets: Vec<usize> = (0..=tiles).map(|t| t * ipt).collect();
+        let src = OffsetsSource::new(&offsets);
+        for kind in [
+            ScheduleKind::NonzeroSplit,
+            ScheduleKind::MergePath,
+            ScheduleKind::ThreadMapped,
+        ] {
+            let desc = kind.descriptor(&src, 16).unwrap();
+            let got = execute_macs_stream(&a, &b, shape, blk, &desc, &offsets);
+            assert!(
+                got.max_abs_diff(&want) < 1e-9,
+                "{kind:?} diff {}",
+                got.max_abs_diff(&want)
+            );
+            // The sharded two-phase path is bit-identical to the stream.
+            let mut c = DenseMat::zeros(shape.m, shape.n);
+            let mid = desc.workers().div_ceil(2);
+            for range in [0..mid, mid..desc.workers()] {
+                let parts = mac_shard_partials(&a, &b, shape, blk, &desc, &offsets, range);
+                apply_mac_partials(&mut c, shape, blk, &parts);
+            }
+            assert_eq!(c.data, got.data, "{kind:?} sharded diverged");
+        }
     }
 
     #[test]

@@ -7,8 +7,31 @@
 //! policies of [`crate::balance::queue`].
 
 use crate::balance::queue::{self, QueueParams, QueuePolicy};
-use crate::balance::{OffsetsSource, ScheduleKind};
+use crate::balance::{stream, OffsetsSource, ScheduleKind, Segment, WorkSource};
 use crate::sparse::Csr;
+
+/// Run `visit` over every segment of `schedule` for `src`, in worker
+/// order: lazily through the streaming descriptor when the schedule has
+/// one (allocation-free — nothing is materialized per frontier), else
+/// through a materialized assignment (Binning/LRB).
+fn for_each_schedule_segment<S: WorkSource>(
+    schedule: ScheduleKind,
+    src: &S,
+    workers: usize,
+    mut visit: impl FnMut(Segment),
+) {
+    match schedule.descriptor(src, workers) {
+        Some(desc) => stream::for_each_segment(desc, src.offsets(), visit),
+        None => {
+            let asg = schedule.assign(src, workers);
+            for w in &asg.workers {
+                for s in &w.segments {
+                    visit(*s);
+                }
+            }
+        }
+    }
+}
 
 /// Frontier-based BFS: returns depth per vertex (`u32::MAX` = unreached).
 ///
@@ -29,23 +52,20 @@ pub fn bfs(graph: &Csr, source: usize, schedule: ScheduleKind, workers: usize) -
             .collect();
         let offsets = crate::balance::prefix::exclusive(&lens);
         let src = OffsetsSource::new(&offsets);
-        let asg = schedule.assign(&src, workers);
 
         let mut next = Vec::new();
-        for w in &asg.workers {
-            for s in &w.segments {
-                let v = frontier[s.tile as usize] as usize;
-                let (cols, _) = graph.row(v);
-                let base = offsets[s.tile as usize];
-                for a in s.atom_begin..s.atom_end {
-                    let n = cols[a - base] as usize;
-                    if depth[n] == u32::MAX {
-                        depth[n] = level;
-                        next.push(n as u32);
-                    }
+        for_each_schedule_segment(schedule, &src, workers, |s| {
+            let v = frontier[s.tile as usize] as usize;
+            let (cols, _) = graph.row(v);
+            let base = offsets[s.tile as usize];
+            for a in s.atom_begin..s.atom_end {
+                let n = cols[a - base] as usize;
+                if depth[n] == u32::MAX {
+                    depth[n] = level;
+                    next.push(n as u32);
                 }
             }
-        }
+        });
         next.sort_unstable();
         next.dedup();
         frontier = next;
@@ -85,32 +105,29 @@ pub fn sssp(graph: &Csr, source: usize, schedule: ScheduleKind, workers: usize) 
             .collect();
         let offsets = crate::balance::prefix::exclusive(&lens);
         let src = OffsetsSource::new(&offsets);
-        let asg = schedule.assign(&src, workers);
 
         let mut in_next = vec![false; graph.rows];
         let mut next = Vec::new();
-        for w in &asg.workers {
-            for s in &w.segments {
-                let v = frontier[s.tile as usize] as usize;
-                let (cols, weights) = graph.row(v);
-                let base = offsets[s.tile as usize];
-                for a in s.atom_begin..s.atom_end {
-                    let e = a - base;
-                    let n = cols[e] as usize;
-                    // Edge weights must be positive; |value| keeps the
-                    // synthetic generators usable as weighted graphs.
-                    let wgt = weights[e].abs().max(1e-9);
-                    let cand = dist[v] + wgt;
-                    if cand < dist[n] - 1e-15 {
-                        dist[n] = cand;
-                        if !in_next[n] {
-                            in_next[n] = true;
-                            next.push(n as u32);
-                        }
+        for_each_schedule_segment(schedule, &src, workers, |s| {
+            let v = frontier[s.tile as usize] as usize;
+            let (cols, weights) = graph.row(v);
+            let base = offsets[s.tile as usize];
+            for a in s.atom_begin..s.atom_end {
+                let e = a - base;
+                let n = cols[e] as usize;
+                // Edge weights must be positive; |value| keeps the
+                // synthetic generators usable as weighted graphs.
+                let wgt = weights[e].abs().max(1e-9);
+                let cand = dist[v] + wgt;
+                if cand < dist[n] - 1e-15 {
+                    dist[n] = cand;
+                    if !in_next[n] {
+                        in_next[n] = true;
+                        next.push(n as u32);
                     }
                 }
             }
-        }
+        });
         frontier = next;
     }
     dist
@@ -172,25 +189,41 @@ pub fn pagerank(
         return (Vec::new(), 0);
     }
     // Pull-based: rank'[v] = (1-d)/n + d * sum_{u->v} rank[u]/outdeg[u].
-    // Build the transpose once; its rows are the in-neighbor lists.
+    // Build the transpose once; its rows are the in-neighbor lists.  The
+    // plan is an O(1) descriptor streamed per iteration (no materialized
+    // assignment to hold across iterations); Binning/LRB still
+    // materialize once up front.
     let gt = graph.transpose();
     let outdeg: Vec<f64> = (0..n).map(|v| graph.row_nnz(v).max(1) as f64).collect();
-    let asg = schedule.assign(&gt, workers);
+    let desc = schedule.descriptor(&gt, workers);
+    let fallback = if desc.is_none() {
+        Some(schedule.assign(&gt, workers))
+    } else {
+        None
+    };
 
     let mut rank = vec![1.0 / n as f64; n];
     let mut iters = 0usize;
     while iters < max_iters {
         iters += 1;
         let mut next = vec![(1.0 - damping) / n as f64; n];
-        for w in &asg.workers {
-            for s in &w.segments {
-                let v = s.tile as usize;
-                let mut sum = 0.0;
-                for k in s.atom_begin..s.atom_end {
-                    let u = gt.indices[k] as usize;
-                    sum += rank[u] / outdeg[u];
+        let mut accum = |s: Segment| {
+            let v = s.tile as usize;
+            let mut sum = 0.0;
+            for k in s.atom_begin..s.atom_end {
+                let u = gt.indices[k] as usize;
+                sum += rank[u] / outdeg[u];
+            }
+            next[v] += damping * sum;
+        };
+        match desc {
+            Some(d) => stream::for_each_segment(d, &gt.offsets, &mut accum),
+            None => {
+                for w in &fallback.as_ref().expect("fallback built with desc=None").workers {
+                    for s in &w.segments {
+                        accum(*s);
+                    }
                 }
-                next[v] += damping * sum;
             }
         }
         let delta: f64 = rank

@@ -2,8 +2,23 @@
 //! SpMV" — the same balanced assignment reused across the B columns, which
 //! is exactly the reuse argument of §4.4.3.
 
-use crate::balance::Assignment;
+use crate::balance::stream::{self, ScheduleDescriptor};
+use crate::balance::{Assignment, Segment};
 use crate::sparse::Csr;
+
+/// One segment's share of every output column (the "new loop" of
+/// Listing 4.4), accumulated into the tile's output row.
+#[inline]
+fn accumulate_segment(a: &Csr, x: &[f64], n: usize, y: &mut [f64], s: Segment) {
+    let row = s.tile as usize;
+    for j in 0..n {
+        let mut sum = 0.0;
+        for k in s.atom_begin..s.atom_end {
+            sum += a.values[k] * x[a.indices[k] as usize * n + j];
+        }
+        y[row * n + j] += sum;
+    }
+}
 
 /// Host SpMM: `Y (rows x n) = A · X (cols x n)`, X and Y row-major, using
 /// the same per-worker segments as SpMV with an inner column loop.
@@ -12,17 +27,21 @@ pub fn execute_host(a: &Csr, x: &[f64], n: usize, asg: &Assignment) -> Vec<f64> 
     let mut y = vec![0.0f64; a.rows * n];
     for w in &asg.workers {
         for s in &w.segments {
-            let row = s.tile as usize;
-            // Loop over all columns of B (the "new loop" of Listing 4.4).
-            for j in 0..n {
-                let mut sum = 0.0;
-                for k in s.atom_begin..s.atom_end {
-                    sum += a.values[k] * x[a.indices[k] as usize * n + j];
-                }
-                y[row * n + j] += sum;
-            }
+            accumulate_segment(a, x, n, &mut y, *s);
         }
     }
+    y
+}
+
+/// Host SpMM from a streaming descriptor — identical accumulation order
+/// to [`execute_host`] on the materialized assignment, zero plan
+/// materialization (the §4.4.3 reuse argument now also skips the plan).
+pub fn execute_stream_host(a: &Csr, x: &[f64], n: usize, desc: &ScheduleDescriptor) -> Vec<f64> {
+    assert_eq!(x.len(), a.cols * n);
+    let mut y = vec![0.0f64; a.rows * n];
+    stream::for_each_segment(*desc, &a.offsets, |s| {
+        accumulate_segment(a, x, n, &mut y, s);
+    });
     y
 }
 
@@ -50,6 +69,22 @@ mod tests {
                 .zip(&got)
                 .all(|(a, b)| (a - b).abs() < 1e-9);
             assert!(ok, "{kind:?} SpMM numerics diverged");
+        }
+    }
+
+    #[test]
+    fn spmm_stream_bit_identical_to_materialized() {
+        let a = gen::power_law(96, 80, 48, 1.7, 63);
+        let n = 3;
+        let x: Vec<f64> = (0..a.cols * n).map(|i| (i as f64 * 0.19).sin()).collect();
+        for kind in [
+            ScheduleKind::ThreadMapped,
+            ScheduleKind::MergePath,
+            ScheduleKind::NonzeroSplit,
+        ] {
+            let desc = kind.descriptor(&a, 24).unwrap();
+            let want = execute_host(&a, &x, n, &kind.assign(&a, 24));
+            assert_eq!(execute_stream_host(&a, &x, n, &desc), want, "{kind:?}");
         }
     }
 

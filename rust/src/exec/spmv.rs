@@ -2,11 +2,22 @@
 //! numerics (ELL-slab packing through the `spmv_rowblock` artifact), and
 //! the bandwidth-bound simulated timing of each schedule.
 
-use crate::balance::{Assignment, Granularity, ScheduleKind};
+use crate::balance::stream::{self, ScheduleDescriptor};
+use crate::balance::{Assignment, Granularity, ScheduleKind, Segment};
 use crate::runtime::{HostTensor, Runtime};
 use crate::sim::{self, CtaWork, GpuSpec, SpmvCost};
 use crate::sparse::Csr;
 use crate::Result;
+
+/// One segment's partial dot product.
+#[inline]
+fn segment_sum(a: &Csr, x: &[f64], s: Segment) -> f64 {
+    let mut sum = 0.0;
+    for k in s.atom_begin..s.atom_end {
+        sum += a.values[k] * x[a.indices[k] as usize];
+    }
+    sum
+}
 
 /// Host execution: every worker's segments accumulate into y (the uniform
 /// execution semantics that make schedules interchangeable).
@@ -15,14 +26,52 @@ pub fn execute_host(a: &Csr, x: &[f64], asg: &Assignment) -> Vec<f64> {
     let mut y = vec![0.0f64; a.rows];
     for w in &asg.workers {
         for s in &w.segments {
-            let mut sum = 0.0;
-            for k in s.atom_begin..s.atom_end {
-                sum += a.values[k] * x[a.indices[k] as usize];
-            }
-            y[s.tile as usize] += sum;
+            y[s.tile as usize] += segment_sum(a, x, *s);
         }
     }
     y
+}
+
+/// Host execution from a streaming descriptor: the same accumulation
+/// sequence as [`execute_host`] on the materialized assignment — bit for
+/// bit — with zero plan materialization.
+pub fn execute_stream_host(a: &Csr, x: &[f64], desc: &ScheduleDescriptor) -> Vec<f64> {
+    assert_eq!(x.len(), a.cols);
+    let mut y = vec![0.0f64; a.rows];
+    stream::for_each_segment(*desc, &a.offsets, |s| {
+        y[s.tile as usize] += segment_sum(a, x, s);
+    });
+    y
+}
+
+/// Phase 1 of the two-phase parallel path: per-segment partial sums for
+/// workers `[w0, w1)`, in (worker, segment) order.  Disjoint worker
+/// ranges read disjoint atoms, so shards run concurrently without
+/// synchronization; a tile split across shards is reconciled by
+/// [`apply_partials`] (phase 2 — the Stream-K-style tile fixup).
+pub fn shard_partials(
+    a: &Csr,
+    x: &[f64],
+    desc: &ScheduleDescriptor,
+    w0: usize,
+    w1: usize,
+) -> Vec<(u32, f64)> {
+    let mut out = Vec::new();
+    for w in w0..w1.min(desc.workers()) {
+        for s in stream::worker_segments(*desc, &a.offsets, w) {
+            out.push((s.tile, segment_sum(a, x, s)));
+        }
+    }
+    out
+}
+
+/// Phase 2: the deterministic tile fixup — partials applied in worker
+/// order reproduce the sequential reference's accumulation order bit for
+/// bit, at any shard count.
+pub fn apply_partials(y: &mut [f64], partials: &[(u32, f64)]) {
+    for &(tile, sum) in partials {
+        y[tile as usize] += sum;
+    }
 }
 
 /// Runtime execution: pack segments into (R x W) ELL slabs, gather x in the
@@ -39,29 +88,37 @@ pub fn execute_runtime(a: &Csr, x: &[f64], asg: &Assignment, rt: &Runtime) -> Re
 
     let mut y = vec![0.0f64; a.rows];
 
-    // Slab rows under construction: (tile, values, gathered x).
+    // Slab rows under construction: tiles plus two persistent
+    // (values, gathered-x) input tensors, written in place and reused
+    // across every flush — no per-flush clone of the R×W buffers (§Perf).
     let mut slab_tiles: Vec<u32> = Vec::with_capacity(rows_per_block);
-    let mut values = vec![0.0f64; rows_per_block * width];
-    let mut xg = vec![0.0f64; rows_per_block * width];
+    let mut slabs = [
+        HostTensor::F64(
+            vec![0.0f64; rows_per_block * width],
+            vec![rows_per_block, width],
+        ),
+        HostTensor::F64(
+            vec![0.0f64; rows_per_block * width],
+            vec![rows_per_block, width],
+        ),
+    ];
 
     let flush = |slab_tiles: &mut Vec<u32>,
-                     values: &mut Vec<f64>,
-                     xg: &mut Vec<f64>,
-                     y: &mut Vec<f64>|
+                 slabs: &mut [HostTensor; 2],
+                 y: &mut Vec<f64>|
      -> Result<()> {
         if slab_tiles.is_empty() {
             return Ok(());
         }
-        let v = HostTensor::F64(values.clone(), vec![rows_per_block, width]);
-        let g = HostTensor::F64(xg.clone(), vec![rows_per_block, width]);
-        let out = rt.execute(name, &[v, g])?;
+        let out = rt.execute(name, &slabs[..])?;
         let out = out.as_f64()?;
         for (i, &tile) in slab_tiles.iter().enumerate() {
             y[tile as usize] += out[i];
         }
         slab_tiles.clear();
-        values.iter_mut().for_each(|v| *v = 0.0);
-        xg.iter_mut().for_each(|v| *v = 0.0);
+        for slab in slabs.iter_mut() {
+            slab.as_f64_mut()?.iter_mut().for_each(|v| *v = 0.0);
+        }
         Ok(())
     };
 
@@ -72,19 +129,24 @@ pub fn execute_runtime(a: &Csr, x: &[f64], asg: &Assignment, rt: &Runtime) -> Re
             while begin < s.atom_end {
                 let end = (begin + width).min(s.atom_end);
                 let row_idx = slab_tiles.len();
-                for (j, k) in (begin..end).enumerate() {
-                    values[row_idx * width + j] = a.values[k];
-                    xg[row_idx * width + j] = x[a.indices[k] as usize];
+                {
+                    let [values_t, xg_t] = &mut slabs;
+                    let values = values_t.as_f64_mut()?;
+                    let xg = xg_t.as_f64_mut()?;
+                    for (j, k) in (begin..end).enumerate() {
+                        values[row_idx * width + j] = a.values[k];
+                        xg[row_idx * width + j] = x[a.indices[k] as usize];
+                    }
                 }
                 slab_tiles.push(s.tile);
                 if slab_tiles.len() == rows_per_block {
-                    flush(&mut slab_tiles, &mut values, &mut xg, &mut y)?;
+                    flush(&mut slab_tiles, &mut slabs, &mut y)?;
                 }
                 begin = end;
             }
         }
     }
-    flush(&mut slab_tiles, &mut values, &mut xg, &mut y)?;
+    flush(&mut slab_tiles, &mut slabs, &mut y)?;
     Ok(y)
 }
 
@@ -225,6 +287,49 @@ mod tests {
             asg.validate(&a).unwrap();
             let got = execute_host(&a, &x, &asg);
             assert!(close(&got, &want, 1e-9), "{kind:?} numerics diverged");
+        }
+    }
+
+    #[test]
+    fn stream_execution_bit_identical_to_materialized() {
+        let a = gen::power_law(400, 400, 200, 1.6, 17);
+        let x: Vec<f64> = (0..a.cols).map(|i| (i as f64 * 0.29).cos()).collect();
+        for kind in [
+            ScheduleKind::ThreadMapped,
+            ScheduleKind::GroupMapped(32),
+            ScheduleKind::MergePath,
+            ScheduleKind::NonzeroSplit,
+        ] {
+            let desc = kind.descriptor(&a, 48).unwrap();
+            let want = execute_host(&a, &x, &kind.assign(&a, 48));
+            let got = execute_stream_host(&a, &x, &desc);
+            assert_eq!(got, want, "{kind:?} stream numerics diverged");
+        }
+    }
+
+    #[test]
+    fn sharded_partials_reduce_bit_identical_to_sequential() {
+        let a = gen::power_law(300, 300, 150, 1.5, 19);
+        let x: Vec<f64> = (0..a.cols).map(|i| (i as f64 * 0.41).sin()).collect();
+        for kind in [
+            ScheduleKind::ThreadMapped,
+            ScheduleKind::MergePath,
+            ScheduleKind::NonzeroSplit,
+        ] {
+            let desc = kind.descriptor(&a, 64).unwrap();
+            let want = execute_stream_host(&a, &x, &desc);
+            for shards in [1usize, 2, 3, 8] {
+                let per = desc.workers().div_ceil(shards);
+                let mut y = vec![0.0f64; a.rows];
+                let mut w0 = 0;
+                while w0 < desc.workers() {
+                    let w1 = (w0 + per).min(desc.workers());
+                    let parts = shard_partials(&a, &x, &desc, w0, w1);
+                    apply_partials(&mut y, &parts);
+                    w0 = w1;
+                }
+                assert_eq!(y, want, "{kind:?} at {shards} shards diverged");
+            }
         }
     }
 

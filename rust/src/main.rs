@@ -38,7 +38,9 @@ USAGE:
   gpulb serve [--threads N] [--batches B] [--scale 0|1] [--plan-workers W]
               [--schedule auto|adaptive|thread|warp|block|merge|nzsplit|binning|lrb]
               [--epsilon E] [--min-samples S] [--seed SEED] [--proxy-feedback]
+              [--split-threshold ATOMS]
   gpulb serve --bench [--batches B] [--scale 0|1] [--out FILE]
+  gpulb serve --bench --single-large [--batches B] [--min-speedup X] [--out FILE]
   gpulb landscape  [--scale 0|1] [--rounds R] [--plan-workers W] [--out FILE]
   gpulb bench-diff BASE.json CURRENT.json [--tolerance 0.2]
   gpulb info
@@ -278,6 +280,27 @@ fn cmd_serve(args: &Args) -> gpulb::Result<()> {
     // (or print batch reports) for a run the user never asked for.
     let scale = opt_strict(args, "scale", 1)?;
     let batches = opt_strict(args, "batches", 3)?;
+
+    if args.has_flag("bench") && args.has_flag("single-large") {
+        // One SpMV with >= 1M nonzeros swept over 1/2/4/8 threads: the
+        // intra-problem split path's worst-case-turned-showcase.  The
+        // speedup of the 8-thread point over the 1-thread point is the
+        // split gate's metric (self-relative, so shared-runner absolute
+        // speed doesn't matter).
+        let out = args.opt_or("out", "BENCH_serve_single.json");
+        let speedup = serve::run_single_large_bench(&[1, 2, 4, 8], batches.max(1), &out)?;
+        if let Some(min) = args.opt("min-speedup") {
+            let min: f64 = min
+                .parse()
+                .map_err(|_| anyhow::anyhow!("invalid --min-speedup value `{min}`"))?;
+            anyhow::ensure!(
+                speedup >= min,
+                "single-large split speedup x{speedup:.2} below required x{min:.2}"
+            );
+        }
+        return Ok(());
+    }
+
     let mix = serve::corpus_mix(scale);
     let atoms: usize = mix.iter().map(|p| p.atoms()).sum();
     println!(
@@ -303,6 +326,7 @@ fn cmd_serve(args: &Args) -> gpulb::Result<()> {
             serve::CostFeedback::Measured
         },
         cache_capacity: opt_strict(args, "cache-capacity", 1024)?,
+        split_min_atoms: opt_strict(args, "split-threshold", serve::DEFAULT_SPLIT_MIN_ATOMS)?,
     };
 
     if args.has_flag("bench") {

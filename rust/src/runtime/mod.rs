@@ -69,6 +69,15 @@ impl HostTensor {
             other => Err(anyhow!("expected f64 tensor, got {other:?}")),
         }
     }
+
+    /// Mutable f64 view — lets callers keep one tensor alive as a reusable
+    /// staging buffer instead of rebuilding (cloning) it per dispatch.
+    pub fn as_f64_mut(&mut self) -> Result<&mut [f64]> {
+        match self {
+            HostTensor::F64(v, _) => Ok(v),
+            other => Err(anyhow!("expected f64 tensor, got {other:?}")),
+        }
+    }
 }
 
 #[cfg(test)]

@@ -15,13 +15,14 @@
 
 use std::sync::Arc;
 
+use crate::balance::stream::{self, ScheduleDescriptor};
 use crate::balance::{self, adaptive, OffsetsSource, ScheduleKind};
 use crate::corpus::{gemm_shapes, sparse_corpus};
-use crate::exec::{dense::DenseMat, graph, spmv};
+use crate::exec::{dense::DenseMat, gemm, graph, spmv};
 use crate::sparse::{gen, Coo, Csr};
 use crate::streamk::{Blocking, GemmShape};
 
-use super::plan_cache::{fingerprint, PlanCache, PlanKey};
+use super::plan_cache::{fingerprint, PlanCache, PlanEntry, PlanKey};
 use super::tuner::CostFeedback;
 use super::ServeConfig;
 
@@ -167,6 +168,47 @@ pub struct ExecSample {
     pub cost: f64,
 }
 
+/// Fetch (or compute) the plan entry for a problem: an O(1) descriptor
+/// for streaming-capable schedules, a materialized assignment otherwise.
+pub fn plan(
+    problem: &Problem,
+    kind: ScheduleKind,
+    cache: &PlanCache,
+    workers: usize,
+) -> PlanEntry {
+    let key = PlanKey {
+        fingerprint: problem.fingerprint(),
+        schedule: kind,
+        workers,
+    };
+    match problem {
+        Problem::Spmv { matrix, .. } => cache.plan(key, &**matrix),
+        Problem::Gemm { offsets, .. } | Problem::Frontier { offsets, .. } => {
+            cache.plan(key, &OffsetsSource::new(offsets))
+        }
+    }
+}
+
+/// The problem's atoms-per-tile prefix sum (what the streams walk).
+fn problem_offsets(problem: &Problem) -> &[usize] {
+    match problem {
+        Problem::Spmv { matrix, .. } => &matrix.offsets,
+        Problem::Gemm { offsets, .. } | Problem::Frontier { offsets, .. } => offsets,
+    }
+}
+
+/// Deterministic proxy cost of an entry (stream-computed for descriptors,
+/// walked for materialized plans — bit-identical either way).
+pub fn proxy_cost_entry(problem: &Problem, kind: ScheduleKind, entry: &PlanEntry) -> f64 {
+    let (tiles, atoms) = problem.tile_set_size();
+    match entry {
+        PlanEntry::Descriptor(d) => {
+            adaptive::proxy_cost_stream(d, problem_offsets(problem), tiles, atoms)
+        }
+        PlanEntry::Materialized(asg) => adaptive::proxy_cost(kind, asg, tiles, atoms),
+    }
+}
+
 /// Plan (through the cache) and execute one problem with the given
 /// schedule.
 ///
@@ -180,50 +222,166 @@ pub fn execute(
     cache: &PlanCache,
     cfg: &ServeConfig,
 ) -> ExecSample {
-    let workers = cfg.plan_workers.max(1);
-    let key = PlanKey {
-        fingerprint: problem.fingerprint(),
-        schedule: kind,
-        workers,
-    };
-    let plan = match problem {
-        Problem::Spmv { matrix, .. } => {
-            cache.get_or_compute(key, || kind.assign(&**matrix, workers))
-        }
-        Problem::Gemm { offsets, .. } | Problem::Frontier { offsets, .. } => {
-            cache.get_or_compute(key, || kind.assign(&OffsetsSource::new(offsets), workers))
-        }
-    };
+    let entry = plan(problem, kind, cache, cfg.plan_workers.max(1));
+    execute_planned(problem, kind, &entry, cfg)
+}
+
+/// Execute one problem against an already-fetched plan entry.
+pub fn execute_planned(
+    problem: &Problem,
+    kind: ScheduleKind,
+    entry: &PlanEntry,
+    cfg: &ServeConfig,
+) -> ExecSample {
     let start = std::time::Instant::now();
-    let checksum: f64 = match problem {
-        Problem::Spmv { matrix, x, .. } => spmv::execute_host(matrix, x, &plan).iter().sum(),
-        Problem::Gemm {
-            a,
-            b,
-            shape,
-            blocking,
-            ..
-        } => {
-            let c = execute_gemm_assignment(a, b, *shape, *blocking, &plan);
-            c.data.iter().sum()
+    let checksum: f64 = match (problem, entry) {
+        (Problem::Spmv { matrix, x, .. }, PlanEntry::Descriptor(d)) => {
+            spmv::execute_stream_host(matrix, x, d).iter().sum()
         }
-        Problem::Frontier {
-            graph,
-            frontier,
-            offsets,
-            ..
-        } => execute_frontier_assignment(graph, frontier, offsets, &plan)
+        (Problem::Spmv { matrix, x, .. }, PlanEntry::Materialized(asg)) => {
+            spmv::execute_host(matrix, x, asg).iter().sum()
+        }
+        (
+            Problem::Gemm {
+                a,
+                b,
+                shape,
+                blocking,
+                offsets,
+                ..
+            },
+            PlanEntry::Descriptor(d),
+        ) => gemm::execute_macs_stream(a, b, *shape, *blocking, d, offsets)
+            .data
+            .iter()
+            .sum(),
+        (
+            Problem::Gemm {
+                a,
+                b,
+                shape,
+                blocking,
+                ..
+            },
+            PlanEntry::Materialized(asg),
+        ) => execute_gemm_assignment(a, b, *shape, *blocking, asg)
+            .data
+            .iter()
+            .sum(),
+        (
+            Problem::Frontier {
+                graph,
+                frontier,
+                offsets,
+                ..
+            },
+            PlanEntry::Descriptor(d),
+        ) => execute_frontier_stream(graph, frontier, offsets, d)
+            .iter()
+            .sum(),
+        (
+            Problem::Frontier {
+                graph,
+                frontier,
+                offsets,
+                ..
+            },
+            PlanEntry::Materialized(asg),
+        ) => execute_frontier_assignment(graph, frontier, offsets, asg)
             .iter()
             .sum(),
     };
     let cost = match cfg.feedback {
         CostFeedback::Measured => start.elapsed().as_secs_f64(),
-        CostFeedback::Proxy => {
-            let (tiles, atoms) = problem.tile_set_size();
-            adaptive::proxy_cost(kind, &plan, tiles, atoms)
-        }
+        CostFeedback::Proxy => proxy_cost_entry(problem, kind, entry),
     };
     ExecSample { checksum, cost }
+}
+
+/// Phase-1 output of one worker-range shard of a split problem.
+pub enum ShardPartials {
+    /// (tile, partial sum) pairs — SpMV and frontier reductions.
+    Scalars(Vec<(u32, f64)>),
+    /// (tile, bm×bn partial accumulator) — GEMM's Stream-K fixup tiles.
+    Tiles(Vec<(u32, Vec<f64>)>),
+}
+
+/// Execute workers `[w0, w1)` of a split problem's descriptor plan
+/// (phase 1 of the two-phase path): per-segment partials, no shared
+/// output, safe to run concurrently with every other shard.
+pub fn execute_shard(
+    problem: &Problem,
+    desc: &ScheduleDescriptor,
+    w0: usize,
+    w1: usize,
+) -> ShardPartials {
+    match problem {
+        Problem::Spmv { matrix, x, .. } => {
+            ShardPartials::Scalars(spmv::shard_partials(matrix, x, desc, w0, w1))
+        }
+        Problem::Gemm {
+            a,
+            b,
+            shape,
+            blocking,
+            offsets,
+            ..
+        } => ShardPartials::Tiles(gemm::mac_shard_partials(
+            a,
+            b,
+            *shape,
+            *blocking,
+            desc,
+            offsets,
+            w0..w1,
+        )),
+        Problem::Frontier {
+            graph,
+            frontier,
+            offsets,
+            ..
+        } => {
+            ShardPartials::Scalars(frontier_shard_partials(graph, frontier, offsets, desc, w0, w1))
+        }
+    }
+}
+
+/// Phase 2: fold shard partials — in shard order, which is worker order —
+/// into the problem's output and return its checksum.  The accumulation
+/// sequence is identical to the sequential stream executor's, so the
+/// result is bit-identical at any shard count.
+pub fn reduce_shards(problem: &Problem, shards: &[ShardPartials]) -> f64 {
+    match problem {
+        Problem::Spmv { matrix, .. } => {
+            let mut y = vec![0.0f64; matrix.rows];
+            for shard in shards {
+                if let ShardPartials::Scalars(parts) = shard {
+                    spmv::apply_partials(&mut y, parts);
+                }
+            }
+            y.iter().sum()
+        }
+        Problem::Frontier { frontier, .. } => {
+            let mut out = vec![0.0f64; frontier.len()];
+            for shard in shards {
+                if let ShardPartials::Scalars(parts) = shard {
+                    spmv::apply_partials(&mut out, parts);
+                }
+            }
+            out.iter().sum()
+        }
+        Problem::Gemm {
+            shape, blocking, ..
+        } => {
+            let mut c = DenseMat::zeros(shape.m, shape.n);
+            for shard in shards {
+                if let ShardPartials::Tiles(parts) = shard {
+                    gemm::apply_mac_partials(&mut c, *shape, *blocking, parts);
+                }
+            }
+            c.data.iter().sum()
+        }
+    }
 }
 
 /// Execute a GEMM through a generic [`Assignment`] over the MAC-iteration
@@ -283,14 +441,58 @@ pub fn execute_frontier_assignment(
     let mut out = vec![0.0f64; frontier.len()];
     for w in &asg.workers {
         for s in &w.segments {
-            let v = frontier[s.tile as usize] as usize;
-            let (_, weights) = graph.row(v);
-            let base = offsets[s.tile as usize];
-            let mut sum = 0.0;
-            for atom in s.atom_begin..s.atom_end {
-                sum += weights[atom - base].abs();
-            }
-            out[s.tile as usize] += sum;
+            out[s.tile as usize] += frontier_segment_sum(graph, frontier, offsets, *s);
+        }
+    }
+    out
+}
+
+/// One segment's share of its frontier vertex's neighbor reduction.
+#[inline]
+fn frontier_segment_sum(
+    graph: &Csr,
+    frontier: &[u32],
+    offsets: &[usize],
+    s: balance::Segment,
+) -> f64 {
+    let v = frontier[s.tile as usize] as usize;
+    let (_, weights) = graph.row(v);
+    let base = offsets[s.tile as usize];
+    let mut sum = 0.0;
+    for atom in s.atom_begin..s.atom_end {
+        sum += weights[atom - base].abs();
+    }
+    sum
+}
+
+/// Frontier expansion from a streaming descriptor — bit-identical to
+/// [`execute_frontier_assignment`] on the materialized plan.
+pub fn execute_frontier_stream(
+    graph: &Csr,
+    frontier: &[u32],
+    offsets: &[usize],
+    desc: &ScheduleDescriptor,
+) -> Vec<f64> {
+    let mut out = vec![0.0f64; frontier.len()];
+    stream::for_each_segment(*desc, offsets, |s| {
+        out[s.tile as usize] += frontier_segment_sum(graph, frontier, offsets, s);
+    });
+    out
+}
+
+/// Phase-1 partials of a frontier shard (workers `[w0, w1)`).
+pub fn frontier_shard_partials(
+    graph: &Csr,
+    frontier: &[u32],
+    offsets: &[usize],
+    desc: &ScheduleDescriptor,
+    w0: usize,
+    w1: usize,
+) -> Vec<(u32, f64)> {
+    let mut out = Vec::new();
+    for w in w0..w1.min(desc.workers()) {
+        for s in stream::worker_segments(*desc, offsets, w) {
+            out.push((s.tile, frontier_segment_sum(graph, frontier, offsets, s)));
         }
     }
     out

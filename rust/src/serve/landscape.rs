@@ -16,7 +16,7 @@
 //! (schedules, planner, selector) regresses a family, never because a
 //! shared runner was slow.
 
-use crate::balance::adaptive::{proxy_cost, CANDIDATES};
+use crate::balance::adaptive::{proxy_cost, proxy_cost_stream, CANDIDATES};
 use crate::balance::{self, OffsetsSource, ScheduleKind, WorkSource};
 use crate::benchutil::{self, FamilyPoint};
 use crate::corpus::{gemm_landscape_grid, sparse_corpus};
@@ -24,7 +24,7 @@ use crate::metrics;
 use crate::streamk::Blocking;
 
 use super::batch::{SALT_GEMM, SALT_SPMV};
-use super::plan_cache::{fingerprint, PlanCache, PlanKey};
+use super::plan_cache::{fingerprint, PlanCache, PlanEntry, PlanKey};
 use super::tuner::{ScheduleTuner, DEFAULT_EPSILON, DEFAULT_MIN_SAMPLES, DEFAULT_SEED};
 
 /// Default tuner rounds: enough for warmup
@@ -105,8 +105,18 @@ pub fn run_landscape(scale: usize, rounds: usize, plan_workers: usize) -> Vec<Fa
             schedule: kind,
             workers,
         };
-        let plan = cache.get_or_compute(key, || kind.assign(&src, workers));
-        proxy_cost(kind, &plan, src.num_tiles(), src.num_atoms())
+        // Every candidate streams, so the cache holds O(1) descriptors
+        // and the sweep never materializes a plan; the stream proxy is
+        // bit-identical to the materialized one, keeping the committed
+        // baseline valid across the rework.
+        match cache.plan(key, &src) {
+            PlanEntry::Descriptor(d) => {
+                proxy_cost_stream(&d, &entry.offsets, src.num_tiles(), src.num_atoms())
+            }
+            PlanEntry::Materialized(asg) => {
+                proxy_cost(kind, &asg, src.num_tiles(), src.num_atoms())
+            }
+        }
     };
 
     for _ in 0..rounds.max(1) {
@@ -220,15 +230,19 @@ mod tests {
             for e in &entries {
                 let (kind, _) = tuner.select(e.fingerprint, workers, || e.prior);
                 let src = OffsetsSource::new(&e.offsets);
-                let plan = cache.get_or_compute(
-                    PlanKey {
-                        fingerprint: e.fingerprint,
-                        schedule: kind,
-                        workers,
-                    },
-                    || kind.assign(&src, workers),
-                );
-                let cost = proxy_cost(kind, &plan, src.num_tiles(), src.num_atoms());
+                let key = PlanKey {
+                    fingerprint: e.fingerprint,
+                    schedule: kind,
+                    workers,
+                };
+                let cost = match cache.plan(key, &src) {
+                    PlanEntry::Descriptor(d) => {
+                        proxy_cost_stream(&d, &e.offsets, src.num_tiles(), src.num_atoms())
+                    }
+                    PlanEntry::Materialized(asg) => {
+                        proxy_cost(kind, &asg, src.num_tiles(), src.num_atoms())
+                    }
+                };
                 tuner.record(e.fingerprint, kind, workers, cost);
             }
         }

@@ -3,18 +3,22 @@
 //!
 //! A [`ServeEngine`] accepts batches of heterogeneous [`Problem`]s (SpMV,
 //! GEMM, graph frontiers), plans each one through a schedule (the §4.5.2
-//! heuristic by default), caches the computed [`crate::balance::Assignment`]
-//! plans in a concurrent [`PlanCache`] keyed by
+//! heuristic by default), caches O(1) [`crate::balance::ScheduleDescriptor`]
+//! plan entries in a concurrent [`PlanCache`] keyed by
 //! (work-source fingerprint, schedule, worker count), and executes the
 //! batch across a `std::thread` worker pool with per-worker deques and work
 //! stealing — the host-level analogue of
 //! [`crate::balance::queue::QueuePolicy::Stealing`], lifted from simulated
 //! device time to real threads (the Atos direction, arXiv:2112.00132).
+//! Problems above [`ServeConfig::split_min_atoms`] are additionally split
+//! into worker-range shards across the pool (intra-problem parallelism),
+//! reduced by a deterministic two-phase tile fixup that keeps checksums
+//! bit-identical to sequential execution.
 //!
 //! Layering:
 //!
 //! * [`batch`]      — problem definitions, execution semantics, corpus mix;
-//! * [`plan_cache`] — the concurrent Assignment cache;
+//! * [`plan_cache`] — the concurrent plan-entry cache (descriptors);
 //! * [`pool`]       — the work-stealing thread pool;
 //! * [`tuner`]      — online ε-greedy schedule selection over measured
 //!   feedback (the [`SchedulePolicy::Adaptive`] policy);
@@ -29,14 +33,19 @@ pub mod pool;
 pub mod tuner;
 
 pub use batch::{corpus_mix, ExecSample, Problem};
-pub use plan_cache::{CacheStats, PlanCache, PlanKey};
+pub use plan_cache::{CacheStats, PlanCache, PlanEntry, PlanKey};
 pub use pool::PoolStats;
 pub use tuner::{CostFeedback, Decision, SchedulePolicy, ScheduleTuner};
 
 use std::time::{Duration, Instant};
 
+use crate::balance::stream::ScheduleDescriptor;
 use crate::balance::ScheduleKind;
 use crate::benchutil;
+
+/// Default atom count above which one problem is split into worker-range
+/// shards across the pool (see [`ServeConfig::split_min_atoms`]).
+pub const DEFAULT_SPLIT_MIN_ATOMS: usize = 1 << 20;
 
 /// Engine configuration.
 #[derive(Debug, Clone, Copy)]
@@ -54,6 +63,13 @@ pub struct ServeConfig {
     pub feedback: CostFeedback,
     /// Plan-cache capacity in entries.
     pub cache_capacity: usize,
+    /// Problems with at least this many atoms (and a streaming-capable
+    /// schedule) are split into worker-range shards executed across the
+    /// pool — intra-problem parallelism for the few-huge-problems batch
+    /// the whole-problem path serializes.  Smaller problems batch whole.
+    /// Checksums are bit-identical either way (two-phase fixup), so this
+    /// is purely a throughput knob.
+    pub split_min_atoms: usize,
 }
 
 impl Default for ServeConfig {
@@ -66,6 +82,7 @@ impl Default for ServeConfig {
             schedule: SchedulePolicy::Auto,
             feedback: CostFeedback::Measured,
             cache_capacity: 1024,
+            split_min_atoms: DEFAULT_SPLIT_MIN_ATOMS,
         }
     }
 }
@@ -106,6 +123,10 @@ pub struct BatchReport {
     /// Per-problem chosen schedule in submission order (the trace the
     /// adaptive determinism tests pin).
     pub schedules: Vec<ScheduleKind>,
+    /// Problems split into worker-range shards this batch.
+    pub split_problems: usize,
+    /// Total shard tasks dispatched (0 when nothing split).
+    pub shards: usize,
     /// Tuner selection counters for this batch.
     pub tuner: TunerBatchStats,
     pub pool: PoolStats,
@@ -154,13 +175,19 @@ impl ServeEngine {
     /// fetched from (or inserted into) the engine's cache, so repeated
     /// batches over recurring problem shapes skip planning entirely.
     ///
-    /// Three phases: (1) schedules are selected serially in submission
-    /// order (so adaptive selection is deterministic at any thread count),
-    /// (2) the pool executes the batch, (3) every execution's cost sample
-    /// is fed back to the tuner, again in submission order.
+    /// Four phases: (1) schedules are selected serially in submission
+    /// order (so adaptive selection is deterministic at any thread count)
+    /// and large streaming-planned problems are split into worker-range
+    /// shards, (2) the pool executes whole problems and shards with
+    /// weight-aware seeding plus stealing, (3) shard partials reduce in
+    /// worker order — the deterministic tile fixup keeping checksums
+    /// bit-identical to sequential execution at any thread count — and
+    /// (4) every problem's cost sample is fed back to the tuner, again in
+    /// submission order.
     pub fn execute_batch(&self, problems: &[Problem]) -> BatchReport {
         let start = Instant::now();
         let workers = self.cfg.plan_workers.max(1);
+        let threads = self.cfg.threads.max(1);
         let mut stats = TunerBatchStats::default();
         let schedules: Vec<ScheduleKind> = problems
             .iter()
@@ -183,14 +210,119 @@ impl ServeEngine {
             })
             .collect();
 
-        let jobs: Vec<(&Problem, ScheduleKind)> =
-            problems.iter().zip(schedules.iter().copied()).collect();
-        let (samples, pool) = pool::execute(self.cfg.threads, &jobs, |&(p, kind)| {
-            batch::execute(p, kind, &self.cache, &self.cfg)
-        });
+        // Split decision, serial pre-dispatch: a problem splits when the
+        // pool can use it, it is big enough, and its plan streams (the
+        // descriptor is fetched through the cache exactly once here).
+        let split: Vec<Option<ScheduleDescriptor>> = problems
+            .iter()
+            .zip(&schedules)
+            .map(|(p, &kind)| {
+                // Non-streaming schedules (Binning/LRB) can never split:
+                // skip them here so their (materialized, expensive) plans
+                // are still built inside pool workers, not serially.
+                if threads <= 1
+                    || p.atoms() < self.cfg.split_min_atoms
+                    || matches!(kind, ScheduleKind::Binning | ScheduleKind::Lrb)
+                {
+                    return None;
+                }
+                match batch::plan(p, kind, &self.cache, workers) {
+                    PlanEntry::Descriptor(d) if d.workers() > 1 => Some(d),
+                    _ => None,
+                }
+            })
+            .collect();
+
+        enum Task {
+            Whole(usize),
+            Shard { problem: usize, w0: usize, w1: usize },
+        }
+        let mut tasks: Vec<Task> = Vec::with_capacity(problems.len());
+        let mut shard_counts = vec![0usize; problems.len()];
+        for (i, desc) in split.iter().enumerate() {
+            match desc {
+                Some(d) => {
+                    let shards = threads.min(d.workers());
+                    let per = d.workers().div_ceil(shards);
+                    let mut w0 = 0;
+                    while w0 < d.workers() {
+                        let w1 = (w0 + per).min(d.workers());
+                        tasks.push(Task::Shard { problem: i, w0, w1 });
+                        shard_counts[i] += 1;
+                        w0 = w1;
+                    }
+                }
+                None => tasks.push(Task::Whole(i)),
+            }
+        }
+
+        enum TaskOut {
+            Sample(ExecSample),
+            Partials { elapsed: f64, parts: batch::ShardPartials },
+        }
+        let (outs, pool) = pool::execute_weighted(
+            threads,
+            &tasks,
+            |t| match *t {
+                Task::Whole(i) => problems[i].atoms().max(1) as u64,
+                Task::Shard { problem, .. } => {
+                    (problems[problem].atoms() / shard_counts[problem].max(1)).max(1) as u64
+                }
+            },
+            |t| match t {
+                Task::Whole(i) => TaskOut::Sample(batch::execute(
+                    &problems[*i],
+                    schedules[*i],
+                    &self.cache,
+                    &self.cfg,
+                )),
+                Task::Shard { problem, w0, w1 } => {
+                    let desc = split[*problem].as_ref().expect("shard task has descriptor");
+                    let t0 = Instant::now();
+                    let parts = batch::execute_shard(&problems[*problem], desc, *w0, *w1);
+                    TaskOut::Partials {
+                        elapsed: t0.elapsed().as_secs_f64(),
+                        parts,
+                    }
+                }
+            },
+        );
+
+        // Reassemble per-problem samples in submission order; shard
+        // partials arrive in task order, which is ascending worker order.
+        let mut samples: Vec<Option<ExecSample>> = (0..problems.len()).map(|_| None).collect();
+        let mut shard_parts: Vec<Vec<batch::ShardPartials>> =
+            (0..problems.len()).map(|_| Vec::new()).collect();
+        let mut shard_elapsed = vec![0.0f64; problems.len()];
+        for (task, out) in tasks.iter().zip(outs) {
+            match (task, out) {
+                (Task::Whole(i), TaskOut::Sample(s)) => samples[*i] = Some(s),
+                (Task::Shard { problem, .. }, TaskOut::Partials { elapsed, parts }) => {
+                    shard_elapsed[*problem] += elapsed;
+                    shard_parts[*problem].push(parts);
+                }
+                _ => unreachable!("task/output kinds always pair up"),
+            }
+        }
+        for (i, p) in problems.iter().enumerate() {
+            if let Some(desc) = &split[i] {
+                let checksum = batch::reduce_shards(p, &shard_parts[i]);
+                let cost = match self.cfg.feedback {
+                    CostFeedback::Measured => shard_elapsed[i],
+                    CostFeedback::Proxy => {
+                        batch::proxy_cost_entry(p, schedules[i], &PlanEntry::Descriptor(*desc))
+                    }
+                };
+                samples[i] = Some(ExecSample { checksum, cost });
+            }
+        }
+        let samples: Vec<ExecSample> = samples
+            .into_iter()
+            .map(|s| s.expect("every problem executed"))
+            .collect();
 
         if let Some(tuner) = &self.tuner {
-            for (&(p, kind), sample) in jobs.iter().zip(&samples) {
+            for ((p, &kind), sample) in problems.iter().zip(&schedules).zip(&samples) {
                 tuner.record(p.fingerprint(), kind, workers, sample.cost);
             }
         }
@@ -200,6 +332,8 @@ impl ServeEngine {
             elapsed: start.elapsed(),
             checksums: samples.iter().map(|s| s.checksum).collect(),
             schedules,
+            split_problems: split.iter().flatten().count(),
+            shards: shard_counts.iter().sum(),
             tuner: stats,
             pool,
             cache: self.cache.stats(),
@@ -255,6 +389,48 @@ pub fn throughput_sweep(
             }
         })
         .collect()
+}
+
+/// The single-large-problem bench mix: one SpMV with ≥ 1M nonzeros — the
+/// worst case for whole-problem batching (a batch of one has no
+/// inter-problem parallelism) and the case intra-problem splitting
+/// exists for.  2^17 rows × 16 nnz/row = 2,097,152 atoms, above
+/// [`DEFAULT_SPLIT_MIN_ATOMS`].
+pub fn single_large_mix() -> Vec<Problem> {
+    vec![Problem::spmv(std::sync::Arc::new(
+        crate::sparse::gen::uniform(1 << 17, 1 << 17, 16, 0x51A6),
+    ))]
+}
+
+/// Run the single-large bench: the [`single_large_mix`] swept over
+/// `thread_counts` under a fixed merge-path plan (so the split path is
+/// exercised deterministically), asserting bit-equal checksums, writing
+/// the JSON artifact, and returning the speedup of the last point over
+/// the first — what the CI split gate thresholds.
+pub fn run_single_large_bench(
+    thread_counts: &[usize],
+    batches: usize,
+    out_path: &str,
+) -> crate::Result<f64> {
+    let mix = single_large_mix();
+    let atoms: usize = mix.iter().map(Problem::atoms).sum();
+    anyhow::ensure!(atoms >= 1 << 20, "single-large mix too small: {atoms} atoms");
+    let cfg = ServeConfig {
+        schedule: SchedulePolicy::Fixed(ScheduleKind::MergePath),
+        ..ServeConfig::default()
+    };
+    let points = run_bench(&mix, thread_counts, batches, cfg, out_path)?;
+    let (first, last) = (
+        points.first().map(SweepPoint::problems_per_sec).unwrap_or(0.0),
+        points.last().map(SweepPoint::problems_per_sec).unwrap_or(0.0),
+    );
+    let speedup = if first > 0.0 { last / first } else { 0.0 };
+    println!(
+        "single-large split speedup: x{speedup:.2} ({} -> {} threads)",
+        thread_counts.first().unwrap_or(&1),
+        thread_counts.last().unwrap_or(&1)
+    );
+    Ok(speedup)
 }
 
 /// Run the full bench: sweep `thread_counts`, assert checksum invariance
@@ -339,6 +515,36 @@ mod tests {
         assert_eq!(points.len(), 2);
         assert_eq!(points[0].problems, points[1].problems);
         assert_eq!(points[0].checksum, points[1].checksum);
+    }
+
+    #[test]
+    fn splitting_preserves_checksums_and_reports_shards() {
+        let mix = tiny_mix();
+        let cfg = |threads: usize, split_min_atoms: usize| ServeConfig {
+            threads,
+            schedule: SchedulePolicy::Fixed(ScheduleKind::MergePath),
+            split_min_atoms,
+            ..ServeConfig::default()
+        };
+        let whole = ServeEngine::new(cfg(1, usize::MAX)).execute_batch(&mix);
+        assert_eq!((whole.split_problems, whole.shards), (0, 0));
+        let split = ServeEngine::new(cfg(4, 1)).execute_batch(&mix);
+        assert_eq!(split.split_problems, mix.len());
+        assert!(split.shards >= mix.len(), "shards: {}", split.shards);
+        // The two-phase fixup keeps the split result bit-identical.
+        assert_eq!(split.checksums, whole.checksums);
+    }
+
+    #[test]
+    fn single_thread_never_splits() {
+        let mix = tiny_mix();
+        let engine = ServeEngine::new(ServeConfig {
+            threads: 1,
+            split_min_atoms: 1,
+            ..ServeConfig::default()
+        });
+        let report = engine.execute_batch(&mix);
+        assert_eq!((report.split_problems, report.shards), (0, 0));
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Concurrent plan cache: computed [`Assignment`]s keyed by
+//! Concurrent plan cache: plan *entries* keyed by
 //! (work-source fingerprint, schedule, worker count).
 //!
 //! Schedules are pure functions of the atoms-per-tile prefix sum (the
@@ -7,6 +7,13 @@
 //! by construction, so the cache key is a fingerprint of exactly those
 //! inputs, and a cache hit is guaranteed bit-identical to a fresh
 //! computation (the property `tests/serve_plan_cache.rs` pins).
+//!
+//! What is cached changed in the zero-materialization rework: for
+//! streaming-capable schedules (everything but Binning/LRB) an entry is an
+//! O(1) [`ScheduleDescriptor`] — a few words, not O(nnz) of per-worker
+//! segment vectors — and workers reconstruct their segments lazily at
+//! execution time.  Only Binning/LRB, whose tile reorder is a function of
+//! the whole offsets array, still cache a materialized [`Assignment`].
 //!
 //! Concurrency: a read-mostly `RwLock<HashMap>` with relaxed counters.  Two
 //! workers racing on the same missing key may both compute the plan; the
@@ -19,6 +26,7 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
+use crate::balance::stream::ScheduleDescriptor;
 use crate::balance::{Assignment, ScheduleKind, WorkSource};
 
 /// Cache key: everything a schedule's output depends on.
@@ -28,6 +36,37 @@ pub struct PlanKey {
     pub fingerprint: u64,
     pub schedule: ScheduleKind,
     pub workers: usize,
+}
+
+/// A cached plan: an O(1) descriptor for streaming-capable schedules, or
+/// the materialized per-worker segment lists for Binning/LRB.
+#[derive(Debug, Clone)]
+pub enum PlanEntry {
+    Descriptor(ScheduleDescriptor),
+    Materialized(Arc<Assignment>),
+}
+
+impl PlanEntry {
+    /// Compute the entry for a (schedule, source, workers) triple:
+    /// descriptor when streaming-capable, materialized otherwise.
+    pub fn compute(schedule: ScheduleKind, src: &impl WorkSource, workers: usize) -> PlanEntry {
+        match ScheduleDescriptor::new(schedule, src, workers) {
+            Some(desc) => PlanEntry::Descriptor(desc),
+            None => PlanEntry::Materialized(Arc::new(schedule.assign(src, workers))),
+        }
+    }
+
+    pub fn is_descriptor(&self) -> bool {
+        matches!(self, PlanEntry::Descriptor(_))
+    }
+
+    /// Number of workers the plan creates.
+    pub fn workers(&self) -> usize {
+        match self {
+            PlanEntry::Descriptor(d) => d.workers(),
+            PlanEntry::Materialized(asg) => asg.workers.len(),
+        }
+    }
 }
 
 /// Point-in-time cache counters.
@@ -50,9 +89,9 @@ impl CacheStats {
     }
 }
 
-/// Thread-safe Assignment cache (see module docs).
+/// Thread-safe plan-entry cache (see module docs).
 pub struct PlanCache {
-    map: RwLock<HashMap<PlanKey, Arc<Assignment>>>,
+    map: RwLock<HashMap<PlanKey, PlanEntry>>,
     /// Insertion order for FIFO eviction; locked after `map`'s write lock.
     order: Mutex<VecDeque<PlanKey>>,
     capacity: usize,
@@ -74,19 +113,20 @@ impl PlanCache {
         }
     }
 
-    /// Fetch the plan for `key`, computing and inserting it on a miss.
-    pub fn get_or_compute(
-        &self,
-        key: PlanKey,
-        compute: impl FnOnce() -> Assignment,
-    ) -> Arc<Assignment> {
+    /// Fetch the plan entry for `key`, computing it from `src` on a miss.
+    pub fn plan(&self, key: PlanKey, src: &impl WorkSource) -> PlanEntry {
+        self.get_or_compute(key, || PlanEntry::compute(key.schedule, src, key.workers))
+    }
+
+    /// Fetch the entry for `key`, computing and inserting it on a miss.
+    pub fn get_or_compute(&self, key: PlanKey, compute: impl FnOnce() -> PlanEntry) -> PlanEntry {
         if let Some(plan) = self.map.read().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return plan.clone();
         }
         // Compute outside any lock: plans can be expensive and the racing
         // duplicate (see module docs) is cheaper than serializing planners.
-        let plan = Arc::new(compute());
+        let plan = compute();
         self.misses.fetch_add(1, Ordering::Relaxed);
         let mut map = self.map.write().unwrap();
         if let Some(existing) = map.get(&key) {
@@ -168,17 +208,18 @@ mod tests {
         }
     }
 
-    fn tiny_plan() -> Assignment {
-        let offsets = vec![0usize, 2, 5];
-        ScheduleKind::ThreadMapped.assign(&OffsetsSource::new(&offsets), 4)
+    const OFFS: [usize; 3] = [0, 2, 5];
+
+    fn tiny_entry() -> PlanEntry {
+        PlanEntry::compute(ScheduleKind::ThreadMapped, &OffsetsSource::new(&OFFS), 4)
     }
 
     #[test]
-    fn hit_returns_same_arc() {
+    fn hit_does_not_recompute() {
         let cache = PlanCache::new(16);
-        let a = cache.get_or_compute(key(1), tiny_plan);
+        let a = cache.get_or_compute(key(1), tiny_entry);
         let b = cache.get_or_compute(key(1), || panic!("must not recompute"));
-        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.workers(), b.workers());
         let s = cache.stats();
         assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
     }
@@ -186,14 +227,14 @@ mod tests {
     #[test]
     fn distinct_keys_distinct_entries() {
         let cache = PlanCache::new(16);
-        cache.get_or_compute(key(1), tiny_plan);
-        cache.get_or_compute(key(2), tiny_plan);
+        cache.get_or_compute(key(1), tiny_entry);
+        cache.get_or_compute(key(2), tiny_entry);
         let other = PlanKey {
             fingerprint: 1,
             schedule: ScheduleKind::MergePath,
             workers: 4,
         };
-        cache.get_or_compute(other, tiny_plan);
+        cache.get_or_compute(other, tiny_entry);
         assert_eq!(cache.len(), 3);
         assert_eq!(cache.stats().misses, 3);
     }
@@ -202,7 +243,7 @@ mod tests {
     fn capacity_bounds_entries_fifo() {
         let cache = PlanCache::new(4);
         for fp in 0..20 {
-            cache.get_or_compute(key(fp), tiny_plan);
+            cache.get_or_compute(key(fp), tiny_entry);
         }
         assert_eq!(cache.len(), 4);
         assert_eq!(cache.stats().evictions, 16);
@@ -213,9 +254,54 @@ mod tests {
     #[test]
     fn clear_empties_cache() {
         let cache = PlanCache::new(8);
-        cache.get_or_compute(key(1), tiny_plan);
+        cache.get_or_compute(key(1), tiny_entry);
         cache.clear();
         assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn streaming_schedules_cache_descriptor_only_entries() {
+        // The acceptance invariant: no per-worker segment vectors for
+        // streaming-capable schedules — a cache entry is a few words.
+        assert!(std::mem::size_of::<PlanEntry>() <= 40);
+        let src = OffsetsSource::new(&OFFS);
+        let cache = PlanCache::new(16);
+        for (i, kind) in [
+            ScheduleKind::ThreadMapped,
+            ScheduleKind::GroupMapped(32),
+            ScheduleKind::MergePath,
+            ScheduleKind::NonzeroSplit,
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let k = PlanKey {
+                fingerprint: i as u64,
+                schedule: kind,
+                workers: 4,
+            };
+            let entry = cache.plan(k, &src);
+            assert!(entry.is_descriptor(), "{kind:?} must cache a descriptor");
+            let PlanEntry::Descriptor(d) = entry else {
+                unreachable!()
+            };
+            // The descriptor reproduces the materialized plan exactly.
+            assert_eq!(
+                crate::balance::stream::materialize(d, &src),
+                kind.assign(&src, 4)
+            );
+        }
+        for kind in [ScheduleKind::Binning, ScheduleKind::Lrb] {
+            let k = PlanKey {
+                fingerprint: 100,
+                schedule: kind,
+                workers: 4,
+            };
+            assert!(
+                !cache.plan(k, &src).is_descriptor(),
+                "{kind:?} has no streaming descriptor"
+            );
+        }
     }
 
     #[test]

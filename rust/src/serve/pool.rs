@@ -39,6 +39,65 @@ where
     T: Send,
     F: Fn(&J) -> T + Sync,
 {
+    // Round-robin seeding: the static half of the policy.
+    let seed = |threads: usize| -> Vec<VecDeque<usize>> {
+        let mut seeds: Vec<VecDeque<usize>> = (0..threads).map(|_| VecDeque::new()).collect();
+        for i in 0..jobs.len() {
+            seeds[i % threads].push_back(i);
+        }
+        seeds
+    };
+    run_pool(threads, jobs, seed, run)
+}
+
+/// [`execute`] with weight-aware seeding: jobs are placed heaviest-first
+/// onto the least-loaded deque (LPT), so a batch holding one huge
+/// problem's shards next to many small whole problems starts balanced
+/// instead of relying purely on stealing.  Deterministic: ties break on
+/// the lower job index / worker index.
+pub fn execute_weighted<J, T, F, W>(
+    threads: usize,
+    jobs: &[J],
+    weight: W,
+    run: F,
+) -> (Vec<T>, PoolStats)
+where
+    J: Sync,
+    T: Send,
+    F: Fn(&J) -> T + Sync,
+    W: Fn(&J) -> u64,
+{
+    let seed = |threads: usize| -> Vec<VecDeque<usize>> {
+        let mut order: Vec<usize> = (0..jobs.len()).collect();
+        // Stable sort: equal weights keep submission order.
+        order.sort_by_key(|&i| std::cmp::Reverse(weight(&jobs[i])));
+        let mut seeds: Vec<VecDeque<usize>> = (0..threads).map(|_| VecDeque::new()).collect();
+        let mut loads = vec![0u128; threads];
+        for i in order {
+            let w = (0..threads)
+                .min_by_key(|&t| loads[t])
+                .expect("at least one worker");
+            seeds[w].push_back(i);
+            loads[w] += u128::from(weight(&jobs[i]).max(1));
+        }
+        seeds
+    };
+    run_pool(threads, jobs, seed, run)
+}
+
+/// The shared pool body: clamp threads, seed the deques, run the
+/// pop-own / steal-from-richest worker loop, return results in job order.
+fn run_pool<J, T, F>(
+    threads: usize,
+    jobs: &[J],
+    seed: impl FnOnce(usize) -> Vec<VecDeque<usize>>,
+    run: F,
+) -> (Vec<T>, PoolStats)
+where
+    J: Sync,
+    T: Send,
+    F: Fn(&J) -> T + Sync,
+{
     let threads = threads.max(1).min(jobs.len().max(1));
     if threads == 1 {
         let results = jobs.iter().map(&run).collect();
@@ -50,18 +109,14 @@ where
         return (results, stats);
     }
 
-    // Round-robin seeding: the static half of the policy.  Length mirrors
-    // are only decremented after a removal, so `lens[w] == 0` proves the
-    // deque is drained — the termination condition below relies on it.
-    let deques: Vec<Mutex<VecDeque<usize>>> = (0..threads)
-        .map(|_| Mutex::new(VecDeque::new()))
-        .collect();
-    let lens: Vec<AtomicUsize> = (0..threads).map(|_| AtomicUsize::new(0)).collect();
-    for i in 0..jobs.len() {
-        let w = i % threads;
-        deques[w].lock().unwrap().push_back(i);
-        lens[w].fetch_add(1, Ordering::Release);
-    }
+    // Length mirrors are only decremented after a removal, so
+    // `lens[w] == 0` proves the deque is drained — the termination
+    // condition below relies on it.
+    let seeds = seed(threads);
+    debug_assert_eq!(seeds.len(), threads);
+    debug_assert_eq!(seeds.iter().map(VecDeque::len).sum::<usize>(), jobs.len());
+    let lens: Vec<AtomicUsize> = seeds.iter().map(|q| AtomicUsize::new(q.len())).collect();
+    let deques: Vec<Mutex<VecDeque<usize>>> = seeds.into_iter().map(Mutex::new).collect();
     let pops = AtomicU64::new(0);
     let steals = AtomicU64::new(0);
 
@@ -166,6 +221,27 @@ mod tests {
         assert_eq!(got, want);
         assert_eq!(stats.pops + stats.steals, jobs.len() as u64);
         assert_eq!(stats.threads, 4);
+    }
+
+    #[test]
+    fn weighted_execution_results_in_job_order() {
+        let jobs: Vec<u64> = (0..100).collect();
+        let (got, stats) = execute_weighted(4, &jobs, |&j| j + 1, |&j| j * 3);
+        let want: Vec<u64> = jobs.iter().map(|&j| j * 3).collect();
+        assert_eq!(got, want);
+        assert_eq!(stats.pops + stats.steals, jobs.len() as u64);
+    }
+
+    #[test]
+    fn weighted_seeding_spreads_heavy_jobs() {
+        // One giant job plus many tiny ones: LPT puts the giant alone on
+        // one deque, so no worker starts with (giant + tiny) stacked.
+        let jobs: Vec<u64> = std::iter::once(1_000_000u64)
+            .chain(std::iter::repeat(1).take(9))
+            .collect();
+        let (got, stats) = execute_weighted(2, &jobs, |&j| j, |&j| j);
+        assert_eq!(got, jobs);
+        assert_eq!(stats.pops + stats.steals, jobs.len() as u64);
     }
 
     #[test]

@@ -31,6 +31,7 @@ fn adaptive_cfg(threads: usize) -> ServeConfig {
         },
         feedback: CostFeedback::Proxy,
         cache_capacity: 1024,
+        ..ServeConfig::default()
     }
 }
 
@@ -41,6 +42,7 @@ fn fixed_cfg(threads: usize, kind: ScheduleKind) -> ServeConfig {
         schedule: SchedulePolicy::Fixed(kind),
         feedback: CostFeedback::Proxy,
         cache_capacity: 1024,
+        ..ServeConfig::default()
     }
 }
 

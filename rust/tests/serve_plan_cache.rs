@@ -1,13 +1,14 @@
 //! Property tests for the serve plan cache (seeded randomized cases, like
-//! `prop_schedules.rs`): a cached [`Assignment`] must be bit-identical to a
-//! freshly computed one for **every** schedule, work source, and worker
-//! count — the invariant that makes plan caching a pure optimization.
+//! `prop_schedules.rs`): a cached plan entry must reproduce a freshly
+//! computed assignment bit for bit for **every** schedule, work source,
+//! and worker count — the invariant that makes plan caching a pure
+//! optimization.  Streaming-capable schedules cache O(1) descriptors
+//! (materialized on demand through the stream); Binning/LRB cache the
+//! materialized assignment.
 
-use std::sync::Arc;
-
-use gpulb::balance::{OffsetsSource, ScheduleKind};
+use gpulb::balance::{stream, OffsetsSource, ScheduleKind};
 use gpulb::rng::Rng;
-use gpulb::serve::plan_cache::{fingerprint, PlanCache, PlanKey};
+use gpulb::serve::plan_cache::{fingerprint, PlanCache, PlanEntry, PlanKey};
 use gpulb::sparse::{gen, Csr};
 
 const SCHEDULES: [ScheduleKind; 7] = [
@@ -33,6 +34,14 @@ fn random_matrix(rng: &mut Rng) -> Csr {
     }
 }
 
+/// Materialized view of an entry, whatever its representation.
+fn materialized(entry: &PlanEntry, a: &Csr) -> gpulb::balance::Assignment {
+    match entry {
+        PlanEntry::Descriptor(d) => stream::materialize(*d, a),
+        PlanEntry::Materialized(asg) => (**asg).clone(),
+    }
+}
+
 #[test]
 fn prop_cached_plan_bit_identical_to_fresh() {
     let mut rng = Rng::new(0x5EED_CAC8);
@@ -47,16 +56,23 @@ fn prop_cached_plan_bit_identical_to_fresh() {
                     schedule: kind,
                     workers,
                 };
-                let cached = cache.get_or_compute(key, || kind.assign(&a, workers));
+                let cached = cache.plan(key, &a);
                 let fresh = kind.assign(&a, workers);
                 assert_eq!(
-                    *cached, fresh,
+                    materialized(&cached, &a),
+                    fresh,
                     "case {case}: {kind:?} x{workers} cached plan diverged"
                 );
-                cached.validate(&a).unwrap();
-                // Refetching must hit and return the same plan.
+                fresh.validate(&a).unwrap();
+                // Streaming-capable schedules must cache descriptors only.
+                assert_eq!(
+                    cached.is_descriptor(),
+                    !matches!(kind, ScheduleKind::Binning | ScheduleKind::Lrb),
+                    "case {case}: {kind:?} wrong entry representation"
+                );
+                // Refetching must hit and return an equivalent entry.
                 let again = cache.get_or_compute(key, || panic!("unexpected recompute"));
-                assert!(Arc::ptr_eq(&cached, &again), "case {case}: cache missed");
+                assert_eq!(again.workers(), cached.workers());
             }
         }
     }
@@ -91,22 +107,22 @@ fn workers_and_schedule_are_part_of_the_key() {
     let a = gen::power_law(120, 120, 60, 1.5, 9);
     let cache = PlanCache::new(64);
     let fp = fingerprint(0, &a);
-    let plan_64 = cache.get_or_compute(
+    let plan_64 = cache.plan(
         PlanKey {
             fingerprint: fp,
             schedule: ScheduleKind::MergePath,
             workers: 64,
         },
-        || ScheduleKind::MergePath.assign(&a, 64),
+        &a,
     );
-    let plan_128 = cache.get_or_compute(
+    let plan_128 = cache.plan(
         PlanKey {
             fingerprint: fp,
             schedule: ScheduleKind::MergePath,
             workers: 128,
         },
-        || ScheduleKind::MergePath.assign(&a, 128),
+        &a,
     );
     assert_eq!(cache.stats().misses, 2, "worker count must key separately");
-    assert_ne!(plan_64.workers.len(), plan_128.workers.len());
+    assert_ne!(plan_64.workers(), plan_128.workers());
 }

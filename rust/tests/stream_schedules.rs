@@ -1,0 +1,219 @@
+//! The zero-materialization invariants, end to end:
+//!
+//! * **Stream/materialized equivalence** — for every streaming-capable
+//!   schedule and every source shape (uniform, power-law, empty-row-heavy,
+//!   single giant row, degenerate empties), the lazy per-worker
+//!   `worker_segments` streams concatenate to exactly the materialized
+//!   `Assignment`'s segments, and cover the atom set exactly.
+//! * **Intra-problem parallel execution** — splitting a problem into
+//!   worker-range shards across the serve pool is checksum-**bit**-identical
+//!   to sequential whole-problem execution at 1/2/4/8 threads, for SpMV,
+//!   GEMM (Stream-K tile fixup), and frontier problems.
+
+use std::sync::Arc;
+
+use gpulb::balance::stream::{self, ScheduleDescriptor};
+use gpulb::balance::{OffsetsSource, ScheduleKind};
+use gpulb::rng::Rng;
+use gpulb::serve::{CostFeedback, Problem, SchedulePolicy, ServeConfig, ServeEngine};
+use gpulb::sparse::gen;
+use gpulb::streamk::{Blocking, GemmShape};
+
+const STREAMING: [ScheduleKind; 5] = [
+    ScheduleKind::ThreadMapped,
+    ScheduleKind::GroupMapped(32),
+    ScheduleKind::GroupMapped(128),
+    ScheduleKind::MergePath,
+    ScheduleKind::NonzeroSplit,
+];
+
+/// The named source-shape corpus of the equivalence property.
+fn shaped_sources() -> Vec<(&'static str, Vec<usize>)> {
+    let mut out: Vec<(&'static str, Vec<usize>)> = vec![
+        ("degenerate-empty", vec![0]),
+        ("all-empty-rows", vec![0, 0, 0, 0, 0]),
+        ("single-giant-row", vec![0, 10_000]),
+        ("single-atom", vec![0, 1]),
+    ];
+    out.push(("uniform", gen::uniform(257, 257, 8, 11).offsets));
+    out.push(("power-law", gen::power_law(300, 300, 150, 1.6, 7).offsets));
+    let lens: Vec<usize> = (0..96).map(|i| if i % 3 == 0 { 5 } else { 0 }).collect();
+    out.push(("empty-row-mix", gpulb::balance::prefix::exclusive(&lens)));
+    out
+}
+
+#[test]
+fn streams_concatenate_to_materialized_assignment() {
+    for (name, offsets) in shaped_sources() {
+        let src = OffsetsSource::new(&offsets);
+        for kind in STREAMING {
+            for workers in [1usize, 2, 7, 64, 500] {
+                let desc = kind
+                    .descriptor(&src, workers)
+                    .expect("streaming schedule has a descriptor");
+                let asg = kind.assign(&src, workers);
+                assert_eq!(
+                    desc.workers(),
+                    asg.workers.len(),
+                    "{name} {kind:?} x{workers}: worker count"
+                );
+                for (w, wa) in asg.workers.iter().enumerate() {
+                    let streamed: Vec<_> = stream::worker_segments(desc, &offsets, w).collect();
+                    assert_eq!(
+                        streamed, wa.segments,
+                        "{name} {kind:?} x{workers} worker {w}: segments"
+                    );
+                    assert_eq!(desc.granularity(), wa.granularity);
+                }
+                asg.validate(&src)
+                    .unwrap_or_else(|e| panic!("{name} {kind:?} x{workers}: {e:#}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_streams_cover_random_sources_exactly() {
+    let mut rng = Rng::new(0x57AE_A11);
+    for case in 0..40 {
+        let tiles = rng.below(50);
+        let mut offsets = Vec::with_capacity(tiles + 1);
+        offsets.push(0usize);
+        for _ in 0..tiles {
+            let len = match rng.below(8) {
+                0..=2 => 0,
+                3..=5 => rng.range(1, 10),
+                6 => rng.range(10, 100),
+                _ => rng.range(100, 2000),
+            };
+            offsets.push(offsets.last().unwrap() + len);
+        }
+        let src = OffsetsSource::new(&offsets);
+        let workers = 1 + rng.below(200);
+        for kind in STREAMING {
+            let desc = kind.descriptor(&src, workers).unwrap();
+            let mut covered = vec![false; *offsets.last().unwrap()];
+            stream::for_each_segment(desc, &offsets, |s| {
+                let t = s.tile as usize;
+                assert!(
+                    s.atom_begin >= offsets[t] && s.atom_end <= offsets[t + 1],
+                    "case {case} {kind:?}: segment out of tile bounds"
+                );
+                for a in s.atom_begin..s.atom_end {
+                    assert!(!covered[a], "case {case} {kind:?}: atom {a} twice");
+                    covered[a] = true;
+                }
+            });
+            assert!(
+                covered.iter().all(|&c| c),
+                "case {case} {kind:?} x{workers}: atoms uncovered"
+            );
+        }
+    }
+}
+
+/// A heterogeneous mix exercising all three partial kinds (scalar SpMV,
+/// scalar frontier, tile-accumulator GEMM).
+fn split_mix() -> Vec<Problem> {
+    let graph = Arc::new(gen::uniform(128, 128, 4, 9));
+    let frontier: Vec<u32> = (0..graph.rows as u32).collect();
+    vec![
+        Problem::spmv(Arc::new(gen::power_law(400, 400, 200, 1.5, 3))),
+        Problem::spmv(Arc::new(gen::uniform(256, 256, 8, 4))),
+        Problem::gemm(GemmShape::new(96, 80, 72), Blocking::new(32, 32, 16), 7),
+        Problem::frontier(graph, frontier),
+    ]
+}
+
+fn cfg(threads: usize, kind: ScheduleKind, split_min_atoms: usize) -> ServeConfig {
+    ServeConfig {
+        threads,
+        plan_workers: 64,
+        schedule: SchedulePolicy::Fixed(kind),
+        feedback: CostFeedback::Proxy,
+        split_min_atoms,
+        ..ServeConfig::default()
+    }
+}
+
+#[test]
+fn sharded_execution_checksum_bit_identical_across_thread_counts() {
+    let mix = split_mix();
+    for kind in [
+        ScheduleKind::ThreadMapped,
+        ScheduleKind::GroupMapped(32),
+        ScheduleKind::MergePath,
+        ScheduleKind::NonzeroSplit,
+    ] {
+        // Reference: sequential, splitting disabled.
+        let reference = ServeEngine::new(cfg(1, kind, usize::MAX))
+            .execute_batch(&mix)
+            .checksums;
+        for threads in [1usize, 2, 4, 8] {
+            // Threshold 1 forces the two-phase path for every problem
+            // (at >1 thread); the fixup must reproduce the sequential
+            // accumulation order bit for bit.
+            let report = ServeEngine::new(cfg(threads, kind, 1)).execute_batch(&mix);
+            assert_eq!(
+                report.checksums, reference,
+                "{kind:?} at {threads} threads diverged from sequential"
+            );
+            if threads > 1 {
+                assert_eq!(
+                    report.split_problems,
+                    mix.len(),
+                    "{kind:?} at {threads} threads: expected every problem split"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn split_threshold_gates_sharding() {
+    let mix = split_mix();
+    let report = ServeEngine::new(cfg(4, ScheduleKind::MergePath, usize::MAX)).execute_batch(&mix);
+    assert_eq!((report.split_problems, report.shards), (0, 0));
+    let report = ServeEngine::new(cfg(4, ScheduleKind::MergePath, 1)).execute_batch(&mix);
+    assert_eq!(report.split_problems, mix.len());
+    assert!(report.shards > mix.len(), "shards: {}", report.shards);
+}
+
+#[test]
+fn binning_problems_never_split_but_stay_correct() {
+    // Binning has no streaming descriptor: the engine must batch such
+    // problems whole even below the split threshold, with identical
+    // checksums at any thread count.
+    let mix = split_mix();
+    let reference = ServeEngine::new(cfg(1, ScheduleKind::Binning, usize::MAX))
+        .execute_batch(&mix)
+        .checksums;
+    for threads in [2usize, 8] {
+        let report = ServeEngine::new(cfg(threads, ScheduleKind::Binning, 1)).execute_batch(&mix);
+        assert_eq!((report.split_problems, report.shards), (0, 0));
+        assert_eq!(report.checksums, reference);
+    }
+}
+
+#[test]
+fn sharded_proxy_feedback_matches_whole_problem_proxy() {
+    // Proxy cost is a pure function of (offsets, schedule, workers):
+    // splitting must not change the cost the tuner sees, or traces would
+    // diverge across thread counts.
+    let mix = split_mix();
+    let whole = ServeEngine::new(cfg(1, ScheduleKind::MergePath, usize::MAX));
+    let split = ServeEngine::new(cfg(4, ScheduleKind::MergePath, 1));
+    let _ = whole.execute_batch(&mix);
+    let _ = split.execute_batch(&mix);
+    // Descriptor streams are deterministic, so re-running either engine
+    // reproduces its checksums exactly.
+    assert_eq!(
+        whole.execute_batch(&mix).checksums,
+        split.execute_batch(&mix).checksums
+    );
+}
+
+#[test]
+fn descriptor_small_enough_for_copy_semantics() {
+    assert!(std::mem::size_of::<ScheduleDescriptor>() <= 32);
+}
