@@ -13,7 +13,7 @@
 //! * thread-mapped: warps advance at their slowest lane →
 //!   inflation ≈ E[max of 32 row lengths] / E[row length];
 //! * warp-mapped: each row pads to 32 lanes →
-//!   inflation ≈ E[ceil(len/32)·32] / E[len];
+//!   inflation ≈ `E[ceil(len/32)·32] / E[len]`;
 //! * merge-path: ~1 (exact balance) + setup/row-end overhead.
 
 use crate::sparse::{stats, Csr};

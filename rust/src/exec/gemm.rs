@@ -93,6 +93,36 @@ pub fn mac_shard_partials(
     out
 }
 
+/// Execute a GEMM through a generic materialized [`crate::balance::Assignment`]
+/// over the MAC-iteration tile set: each segment accumulates its share of
+/// one output tile's k-iterations (Algorithm 10's fixup realized as
+/// commutative accumulation) — bit-identical to [`execute_macs_stream`]
+/// on the equivalent descriptor.
+pub fn execute_macs_assignment(
+    a: &DenseMat,
+    b: &DenseMat,
+    shape: GemmShape,
+    blk: Blocking,
+    asg: &crate::balance::Assignment,
+) -> DenseMat {
+    let tiles_n = shape.n.div_ceil(blk.bn);
+    let mut c = DenseMat::zeros(shape.m, shape.n);
+    for w in &asg.workers {
+        for s in &w.segments {
+            let acc = mac_segment_acc(a, b, shape, blk, *s);
+            let tile = s.tile as usize;
+            c.add_window(
+                &acc,
+                (tile / tiles_n) * blk.bm,
+                (tile % tiles_n) * blk.bn,
+                blk.bm,
+                blk.bn,
+            );
+        }
+    }
+    c
+}
+
 /// Execute a GEMM through a streaming schedule descriptor over its
 /// MAC-iteration tile set (Algorithm 10's fixup realized as commutative
 /// accumulation) — the stream twin of the serve layer's materialized
@@ -353,6 +383,37 @@ mod tests {
         let shape = GemmShape::new(50, 70, 90);
         let blk = Blocking::new(32, 32, 16);
         check_numerics(shape, blk, Decomposition::StreamK { g: 5 });
+    }
+
+    #[test]
+    fn mac_assignment_matches_reference_all_schedules() {
+        use crate::balance::{OffsetsSource, ScheduleKind};
+        let shape = GemmShape::new(96, 80, 72);
+        let blk = Blocking::new(32, 32, 16);
+        let a = DenseMat::random(shape.m, shape.k, 3);
+        let b = DenseMat::random(shape.k, shape.n, 4);
+        let want = DenseMat::matmul_ref(&a, &b);
+        let tiles = blk.tiles(shape);
+        let ipt = blk.iters_per_tile(shape) as usize;
+        let offsets: Vec<usize> = (0..=tiles).map(|t| t * ipt).collect();
+        let src = OffsetsSource::new(&offsets);
+        for kind in [
+            ScheduleKind::ThreadMapped,
+            ScheduleKind::GroupMapped(32),
+            ScheduleKind::MergePath,
+            ScheduleKind::NonzeroSplit,
+            ScheduleKind::Binning,
+            ScheduleKind::Lrb,
+        ] {
+            let asg = kind.assign(&src, 16);
+            asg.validate(&src).unwrap();
+            let got = execute_macs_assignment(&a, &b, shape, blk, &asg);
+            assert!(
+                got.max_abs_diff(&want) < 1e-9,
+                "{kind:?} diff {}",
+                got.max_abs_diff(&want)
+            );
+        }
     }
 
     #[test]

@@ -33,6 +33,76 @@ fn for_each_schedule_segment<S: WorkSource>(
     }
 }
 
+/// One segment's share of its frontier vertex's neighbor reduction: the
+/// absolute edge weights of the segment's slice of the neighbor list (the
+/// balanced "advance" of §4.4.3, with the same accumulate-into-tile
+/// semantics as SpMV).  `offsets` is the prefix sum of neighbor-list
+/// lengths over the frontier.
+#[inline]
+pub fn frontier_segment_sum(graph: &Csr, frontier: &[u32], offsets: &[usize], s: Segment) -> f64 {
+    let v = frontier[s.tile as usize] as usize;
+    let (_, weights) = graph.row(v);
+    let base = offsets[s.tile as usize];
+    let mut sum = 0.0;
+    for atom in s.atom_begin..s.atom_end {
+        sum += weights[atom - base].abs();
+    }
+    sum
+}
+
+/// Frontier expansion from a streaming descriptor: per frontier vertex,
+/// reduce its neighbor list under any streaming schedule.
+pub fn frontier_stream(
+    graph: &Csr,
+    frontier: &[u32],
+    offsets: &[usize],
+    desc: &stream::ScheduleDescriptor,
+) -> Vec<f64> {
+    let mut out = vec![0.0f64; frontier.len()];
+    stream::for_each_segment(*desc, offsets, |s| {
+        out[s.tile as usize] += frontier_segment_sum(graph, frontier, offsets, s);
+    });
+    out
+}
+
+/// Frontier expansion through a materialized [`crate::balance::Assignment`]
+/// (Binning/LRB plans) — bit-identical to [`frontier_stream`] on a
+/// streaming schedule's materialized twin.
+pub fn frontier_assignment(
+    graph: &Csr,
+    frontier: &[u32],
+    offsets: &[usize],
+    asg: &crate::balance::Assignment,
+) -> Vec<f64> {
+    let mut out = vec![0.0f64; frontier.len()];
+    for w in &asg.workers {
+        for s in &w.segments {
+            out[s.tile as usize] += frontier_segment_sum(graph, frontier, offsets, *s);
+        }
+    }
+    out
+}
+
+/// Phase-1 partials of a frontier shard (workers `[w0, w1)`), in
+/// (worker, segment) order; the phase-2 fixup is
+/// [`crate::exec::spmv::apply_partials`].
+pub fn frontier_shard_partials(
+    graph: &Csr,
+    frontier: &[u32],
+    offsets: &[usize],
+    desc: &stream::ScheduleDescriptor,
+    w0: usize,
+    w1: usize,
+) -> Vec<(u32, f64)> {
+    let mut out = Vec::new();
+    for w in w0..w1.min(desc.workers()) {
+        for s in stream::worker_segments(*desc, offsets, w) {
+            out.push((s.tile, frontier_segment_sum(graph, frontier, offsets, s)));
+        }
+    }
+    out
+}
+
 /// Frontier-based BFS: returns depth per vertex (`u32::MAX` = unreached).
 ///
 /// Each iteration builds the frontier's neighbor-list offsets and lets a

@@ -1,0 +1,704 @@
+//! The [`WorkKernel`] trait: the work-processing face of a served problem.
+//!
+//! The paper's central abstraction is the decoupling of *load balancing*
+//! from *work processing* behind a programmable interface (§4.2; see also
+//! arXiv:2301.04792).  This module is that interface at the serving layer:
+//! a kernel exposes its tile set (the atoms-per-tile prefix sum), executes
+//! balanced segments, and reduces two-phase shard partials — and the
+//! engine ([`crate::serve`]) plans, caches, tunes, splits and measures it
+//! without knowing which workload it is.  Adding a workload means
+//! implementing this trait in one file; no engine code changes (the Atos
+//! direction, arXiv:2112.00132: a task-parallel interface that schedules
+//! *any* operator).
+//!
+//! Two layers:
+//!
+//! * [`WorkKernel`] — the typed trait a workload implements, with an
+//!   associated [`WorkKernel::Partials`] type for its phase-1 shard
+//!   output (scalars for row reductions, dense tiles for Stream-K GEMM,
+//!   column/value products for SpGEMM);
+//! * [`DynKernel`] — the object-safe erasure the engine stores
+//!   (`Arc<dyn DynKernel>`), which boxes partials as
+//!   [`BoxedPartials`] and downcasts them back inside
+//!   [`DynKernel::reduce_dyn`].
+//!
+//! The five kernels shipped here — SpMV, SpMM, SpGEMM, Stream-K GEMM (MAC
+//! tiles) and graph frontiers — all reuse the executors in this crate's
+//! sibling modules; the impls are thin adapters, which is the point.
+
+use std::any::Any;
+use std::sync::Arc;
+
+use crate::balance::stream::{self, ScheduleDescriptor};
+use crate::balance::{
+    self, fingerprint, prefix, roofline, Assignment, OffsetsSource, ScheduleKind,
+};
+use crate::sparse::Csr;
+use crate::streamk::{Blocking, GemmShape};
+
+use super::dense::DenseMat;
+use super::{gemm, graph, spgemm, spmm, spmv};
+
+/// Fingerprint salts, one per problem family (see [`fingerprint`]).
+pub const SALT_SPMV: u64 = 0x51;
+pub const SALT_GEMM: u64 = 0x6e;
+pub const SALT_FRONTIER: u64 = 0xf0;
+pub const SALT_SPGEMM: u64 = 0x56;
+pub const SALT_SPMM: u64 = 0x55;
+
+/// Shared SpMV/SpMM shape prior: the §4.5.2 heuristic, refined by the
+/// roofline traffic model in the large-matrix regime the heuristic lumps
+/// into merge-path (§6.1.2) — both workloads are bandwidth-bound row
+/// reductions, so they share one prior.
+fn sparse_row_prior(matrix: &Csr, plan_workers: usize) -> ScheduleKind {
+    let h = balance::select_schedule(matrix, balance::HeuristicParams::default());
+    if h == ScheduleKind::MergePath {
+        roofline::select_schedule_roofline(matrix, plan_workers)
+    } else {
+        h
+    }
+}
+
+/// A workload behind the serving layer: everything the engine needs to
+/// plan, execute, split and meter one problem, with no knowledge of what
+/// the problem computes.
+///
+/// # Contract
+///
+/// * [`offsets`](WorkKernel::offsets) is the atoms-per-tile prefix sum
+///   (`len == tiles + 1`, `[0] == 0`) — the *only* input schedules see.
+/// * [`execute_stream`](WorkKernel::execute_stream) and
+///   [`execute_assignment`](WorkKernel::execute_assignment) must produce
+///   bit-identical checksums for a streaming schedule and its
+///   materialized twin (the engine may use either representation for the
+///   same plan).
+/// * [`shard`](WorkKernel::shard) must touch no shared output (disjoint
+///   worker ranges run concurrently), and
+///   [`reduce`](WorkKernel::reduce) folds shard partials *in worker
+///   order*, reproducing [`execute_stream`](WorkKernel::execute_stream)'s
+///   accumulation sequence bit for bit at any shard count — the §5-style
+///   two-phase fixup.  Empty shards and zero-atom workers must be no-ops.
+/// * The checksum is a deterministic reduction of the full result,
+///   independent of thread count for a fixed schedule.
+///
+/// What the engine provides for free in exchange: plan caching keyed by
+/// [`fingerprint`](WorkKernel::fingerprint), adaptive ε-greedy schedule
+/// tuning, intra-problem worker-range splitting across the pool, proxy
+/// cost metering, and the bench/CI surfaces.
+pub trait WorkKernel {
+    /// Phase-1 output of one worker-range shard: per-segment partial
+    /// results, ordered (worker, segment), carrying no shared state.
+    type Partials: Send + 'static;
+
+    /// Problem-family name ("spmv", "spgemm", …) for reports and mixes.
+    fn kind_name(&self) -> &'static str;
+
+    /// Salted fingerprint of the tile set (see [`fingerprint`]): the plan
+    /// cache and perf history key.
+    fn fingerprint(&self) -> u64;
+
+    /// Atoms-per-tile prefix sum of the tile set.
+    fn offsets(&self) -> &[usize];
+
+    /// Per-family static default schedule (the `Auto` policy).
+    fn static_schedule(&self) -> ScheduleKind;
+
+    /// Cold-start prior for the adaptive tuner; defaults to
+    /// [`static_schedule`](WorkKernel::static_schedule).
+    fn cold_start_prior(&self, _plan_workers: usize) -> ScheduleKind {
+        self.static_schedule()
+    }
+
+    /// Execute the whole problem from a streaming descriptor; returns the
+    /// checksum.
+    fn execute_stream(&self, desc: &ScheduleDescriptor) -> f64;
+
+    /// Execute the whole problem from a materialized assignment
+    /// (Binning/LRB plans); returns the checksum.
+    fn execute_assignment(&self, asg: &Assignment) -> f64;
+
+    /// Phase 1: partials for workers `[w0, w1)` of the descriptor's plan.
+    fn shard(&self, desc: &ScheduleDescriptor, w0: usize, w1: usize) -> Self::Partials;
+
+    /// Phase 2: fold shard partials — in shard order, which is worker
+    /// order — into the output and return its checksum.
+    fn reduce(&self, shards: Vec<Self::Partials>) -> f64;
+
+    /// Tiles in the tile set.
+    fn num_tiles(&self) -> usize {
+        self.offsets().len() - 1
+    }
+
+    /// Atoms in the tile set (nonzeros / MAC iterations / products).
+    fn num_atoms(&self) -> usize {
+        *self.offsets().last().unwrap_or(&0)
+    }
+}
+
+/// Type-erased phase-1 shard output (a boxed
+/// [`WorkKernel::Partials`]); only the kernel that produced it can
+/// reduce it.
+pub type BoxedPartials = Box<dyn Any + Send>;
+
+/// Object-safe face of [`WorkKernel`]: what the engine stores and calls.
+/// Implemented for every `WorkKernel` by the blanket impl below.
+pub trait DynKernel: Send + Sync {
+    fn kind_name(&self) -> &'static str;
+    fn fingerprint(&self) -> u64;
+    fn offsets(&self) -> &[usize];
+    fn num_tiles(&self) -> usize;
+    fn num_atoms(&self) -> usize;
+    fn static_schedule(&self) -> ScheduleKind;
+    fn cold_start_prior(&self, plan_workers: usize) -> ScheduleKind;
+    fn execute_stream(&self, desc: &ScheduleDescriptor) -> f64;
+    fn execute_assignment(&self, asg: &Assignment) -> f64;
+    /// [`WorkKernel::shard`], boxed for transport across the pool.
+    fn shard_dyn(&self, desc: &ScheduleDescriptor, w0: usize, w1: usize) -> BoxedPartials;
+    /// [`WorkKernel::reduce`] over boxed partials (downcast inside).
+    fn reduce_dyn(&self, shards: Vec<BoxedPartials>) -> f64;
+}
+
+impl<K> DynKernel for K
+where
+    K: WorkKernel + Send + Sync,
+{
+    fn kind_name(&self) -> &'static str {
+        WorkKernel::kind_name(self)
+    }
+    fn fingerprint(&self) -> u64 {
+        WorkKernel::fingerprint(self)
+    }
+    fn offsets(&self) -> &[usize] {
+        WorkKernel::offsets(self)
+    }
+    fn num_tiles(&self) -> usize {
+        WorkKernel::num_tiles(self)
+    }
+    fn num_atoms(&self) -> usize {
+        WorkKernel::num_atoms(self)
+    }
+    fn static_schedule(&self) -> ScheduleKind {
+        WorkKernel::static_schedule(self)
+    }
+    fn cold_start_prior(&self, plan_workers: usize) -> ScheduleKind {
+        WorkKernel::cold_start_prior(self, plan_workers)
+    }
+    fn execute_stream(&self, desc: &ScheduleDescriptor) -> f64 {
+        WorkKernel::execute_stream(self, desc)
+    }
+    fn execute_assignment(&self, asg: &Assignment) -> f64 {
+        WorkKernel::execute_assignment(self, asg)
+    }
+    fn shard_dyn(&self, desc: &ScheduleDescriptor, w0: usize, w1: usize) -> BoxedPartials {
+        Box::new(WorkKernel::shard(self, desc, w0, w1))
+    }
+    fn reduce_dyn(&self, shards: Vec<BoxedPartials>) -> f64 {
+        let shards: Vec<K::Partials> = shards
+            .into_iter()
+            .map(|p| {
+                *p.downcast::<K::Partials>()
+                    .expect("shard partials reduced by the kernel that produced them")
+            })
+            .collect();
+        WorkKernel::reduce(self, shards)
+    }
+}
+
+/// y = A x over the load-balancing framework (tiles = rows, atoms =
+/// nonzeros).  `x` is derived deterministically from the column count.
+pub struct SpmvKernel {
+    matrix: Arc<Csr>,
+    x: Arc<Vec<f64>>,
+    fingerprint: u64,
+}
+
+impl SpmvKernel {
+    pub fn new(matrix: Arc<Csr>) -> Self {
+        let x: Vec<f64> = (0..matrix.cols).map(|i| (i as f64 * 0.37).sin()).collect();
+        let fingerprint = fingerprint(SALT_SPMV, &*matrix);
+        SpmvKernel {
+            matrix,
+            x: Arc::new(x),
+            fingerprint,
+        }
+    }
+}
+
+impl WorkKernel for SpmvKernel {
+    type Partials = Vec<(u32, f64)>;
+
+    fn kind_name(&self) -> &'static str {
+        "spmv"
+    }
+    fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+    fn offsets(&self) -> &[usize] {
+        &self.matrix.offsets
+    }
+    fn static_schedule(&self) -> ScheduleKind {
+        balance::select_schedule(&self.matrix, balance::HeuristicParams::default())
+    }
+    fn cold_start_prior(&self, plan_workers: usize) -> ScheduleKind {
+        sparse_row_prior(&self.matrix, plan_workers)
+    }
+    fn execute_stream(&self, desc: &ScheduleDescriptor) -> f64 {
+        spmv::execute_stream_host(&self.matrix, &self.x, desc)
+            .iter()
+            .sum()
+    }
+    fn execute_assignment(&self, asg: &Assignment) -> f64 {
+        spmv::execute_host(&self.matrix, &self.x, asg).iter().sum()
+    }
+    fn shard(&self, desc: &ScheduleDescriptor, w0: usize, w1: usize) -> Self::Partials {
+        spmv::shard_partials(&self.matrix, &self.x, desc, w0, w1)
+    }
+    fn reduce(&self, shards: Vec<Self::Partials>) -> f64 {
+        let mut y = vec![0.0f64; self.matrix.rows];
+        for parts in &shards {
+            spmv::apply_partials(&mut y, parts);
+        }
+        y.iter().sum()
+    }
+}
+
+/// Y = A X with a dense row-major X of `n` columns (Listing 4.4: "a simple
+/// loop wrapped around SpMV") — the same tile set as SpMV, so the same
+/// plans apply; the column loop multiplies work per atom, not the tile
+/// set.
+pub struct SpmmKernel {
+    matrix: Arc<Csr>,
+    x: Arc<Vec<f64>>,
+    n: usize,
+    fingerprint: u64,
+}
+
+impl SpmmKernel {
+    pub fn new(matrix: Arc<Csr>, n: usize) -> Self {
+        let n = n.max(1);
+        let x: Vec<f64> = (0..matrix.cols * n)
+            .map(|i| (i as f64 * 0.23).cos())
+            .collect();
+        // The tile set alone does not determine the work here: fold the
+        // column count into the salt so SpMM over the same matrix with a
+        // different `n` keeps its own plan-cache and perf-history keys.
+        let fingerprint = fingerprint(SALT_SPMM ^ ((n as u64) << 8), &*matrix);
+        SpmmKernel {
+            matrix,
+            x: Arc::new(x),
+            n,
+            fingerprint,
+        }
+    }
+}
+
+impl WorkKernel for SpmmKernel {
+    type Partials = Vec<(u32, Vec<f64>)>;
+
+    fn kind_name(&self) -> &'static str {
+        "spmm"
+    }
+    fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+    fn offsets(&self) -> &[usize] {
+        &self.matrix.offsets
+    }
+    fn static_schedule(&self) -> ScheduleKind {
+        balance::select_schedule(&self.matrix, balance::HeuristicParams::default())
+    }
+    fn cold_start_prior(&self, plan_workers: usize) -> ScheduleKind {
+        sparse_row_prior(&self.matrix, plan_workers)
+    }
+    fn execute_stream(&self, desc: &ScheduleDescriptor) -> f64 {
+        spmm::execute_stream_host(&self.matrix, &self.x, self.n, desc)
+            .iter()
+            .sum()
+    }
+    fn execute_assignment(&self, asg: &Assignment) -> f64 {
+        spmm::execute_host(&self.matrix, &self.x, self.n, asg)
+            .iter()
+            .sum()
+    }
+    fn shard(&self, desc: &ScheduleDescriptor, w0: usize, w1: usize) -> Self::Partials {
+        spmm::shard_partials(&self.matrix, &self.x, self.n, desc, w0, w1)
+    }
+    fn reduce(&self, shards: Vec<Self::Partials>) -> f64 {
+        let mut y = vec![0.0f64; self.matrix.rows * self.n];
+        for parts in &shards {
+            spmm::apply_partials(&mut y, self.n, parts);
+        }
+        y.iter().sum()
+    }
+}
+
+/// C = A B via the aggregate MAC-iteration tile set (tiles = output tiles,
+/// atoms = MAC iterations): an even atom split over workers is exactly the
+/// Stream-K decomposition, produced here by the generic `NonzeroSplit`
+/// schedule.  Operands are seeded-random.
+pub struct GemmKernel {
+    a: Arc<DenseMat>,
+    b: Arc<DenseMat>,
+    shape: GemmShape,
+    blocking: Blocking,
+    offsets: Arc<Vec<usize>>,
+    fingerprint: u64,
+}
+
+impl GemmKernel {
+    pub fn new(shape: GemmShape, blocking: Blocking, seed: u64) -> Self {
+        let a = DenseMat::random(shape.m, shape.k, seed);
+        let b = DenseMat::random(shape.k, shape.n, seed.wrapping_add(1));
+        let tiles = blocking.tiles(shape);
+        let ipt = blocking.iters_per_tile(shape) as usize;
+        let offsets: Vec<usize> = (0..=tiles).map(|t| t * ipt).collect();
+        let fingerprint = fingerprint(SALT_GEMM, &OffsetsSource::new(&offsets));
+        GemmKernel {
+            a: Arc::new(a),
+            b: Arc::new(b),
+            shape,
+            blocking,
+            offsets: Arc::new(offsets),
+            fingerprint,
+        }
+    }
+}
+
+impl WorkKernel for GemmKernel {
+    type Partials = Vec<(u32, Vec<f64>)>;
+
+    fn kind_name(&self) -> &'static str {
+        "gemm"
+    }
+    fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+    fn offsets(&self) -> &[usize] {
+        &self.offsets
+    }
+    fn static_schedule(&self) -> ScheduleKind {
+        ScheduleKind::NonzeroSplit
+    }
+    fn execute_stream(&self, desc: &ScheduleDescriptor) -> f64 {
+        gemm::execute_macs_stream(&self.a, &self.b, self.shape, self.blocking, desc, &self.offsets)
+            .data
+            .iter()
+            .sum()
+    }
+    fn execute_assignment(&self, asg: &Assignment) -> f64 {
+        gemm::execute_macs_assignment(&self.a, &self.b, self.shape, self.blocking, asg)
+            .data
+            .iter()
+            .sum()
+    }
+    fn shard(&self, desc: &ScheduleDescriptor, w0: usize, w1: usize) -> Self::Partials {
+        gemm::mac_shard_partials(
+            &self.a,
+            &self.b,
+            self.shape,
+            self.blocking,
+            desc,
+            &self.offsets,
+            w0..w1,
+        )
+    }
+    fn reduce(&self, shards: Vec<Self::Partials>) -> f64 {
+        let mut c = DenseMat::zeros(self.shape.m, self.shape.n);
+        for parts in &shards {
+            gemm::apply_mac_partials(&mut c, self.shape, self.blocking, parts);
+        }
+        c.data.iter().sum()
+    }
+}
+
+/// One frontier-expansion step (per-vertex neighbor reduction, the
+/// balanced "advance" of §4.4.3): tiles = frontier vertices, atoms =
+/// frontier edges.
+pub struct FrontierKernel {
+    graph: Arc<Csr>,
+    frontier: Arc<Vec<u32>>,
+    offsets: Arc<Vec<usize>>,
+    fingerprint: u64,
+}
+
+impl FrontierKernel {
+    pub fn new(graph: Arc<Csr>, frontier: Vec<u32>) -> Self {
+        let lens: Vec<usize> = frontier
+            .iter()
+            .map(|&v| graph.row_nnz(v as usize))
+            .collect();
+        let offsets = prefix::exclusive(&lens);
+        let fingerprint = fingerprint(SALT_FRONTIER, &OffsetsSource::new(&offsets));
+        FrontierKernel {
+            graph,
+            frontier: Arc::new(frontier),
+            offsets: Arc::new(offsets),
+            fingerprint,
+        }
+    }
+}
+
+impl WorkKernel for FrontierKernel {
+    type Partials = Vec<(u32, f64)>;
+
+    fn kind_name(&self) -> &'static str {
+        "frontier"
+    }
+    fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+    fn offsets(&self) -> &[usize] {
+        &self.offsets
+    }
+    fn static_schedule(&self) -> ScheduleKind {
+        // Frontier tile sets are the most skewed; merge-path handles both
+        // their hub rows and their degree-1 tails.
+        ScheduleKind::MergePath
+    }
+    fn execute_stream(&self, desc: &ScheduleDescriptor) -> f64 {
+        graph::frontier_stream(&self.graph, &self.frontier, &self.offsets, desc)
+            .iter()
+            .sum()
+    }
+    fn execute_assignment(&self, asg: &Assignment) -> f64 {
+        graph::frontier_assignment(&self.graph, &self.frontier, &self.offsets, asg)
+            .iter()
+            .sum()
+    }
+    fn shard(&self, desc: &ScheduleDescriptor, w0: usize, w1: usize) -> Self::Partials {
+        graph::frontier_shard_partials(&self.graph, &self.frontier, &self.offsets, desc, w0, w1)
+    }
+    fn reduce(&self, shards: Vec<Self::Partials>) -> f64 {
+        let mut out = vec![0.0f64; self.frontier.len()];
+        for parts in &shards {
+            spmv::apply_partials(&mut out, parts);
+        }
+        out.iter().sum()
+    }
+}
+
+/// C = A B over two sparse operands (Gustavson's row-wise SpGEMM, §4.4.3),
+/// planned over *row-work estimates*: tiles = rows of A, atoms =
+/// multiply-accumulate products (the upsweep [`spgemm::work_offsets`]
+/// computes).  Balancing products balances actual work even when B's row
+/// lengths are skewed — which an A-nonzero atom count cannot see.
+pub struct SpgemmKernel {
+    a: Arc<Csr>,
+    b: Arc<Csr>,
+    /// Upsweep output: prefix sum of per-row product counts — both the
+    /// tile set schedules plan over and the exact slab pre-sizing for the
+    /// downsweep.
+    work: Arc<Vec<usize>>,
+    fingerprint: u64,
+}
+
+impl SpgemmKernel {
+    pub fn new(a: Arc<Csr>, b: Arc<Csr>) -> Self {
+        let work = spgemm::work_offsets(&a, &b);
+        let fingerprint = fingerprint(SALT_SPGEMM, &OffsetsSource::new(&work));
+        SpgemmKernel {
+            a,
+            b,
+            work: Arc::new(work),
+            fingerprint,
+        }
+    }
+
+    /// Run the downsweep over segments in the order `visit` yields them,
+    /// then finalize (per-row sort-merge) and checksum.
+    fn run(&self, mut visit: impl FnMut(&mut dyn FnMut(balance::Segment))) -> f64 {
+        let mut slab = spgemm::RowSlab::new(&self.work);
+        visit(&mut |s| {
+            spgemm::for_each_segment_product(&self.a, &self.b, &self.work, s, |col, v| {
+                slab.push_one(s.tile, col, v);
+            });
+        });
+        spgemm::checksum(&slab.finalize(self.a.rows, self.b.cols))
+    }
+}
+
+impl WorkKernel for SpgemmKernel {
+    type Partials = Vec<(u32, Vec<(u32, f64)>)>;
+
+    fn kind_name(&self) -> &'static str {
+        "spgemm"
+    }
+    fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+    fn offsets(&self) -> &[usize] {
+        &self.work
+    }
+    fn static_schedule(&self) -> ScheduleKind {
+        // Product-space tile sets inherit both A's row skew and B's fanout
+        // skew; merge-path balances both.
+        ScheduleKind::MergePath
+    }
+    fn execute_stream(&self, desc: &ScheduleDescriptor) -> f64 {
+        self.run(|f| stream::for_each_segment(*desc, &self.work, f))
+    }
+    fn execute_assignment(&self, asg: &Assignment) -> f64 {
+        self.run(|f| {
+            for w in &asg.workers {
+                for s in &w.segments {
+                    f(*s);
+                }
+            }
+        })
+    }
+    fn shard(&self, desc: &ScheduleDescriptor, w0: usize, w1: usize) -> Self::Partials {
+        let mut out = Vec::new();
+        for w in w0..w1.min(desc.workers()) {
+            for s in stream::worker_segments(*desc, &self.work, w) {
+                let mut products = Vec::with_capacity(s.len());
+                spgemm::for_each_segment_product(&self.a, &self.b, &self.work, s, |col, v| {
+                    products.push((col, v));
+                });
+                out.push((s.tile, products));
+            }
+        }
+        out
+    }
+    fn reduce(&self, shards: Vec<Self::Partials>) -> f64 {
+        let mut slab = spgemm::RowSlab::new(&self.work);
+        for shard in &shards {
+            for (tile, products) in shard {
+                slab.push(*tile, products);
+            }
+        }
+        spgemm::checksum(&slab.finalize(self.a.rows, self.b.cols))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    const STREAMING: [ScheduleKind; 4] = [
+        ScheduleKind::ThreadMapped,
+        ScheduleKind::GroupMapped(32),
+        ScheduleKind::MergePath,
+        ScheduleKind::NonzeroSplit,
+    ];
+
+    #[test]
+    fn all_kernels_stream_equals_materialized_and_shards() {
+        let a = Arc::new(gen::power_law(160, 160, 80, 1.6, 31));
+        let b = Arc::new(gen::uniform(160, 120, 4, 32));
+        let graph = Arc::new(gen::rmat(7, 4, 33));
+        let frontier: Vec<u32> = (0..graph.rows as u32).step_by(2).collect();
+        let gemm_shape = GemmShape::new(64, 48, 40);
+        let gemm_blk = Blocking::new(16, 16, 8);
+        let kernels: Vec<Arc<dyn DynKernel>> = vec![
+            Arc::new(SpmvKernel::new(a.clone())),
+            Arc::new(SpmmKernel::new(a.clone(), 3)),
+            Arc::new(SpgemmKernel::new(a.clone(), b)),
+            Arc::new(GemmKernel::new(gemm_shape, gemm_blk, 9)),
+            Arc::new(FrontierKernel::new(graph, frontier)),
+        ];
+        for k in &kernels {
+            let src_offsets = k.offsets().to_vec();
+            let src = OffsetsSource::new(&src_offsets);
+            for kind in STREAMING {
+                let desc = kind.descriptor(&src, 24).expect("streaming schedule");
+                let want = k.execute_stream(&desc);
+                let asg = kind.assign(&src, 24);
+                assert_eq!(
+                    k.execute_assignment(&asg).to_bits(),
+                    want.to_bits(),
+                    "{} {kind:?}: materialized diverged",
+                    k.kind_name()
+                );
+                for shards in [1usize, 2, 5] {
+                    let per = desc.workers().div_ceil(shards).max(1);
+                    let mut parts = Vec::new();
+                    let mut w0 = 0;
+                    while w0 < desc.workers() {
+                        let w1 = (w0 + per).min(desc.workers());
+                        parts.push(k.shard_dyn(&desc, w0, w1));
+                        w0 = w1;
+                    }
+                    let got = k.reduce_dyn(parts);
+                    assert_eq!(
+                        got.to_bits(),
+                        want.to_bits(),
+                        "{} {kind:?} x{shards} shards diverged",
+                        k.kind_name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_kernel_checksum_matches_reference() {
+        let shape = GemmShape::new(96, 80, 72);
+        let blk = Blocking::new(32, 32, 16);
+        let k = GemmKernel::new(shape, blk, 7);
+        let want: f64 = DenseMat::matmul_ref(&k.a, &k.b).data.iter().sum();
+        let src = OffsetsSource::new(&k.offsets);
+        for kind in STREAMING {
+            let desc = kind.descriptor(&src, 16).unwrap();
+            let got = WorkKernel::execute_stream(&k, &desc);
+            assert!((got - want).abs() < 1e-6, "{kind:?}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn spgemm_kernel_checksum_matches_reference() {
+        let a = Arc::new(gen::power_law(96, 80, 40, 1.8, 301));
+        let b = Arc::new(gen::uniform(80, 64, 5, 302));
+        let want = spgemm::checksum(&spgemm::spgemm_ref(&a, &b));
+        let k = SpgemmKernel::new(a, b);
+        let src = OffsetsSource::new(&k.work);
+        for kind in STREAMING {
+            let desc = kind.descriptor(&src, 24).unwrap();
+            let got = WorkKernel::execute_stream(&k, &desc);
+            assert!((got - want).abs() < 1e-9, "{kind:?}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn spmm_kernel_reduces_like_dense_reference() {
+        let a = Arc::new(gen::power_law(128, 96, 64, 1.8, 61));
+        let k = SpmmKernel::new(a.clone(), 5);
+        let want: f64 = a.spmm_ref(&k.x, 5).iter().sum();
+        let src = OffsetsSource::new(&a.offsets);
+        let desc = ScheduleKind::MergePath.descriptor(&src, 16).unwrap();
+        let got = WorkKernel::execute_stream(&k, &desc);
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+    }
+
+    #[test]
+    fn frontier_kernel_checksum_matches_direct_reduction() {
+        let graph = Arc::new(gen::rmat(7, 4, 5));
+        let frontier: Vec<u32> = (0..graph.rows as u32).step_by(3).collect();
+        let want: f64 = frontier
+            .iter()
+            .map(|&v| graph.row(v as usize).1.iter().map(|w| w.abs()).sum::<f64>())
+            .sum();
+        let k = FrontierKernel::new(graph, frontier);
+        let src = OffsetsSource::new(&k.offsets);
+        let desc = ScheduleKind::MergePath.descriptor(&src, 16).unwrap();
+        let got = WorkKernel::execute_stream(&k, &desc);
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+    }
+
+    #[test]
+    fn fingerprints_are_salted_per_family() {
+        let a = Arc::new(gen::uniform(64, 64, 4, 1));
+        let spmv = SpmvKernel::new(a.clone());
+        let spmm = SpmmKernel::new(a, 4);
+        // Same offsets, different family salt: distinguishable in reports.
+        assert_eq!(WorkKernel::offsets(&spmv), WorkKernel::offsets(&spmm));
+        assert_ne!(WorkKernel::fingerprint(&spmv), WorkKernel::fingerprint(&spmm));
+    }
+
+    #[test]
+    fn priors_default_to_static_schedule() {
+        let k = GemmKernel::new(GemmShape::new(64, 64, 64), Blocking::new(32, 32, 16), 1);
+        let prior = WorkKernel::cold_start_prior(&k, 64);
+        assert_eq!(prior, WorkKernel::static_schedule(&k));
+    }
+}

@@ -8,10 +8,15 @@
 //!    Pallas kernels via PJRT (the production path);
 //! 3. **modeled time** — the plan costed on the GPU simulator (the
 //!    performance-evaluation path; DESIGN.md substitution table).
+//!
+//! The [`kernel`] module packages executors behind the [`kernel::WorkKernel`]
+//! trait — the work-processing interface the serve engine dispatches
+//! through, making every workload here a first-class served problem.
 
 pub mod dense;
 pub mod gemm;
 pub mod graph;
+pub mod kernel;
 pub mod spgemm;
 pub mod spmm;
 pub mod spmv;

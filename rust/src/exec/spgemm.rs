@@ -4,17 +4,30 @@
 //! memory for the output sparse matrix and the second kernel would perform
 //! the multiply-accumulation."
 //!
-//! Both kernels consume the same balanced assignment over A's rows
-//! (tiles = rows of A, atoms = nonzeros of A; each atom fans out to a row
-//! of B) — another demonstration of schedule reuse across applications.
+//! Two tile-set views coexist:
+//!
+//! * the **A-space view** ([`count_kernel`] / [`compute_kernel`] /
+//!   [`execute_host`]): tiles = rows of A, atoms = nonzeros of A — each
+//!   atom fans out to a whole row of B;
+//! * the **product-space view** the served
+//!   [`crate::exec::kernel::SpgemmKernel`] plans over: tiles = rows of A,
+//!   atoms = individual multiply-accumulate *products* (the row-work
+//!   estimate [`work_offsets`] computes — the upsweep).  A schedule
+//!   balancing products balances actual work even when B's row lengths
+//!   are skewed, which an A-nonzero atom count cannot see.
+//!
+//! Both views share the allocation discipline the paper describes: the
+//! count pass exactly pre-sizes a flat scatter slab ([`RowSlab`]), the
+//! compute pass writes into it with no reallocation or growth, and a
+//! per-row stable sort-merge folds column collisions in accumulation
+//! order (the downsweep fixup).
 
-use std::collections::HashMap;
-
-use crate::balance::Assignment;
+use crate::balance::{prefix, Assignment, Segment};
 use crate::sparse::{Coo, Csr};
 
-/// Kernel 1: upper-bound output-row sizes (counts B-row fanout per A-row;
-/// an upper bound because column collisions merge in kernel 2).
+/// Kernel 1 (upsweep): upper-bound output-row sizes under an A-space
+/// assignment (counts B-row fanout per A-row; an upper bound because
+/// column collisions merge in kernel 2).
 pub fn count_kernel(a: &Csr, b: &Csr, asg: &Assignment) -> Vec<usize> {
     assert_eq!(a.cols, b.rows);
     let mut counts = vec![0usize; a.rows];
@@ -30,41 +43,174 @@ pub fn count_kernel(a: &Csr, b: &Csr, asg: &Assignment) -> Vec<usize> {
     counts
 }
 
-/// Kernel 2: multiply-accumulate into the (pre-sized) output rows.
-///
-/// Per-row hash accumulation stands in for the GPU's per-row scratch
-/// accumulators; the schedule decides which worker expands which nonzeros.
-pub fn compute_kernel(a: &Csr, b: &Csr, asg: &Assignment) -> Csr {
+/// Row-work estimates as a prefix sum: `work[r+1] - work[r]` is the number
+/// of multiply-accumulate products row `r` of the output requires.  The
+/// schedule-free twin of [`count_kernel`], and the tile set the served
+/// SpGEMM kernel plans over.
+pub fn work_offsets(a: &Csr, b: &Csr) -> Vec<usize> {
     assert_eq!(a.cols, b.rows);
-    let mut rows: Vec<HashMap<u32, f64>> = vec![HashMap::new(); a.rows];
+    let lens: Vec<usize> = (0..a.rows)
+        .map(|r| {
+            let (cols, _) = a.row(r);
+            cols.iter().map(|&c| b.row_nnz(c as usize)).sum()
+        })
+        .collect();
+    prefix::exclusive(&lens)
+}
+
+/// Visit one product-space segment's `(column, value)` products in atom
+/// order.  `work` is [`work_offsets`]`(a, b)`; `s` addresses a product
+/// range within row `s.tile`, as produced by any schedule planning over
+/// the work-offsets tile set.
+pub fn for_each_segment_product(
+    a: &Csr,
+    b: &Csr,
+    work: &[usize],
+    s: Segment,
+    mut visit: impl FnMut(u32, f64),
+) {
+    let r = s.tile as usize;
+    let base = work[r];
+    let (p0, p1) = (s.atom_begin - base, s.atom_end - base);
+    let (acols, avals) = a.row(r);
+    // Cumulative fanout across row r's A-nonzeros; each nonzero spans
+    // `b.row_nnz` products, and the segment takes the overlap.
+    let mut c = 0usize;
+    for (ac, av) in acols.iter().zip(avals) {
+        let fanout = b.row_nnz(*ac as usize);
+        let (lo, hi) = (p0.max(c), p1.min(c + fanout));
+        if lo < hi {
+            let (bcols, bvals) = b.row(*ac as usize);
+            for j in (lo - c)..(hi - c) {
+                visit(bcols[j], av * bvals[j]);
+            }
+        }
+        c += fanout;
+        if c >= p1 {
+            break;
+        }
+    }
+}
+
+/// Exactly pre-sized scatter buffer for the compute pass: one flat
+/// `(column, value)` slab whose row regions come from the count pass, a
+/// write cursor per row, and an in-place sort-merge finalize.  Nothing
+/// grows after construction — the allocation stage happens once, between
+/// the two kernels, exactly as the paper describes.
+pub struct RowSlab {
+    /// Row boundaries in the slab (the count pass's prefix sum).
+    bounds: Vec<usize>,
+    /// Next free slot per row.
+    cursor: Vec<usize>,
+    entries: Vec<(u32, f64)>,
+}
+
+impl RowSlab {
+    /// `bounds` is the count pass's prefix sum (`len == rows + 1`).
+    pub fn new(bounds: &[usize]) -> RowSlab {
+        RowSlab {
+            bounds: bounds.to_vec(),
+            cursor: bounds[..bounds.len() - 1].to_vec(),
+            entries: vec![(0u32, 0.0f64); *bounds.last().unwrap_or(&0)],
+        }
+    }
+
+    /// Scatter one product into its row region.
+    #[inline]
+    pub fn push_one(&mut self, row: u32, col: u32, value: f64) {
+        let r = row as usize;
+        let at = self.cursor[r];
+        debug_assert!(at < self.bounds[r + 1], "slab row {row} overflow");
+        self.entries[at] = (col, value);
+        self.cursor[r] = at + 1;
+    }
+
+    /// Scatter one segment's products into its row region.
+    pub fn push(&mut self, row: u32, products: &[(u32, f64)]) {
+        let r = row as usize;
+        let at = self.cursor[r];
+        debug_assert!(at + products.len() <= self.bounds[r + 1], "slab row {row} overflow");
+        self.entries[at..at + products.len()].copy_from_slice(products);
+        self.cursor[r] = at + products.len();
+    }
+
+    /// Downsweep fixup: per row, stable-sort by column and merge
+    /// duplicates in scatter (= worker) order, then assemble the output
+    /// CSR with one exact-size allocation per array.
+    pub fn finalize(mut self, rows: usize, cols: usize) -> Csr {
+        let mut merged = vec![0usize; rows];
+        for r in 0..rows {
+            let row = &mut self.entries[self.bounds[r]..self.cursor[r]];
+            row.sort_by_key(|&(col, _)| col);
+            let mut w = 0usize;
+            let mut i = 0usize;
+            while i < row.len() {
+                let e = row[i];
+                if w > 0 && row[w - 1].0 == e.0 {
+                    row[w - 1].1 += e.1;
+                } else {
+                    row[w] = e;
+                    w += 1;
+                }
+                i += 1;
+            }
+            merged[r] = w;
+        }
+        let offsets = prefix::exclusive(&merged);
+        let total = *offsets.last().unwrap();
+        let mut indices = Vec::with_capacity(total);
+        let mut values = Vec::with_capacity(total);
+        for r in 0..rows {
+            for &(col, v) in &self.entries[self.bounds[r]..self.bounds[r] + merged[r]] {
+                indices.push(col);
+                values.push(v);
+            }
+        }
+        Csr::from_parts(rows, cols, offsets, indices, values)
+            .expect("slab rows assemble into a valid CSR")
+    }
+}
+
+/// Kernel 2 (downsweep): multiply-accumulate into output rows pre-sized by
+/// the count pass.  The schedule decides which worker expands which
+/// nonzeros; the compute pass performs no allocation beyond the slab built
+/// from `counts`.
+pub fn compute_kernel(a: &Csr, b: &Csr, asg: &Assignment, counts: &[usize]) -> Csr {
+    assert_eq!(a.cols, b.rows);
+    let bounds = prefix::exclusive(counts);
+    let mut slab = RowSlab::new(&bounds);
     for w in &asg.workers {
         for s in &w.segments {
-            let out = s.tile as usize;
             for k in s.atom_begin..s.atom_end {
                 let av = a.values[k];
                 let (bcols, bvals) = b.row(a.indices[k] as usize);
                 for (c, v) in bcols.iter().zip(bvals) {
-                    *rows[out].entry(*c).or_insert(0.0) += av * v;
+                    slab.push_one(s.tile, *c, av * v);
                 }
             }
         }
     }
-    let mut coo = Coo::new(a.rows, b.cols);
-    for (r, row) in rows.into_iter().enumerate() {
-        for (c, v) in row {
-            coo.push(r, c as usize, v);
-        }
-    }
-    Csr::from_coo(&coo)
+    slab.finalize(a.rows, b.cols)
 }
 
-/// Full SpGEMM: count (allocation sizing) + compute.
+/// Full SpGEMM: count (allocation sizing) then compute — two fully
+/// independent passes over the same assignment, the second exactly
+/// pre-sized by the first's per-row totals.
 pub fn execute_host(a: &Csr, b: &Csr, asg: &Assignment) -> (Vec<usize>, Csr) {
-    (count_kernel(a, b, asg), compute_kernel(a, b, asg))
+    let counts = count_kernel(a, b, asg);
+    let c = compute_kernel(a, b, asg, &counts);
+    (counts, c)
+}
+
+/// Deterministic checksum of an output CSR: the sum of stored values in
+/// (row, column) order.
+pub fn checksum(c: &Csr) -> f64 {
+    c.values.iter().sum()
 }
 
 /// Reference sequential SpGEMM.
 pub fn spgemm_ref(a: &Csr, b: &Csr) -> Csr {
+    use std::collections::HashMap;
     let mut coo = Coo::new(a.rows, b.cols);
     for r in 0..a.rows {
         let mut acc: HashMap<u32, f64> = HashMap::new();
@@ -85,7 +231,7 @@ pub fn spgemm_ref(a: &Csr, b: &Csr) -> Csr {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::balance::ScheduleKind;
+    use crate::balance::{OffsetsSource, ScheduleKind, WorkSource};
     use crate::sparse::gen;
 
     fn close(a: &Csr, b: &Csr) -> bool {
@@ -150,5 +296,61 @@ mod tests {
         for r in 0..n {
             assert_eq!(counts[r], got.row_nnz(r));
         }
+    }
+
+    #[test]
+    fn work_offsets_count_total_products() {
+        let a = gen::power_law(64, 48, 24, 1.5, 305);
+        let b = gen::uniform(48, 40, 3, 306);
+        let work = work_offsets(&a, &b);
+        assert_eq!(work.len(), a.rows + 1);
+        let want: usize = (0..a.nnz()).map(|k| b.row_nnz(a.indices[k] as usize)).sum();
+        assert_eq!(*work.last().unwrap(), want);
+    }
+
+    #[test]
+    fn product_space_streams_match_reference() {
+        // Product-space segments from any streaming schedule cover every
+        // multiply-accumulate exactly once; scattering them through the
+        // slab reproduces the reference product.
+        let a = gen::power_law(80, 64, 32, 1.7, 307);
+        let b = gen::power_law(64, 56, 28, 1.5, 308);
+        let want = spgemm_ref(&a, &b);
+        let work = work_offsets(&a, &b);
+        let src = OffsetsSource::new(&work);
+        for kind in [
+            ScheduleKind::ThreadMapped,
+            ScheduleKind::GroupMapped(32),
+            ScheduleKind::MergePath,
+            ScheduleKind::NonzeroSplit,
+        ] {
+            let desc = kind.descriptor(&src, 16).unwrap();
+            let mut slab = RowSlab::new(&work);
+            crate::balance::stream::for_each_segment(desc, &work, |s| {
+                for_each_segment_product(&a, &b, &work, s, |col, v| {
+                    slab.push_one(s.tile, col, v);
+                });
+            });
+            let got = slab.finalize(a.rows, b.cols);
+            assert!(close(&got, &want), "{kind:?} product-space diverged");
+        }
+        assert_eq!(src.num_atoms(), *work.last().unwrap());
+    }
+
+    #[test]
+    fn empty_rows_produce_empty_output_rows() {
+        // A with explicit empty rows: the slab's zero-width regions and
+        // the product walker's empty segments must both be no-ops.
+        let offsets = vec![0usize, 0, 2, 2, 3, 3];
+        let indices = vec![0u32, 2, 1];
+        let values = vec![1.0, 2.0, 3.0];
+        let a = Csr::from_parts(5, 3, offsets, indices, values).unwrap();
+        let b = gen::uniform(3, 4, 2, 309);
+        let want = spgemm_ref(&a, &b);
+        let asg = ScheduleKind::MergePath.assign(&a, 8);
+        let (_, got) = execute_host(&a, &b, &asg);
+        assert!(close(&got, &want));
+        assert_eq!(got.row_nnz(0), 0);
+        assert_eq!(got.row_nnz(2), 0);
     }
 }

@@ -45,6 +45,47 @@ pub fn execute_stream_host(a: &Csr, x: &[f64], n: usize, desc: &ScheduleDescript
     y
 }
 
+/// Phase 1 of the two-phase parallel path: per-segment partial output rows
+/// (all `n` columns) for workers `[w0, w1)`, in (worker, segment) order.
+/// Disjoint worker ranges read disjoint atoms, so shards run concurrently;
+/// [`apply_partials`] is the phase-2 fixup.
+pub fn shard_partials(
+    a: &Csr,
+    x: &[f64],
+    n: usize,
+    desc: &ScheduleDescriptor,
+    w0: usize,
+    w1: usize,
+) -> Vec<(u32, Vec<f64>)> {
+    let mut out = Vec::new();
+    for w in w0..w1.min(desc.workers()) {
+        for s in stream::worker_segments(*desc, &a.offsets, w) {
+            let mut row = vec![0.0f64; n];
+            for (j, slot) in row.iter_mut().enumerate() {
+                let mut sum = 0.0;
+                for k in s.atom_begin..s.atom_end {
+                    sum += a.values[k] * x[a.indices[k] as usize * n + j];
+                }
+                *slot = sum;
+            }
+            out.push((s.tile, row));
+        }
+    }
+    out
+}
+
+/// Phase 2: fold partial rows — in worker order — into the `rows x n`
+/// output, reproducing [`execute_stream_host`]'s accumulation sequence bit
+/// for bit at any shard count.
+pub fn apply_partials(y: &mut [f64], n: usize, partials: &[(u32, Vec<f64>)]) {
+    for (tile, row) in partials {
+        let base = *tile as usize * n;
+        for (j, v) in row.iter().enumerate() {
+            y[base + j] += v;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,6 +126,28 @@ mod tests {
             let desc = kind.descriptor(&a, 24).unwrap();
             let want = execute_host(&a, &x, n, &kind.assign(&a, 24));
             assert_eq!(execute_stream_host(&a, &x, n, &desc), want, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn sharded_partials_reduce_bit_identical_to_stream() {
+        let a = gen::power_law(96, 80, 48, 1.7, 64);
+        let n = 4;
+        let x: Vec<f64> = (0..a.cols * n).map(|i| (i as f64 * 0.11).sin()).collect();
+        for kind in [ScheduleKind::MergePath, ScheduleKind::NonzeroSplit] {
+            let desc = kind.descriptor(&a, 32).unwrap();
+            let want = execute_stream_host(&a, &x, n, &desc);
+            for shards in [1usize, 3, 8] {
+                let per = desc.workers().div_ceil(shards);
+                let mut y = vec![0.0f64; a.rows * n];
+                let mut w0 = 0;
+                while w0 < desc.workers() {
+                    let w1 = (w0 + per).min(desc.workers());
+                    apply_partials(&mut y, n, &shard_partials(&a, &x, n, &desc, w0, w1));
+                    w0 = w1;
+                }
+                assert_eq!(y, want, "{kind:?} x{shards} shards diverged");
+            }
         }
     }
 

@@ -303,12 +303,16 @@ fn cmd_serve(args: &Args) -> gpulb::Result<()> {
 
     let mix = serve::corpus_mix(scale);
     let atoms: usize = mix.iter().map(|p| p.atoms()).sum();
+    let count = |kind: &str| mix.iter().filter(|p| p.kind_name() == kind).count();
     println!(
-        "mix: {} problems ({} spmv, {} gemm, {} frontier), {} atoms total",
+        "mix: {} problems ({} spmv, {} spmm, {} spgemm, {} gemm, {} frontier), \
+         {} atoms total",
         mix.len(),
-        mix.iter().filter(|p| p.kind_name() == "spmv").count(),
-        mix.iter().filter(|p| p.kind_name() == "gemm").count(),
-        mix.iter().filter(|p| p.kind_name() == "frontier").count(),
+        count("spmv"),
+        count("spmm"),
+        count("spgemm"),
+        count("gemm"),
+        count("frontier"),
         atoms
     );
 

@@ -1,159 +1,108 @@
-//! The problems a batch can carry and their execution semantics.
+//! [`Problem`]: a thin constructor over boxed work kernels, plus the
+//! generic plan/execute/shard/reduce entry points the engine calls.
 //!
-//! A [`Problem`] is one request: SpMV over a corpus matrix, GEMM over a
-//! corpus shape, or a graph-frontier expansion.  All three expose their
-//! irregular work as an atoms-per-tile prefix sum, get planned by a
-//! Chapter-4 schedule through the [`PlanCache`], and execute the resulting
-//! [`Assignment`] with the uniform accumulate-into-tile semantics — the
-//! serving-layer restatement of the paper's claim that one load-balancing
-//! abstraction covers heterogeneous irregular workloads.
-//!
-//! GEMM rides the same machinery by treating its *aggregate MAC-loop
-//! iteration space* as the tile set (tiles = output tiles, atoms = MAC
-//! iterations): an even atom split over workers is exactly the Stream-K
-//! decomposition, now produced by the generic `NonzeroSplit` schedule.
+//! This module contains no per-workload logic.  Every problem family lives
+//! behind [`DynKernel`] — the object-safe face of
+//! [`crate::exec::kernel::WorkKernel`] — and the engine reaches work
+//! processing only through that trait: one dispatch point for whole-problem
+//! execution ([`execute_planned`]), one for phase-1 shards
+//! ([`execute_shard`]), one for the phase-2 fixup ([`reduce_shards`]), and
+//! one for proxy metering ([`proxy_cost_entry`], itself generic over the
+//! kernel's offsets).  That is the serving-layer restatement of the paper's
+//! decoupling of load balancing from work processing (§4.2): adding a
+//! workload means implementing the trait in one file and adding one
+//! constructor below — no engine code changes.
 
 use std::sync::Arc;
 
-use crate::balance::stream::{self, ScheduleDescriptor};
-use crate::balance::{self, adaptive, OffsetsSource, ScheduleKind};
-use crate::corpus::{gemm_shapes, sparse_corpus};
-use crate::exec::{dense::DenseMat, gemm, graph, spmv};
-use crate::sparse::{gen, Coo, Csr};
+use crate::balance::{adaptive, OffsetsSource, ScheduleKind};
+use crate::exec::kernel::{
+    DynKernel, FrontierKernel, GemmKernel, SpgemmKernel, SpmmKernel, SpmvKernel,
+};
+use crate::sparse::Csr;
 use crate::streamk::{Blocking, GemmShape};
 
-use super::plan_cache::{fingerprint, PlanCache, PlanEntry, PlanKey};
+use super::plan_cache::{PlanCache, PlanEntry, PlanKey};
 use super::tuner::CostFeedback;
 use super::ServeConfig;
 
-/// Fingerprint salts, one per problem family (see [`fingerprint`]).
-pub const SALT_SPMV: u64 = 0x51;
-pub const SALT_GEMM: u64 = 0x6e;
-pub const SALT_FRONTIER: u64 = 0xf0;
+pub use crate::exec::kernel::{
+    BoxedPartials, SALT_FRONTIER, SALT_GEMM, SALT_SPGEMM, SALT_SPMM, SALT_SPMV,
+};
 
-/// One request in a batch.
+/// One request in a batch: any workload behind the kernel trait.
 #[derive(Clone)]
-pub enum Problem {
-    /// y = A x over the load-balancing framework.
-    Spmv {
-        matrix: Arc<Csr>,
-        x: Arc<Vec<f64>>,
-        fingerprint: u64,
-    },
-    /// C = A B via the MAC-iteration tile set (host Stream-K analogue).
-    Gemm {
-        a: Arc<DenseMat>,
-        b: Arc<DenseMat>,
-        shape: GemmShape,
-        blocking: Blocking,
-        /// Prefix sum of MAC iterations per output tile.
-        offsets: Arc<Vec<usize>>,
-        fingerprint: u64,
-    },
-    /// One frontier-expansion step (per-vertex neighbor reduction).
-    Frontier {
-        graph: Arc<Csr>,
-        frontier: Arc<Vec<u32>>,
-        /// Prefix sum of neighbor-list lengths over the frontier.
-        offsets: Arc<Vec<usize>>,
-        fingerprint: u64,
-    },
+pub struct Problem {
+    kernel: Arc<dyn DynKernel>,
 }
 
 impl Problem {
-    /// SpMV request; `x` is derived deterministically from the column count.
+    /// Wrap an already-built kernel (the extension point for workloads
+    /// defined outside this crate's mix).
+    pub fn from_kernel(kernel: Arc<dyn DynKernel>) -> Problem {
+        Problem { kernel }
+    }
+
+    /// y = A x; the dense operand is derived deterministically.
     pub fn spmv(matrix: Arc<Csr>) -> Problem {
-        let x: Vec<f64> = (0..matrix.cols).map(|i| (i as f64 * 0.37).sin()).collect();
-        let fp = fingerprint(SALT_SPMV, &*matrix);
-        Problem::Spmv {
-            matrix,
-            x: Arc::new(x),
-            fingerprint: fp,
-        }
+        Problem::from_kernel(Arc::new(SpmvKernel::new(matrix)))
     }
 
-    /// GEMM request with seeded random operands.
+    /// Y = A X with a dense row-major X of `n` columns (Listing 4.4).
+    pub fn spmm(matrix: Arc<Csr>, n: usize) -> Problem {
+        Problem::from_kernel(Arc::new(SpmmKernel::new(matrix, n)))
+    }
+
+    /// C = A B over two sparse operands, planned over row-work estimates
+    /// (Gustavson's two-pass SpGEMM, §4.4.3).
+    pub fn spgemm(a: Arc<Csr>, b: Arc<Csr>) -> Problem {
+        Problem::from_kernel(Arc::new(SpgemmKernel::new(a, b)))
+    }
+
+    /// C = A B via the MAC-iteration tile set (host Stream-K analogue)
+    /// with seeded random operands.
     pub fn gemm(shape: GemmShape, blocking: Blocking, seed: u64) -> Problem {
-        let a = DenseMat::random(shape.m, shape.k, seed);
-        let b = DenseMat::random(shape.k, shape.n, seed.wrapping_add(1));
-        let tiles = blocking.tiles(shape);
-        let ipt = blocking.iters_per_tile(shape) as usize;
-        let offsets: Vec<usize> = (0..=tiles).map(|t| t * ipt).collect();
-        let fp = fingerprint(SALT_GEMM, &OffsetsSource::new(&offsets));
-        Problem::Gemm {
-            a: Arc::new(a),
-            b: Arc::new(b),
-            shape,
-            blocking,
-            offsets: Arc::new(offsets),
-            fingerprint: fp,
-        }
+        Problem::from_kernel(Arc::new(GemmKernel::new(shape, blocking, seed)))
     }
 
-    /// Frontier-expansion request over `graph` from the given frontier.
+    /// One frontier-expansion step (per-vertex neighbor reduction).
     pub fn frontier(graph: Arc<Csr>, frontier: Vec<u32>) -> Problem {
-        let lens: Vec<usize> = frontier
-            .iter()
-            .map(|&v| graph.row_nnz(v as usize))
-            .collect();
-        let offsets = balance::prefix::exclusive(&lens);
-        let fp = fingerprint(SALT_FRONTIER, &OffsetsSource::new(&offsets));
-        Problem::Frontier {
-            graph,
-            frontier: Arc::new(frontier),
-            offsets: Arc::new(offsets),
-            fingerprint: fp,
-        }
+        Problem::from_kernel(Arc::new(FrontierKernel::new(graph, frontier)))
     }
 
     pub fn kind_name(&self) -> &'static str {
-        match self {
-            Problem::Spmv { .. } => "spmv",
-            Problem::Gemm { .. } => "gemm",
-            Problem::Frontier { .. } => "frontier",
-        }
+        self.kernel.kind_name()
     }
 
-    /// Work atoms in this problem (nonzeros / MAC iterations / edges).
+    /// Work atoms in this problem (nonzeros / MAC iterations / products /
+    /// edges).
     pub fn atoms(&self) -> usize {
-        match self {
-            Problem::Spmv { matrix, .. } => matrix.nnz(),
-            Problem::Gemm { offsets, .. } | Problem::Frontier { offsets, .. } => {
-                *offsets.last().unwrap_or(&0)
-            }
-        }
+        self.kernel.num_atoms()
     }
 
     pub fn fingerprint(&self) -> u64 {
-        match self {
-            Problem::Spmv { fingerprint, .. }
-            | Problem::Gemm { fingerprint, .. }
-            | Problem::Frontier { fingerprint, .. } => *fingerprint,
-        }
+        self.kernel.fingerprint()
     }
 
-    /// Per-family static default schedule (the `Auto` policy): the §4.5.2
-    /// heuristic for SpMV; `NonzeroSplit` for GEMM — the Stream-K-
-    /// equivalent even iteration split; merge-path for frontiers, whose
-    /// tile sets are the most skewed.
+    /// The problem's atoms-per-tile prefix sum (what schedules plan over
+    /// and the streams walk).
+    pub fn offsets(&self) -> &[usize] {
+        self.kernel.offsets()
+    }
+
+    /// Per-family static default schedule (the `Auto` policy).
     pub fn static_schedule(&self) -> ScheduleKind {
-        match self {
-            Problem::Spmv { matrix, .. } => {
-                balance::select_schedule(matrix, balance::HeuristicParams::default())
-            }
-            Problem::Gemm { .. } => ScheduleKind::NonzeroSplit,
-            Problem::Frontier { .. } => ScheduleKind::MergePath,
-        }
+        self.kernel.static_schedule()
+    }
+
+    /// Cold-start shape prior for the adaptive tuner.
+    pub fn cold_start_prior(&self, plan_workers: usize) -> ScheduleKind {
+        self.kernel.cold_start_prior(plan_workers)
     }
 
     /// (tiles, atoms) of this problem's tile set — the proxy-cost inputs.
     pub fn tile_set_size(&self) -> (usize, usize) {
-        match self {
-            Problem::Spmv { matrix, .. } => (matrix.rows, matrix.nnz()),
-            Problem::Gemm { offsets, .. } | Problem::Frontier { offsets, .. } => {
-                (offsets.len() - 1, *offsets.last().unwrap_or(&0))
-            }
-        }
+        (self.kernel.num_tiles(), self.kernel.num_atoms())
     }
 }
 
@@ -181,20 +130,7 @@ pub fn plan(
         schedule: kind,
         workers,
     };
-    match problem {
-        Problem::Spmv { matrix, .. } => cache.plan(key, &**matrix),
-        Problem::Gemm { offsets, .. } | Problem::Frontier { offsets, .. } => {
-            cache.plan(key, &OffsetsSource::new(offsets))
-        }
-    }
-}
-
-/// The problem's atoms-per-tile prefix sum (what the streams walk).
-fn problem_offsets(problem: &Problem) -> &[usize] {
-    match problem {
-        Problem::Spmv { matrix, .. } => &matrix.offsets,
-        Problem::Gemm { offsets, .. } | Problem::Frontier { offsets, .. } => offsets,
-    }
+    cache.plan(key, &OffsetsSource::new(problem.offsets()))
 }
 
 /// Deterministic proxy cost of an entry (stream-computed for descriptors,
@@ -203,7 +139,7 @@ pub fn proxy_cost_entry(problem: &Problem, kind: ScheduleKind, entry: &PlanEntry
     let (tiles, atoms) = problem.tile_set_size();
     match entry {
         PlanEntry::Descriptor(d) => {
-            adaptive::proxy_cost_stream(d, problem_offsets(problem), tiles, atoms)
+            adaptive::proxy_cost_stream(d, problem.offsets(), tiles, atoms)
         }
         PlanEntry::Materialized(asg) => adaptive::proxy_cost(kind, asg, tiles, atoms),
     }
@@ -226,7 +162,8 @@ pub fn execute(
     execute_planned(problem, kind, &entry, cfg)
 }
 
-/// Execute one problem against an already-fetched plan entry.
+/// Execute one problem against an already-fetched plan entry — the
+/// engine's single whole-problem dispatch point into the kernel trait.
 pub fn execute_planned(
     problem: &Problem,
     kind: ScheduleKind,
@@ -234,62 +171,9 @@ pub fn execute_planned(
     cfg: &ServeConfig,
 ) -> ExecSample {
     let start = std::time::Instant::now();
-    let checksum: f64 = match (problem, entry) {
-        (Problem::Spmv { matrix, x, .. }, PlanEntry::Descriptor(d)) => {
-            spmv::execute_stream_host(matrix, x, d).iter().sum()
-        }
-        (Problem::Spmv { matrix, x, .. }, PlanEntry::Materialized(asg)) => {
-            spmv::execute_host(matrix, x, asg).iter().sum()
-        }
-        (
-            Problem::Gemm {
-                a,
-                b,
-                shape,
-                blocking,
-                offsets,
-                ..
-            },
-            PlanEntry::Descriptor(d),
-        ) => gemm::execute_macs_stream(a, b, *shape, *blocking, d, offsets)
-            .data
-            .iter()
-            .sum(),
-        (
-            Problem::Gemm {
-                a,
-                b,
-                shape,
-                blocking,
-                ..
-            },
-            PlanEntry::Materialized(asg),
-        ) => execute_gemm_assignment(a, b, *shape, *blocking, asg)
-            .data
-            .iter()
-            .sum(),
-        (
-            Problem::Frontier {
-                graph,
-                frontier,
-                offsets,
-                ..
-            },
-            PlanEntry::Descriptor(d),
-        ) => execute_frontier_stream(graph, frontier, offsets, d)
-            .iter()
-            .sum(),
-        (
-            Problem::Frontier {
-                graph,
-                frontier,
-                offsets,
-                ..
-            },
-            PlanEntry::Materialized(asg),
-        ) => execute_frontier_assignment(graph, frontier, offsets, asg)
-            .iter()
-            .sum(),
+    let checksum = match entry {
+        PlanEntry::Descriptor(d) => problem.kernel.execute_stream(d),
+        PlanEntry::Materialized(asg) => problem.kernel.execute_assignment(asg),
     };
     let cost = match cfg.feedback {
         CostFeedback::Measured => start.elapsed().as_secs_f64(),
@@ -298,307 +182,36 @@ pub fn execute_planned(
     ExecSample { checksum, cost }
 }
 
-/// Phase-1 output of one worker-range shard of a split problem.
-pub enum ShardPartials {
-    /// (tile, partial sum) pairs — SpMV and frontier reductions.
-    Scalars(Vec<(u32, f64)>),
-    /// (tile, bm×bn partial accumulator) — GEMM's Stream-K fixup tiles.
-    Tiles(Vec<(u32, Vec<f64>)>),
-}
-
 /// Execute workers `[w0, w1)` of a split problem's descriptor plan
 /// (phase 1 of the two-phase path): per-segment partials, no shared
 /// output, safe to run concurrently with every other shard.
 pub fn execute_shard(
     problem: &Problem,
-    desc: &ScheduleDescriptor,
+    desc: &crate::balance::stream::ScheduleDescriptor,
     w0: usize,
     w1: usize,
-) -> ShardPartials {
-    match problem {
-        Problem::Spmv { matrix, x, .. } => {
-            ShardPartials::Scalars(spmv::shard_partials(matrix, x, desc, w0, w1))
-        }
-        Problem::Gemm {
-            a,
-            b,
-            shape,
-            blocking,
-            offsets,
-            ..
-        } => ShardPartials::Tiles(gemm::mac_shard_partials(
-            a,
-            b,
-            *shape,
-            *blocking,
-            desc,
-            offsets,
-            w0..w1,
-        )),
-        Problem::Frontier {
-            graph,
-            frontier,
-            offsets,
-            ..
-        } => {
-            ShardPartials::Scalars(frontier_shard_partials(graph, frontier, offsets, desc, w0, w1))
-        }
-    }
+) -> BoxedPartials {
+    problem.kernel.shard_dyn(desc, w0, w1)
 }
 
 /// Phase 2: fold shard partials — in shard order, which is worker order —
 /// into the problem's output and return its checksum.  The accumulation
 /// sequence is identical to the sequential stream executor's, so the
 /// result is bit-identical at any shard count.
-pub fn reduce_shards(problem: &Problem, shards: &[ShardPartials]) -> f64 {
-    match problem {
-        Problem::Spmv { matrix, .. } => {
-            let mut y = vec![0.0f64; matrix.rows];
-            for shard in shards {
-                if let ShardPartials::Scalars(parts) = shard {
-                    spmv::apply_partials(&mut y, parts);
-                }
-            }
-            y.iter().sum()
-        }
-        Problem::Frontier { frontier, .. } => {
-            let mut out = vec![0.0f64; frontier.len()];
-            for shard in shards {
-                if let ShardPartials::Scalars(parts) = shard {
-                    spmv::apply_partials(&mut out, parts);
-                }
-            }
-            out.iter().sum()
-        }
-        Problem::Gemm {
-            shape, blocking, ..
-        } => {
-            let mut c = DenseMat::zeros(shape.m, shape.n);
-            for shard in shards {
-                if let ShardPartials::Tiles(parts) = shard {
-                    gemm::apply_mac_partials(&mut c, *shape, *blocking, parts);
-                }
-            }
-            c.data.iter().sum()
-        }
-    }
-}
-
-/// Execute a GEMM through a generic [`Assignment`] over the MAC-iteration
-/// tile set: each segment accumulates its share of one output tile's
-/// k-iterations (Algorithm 10's fixup realized as commutative accumulation,
-/// like [`crate::exec::gemm::execute_plan_host`]).
-pub fn execute_gemm_assignment(
-    a: &DenseMat,
-    b: &DenseMat,
-    shape: GemmShape,
-    blk: Blocking,
-    asg: &balance::Assignment,
-) -> DenseMat {
-    let (bm, bn, bk) = (blk.bm, blk.bn, blk.bk);
-    let ipt = blk.iters_per_tile(shape) as usize;
-    let tiles_n = shape.n.div_ceil(bn);
-    let mut c = DenseMat::zeros(shape.m, shape.n);
-    for w in &asg.workers {
-        for s in &w.segments {
-            let tile = s.tile as usize;
-            let tile_r = (tile / tiles_n) * bm;
-            let tile_c = (tile % tiles_n) * bn;
-            let base = tile * ipt;
-            let mut acc = vec![0.0f64; bm * bn];
-            for it in (s.atom_begin - base)..(s.atom_end - base) {
-                let k0 = it * bk;
-                let a_blk = a.window(tile_r, k0, bm, bk);
-                let b_blk = b.window(k0, tile_c, bk, bn);
-                for i in 0..bm {
-                    for l in 0..bk {
-                        let av = a_blk[i * bk + l];
-                        if av == 0.0 {
-                            continue;
-                        }
-                        for j in 0..bn {
-                            acc[i * bn + j] += av * b_blk[l * bn + j];
-                        }
-                    }
-                }
-            }
-            c.add_window(&acc, tile_r, tile_c, bm, bn);
-        }
-    }
-    c
-}
-
-/// Execute a frontier expansion through an [`Assignment`]: per frontier
-/// vertex, reduce the absolute edge weights of its neighbor list (the
-/// balanced "advance" of §4.4.3, with the same accumulate-into-tile
-/// semantics as SpMV).
-pub fn execute_frontier_assignment(
-    graph: &Csr,
-    frontier: &[u32],
-    offsets: &[usize],
-    asg: &balance::Assignment,
-) -> Vec<f64> {
-    let mut out = vec![0.0f64; frontier.len()];
-    for w in &asg.workers {
-        for s in &w.segments {
-            out[s.tile as usize] += frontier_segment_sum(graph, frontier, offsets, *s);
-        }
-    }
-    out
-}
-
-/// One segment's share of its frontier vertex's neighbor reduction.
-#[inline]
-fn frontier_segment_sum(
-    graph: &Csr,
-    frontier: &[u32],
-    offsets: &[usize],
-    s: balance::Segment,
-) -> f64 {
-    let v = frontier[s.tile as usize] as usize;
-    let (_, weights) = graph.row(v);
-    let base = offsets[s.tile as usize];
-    let mut sum = 0.0;
-    for atom in s.atom_begin..s.atom_end {
-        sum += weights[atom - base].abs();
-    }
-    sum
-}
-
-/// Frontier expansion from a streaming descriptor — bit-identical to
-/// [`execute_frontier_assignment`] on the materialized plan.
-pub fn execute_frontier_stream(
-    graph: &Csr,
-    frontier: &[u32],
-    offsets: &[usize],
-    desc: &ScheduleDescriptor,
-) -> Vec<f64> {
-    let mut out = vec![0.0f64; frontier.len()];
-    stream::for_each_segment(*desc, offsets, |s| {
-        out[s.tile as usize] += frontier_segment_sum(graph, frontier, offsets, s);
-    });
-    out
-}
-
-/// Phase-1 partials of a frontier shard (workers `[w0, w1)`).
-pub fn frontier_shard_partials(
-    graph: &Csr,
-    frontier: &[u32],
-    offsets: &[usize],
-    desc: &ScheduleDescriptor,
-    w0: usize,
-    w1: usize,
-) -> Vec<(u32, f64)> {
-    let mut out = Vec::new();
-    for w in w0..w1.min(desc.workers()) {
-        for s in stream::worker_segments(*desc, offsets, w) {
-            out.push((s.tile, frontier_segment_sum(graph, frontier, offsets, s)));
-        }
-    }
-    out
-}
-
-/// An R-MAT graph unioned with a ring (guarantees every vertex has a
-/// neighbor, so BFS from vertex 0 reaches the whole graph).
-fn connected_rmat(scale: u32, edge_factor: usize, seed: u64) -> Csr {
-    let base = gen::rmat(scale, edge_factor, seed);
-    let n = base.rows;
-    let mut coo = Coo::new(n, n);
-    for v in 0..n {
-        coo.push(v, (v + 1) % n, 1.0);
-    }
-    for r in 0..n {
-        let (cols, vals) = base.row(r);
-        for (c, v) in cols.iter().zip(vals) {
-            coo.push(r, *c as usize, *v);
-        }
-    }
-    Csr::from_coo(&coo)
-}
-
-/// Deterministic heterogeneous batch over the evaluation corpora.
-///
-/// `scale` 0 is the smoke mix (fast under `cargo test`); `scale >= 1` is
-/// the bench mix.  GEMM shapes come from the Fig. 5.6 corpus restricted to
-/// host-executable sizes; SpMV matrices are the SuiteSparse substitution;
-/// frontier problems replay the BFS levels of an R-MAT graph.
-pub fn corpus_mix(scale: usize) -> Vec<Problem> {
-    let mut out = Vec::new();
-
-    // SpMV over the sparse corpus.
-    for entry in sparse_corpus(scale.min(1)) {
-        out.push(Problem::spmv(Arc::new(entry.matrix)));
-    }
-
-    // GEMM over the small end of the Fig. 5.6 shape corpus (host numerics
-    // cap the affordable FLOP volume; the shapes are still corpus members).
-    let (max_dim, take) = if scale == 0 { (160, 6) } else { (256, 24) };
-    let blocking = Blocking::new(64, 64, 16);
-    for (i, shape) in gemm_shapes::gemm_corpus()
-        .into_iter()
-        .filter(|s| s.m <= max_dim && s.n <= max_dim && s.k <= max_dim)
-        .take(take)
-        .enumerate()
-    {
-        out.push(Problem::gemm(shape, blocking, 0x9e3779b9 + i as u64));
-    }
-
-    // Frontier expansions: every BFS level of a connected R-MAT graph.
-    let rmat_scale = if scale == 0 { 9 } else { 12 };
-    let graph = Arc::new(connected_rmat(rmat_scale, 8, 2022));
-    let depth = graph::bfs_ref(&graph, 0);
-    let max_depth = depth.iter().filter(|&&d| d != u32::MAX).max().copied();
-    for level in 0..=max_depth.unwrap_or(0) {
-        let frontier: Vec<u32> = (0..graph.rows as u32)
-            .filter(|&v| depth[v as usize] == level)
-            .collect();
-        if !frontier.is_empty() {
-            out.push(Problem::frontier(graph.clone(), frontier));
-        }
-    }
-
-    out
+pub fn reduce_shards(problem: &Problem, shards: Vec<BoxedPartials>) -> f64 {
+    problem.kernel.reduce_dyn(shards)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::serve::plan_cache::PlanCache;
+    use crate::sparse::gen;
 
     fn cfg() -> ServeConfig {
         ServeConfig {
             threads: 1,
             plan_workers: 64,
             ..ServeConfig::default()
-        }
-    }
-
-    #[test]
-    fn gemm_assignment_matches_reference_all_schedules() {
-        let shape = GemmShape::new(96, 80, 72);
-        let blk = Blocking::new(32, 32, 16);
-        let problem = Problem::gemm(shape, blk, 7);
-        let Problem::Gemm { a, b, offsets, .. } = &problem else {
-            unreachable!()
-        };
-        let (a, b) = (a.as_ref(), b.as_ref());
-        let want = DenseMat::matmul_ref(a, b);
-        for kind in [
-            ScheduleKind::ThreadMapped,
-            ScheduleKind::GroupMapped(32),
-            ScheduleKind::MergePath,
-            ScheduleKind::NonzeroSplit,
-            ScheduleKind::Binning,
-            ScheduleKind::Lrb,
-        ] {
-            let asg = kind.assign(&OffsetsSource::new(offsets), 16);
-            asg.validate(&OffsetsSource::new(offsets)).unwrap();
-            let got = execute_gemm_assignment(a, b, shape, blk, &asg);
-            assert!(
-                got.max_abs_diff(&want) < 1e-9,
-                "{kind:?} diff {}",
-                got.max_abs_diff(&want)
-            );
         }
     }
 
@@ -619,6 +232,28 @@ mod tests {
     }
 
     #[test]
+    fn spgemm_and_spmm_checksums_schedule_invariant() {
+        let a = Arc::new(gen::power_law(120, 120, 60, 1.6, 12));
+        let b = Arc::new(gen::uniform(120, 96, 4, 13));
+        let cache = PlanCache::new(64);
+        for problem in [Problem::spgemm(a.clone(), b), Problem::spmm(a, 3)] {
+            let auto = execute(&problem, problem.static_schedule(), &cache, &cfg()).checksum;
+            for kind in [
+                ScheduleKind::ThreadMapped,
+                ScheduleKind::NonzeroSplit,
+                ScheduleKind::Binning,
+            ] {
+                let got = execute(&problem, kind, &cache, &cfg()).checksum;
+                assert!(
+                    (got - auto).abs() < 1e-6,
+                    "{} {kind:?}: {got} vs {auto}",
+                    problem.kind_name()
+                );
+            }
+        }
+    }
+
+    #[test]
     fn proxy_feedback_is_deterministic_and_positive() {
         let matrix = Arc::new(gen::uniform(128, 128, 4, 3));
         let problem = Problem::spmv(matrix);
@@ -634,33 +269,17 @@ mod tests {
     }
 
     #[test]
-    fn frontier_checksum_matches_direct_reduction() {
-        let graph = Arc::new(connected_rmat(8, 4, 5));
-        let frontier: Vec<u32> = (0..graph.rows as u32).step_by(3).collect();
-        let problem = Problem::frontier(graph.clone(), frontier.clone());
-        let cache = PlanCache::new(64);
-        let got = execute(&problem, problem.static_schedule(), &cache, &cfg()).checksum;
-        let want: f64 = frontier
-            .iter()
-            .map(|&v| graph.row(v as usize).1.iter().map(|w| w.abs()).sum::<f64>())
-            .sum();
-        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
-    }
-
-    #[test]
-    fn corpus_mix_is_deterministic_and_heterogeneous() {
-        let a = corpus_mix(0);
-        let b = corpus_mix(0);
-        assert_eq!(a.len(), b.len());
-        for (x, y) in a.iter().zip(&b) {
-            assert_eq!(x.fingerprint(), y.fingerprint());
-            assert_eq!(x.atoms(), y.atoms());
-        }
-        for kind in ["spmv", "gemm", "frontier"] {
-            assert!(
-                a.iter().any(|p| p.kind_name() == kind),
-                "mix lacks {kind} problems"
-            );
-        }
+    fn problems_delegate_to_their_kernels() {
+        let matrix = Arc::new(gen::uniform(64, 64, 4, 5));
+        let nnz = matrix.nnz();
+        let p = Problem::spmv(matrix.clone());
+        assert_eq!(p.kind_name(), "spmv");
+        assert_eq!(p.atoms(), nnz);
+        assert_eq!(p.tile_set_size(), (64, nnz));
+        assert_eq!(p.offsets(), &matrix.offsets[..]);
+        // SpMM shares the tile set but not the fingerprint (salted).
+        let m = Problem::spmm(matrix, 4);
+        assert_eq!(m.offsets(), p.offsets());
+        assert_ne!(m.fingerprint(), p.fingerprint());
     }
 }

@@ -23,7 +23,7 @@ use crate::corpus::{gemm_landscape_grid, sparse_corpus};
 use crate::metrics;
 use crate::streamk::Blocking;
 
-use super::batch::{SALT_GEMM, SALT_SPMV};
+use super::batch::{SALT_GEMM, SALT_SPGEMM, SALT_SPMM, SALT_SPMV};
 use super::plan_cache::{fingerprint, PlanCache, PlanEntry, PlanKey};
 use super::tuner::{ScheduleTuner, DEFAULT_EPSILON, DEFAULT_MIN_SAMPLES, DEFAULT_SEED};
 
@@ -56,7 +56,10 @@ impl LandscapeEntry {
 }
 
 /// Build the landscape: the sparse corpus (each entry keeps its corpus
-/// family) plus the GEMM geometry grid (family `gemm-grid`).  `scale` is
+/// family), the GEMM geometry grid (family `gemm-grid`), and the
+/// closed-form tile sets of the served SpGEMM and SpMM workloads
+/// (families `spgemm` and `spmm`, from the `promoted_families` builder
+/// below).  `scale` is
 /// clamped to `[0, 1]` — the gate's landscape has exactly two sizes, and
 /// a larger value must not relabel identical data.
 pub fn build_landscape(scale: usize) -> Vec<LandscapeEntry> {
@@ -86,6 +89,47 @@ pub fn build_landscape(scale: usize) -> Vec<LandscapeEntry> {
             prior: ScheduleKind::NonzeroSplit,
         });
     }
+    out.extend(promoted_families(scale));
+    out
+}
+
+/// Closed-form tile sets for the served SpGEMM and SpMM families: built by
+/// formula, not RNG, so the committed baseline's rows for these families
+/// can be regenerated — and audited — without replaying any generator
+/// state.  SpGEMM entries are *row-work estimates* (per-row product
+/// counts, the tile set the served kernel plans over); SpMM entries are
+/// SpMV-shaped row tile sets (the dense-RHS column loop multiplies work
+/// per atom, not the tile set).
+fn promoted_families(scale: usize) -> Vec<LandscapeEntry> {
+    let n = if scale == 0 { 256 } else { 4096 };
+    // Four hub rows next to a long uniform tail.
+    let hub = |big: usize, small: usize| -> Vec<usize> {
+        (0..n).map(|r| if r < 4 { big } else { small }).collect()
+    };
+    let ramp: Vec<usize> = (0..n).map(|r| 8 + (r % 16) * 8).collect();
+    let band: Vec<usize> = (0..n).map(|r| 2 + r % 4).collect();
+    let mut out = Vec::new();
+    let mut push = |stem: &str, family: &'static str, salt: u64, lens: Vec<usize>| {
+        let offsets = balance::prefix::exclusive(&lens);
+        let fp = fingerprint(salt, &OffsetsSource::new(&offsets));
+        out.push(LandscapeEntry {
+            name: format!("{stem}_{n}"),
+            family,
+            offsets,
+            fingerprint: fp,
+            // Both families' product/row skew is merge-path territory —
+            // matching the kernels' static schedule.
+            prior: ScheduleKind::MergePath,
+        });
+    };
+    // SpGEMM: uniform fanout sheet, hub-dominated fanout, cyclic ramp.
+    push("spgemm_uniform", "spgemm", SALT_SPGEMM, vec![48; n]);
+    push("spgemm_hub", "spgemm", SALT_SPGEMM, hub(8 * n, 16));
+    push("spgemm_ramp", "spgemm", SALT_SPGEMM, ramp);
+    // SpMM: regular mesh rows, hub skew, banded cycle.
+    push("spmm_uniform_d8", "spmm", SALT_SPMM, vec![8; n]);
+    push("spmm_hub", "spmm", SALT_SPMM, hub(n, 2));
+    push("spmm_band", "spmm", SALT_SPMM, band);
     out
 }
 
@@ -194,11 +238,19 @@ mod tests {
     }
 
     #[test]
-    fn landscape_covers_sparse_and_gemm_families() {
+    fn landscape_covers_sparse_gemm_and_promoted_families() {
         let entries = build_landscape(0);
         assert!(entries.iter().any(|e| e.family == "gemm-grid"));
         assert!(entries.iter().any(|e| e.family == "uniform"));
         assert!(entries.iter().any(|e| e.family == "power-law"));
+        for family in ["spgemm", "spmm"] {
+            assert_eq!(
+                entries.iter().filter(|e| e.family == family).count(),
+                3,
+                "{family} family must hold exactly the 3 closed-form entries \
+                 the committed baseline records"
+            );
+        }
         for e in &entries {
             assert!(e.tiles() > 0, "{} empty tile set", e.name);
             assert_eq!(e.offsets[0], 0, "{} offsets must start at 0", e.name);

@@ -1,0 +1,133 @@
+//! Deterministic problem mixes over the evaluation corpora — the
+//! construction side of the serve layer, kept separate from the engine so
+//! engine code stays workload-agnostic.
+
+use std::sync::Arc;
+
+use crate::corpus::{gemm_shapes, sparse_corpus};
+use crate::exec::graph;
+use crate::sparse::{gen, Coo, Csr};
+use crate::streamk::Blocking;
+
+use super::batch::Problem;
+
+/// An R-MAT graph unioned with a ring (guarantees every vertex has a
+/// neighbor, so BFS from vertex 0 reaches the whole graph).
+fn connected_rmat(scale: u32, edge_factor: usize, seed: u64) -> Csr {
+    let base = gen::rmat(scale, edge_factor, seed);
+    let n = base.rows;
+    let mut coo = Coo::new(n, n);
+    for v in 0..n {
+        coo.push(v, (v + 1) % n, 1.0);
+    }
+    for r in 0..n {
+        let (cols, vals) = base.row(r);
+        for (c, v) in cols.iter().zip(vals) {
+            coo.push(r, *c as usize, *v);
+        }
+    }
+    Csr::from_coo(&coo)
+}
+
+/// Deterministic heterogeneous batch over the evaluation corpora: SpMV,
+/// SpMM, SpGEMM, GEMM and graph-frontier problems in one stream.
+///
+/// `scale` 0 is the smoke mix (fast under `cargo test`); `scale >= 1` is
+/// the bench mix.  GEMM shapes come from the Fig. 5.6 corpus restricted to
+/// host-executable sizes; SpMV matrices are the SuiteSparse substitution;
+/// SpGEMM pairs a scale-free A with a regular B (skewed product fanout);
+/// SpMM reuses scale-free matrices with a dense RHS block; frontier
+/// problems replay the BFS levels of an R-MAT graph.
+pub fn corpus_mix(scale: usize) -> Vec<Problem> {
+    let mut out = Vec::new();
+
+    // SpMV over the sparse corpus.
+    for entry in sparse_corpus(scale.min(1)) {
+        out.push(Problem::spmv(Arc::new(entry.matrix)));
+    }
+
+    // GEMM over the small end of the Fig. 5.6 shape corpus (host numerics
+    // cap the affordable FLOP volume; the shapes are still corpus members).
+    let (max_dim, take) = if scale == 0 { (160, 6) } else { (256, 24) };
+    let blocking = Blocking::new(64, 64, 16);
+    for (i, shape) in gemm_shapes::gemm_corpus()
+        .into_iter()
+        .filter(|s| s.m <= max_dim && s.n <= max_dim && s.k <= max_dim)
+        .take(take)
+        .enumerate()
+    {
+        out.push(Problem::gemm(shape, blocking, 0x9e3779b9 + i as u64));
+    }
+
+    // SpGEMM: scale-free A (row skew) times regular B (uniform fanout) —
+    // Gustavson's two-pass workload planned over row-work estimates.
+    let (sg_n, sg_take) = if scale == 0 { (160, 2) } else { (768, 4) };
+    for i in 0..sg_take {
+        let a = Arc::new(gen::power_law(sg_n, sg_n, sg_n / 2, 1.6, 0x5600 + i as u64));
+        let b = Arc::new(gen::uniform(sg_n, sg_n, 6, 0x5680 + i as u64));
+        out.push(Problem::spgemm(a, b));
+    }
+
+    // SpMM: scale-free matrices with a dense RHS block (Listing 4.4).
+    let (sm_n, sm_take) = if scale == 0 { (256, 2) } else { (2048, 4) };
+    let sm_cols = if scale == 0 { 4 } else { 8 };
+    for i in 0..sm_take {
+        let m = Arc::new(gen::power_law(sm_n, sm_n, sm_n / 2, 1.7, 0x5500 + i as u64));
+        out.push(Problem::spmm(m, sm_cols));
+    }
+
+    // Frontier expansions: every BFS level of a connected R-MAT graph.
+    let rmat_scale = if scale == 0 { 9 } else { 12 };
+    let graph = Arc::new(connected_rmat(rmat_scale, 8, 2022));
+    let depth = graph::bfs_ref(&graph, 0);
+    let max_depth = depth.iter().filter(|&&d| d != u32::MAX).max().copied();
+    for level in 0..=max_depth.unwrap_or(0) {
+        let frontier: Vec<u32> = (0..graph.rows as u32)
+            .filter(|&v| depth[v as usize] == level)
+            .collect();
+        if !frontier.is_empty() {
+            out.push(Problem::frontier(graph.clone(), frontier));
+        }
+    }
+
+    out
+}
+
+/// The single-large-problem bench mix: one SpMV with ≥ 1M nonzeros — the
+/// worst case for whole-problem batching (a batch of one has no
+/// inter-problem parallelism) and the case intra-problem splitting
+/// exists for.  2^17 rows × 16 nnz/row = 2,097,152 atoms, above
+/// [`super::DEFAULT_SPLIT_MIN_ATOMS`].
+pub fn single_large_mix() -> Vec<Problem> {
+    let matrix = Arc::new(gen::uniform(1 << 17, 1 << 17, 16, 0x51A6));
+    vec![Problem::spmv(matrix)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_mix_is_deterministic_and_heterogeneous() {
+        let a = corpus_mix(0);
+        let b = corpus_mix(0);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.fingerprint(), y.fingerprint());
+            assert_eq!(x.atoms(), y.atoms());
+        }
+        for kind in ["spmv", "spmm", "spgemm", "gemm", "frontier"] {
+            assert!(
+                a.iter().any(|p| p.kind_name() == kind),
+                "mix lacks {kind} problems"
+            );
+        }
+    }
+
+    #[test]
+    fn single_large_mix_exceeds_split_threshold() {
+        let mix = single_large_mix();
+        assert_eq!(mix.len(), 1);
+        assert!(mix[0].atoms() >= 1 << 20, "atoms: {}", mix[0].atoms());
+    }
+}

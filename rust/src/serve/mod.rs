@@ -1,13 +1,14 @@
 //! Host-side batch execution engine: the serving layer over the Chapter-4
 //! load-balancing abstraction.
 //!
-//! A [`ServeEngine`] accepts batches of heterogeneous [`Problem`]s (SpMV,
-//! GEMM, graph frontiers), plans each one through a schedule (the §4.5.2
-//! heuristic by default), caches O(1) [`crate::balance::ScheduleDescriptor`]
-//! plan entries in a concurrent [`PlanCache`] keyed by
-//! (work-source fingerprint, schedule, worker count), and executes the
-//! batch across a `std::thread` worker pool with per-worker deques and work
-//! stealing — the host-level analogue of
+//! A [`ServeEngine`] accepts batches of heterogeneous [`Problem`]s — any
+//! workload implementing [`crate::exec::kernel::WorkKernel`]; SpMV, SpMM,
+//! SpGEMM, Stream-K GEMM and graph frontiers ship in-crate — plans each
+//! one through a schedule (the §4.5.2 heuristic by default), caches O(1)
+//! [`crate::balance::ScheduleDescriptor`] plan entries in a concurrent
+//! [`PlanCache`] keyed by (work-source fingerprint, schedule, worker
+//! count), and executes the batch across a `std::thread` worker pool with
+//! per-worker deques and work stealing — the host-level analogue of
 //! [`crate::balance::queue::QueuePolicy::Stealing`], lifted from simulated
 //! device time to real threads (the Atos direction, arXiv:2112.00132).
 //! Problems above [`ServeConfig::split_min_atoms`] are additionally split
@@ -15,9 +16,15 @@
 //! reduced by a deterministic two-phase tile fixup that keeps checksums
 //! bit-identical to sequential execution.
 //!
+//! The engine is workload-agnostic: all work processing goes through the
+//! kernel trait's dispatch points in [`batch`], never through per-kind
+//! code here (pinned by `tests/engine_decoupling.rs`).
+//!
 //! Layering:
 //!
-//! * [`batch`]      — problem definitions, execution semantics, corpus mix;
+//! * [`batch`]      — [`Problem`] (boxed kernels) + the trait dispatch
+//!   points the engine calls;
+//! * [`mix`]        — deterministic problem mixes over the corpora;
 //! * [`plan_cache`] — the concurrent plan-entry cache (descriptors);
 //! * [`pool`]       — the work-stealing thread pool;
 //! * [`tuner`]      — online ε-greedy schedule selection over measured
@@ -28,11 +35,13 @@
 
 pub mod batch;
 pub mod landscape;
+pub mod mix;
 pub mod plan_cache;
 pub mod pool;
 pub mod tuner;
 
-pub use batch::{corpus_mix, ExecSample, Problem};
+pub use batch::{ExecSample, Problem};
+pub use mix::{corpus_mix, single_large_mix};
 pub use plan_cache::{CacheStats, PlanCache, PlanEntry, PlanKey};
 pub use pool::PoolStats;
 pub use tuner::{CostFeedback, Decision, SchedulePolicy, ScheduleTuner};
@@ -196,9 +205,8 @@ impl ServeEngine {
                 SchedulePolicy::Fixed(kind) => kind,
                 SchedulePolicy::Adaptive { .. } => {
                     let selector = self.tuner.as_ref().expect("adaptive policy builds a tuner");
-                    let (kind, decision) = selector.select(p.fingerprint(), workers, || {
-                        tuner::cold_start_prior(p, workers)
-                    });
+                    let prior = || p.cold_start_prior(workers);
+                    let (kind, decision) = selector.select(p.fingerprint(), workers, prior);
                     stats.adaptive += 1;
                     match decision {
                         Decision::Prior => stats.priors += 1,
@@ -258,7 +266,10 @@ impl ServeEngine {
 
         enum TaskOut {
             Sample(ExecSample),
-            Partials { elapsed: f64, parts: batch::ShardPartials },
+            Partials {
+                elapsed: f64,
+                parts: batch::BoxedPartials,
+            },
         }
         let (outs, pool) = pool::execute_weighted(
             threads,
@@ -291,7 +302,7 @@ impl ServeEngine {
         // Reassemble per-problem samples in submission order; shard
         // partials arrive in task order, which is ascending worker order.
         let mut samples: Vec<Option<ExecSample>> = (0..problems.len()).map(|_| None).collect();
-        let mut shard_parts: Vec<Vec<batch::ShardPartials>> =
+        let mut shard_parts: Vec<Vec<batch::BoxedPartials>> =
             (0..problems.len()).map(|_| Vec::new()).collect();
         let mut shard_elapsed = vec![0.0f64; problems.len()];
         for (task, out) in tasks.iter().zip(outs) {
@@ -306,7 +317,7 @@ impl ServeEngine {
         }
         for (i, p) in problems.iter().enumerate() {
             if let Some(desc) = &split[i] {
-                let checksum = batch::reduce_shards(p, &shard_parts[i]);
+                let checksum = batch::reduce_shards(p, std::mem::take(&mut shard_parts[i]));
                 let cost = match self.cfg.feedback {
                     CostFeedback::Measured => shard_elapsed[i],
                     CostFeedback::Proxy => {
@@ -389,17 +400,6 @@ pub fn throughput_sweep(
             }
         })
         .collect()
-}
-
-/// The single-large-problem bench mix: one SpMV with ≥ 1M nonzeros — the
-/// worst case for whole-problem batching (a batch of one has no
-/// inter-problem parallelism) and the case intra-problem splitting
-/// exists for.  2^17 rows × 16 nnz/row = 2,097,152 atoms, above
-/// [`DEFAULT_SPLIT_MIN_ATOMS`].
-pub fn single_large_mix() -> Vec<Problem> {
-    vec![Problem::spmv(std::sync::Arc::new(
-        crate::sparse::gen::uniform(1 << 17, 1 << 17, 16, 0x51A6),
-    ))]
 }
 
 /// Run the single-large bench: the [`single_large_mix`] swept over

@@ -175,25 +175,10 @@ impl PlanCache {
     }
 }
 
-const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
-
-fn fnv(h: u64, v: u64) -> u64 {
-    (h ^ v).wrapping_mul(FNV_PRIME)
-}
-
-/// FNV-1a fingerprint of a work source's offsets array, salted per problem
-/// family so e.g. an SpMV source and a GEMM iteration-space source with
-/// coincidentally equal offsets stay distinguishable in reports (sharing
-/// would still be correct — plans depend only on offsets).
-pub fn fingerprint(salt: u64, src: &impl WorkSource) -> u64 {
-    let mut h = fnv(FNV_OFFSET, salt);
-    h = fnv(h, src.num_tiles() as u64);
-    for &o in src.offsets() {
-        h = fnv(h, o as u64);
-    }
-    h
-}
+/// The work-source fingerprint keys are computed by
+/// [`crate::balance::fingerprint`]; re-exported here because this module's
+/// [`PlanKey`] is the primary consumer.
+pub use crate::balance::fingerprint;
 
 #[cfg(test)]
 mod tests {

@@ -5,8 +5,8 @@
 //! back the cost of every execution.  Selection policy, per fingerprint:
 //!
 //! 1. **Cold start** — no candidate has any sample: return the shape prior
-//!    (§4.5.2 heuristic refined by the roofline model, see
-//!    [`cold_start_prior`]).
+//!    (each kernel's [`crate::exec::kernel::WorkKernel::cold_start_prior`];
+//!    for SpMV/SpMM the §4.5.2 heuristic refined by the roofline model).
 //! 2. **Warmup** — some candidate is below `min_samples` samples: force-
 //!    explore the least-sampled candidate, so every member of
 //!    [`CANDIDATES`] gets measured before the tuner commits.
@@ -21,10 +21,8 @@
 use std::sync::Mutex;
 
 use crate::balance::adaptive::{best_of, least_sampled_of, PerfHistory, PerfKey, CANDIDATES};
-use crate::balance::{self, roofline, ScheduleKind};
+use crate::balance::ScheduleKind;
 use crate::rng::Rng;
-
-use super::batch::Problem;
 
 /// Default exploration probability in steady state.
 pub const DEFAULT_EPSILON: f64 = 0.1;
@@ -175,25 +173,6 @@ impl ScheduleTuner {
     /// one (exploit-only, no exploration draw).
     pub fn best(&self, fingerprint: u64, workers: usize) -> Option<ScheduleKind> {
         self.history.best(fingerprint, workers, self.min_samples)
-    }
-}
-
-/// Shape prior for the cold-start phase: the §4.5.2 α/β heuristic, refined
-/// by the roofline traffic model in the large-matrix regime the heuristic
-/// lumps into merge-path (§6.1.2's future-work direction); per-family
-/// defaults for the tile sets that carry no row statistics.
-pub fn cold_start_prior(problem: &Problem, plan_workers: usize) -> ScheduleKind {
-    match problem {
-        Problem::Spmv { matrix, .. } => {
-            let h = balance::select_schedule(matrix, balance::HeuristicParams::default());
-            if h == ScheduleKind::MergePath {
-                roofline::select_schedule_roofline(matrix, plan_workers)
-            } else {
-                h
-            }
-        }
-        Problem::Gemm { .. } => ScheduleKind::NonzeroSplit,
-        Problem::Frontier { .. } => ScheduleKind::MergePath,
     }
 }
 

@@ -1,0 +1,84 @@
+//! The acceptance grep: engine code reaches work processing only through
+//! the `WorkKernel` trait.  `serve/batch.rs` and `serve/mod.rs` (and the
+//! other engine modules) must contain no per-workload-kind execution,
+//! reduction, or proxy match arms — only the trait's dispatch points.
+//!
+//! The check is textual on purpose: it pins the *source* of the engine,
+//! so a future PR that reintroduces a `match problem { Spmv => … }` arm
+//! or calls an executor function directly fails loudly here even if it
+//! compiles and computes correctly.
+
+const ENGINE_SOURCES: [(&str, &str); 5] = [
+    ("serve/mod.rs", include_str!("../src/serve/mod.rs")),
+    ("serve/batch.rs", include_str!("../src/serve/batch.rs")),
+    ("serve/plan_cache.rs", include_str!("../src/serve/plan_cache.rs")),
+    ("serve/pool.rs", include_str!("../src/serve/pool.rs")),
+    ("serve/tuner.rs", include_str!("../src/serve/tuner.rs")),
+];
+
+/// Strings that would indicate the engine special-casing one workload's
+/// execution, reduction, or proxy path.  Constructors over boxed kernels
+/// (`SpmvKernel::new` etc. in `Problem`'s builders) are allowed — they are
+/// the thin constructor layer — so kernel *type* names are not forbidden;
+/// executor entry points and per-kind variant matching are.
+const FORBIDDEN: [&str; 16] = [
+    // Direct executor-module calls.
+    "exec::spmv",
+    "exec::gemm::",
+    "exec::graph",
+    "exec::spgemm::",
+    "exec::spmm::",
+    "spmv::execute",
+    "gemm::execute",
+    "spgemm::execute",
+    "spmm::execute",
+    "execute_stream_host",
+    "execute_macs",
+    "mac_shard_partials",
+    "frontier_shard",
+    "apply_partials",
+    // The pre-trait per-kind shard enum and Problem variants.
+    "ShardPartials",
+    "Problem::Spmv",
+];
+
+#[test]
+fn engine_has_no_per_kind_execution_arms() {
+    for (path, src) in ENGINE_SOURCES {
+        for needle in FORBIDDEN {
+            assert!(
+                !src.contains(needle),
+                "{path} contains `{needle}`: engine code must reach work \
+                 processing only through the WorkKernel trait"
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_dispatches_through_the_kernel_trait() {
+    // The positive half: the dispatch surface exists and is the trait.
+    let batch = ENGINE_SOURCES[1].1;
+    assert!(
+        batch.contains("dyn DynKernel"),
+        "serve/batch.rs must hold problems as boxed WorkKernel trait objects"
+    );
+    let requires = |call: &str| {
+        assert!(
+            batch.contains(call),
+            "serve/batch.rs must dispatch `{call}` through the kernel trait"
+        );
+    };
+    requires("execute_stream");
+    requires("execute_assignment");
+    requires("shard_dyn");
+    requires("reduce_dyn");
+    // And the engine proper never names a workload at all.
+    let engine = ENGINE_SOURCES[0].1;
+    for kind in ["SpmvKernel", "GemmKernel", "FrontierKernel"] {
+        assert!(
+            !engine.contains(kind),
+            "serve/mod.rs mentions `{kind}`: the engine must be workload-agnostic"
+        );
+    }
+}

@@ -14,7 +14,7 @@ use std::sync::Arc;
 
 use gpulb::balance::adaptive::{proxy_cost, CANDIDATES};
 use gpulb::balance::{OffsetsSource, ScheduleKind, WorkSource};
-use gpulb::serve::{tuner, CostFeedback, Problem, SchedulePolicy, ServeConfig, ServeEngine};
+use gpulb::serve::{CostFeedback, Problem, SchedulePolicy, ServeConfig, ServeEngine};
 use gpulb::sparse::Csr;
 
 const PLAN_WORKERS: usize = 64;
@@ -87,10 +87,7 @@ fn skewed_problem() -> Problem {
 }
 
 fn problem_offsets(p: &Problem) -> Vec<usize> {
-    match p {
-        Problem::Frontier { offsets, .. } => offsets.as_ref().clone(),
-        _ => panic!("expected frontier problem"),
-    }
+    p.offsets().to_vec()
 }
 
 /// Proxy-cost argmin over the candidate set — the schedule a converged
@@ -246,7 +243,7 @@ fn cold_start_uses_shape_prior() {
     for (p, &kind) in mix.iter().zip(&report.schedules) {
         assert_eq!(
             kind,
-            tuner::cold_start_prior(p, PLAN_WORKERS),
+            p.cold_start_prior(PLAN_WORKERS),
             "cold start must use the shape prior"
         );
     }

@@ -3,7 +3,7 @@
 //! parallel execution is a pure throughput optimization — results and
 //! checksums are bit-identical to sequential execution.
 
-use gpulb::serve::{batch, pool, Problem, ServeConfig, ServeEngine};
+use gpulb::serve::{corpus_mix, pool, Problem, ServeConfig, ServeEngine};
 use gpulb::sparse::gen;
 use std::sync::Arc;
 
@@ -40,7 +40,7 @@ fn pool_handles_more_threads_than_jobs() {
 
 #[test]
 fn engine_checksums_invariant_across_thread_counts() {
-    let mix = batch::corpus_mix(0);
+    let mix = corpus_mix(0);
     assert!(mix.len() >= 10, "smoke mix too small: {}", mix.len());
     let reports: Vec<_> = [1usize, 2, 4, 8]
         .iter()
@@ -62,7 +62,7 @@ fn engine_checksums_invariant_across_thread_counts() {
 
 #[test]
 fn engine_reuses_plans_across_batches() {
-    let mix = batch::corpus_mix(0);
+    let mix = corpus_mix(0);
     let engine = ServeEngine::new(ServeConfig {
         threads: 4,
         ..ServeConfig::default()
