@@ -19,17 +19,28 @@
 use std::collections::HashMap;
 use std::sync::Mutex;
 
-use super::{Assignment, ScheduleKind};
+use super::stream::ScheduleDescriptor;
+use super::{dynamic, Assignment, OffsetsSource, ScheduleKind, WorkSource};
 
-/// The schedules an adaptive selector explores.  Binning/LRB are excluded:
-/// their reordering changes plan shape radically per matrix and the four
-/// below already span the static/exact × flat/hierarchical design space
-/// the dissertation evaluates head-to-head.
-pub const CANDIDATES: [ScheduleKind; 4] = [
+/// The default schedules an adaptive selector explores: the four planned
+/// schedules spanning the static/exact × flat/hierarchical design space
+/// the dissertation evaluates head-to-head, plus the two dynamic claiming
+/// policies of §3.3.5 so the tuner can *discover* when runtime balancing
+/// beats any up-front plan.  Binning/LRB are excluded: their reordering
+/// changes plan shape radically per matrix.  The planned kinds come first
+/// so warmup measures them before the dynamic ones (and ties in
+/// [`best_of`] keep the earlier, planned entry).
+pub const CANDIDATES: [ScheduleKind; 6] = [
     ScheduleKind::ThreadMapped,
     ScheduleKind::GroupMapped(32),
     ScheduleKind::MergePath,
     ScheduleKind::NonzeroSplit,
+    ScheduleKind::WorkStealing {
+        chunk: dynamic::DEFAULT_CHUNK,
+    },
+    ScheduleKind::ChunkedFetch {
+        chunk: dynamic::DEFAULT_CHUNK,
+    },
 ];
 
 /// Everything a measured cost depends on (mirrors
@@ -107,23 +118,38 @@ impl PerfHistory {
         self.get(key).map(|e| e.samples).unwrap_or(0)
     }
 
-    /// One estimate per [`CANDIDATES`] entry for a (fingerprint, workers)
-    /// pair — the selector's working set, fetched in a single pass.
-    pub fn snapshot(&self, fingerprint: u64, workers: usize) -> CandidateSnapshot {
-        CANDIDATES.map(|kind| {
-            let key = PerfKey {
-                fingerprint,
-                schedule: kind,
-                workers,
-            };
-            (kind, self.get(&key))
-        })
+    /// One estimate per candidate for a (fingerprint, workers) pair — the
+    /// selector's working set, fetched in a single pass.  The candidate
+    /// set is the caller's (a tuner's configured set, or [`CANDIDATES`]).
+    pub fn snapshot(
+        &self,
+        candidates: &[ScheduleKind],
+        fingerprint: u64,
+        workers: usize,
+    ) -> CandidateSnapshot {
+        candidates
+            .iter()
+            .map(|&kind| {
+                let key = PerfKey {
+                    fingerprint,
+                    schedule: kind,
+                    workers,
+                };
+                (kind, self.get(&key))
+            })
+            .collect()
     }
 
     /// The candidate with the lowest EWMA cost among those with at least
-    /// `min_samples` samples (ties keep the earlier [`CANDIDATES`] entry).
-    pub fn best(&self, fingerprint: u64, workers: usize, min_samples: u32) -> Option<ScheduleKind> {
-        best_of(&self.snapshot(fingerprint, workers), min_samples)
+    /// `min_samples` samples (ties keep the earlier candidate entry).
+    pub fn best(
+        &self,
+        candidates: &[ScheduleKind],
+        fingerprint: u64,
+        workers: usize,
+        min_samples: u32,
+    ) -> Option<ScheduleKind> {
+        best_of(&self.snapshot(candidates, fingerprint, workers), min_samples)
     }
 
     /// Total keys tracked across all stripes.
@@ -136,8 +162,8 @@ impl PerfHistory {
     }
 }
 
-/// One [`CostEstimate`] (or none) per [`CANDIDATES`] entry, in order.
-pub type CandidateSnapshot = [(ScheduleKind, Option<CostEstimate>); 4];
+/// One [`CostEstimate`] (or none) per candidate, in candidate order.
+pub type CandidateSnapshot = Vec<(ScheduleKind, Option<CostEstimate>)>;
 
 /// EWMA argmin over a snapshot, considering only candidates with at least
 /// `min_samples` samples (ties keep the earlier entry).
@@ -181,6 +207,8 @@ fn schedule_tag(kind: ScheduleKind) -> u64 {
         ScheduleKind::NonzeroSplit => 3,
         ScheduleKind::Binning => 4,
         ScheduleKind::Lrb => 5,
+        ScheduleKind::WorkStealing { chunk } => 0x200 | chunk as u64,
+        ScheduleKind::ChunkedFetch { chunk } => 0x400 | chunk as u64,
     }
 }
 
@@ -236,7 +264,10 @@ pub fn proxy_cost_stream(
 }
 
 /// Per-schedule setup charge mirroring each schedule's search cost (see
-/// [`proxy_cost`]).
+/// [`proxy_cost`]).  Dynamic kinds never route through here in practice —
+/// their model is [`dynamic::proxy_cost_dynamic`], reached via
+/// [`proxy_cost_for`] — but the arms keep the charge consistent if a
+/// caller meters their canonical snapshot directly.
 fn setup_cost(kind: ScheduleKind, tiles: usize, atoms: usize) -> f64 {
     match kind {
         ScheduleKind::ThreadMapped => 0.0,
@@ -244,6 +275,27 @@ fn setup_cost(kind: ScheduleKind, tiles: usize, atoms: usize) -> f64 {
         ScheduleKind::MergePath => 2.0 * ((tiles + atoms) as f64 + 1.0).log2(),
         ScheduleKind::NonzeroSplit => (tiles as f64 + 1.0).log2(),
         ScheduleKind::Binning | ScheduleKind::Lrb => 8.0 + (tiles as f64 + 1.0).log2(),
+        ScheduleKind::WorkStealing { .. } => dynamic::STEAL_SETUP,
+        ScheduleKind::ChunkedFetch { .. } => dynamic::FETCH_SETUP,
+    }
+}
+
+/// Deterministic proxy cost of `kind` over a tile set at `workers` plan
+/// workers, routed per schedule family: streaming planned kinds through
+/// the allocation-free stream proxy, Binning/LRB through the materialized
+/// proxy, and dynamic kinds through the greedy claiming model
+/// ([`dynamic::proxy_cost_dynamic`]).  One entry point for "what would
+/// this schedule cost here", used by the selector tests and anything
+/// comparing planned against dynamic.
+pub fn proxy_cost_for(kind: ScheduleKind, offsets: &[usize], workers: usize) -> f64 {
+    let src = OffsetsSource::new(offsets);
+    let (tiles, atoms) = (src.num_tiles(), src.num_atoms());
+    if let Some(dd) = dynamic::DynamicDescriptor::new(kind, &src, workers) {
+        return dynamic::proxy_cost_dynamic(&dd, offsets);
+    }
+    match ScheduleDescriptor::new(kind, &src, workers) {
+        Some(desc) => proxy_cost_stream(&desc, offsets, tiles, atoms),
+        None => proxy_cost(kind, &kind.assign(&src, workers), tiles, atoms),
     }
 }
 
@@ -292,11 +344,11 @@ mod tests {
             h.record(key(7, kind), cost);
             h.record(key(7, kind), cost);
         }
-        assert_eq!(h.best(7, 8, 2), Some(ScheduleKind::MergePath));
+        assert_eq!(h.best(&CANDIDATES, 7, 8, 2), Some(ScheduleKind::MergePath));
         // min_samples above what we recorded: nothing qualifies.
-        assert_eq!(h.best(7, 8, 3), None);
+        assert_eq!(h.best(&CANDIDATES, 7, 8, 3), None);
         // Unknown fingerprint: no estimate at all.
-        assert_eq!(h.best(8, 8, 1), None);
+        assert_eq!(h.best(&CANDIDATES, 8, 8, 1), None);
     }
 
     #[test]
@@ -304,20 +356,20 @@ mod tests {
         let h = PerfHistory::new(4, 1.0);
         // Nothing sampled: first candidate.
         assert_eq!(
-            least_sampled_of(&h.snapshot(3, 8), 2),
+            least_sampled_of(&h.snapshot(&CANDIDATES, 3, 8), 2),
             Some(ScheduleKind::ThreadMapped)
         );
         h.record(key(3, ScheduleKind::ThreadMapped), 5.0);
         h.record(key(3, ScheduleKind::ThreadMapped), 5.0);
         assert_eq!(
-            least_sampled_of(&h.snapshot(3, 8), 2),
+            least_sampled_of(&h.snapshot(&CANDIDATES, 3, 8), 2),
             Some(ScheduleKind::GroupMapped(32))
         );
         for &kind in &CANDIDATES {
             h.record(key(3, kind), 5.0);
             h.record(key(3, kind), 5.0);
         }
-        assert_eq!(least_sampled_of(&h.snapshot(3, 8), 2), None);
+        assert_eq!(least_sampled_of(&h.snapshot(&CANDIDATES, 3, 8), 2), None);
     }
 
     #[test]
@@ -336,15 +388,11 @@ mod tests {
     #[test]
     fn proxy_cost_prefers_thread_mapped_on_uniform_tiny_tiles() {
         // 256 tiles x 1 atom, 64 workers: no setup + short serial chains
-        // beat every searched schedule.
+        // beat every searched schedule and every claim-paying dynamic one.
         let offsets: Vec<usize> = (0..=256).collect();
-        let src = OffsetsSource::new(&offsets);
         let costs: Vec<(ScheduleKind, f64)> = CANDIDATES
             .iter()
-            .map(|&k| {
-                let asg = k.assign(&src, 64);
-                (k, proxy_cost(k, &asg, src.num_tiles(), src.num_atoms()))
-            })
+            .map(|&k| (k, proxy_cost_for(k, &offsets, 64)))
             .collect();
         let best = costs
             .iter()
@@ -357,17 +405,14 @@ mod tests {
     #[test]
     fn proxy_cost_prefers_merge_path_on_mixed_skew() {
         // A few huge tiles next to thousands of tiny ones: merge-path's
-        // row+atom split is the only schedule balancing both regions.
+        // row+atom split is the only schedule balancing both regions —
+        // dynamic claiming cannot split the huge tiles.
         let mut lens = vec![4096usize; 4];
         lens.resize(4 + 4096, 1);
         let offsets = crate::balance::prefix::exclusive(&lens);
-        let src = OffsetsSource::new(&offsets);
         let costs: Vec<(ScheduleKind, f64)> = CANDIDATES
             .iter()
-            .map(|&k| {
-                let asg = k.assign(&src, 64);
-                (k, proxy_cost(k, &asg, src.num_tiles(), src.num_atoms()))
-            })
+            .map(|&k| (k, proxy_cost_for(k, &offsets, 64)))
             .collect();
         let best = costs
             .iter()
@@ -381,6 +426,8 @@ mod tests {
     fn stream_proxy_matches_materialized() {
         // The landscape gate's metric must not move when planning goes
         // lazy: the stream proxy is bit-equal to the materialized one.
+        // (Planned streaming kinds only: dynamic kinds are metered by the
+        // greedy claiming model, not a materialized assignment.)
         use crate::balance::stream::ScheduleDescriptor;
         let cases: Vec<Vec<usize>> = vec![
             vec![0],
@@ -394,7 +441,7 @@ mod tests {
         ];
         for offsets in &cases {
             let src = OffsetsSource::new(offsets);
-            for &kind in &CANDIDATES {
+            for &kind in CANDIDATES.iter().filter(|k| !k.is_dynamic()) {
                 for workers in [1usize, 8, 64, 300] {
                     let desc = ScheduleDescriptor::new(kind, &src, workers).unwrap();
                     let asg = kind.assign(&src, workers);
@@ -404,6 +451,18 @@ mod tests {
                     assert_eq!(a.to_bits(), b.to_bits(), "{kind:?} x{workers}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn proxy_cost_for_routes_every_candidate() {
+        let lens: Vec<usize> = (0..512).map(|r| 1 + r % 7).collect();
+        let offsets = crate::balance::prefix::exclusive(&lens);
+        for &kind in CANDIDATES.iter().chain(&[ScheduleKind::Binning]) {
+            let a = proxy_cost_for(kind, &offsets, 64);
+            let b = proxy_cost_for(kind, &offsets, 64);
+            assert_eq!(a.to_bits(), b.to_bits(), "{kind:?} not deterministic");
+            assert!(a > 0.0, "{kind:?}: {a}");
         }
     }
 

@@ -1,0 +1,484 @@
+//! Dynamic schedules for real (§3.3.5): runtime chunk claiming on host
+//! threads, promoted from the virtual-time simulation in [`super::queue`].
+//!
+//! A dynamic schedule does not compute a per-worker plan up front.  The
+//! tile set is cut into a **canonical chunk decomposition** — chunk `j`
+//! owns the whole tiles `[j·chunk, (j+1)·chunk)` — and workers *claim*
+//! chunks at execution time:
+//!
+//! * [`ScheduleKind::WorkStealing`] — chunks are seeded round-robin into
+//!   per-worker deques; a worker pops its own deque from the front and,
+//!   when empty, steals from the back of the richest victim (Tzeng et
+//!   al., the discipline [`super::queue::QueuePolicy::Stealing`]
+//!   simulates).
+//! * [`ScheduleKind::ChunkedFetch`] — one shared `AtomicUsize` cursor;
+//!   each claim is a single `fetch_add` taking one whole chunk, the
+//!   Atos-style amortization of [`super::queue::QueuePolicy::ChunkedFetch`].
+//!
+//! Claim order is nondeterministic, but the *decomposition* is not: every
+//! chunk processes its tiles whole and in order, and partial results are
+//! segment-keyed ([`super::SegmentKey`]) so the reduction orders them
+//! canonically no matter who claimed what.  That is why dynamic execution
+//! is bit-identical to planned execution of the same tile set (pinned by
+//! `tests/dynamic_schedules.rs`).
+//!
+//! The chunk decomposition viewed as a static plan is exactly a
+//! group-mapped descriptor with `per_group = chunk` at warp granularity
+//! ([`DynamicDescriptor::chunk_view`]), so kernels process a claimed chunk
+//! through the ordinary `shard(desc, j, j+1)` entry point — no new kernel
+//! surface.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::thread;
+
+use super::adaptive::SEG_OVERHEAD;
+use super::stream::{self, ScheduleDescriptor};
+use super::{Assignment, ScheduleKind, WorkSource};
+
+/// Default chunk size (tiles per claim) for the dynamic kinds: small
+/// enough that skewed tile sets spread across the pool, large enough to
+/// amortize the claim.
+pub const DEFAULT_CHUNK: u32 = 8;
+
+/// Proxy-model claim charge per chunk: one amortized atomic fetch.
+pub const CLAIM_FETCH_STEPS: u64 = 1;
+/// Proxy-model claim charge per chunk under stealing: deque traffic plus
+/// the occasional victim scan.
+pub const CLAIM_STEAL_STEPS: u64 = 2;
+/// Proxy-model setup charge: shared-cursor initialization.
+pub const FETCH_SETUP: f64 = 4.0;
+/// Proxy-model setup charge: deque seeding and steal bookkeeping.
+pub const STEAL_SETUP: f64 = 6.0;
+
+/// O(1) description of a dynamic schedule over one tile set: everything a
+/// claimant needs (the canonical chunk decomposition) plus the pool
+/// parallelism the plan targets (what the cost model balances against).
+/// This is the plan-cache entry for dynamic kinds — nothing to
+/// materialize.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DynamicDescriptor {
+    /// The dynamic [`ScheduleKind`] this describes.
+    pub kind: ScheduleKind,
+    /// Tiles in the tile set.
+    pub tiles: usize,
+    /// Tiles per claim.
+    pub chunk: u32,
+    /// Workers the plan targets (the simulated device parallelism used by
+    /// the proxy cost model; real execution claims with however many host
+    /// threads show up).
+    pub pool: u32,
+}
+
+impl DynamicDescriptor {
+    /// Descriptor for a dynamic `kind` over `src` targeting `pool`
+    /// workers; `None` when `kind` is a planned schedule.
+    pub fn new(kind: ScheduleKind, src: &impl WorkSource, pool: usize) -> Option<Self> {
+        let chunk = match kind {
+            ScheduleKind::WorkStealing { chunk } | ScheduleKind::ChunkedFetch { chunk } => {
+                chunk.max(1)
+            }
+            _ => return None,
+        };
+        Some(DynamicDescriptor {
+            kind,
+            tiles: src.num_tiles(),
+            chunk,
+            pool: pool.clamp(1, u32::MAX as usize) as u32,
+        })
+    }
+
+    /// Number of claimable chunks in the canonical decomposition.
+    pub fn chunks(&self) -> usize {
+        self.tiles.div_ceil(self.chunk as usize)
+    }
+
+    /// The decomposition as a static streaming descriptor: "worker" `w`
+    /// is chunk `w` (whole tiles `[w·chunk, (w+1)·chunk)`, warp
+    /// granularity).  Kernels execute a claimed chunk as
+    /// `shard(chunk_view, j, j+1)`, and sequential execution walks the
+    /// view in canonical chunk order.
+    pub fn chunk_view(&self) -> ScheduleDescriptor {
+        ScheduleDescriptor::GroupMapped {
+            tiles: self.tiles,
+            per_group: self.chunk as usize,
+            group: 32,
+        }
+    }
+
+    /// The canonical claim-order snapshot as a materialized [`Assignment`]
+    /// (one worker per chunk), labeled with the dynamic schedule's name.
+    pub fn assign_snapshot(&self, src: &impl WorkSource) -> Assignment {
+        let mut asg = stream::materialize(self.chunk_view(), src);
+        asg.schedule = self.kind.name();
+        asg
+    }
+}
+
+/// Deterministic makespan proxy for dynamic execution, in the same
+/// abstract step units as [`super::adaptive::proxy_cost`].
+///
+/// Chunks are list-scheduled in canonical order onto the least-loaded of
+/// `pool` virtual workers (ties keep the lowest worker index) — the
+/// deterministic stand-in for runtime claiming, which approximates greedy
+/// list scheduling in expectation.  Each chunk costs its claim charge plus
+/// `SEG_OVERHEAD + ceil(len / 32)` per tile (chunks are processed
+/// warp-cooperatively, the lane parallelism group-mapped models); the
+/// makespan is the slowest virtual worker plus the policy's setup charge.
+///
+/// Like the planned proxies, the value depends only on
+/// (offsets, schedule, pool) — never on the host — so the tuner's
+/// convergence and the landscape gate stay bit-deterministic.
+pub fn proxy_cost_dynamic(dd: &DynamicDescriptor, offsets: &[usize]) -> f64 {
+    debug_assert_eq!(offsets.len(), dd.tiles + 1);
+    let g = 32u64;
+    let chunk = dd.chunk as usize;
+    let chunks = dd.chunks();
+    let pool = (dd.pool as usize).max(1).min(chunks.max(1));
+    let (claim, setup) = match dd.kind {
+        ScheduleKind::WorkStealing { .. } => (CLAIM_STEAL_STEPS, STEAL_SETUP),
+        _ => (CLAIM_FETCH_STEPS, FETCH_SETUP),
+    };
+    let mut loads = vec![0u64; pool];
+    for j in 0..chunks {
+        let t0 = j * chunk;
+        let t1 = (t0 + chunk).min(dd.tiles);
+        let mut steps = claim;
+        for t in t0..t1 {
+            let len = (offsets[t + 1] - offsets[t]) as u64;
+            steps += SEG_OVERHEAD + len.div_ceil(g);
+        }
+        let w = (0..pool)
+            .min_by_key(|&w| loads[w])
+            .expect("at least one virtual worker");
+        loads[w] += steps;
+    }
+    setup + loads.iter().copied().max().unwrap_or(0) as f64
+}
+
+/// Claim counters from one real dynamic execution.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DynamicStats {
+    /// Chunks claimed (== the decomposition's chunk count on success).
+    pub claims: u64,
+    /// Claims served by stealing from another worker's deque.
+    pub steals: u64,
+    /// Claims served by the shared atomic cursor.
+    pub fetches: u64,
+}
+
+/// Execute `chunks` chunk jobs over `threads` real workers under the
+/// descriptor's claiming policy; `process(j)` handles chunk `j`.  Results
+/// come back in canonical chunk order.  `threads` is clamped to
+/// `[1, chunks]`; one worker runs inline on the caller's thread.
+pub fn execute_claimed<T, F>(
+    dd: &DynamicDescriptor,
+    threads: usize,
+    process: F,
+) -> (Vec<T>, DynamicStats)
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    match dd.kind {
+        ScheduleKind::WorkStealing { .. } => execute_stealing(threads, dd.chunks(), process),
+        _ => execute_fetch(threads, dd.chunks(), process),
+    }
+}
+
+/// Chunked atomic fetch: every worker claims the next chunk index from one
+/// shared `AtomicUsize` cursor — one synchronized fetch per chunk.
+pub fn execute_fetch<T, F>(threads: usize, chunks: usize, process: F) -> (Vec<T>, DynamicStats)
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(chunks.max(1));
+    if threads == 1 {
+        let results = (0..chunks).map(&process).collect();
+        let stats = DynamicStats {
+            claims: chunks as u64,
+            steals: 0,
+            fetches: chunks as u64,
+        };
+        return (results, stats);
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let mut slots: Vec<Option<T>> = Vec::with_capacity(chunks);
+    slots.resize_with(chunks, || None);
+    thread::scope(|scope| {
+        let cursor = &cursor;
+        let process = &process;
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(move || {
+                    let mut done: Vec<(usize, T)> = Vec::new();
+                    loop {
+                        let j = cursor.fetch_add(1, Ordering::Relaxed);
+                        if j >= chunks {
+                            break;
+                        }
+                        done.push((j, process(j)));
+                    }
+                    done
+                })
+            })
+            .collect();
+        for handle in handles {
+            for (j, value) in handle.join().expect("fetch worker panicked") {
+                slots[j] = Some(value);
+            }
+        }
+    });
+    let results = slots
+        .into_iter()
+        .map(|slot| slot.expect("chunk left unclaimed"))
+        .collect();
+    let stats = DynamicStats {
+        claims: chunks as u64,
+        steals: 0,
+        fetches: chunks as u64,
+    };
+    (results, stats)
+}
+
+/// Work-stealing claim: chunk indices seeded round-robin into per-worker
+/// deques; pop-own-front, steal-from-richest-back when empty — the same
+/// discipline [`crate::serve::pool`] applies to whole batch jobs, here at
+/// intra-problem chunk granularity.  Length mirrors are decremented only
+/// after a removal, so all-zero lengths prove termination.
+///
+/// NOTE: this worker loop (and the `pop_own`/`steal` helpers below)
+/// deliberately mirrors `serve/pool.rs::run_pool` — `balance` cannot
+/// depend on `serve`, so the discipline is duplicated.  A change to
+/// either copy's termination or ordering protocol must be applied to
+/// both.
+pub fn execute_stealing<T, F>(threads: usize, chunks: usize, process: F) -> (Vec<T>, DynamicStats)
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(chunks.max(1));
+    if threads == 1 {
+        let results = (0..chunks).map(&process).collect();
+        let stats = DynamicStats {
+            claims: chunks as u64,
+            steals: 0,
+            fetches: 0,
+        };
+        return (results, stats);
+    }
+
+    let mut seeds: Vec<VecDeque<usize>> = (0..threads).map(|_| VecDeque::new()).collect();
+    for j in 0..chunks {
+        seeds[j % threads].push_back(j);
+    }
+    let lens: Vec<AtomicUsize> = seeds.iter().map(|q| AtomicUsize::new(q.len())).collect();
+    let deques: Vec<Mutex<VecDeque<usize>>> = seeds.into_iter().map(Mutex::new).collect();
+    let steals = AtomicU64::new(0);
+
+    let mut slots: Vec<Option<T>> = Vec::with_capacity(chunks);
+    slots.resize_with(chunks, || None);
+    thread::scope(|scope| {
+        let deques = &deques;
+        let lens = &lens;
+        let steals = &steals;
+        let process = &process;
+        let handles: Vec<_> = (0..threads)
+            .map(|w| {
+                scope.spawn(move || {
+                    let mut done: Vec<(usize, T)> = Vec::new();
+                    let mut my_steals = 0u64;
+                    loop {
+                        if let Some(j) = pop_own(deques, lens, w) {
+                            done.push((j, process(j)));
+                        } else if let Some(j) = steal(deques, lens, w) {
+                            my_steals += 1;
+                            done.push((j, process(j)));
+                        } else if lens.iter().all(|l| l.load(Ordering::Acquire) == 0) {
+                            break;
+                        } else {
+                            thread::yield_now();
+                        }
+                    }
+                    steals.fetch_add(my_steals, Ordering::Relaxed);
+                    done
+                })
+            })
+            .collect();
+        for handle in handles {
+            for (j, value) in handle.join().expect("stealing worker panicked") {
+                slots[j] = Some(value);
+            }
+        }
+    });
+    let results = slots
+        .into_iter()
+        .map(|slot| slot.expect("chunk left unclaimed"))
+        .collect();
+    let stats = DynamicStats {
+        claims: chunks as u64,
+        steals: steals.load(Ordering::Relaxed),
+        fetches: 0,
+    };
+    (results, stats)
+}
+
+fn pop_own(deques: &[Mutex<VecDeque<usize>>], lens: &[AtomicUsize], w: usize) -> Option<usize> {
+    if lens[w].load(Ordering::Acquire) == 0 {
+        return None;
+    }
+    let mut deque = deques[w].lock().unwrap();
+    let job = deque.pop_front();
+    if job.is_some() {
+        lens[w].fetch_sub(1, Ordering::Release);
+    }
+    job
+}
+
+fn steal(deques: &[Mutex<VecDeque<usize>>], lens: &[AtomicUsize], w: usize) -> Option<usize> {
+    loop {
+        let victim = (0..deques.len())
+            .filter(|&v| v != w)
+            .map(|v| (v, lens[v].load(Ordering::Acquire)))
+            .filter(|&(_, len)| len > 0)
+            .max_by_key(|&(_, len)| len);
+        let (v, _) = victim?;
+        let mut deque = deques[v].lock().unwrap();
+        if let Some(job) = deque.pop_back() {
+            lens[v].fetch_sub(1, Ordering::Release);
+            return Some(job);
+        }
+        drop(deque);
+        thread::yield_now();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balance::OffsetsSource;
+
+    fn desc(kind: ScheduleKind, offsets: &[usize], pool: usize) -> DynamicDescriptor {
+        DynamicDescriptor::new(kind, &OffsetsSource::new(offsets), pool).unwrap()
+    }
+
+    const WS: ScheduleKind = ScheduleKind::WorkStealing { chunk: 4 };
+    const CF: ScheduleKind = ScheduleKind::ChunkedFetch { chunk: 4 };
+
+    #[test]
+    fn planned_kinds_have_no_dynamic_descriptor() {
+        let offs = vec![0usize, 3, 7];
+        let src = OffsetsSource::new(&offs);
+        for kind in [
+            ScheduleKind::ThreadMapped,
+            ScheduleKind::MergePath,
+            ScheduleKind::Binning,
+        ] {
+            assert!(DynamicDescriptor::new(kind, &src, 8).is_none(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn chunk_decomposition_covers_exactly() {
+        let offsets: Vec<usize> = vec![0, 2, 2, 9, 9, 14, 15, 20];
+        let src = OffsetsSource::new(&offsets);
+        for kind in [WS, CF] {
+            let dd = desc(kind, &offsets, 8);
+            assert_eq!(dd.chunks(), 2);
+            let asg = dd.assign_snapshot(&src);
+            assert_eq!(asg.schedule, kind.name());
+            assert_eq!(asg.workers.len(), dd.chunks());
+            asg.validate(&src).unwrap();
+            // Whole tiles only: dynamic claiming never splits a tile.
+            for w in &asg.workers {
+                for s in &w.segments {
+                    let t = s.tile as usize;
+                    assert_eq!((s.atom_begin, s.atom_end), (offsets[t], offsets[t + 1]));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_tile_set_has_zero_chunks() {
+        let offsets = vec![0usize];
+        let dd = desc(CF, &offsets, 4);
+        assert_eq!(dd.chunks(), 0);
+        let (results, stats) = execute_fetch(4, dd.chunks(), |j| j);
+        assert!(results.is_empty());
+        assert_eq!(stats.claims, 0);
+    }
+
+    #[test]
+    fn executors_return_chunk_order_results() {
+        for threads in [1usize, 2, 4, 8] {
+            let (fetched, fs) = execute_fetch(threads, 100, |j| j * 3);
+            assert_eq!(fetched, (0..100).map(|j| j * 3).collect::<Vec<_>>());
+            assert_eq!((fs.claims, fs.fetches), (100, 100));
+            let (stolen, ss) = execute_stealing(threads, 100, |j| j * 3);
+            assert_eq!(stolen, fetched);
+            assert_eq!(ss.claims, 100);
+            assert_eq!(ss.fetches, 0);
+        }
+    }
+
+    #[test]
+    fn stealing_rebalances_a_skewed_seed() {
+        // Chunk 0 is enormously heavier than the rest; with round-robin
+        // seeding its owner is pinned on it while the other workers drain
+        // their deques and must steal its remaining chunks.
+        let (results, stats) = execute_stealing(4, 64, |j| {
+            if j == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+            j
+        });
+        assert_eq!(results.len(), 64);
+        assert_eq!(stats.claims, 64);
+        assert!(stats.steals > 0, "steals={}", stats.steals);
+    }
+
+    #[test]
+    fn proxy_is_deterministic_and_policy_separated() {
+        let lens: Vec<usize> = (0..256).map(|r| if r % 16 == 0 { 64 } else { 4 }).collect();
+        let offsets = crate::balance::prefix::exclusive(&lens);
+        let ws = proxy_cost_dynamic(&desc(WS, &offsets, 32), &offsets);
+        let cf = proxy_cost_dynamic(&desc(CF, &offsets, 32), &offsets);
+        assert_eq!(
+            ws.to_bits(),
+            proxy_cost_dynamic(&desc(WS, &offsets, 32), &offsets).to_bits()
+        );
+        // Same balance, different claim/setup charges: stealing costs more.
+        assert!(ws > cf, "ws={ws} cf={cf}");
+        assert!(cf > 0.0);
+    }
+
+    #[test]
+    fn proxy_balances_what_contiguous_shares_cannot() {
+        // A contiguous hot block: group-mapped's contiguous shares stack
+        // the hot tiles on few workers, dynamic claiming spreads them.
+        let n = 1024;
+        let lens: Vec<usize> = (0..n).map(|r| if r < 16 { 512 } else { 16 }).collect();
+        let offsets = crate::balance::prefix::exclusive(&lens);
+        let src = OffsetsSource::new(&offsets);
+        let pool = 64;
+        let dyn_cost = proxy_cost_dynamic(
+            &desc(ScheduleKind::ChunkedFetch { chunk: 8 }, &offsets, pool),
+            &offsets,
+        );
+        let gm = ScheduleKind::GroupMapped(32);
+        let gm_cost = super::super::adaptive::proxy_cost(
+            gm,
+            &gm.assign(&src, pool),
+            src.num_tiles(),
+            src.num_atoms(),
+        );
+        assert!(
+            dyn_cost < gm_cost,
+            "dynamic {dyn_cost} must beat group-mapped {gm_cost} on a hot block"
+        );
+    }
+}

@@ -18,6 +18,7 @@
 
 pub mod adaptive;
 pub mod binning;
+pub mod dynamic;
 pub mod group_mapped;
 pub mod heuristic;
 pub mod merge_path;
@@ -139,6 +140,25 @@ impl Segment {
     pub fn is_empty(&self) -> bool {
         self.atom_end == self.atom_begin
     }
+    /// The segment's canonical key (see [`SegmentKey`]).
+    pub fn key(&self) -> SegmentKey {
+        SegmentKey {
+            tile: self.tile,
+            atom_begin: self.atom_begin,
+        }
+    }
+}
+
+/// Canonical segment identity: `(tile, atom_begin)`.  Segments of one plan
+/// are disjoint, so the key is unique within a plan and the derived `Ord`
+/// (tile first, then atom range) is a total order — the *canonical segment
+/// order* partial results reduce in, regardless of which worker produced
+/// them or when.  This is what makes dynamically-claimed execution
+/// bit-identical to planned execution (see [`crate::exec::kernel`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SegmentKey {
+    pub tile: u32,
+    pub atom_begin: usize,
 }
 
 /// Everything one worker processes.
@@ -207,6 +227,11 @@ impl Assignment {
 }
 
 /// The schedules available in the framework (the paper's library).
+///
+/// Two families: **planned** schedules compute their whole worker
+/// assignment up front (the first six), **dynamic** schedules
+/// ([`ScheduleKind::WorkStealing`], [`ScheduleKind::ChunkedFetch`]) claim
+/// canonical tile chunks at execution time (§3.3.5; see [`dynamic`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ScheduleKind {
     /// §3.3.1 / §4.3.2 — tile per thread, atoms serialized.
@@ -221,6 +246,12 @@ pub enum ScheduleKind {
     Binning,
     /// §3.3.4 — Logarithmic Radix Binning reorder.
     Lrb,
+    /// §3.3.5 — workers claim `chunk`-tile runs at execution time from
+    /// per-worker deques with steal-from-richest (Tzeng et al.).
+    WorkStealing { chunk: u32 },
+    /// §3.3.5 — workers claim `chunk`-tile runs at execution time from a
+    /// shared atomic cursor, one fetch per chunk (Atos-style amortization).
+    ChunkedFetch { chunk: u32 },
 }
 
 impl ScheduleKind {
@@ -233,10 +264,59 @@ impl ScheduleKind {
             ScheduleKind::NonzeroSplit => "nonzero-split",
             ScheduleKind::Binning => "binning",
             ScheduleKind::Lrb => "lrb",
+            ScheduleKind::WorkStealing { .. } => "work-stealing",
+            ScheduleKind::ChunkedFetch { .. } => "chunked-fetch",
         }
     }
 
+    /// Parse a schedule from its canonical [`ScheduleKind::name`] or the
+    /// CLI short alias, with optional `:N` parameters for the group size
+    /// (`group-mapped:64`) and the dynamic chunk (`work-stealing:16`).
+    /// `parse(k.name())` round-trips to a kind with the same name for
+    /// every kind (parameterless names resolve to the default parameter:
+    /// `group-mapped` → 128, the block size; dynamic kinds →
+    /// [`dynamic::DEFAULT_CHUNK`]).
+    pub fn parse(s: &str) -> Option<ScheduleKind> {
+        let (stem, param) = match s.split_once(':') {
+            Some((stem, p)) => (stem, Some(p.parse::<u32>().ok()?)),
+            None => (s, None),
+        };
+        let fixed = |kind: ScheduleKind| match param {
+            // A parameter on a parameterless schedule is malformed.
+            Some(_) => None,
+            None => Some(kind),
+        };
+        match stem {
+            "thread" | "thread-mapped" => fixed(ScheduleKind::ThreadMapped),
+            "warp" | "warp-mapped" => fixed(ScheduleKind::GroupMapped(32)),
+            "block" => fixed(ScheduleKind::GroupMapped(128)),
+            "group-mapped" => Some(ScheduleKind::GroupMapped(param.unwrap_or(128).max(1))),
+            "merge" | "merge-path" => fixed(ScheduleKind::MergePath),
+            "nzsplit" | "nonzero-split" => fixed(ScheduleKind::NonzeroSplit),
+            "binning" => fixed(ScheduleKind::Binning),
+            "lrb" => fixed(ScheduleKind::Lrb),
+            "work-stealing" | "stealing" => Some(ScheduleKind::WorkStealing {
+                chunk: param.unwrap_or(dynamic::DEFAULT_CHUNK).max(1),
+            }),
+            "chunked-fetch" | "fetch" => Some(ScheduleKind::ChunkedFetch {
+                chunk: param.unwrap_or(dynamic::DEFAULT_CHUNK).max(1),
+            }),
+            _ => None,
+        }
+    }
+
+    /// Whether this schedule assigns work at execution time (§3.3.5)
+    /// rather than computing an up-front plan.
+    pub fn is_dynamic(self) -> bool {
+        matches!(self, ScheduleKind::WorkStealing { .. } | ScheduleKind::ChunkedFetch { .. })
+    }
+
     /// Build the assignment for `workers` parallel workers.
+    ///
+    /// For dynamic kinds this is the *canonical claim-order snapshot* (one
+    /// worker per chunk, in chunk order): runtime claiming assigns the
+    /// same chunks to nondeterministic claimants, so the snapshot is what
+    /// validation and sequential execution see.
     pub fn assign(self, src: &impl WorkSource, workers: usize) -> Assignment {
         match self {
             ScheduleKind::ThreadMapped => thread_mapped::assign(src, workers),
@@ -245,12 +325,19 @@ impl ScheduleKind {
             ScheduleKind::NonzeroSplit => nonzero_split::assign(src, workers),
             ScheduleKind::Binning => binning::assign(src, workers),
             ScheduleKind::Lrb => binning::assign_lrb(src, workers),
+            ScheduleKind::WorkStealing { .. } | ScheduleKind::ChunkedFetch { .. } => {
+                dynamic::DynamicDescriptor::new(self, src, workers)
+                    .expect("dynamic kind has a dynamic descriptor")
+                    .assign_snapshot(src)
+            }
         }
     }
 
     /// O(1) streaming descriptor of this schedule's plan, when the
-    /// schedule is streaming-capable (everything but Binning/LRB — see
-    /// [`stream::ScheduleDescriptor::new`]).
+    /// schedule is a streaming-capable *planned* schedule (everything but
+    /// Binning/LRB and the dynamic kinds — see
+    /// [`stream::ScheduleDescriptor::new`]; dynamic kinds are described by
+    /// [`dynamic::DynamicDescriptor`] instead).
     pub fn descriptor(
         self,
         src: &impl WorkSource,
@@ -320,6 +407,113 @@ mod tests {
             }],
         };
         assert!(a.validate(&src).is_err());
+    }
+
+    #[test]
+    fn name_parse_round_trips_every_kind() {
+        // `parse(name())` must land on a kind with the same name, for all
+        // kinds — including the GroupMapped(32) -> "warp-mapped" alias and
+        // the dynamic kinds.
+        let kinds = [
+            ScheduleKind::ThreadMapped,
+            ScheduleKind::GroupMapped(32),
+            ScheduleKind::GroupMapped(64),
+            ScheduleKind::GroupMapped(128),
+            ScheduleKind::MergePath,
+            ScheduleKind::NonzeroSplit,
+            ScheduleKind::Binning,
+            ScheduleKind::Lrb,
+            ScheduleKind::WorkStealing { chunk: 8 },
+            ScheduleKind::ChunkedFetch { chunk: 32 },
+        ];
+        for kind in kinds {
+            let parsed = ScheduleKind::parse(kind.name())
+                .unwrap_or_else(|| panic!("{:?}: name {} must parse", kind, kind.name()));
+            assert_eq!(parsed.name(), kind.name(), "{kind:?} round trip");
+        }
+        // The warp alias is exact, not just name-preserving.
+        assert_eq!(
+            ScheduleKind::parse("warp-mapped"),
+            Some(ScheduleKind::GroupMapped(32))
+        );
+        // Parameterized forms round-trip the parameter.
+        assert_eq!(
+            ScheduleKind::parse("group-mapped:64"),
+            Some(ScheduleKind::GroupMapped(64))
+        );
+        assert_eq!(
+            ScheduleKind::parse("work-stealing:16"),
+            Some(ScheduleKind::WorkStealing { chunk: 16 })
+        );
+        assert_eq!(
+            ScheduleKind::parse("chunked-fetch:4"),
+            Some(ScheduleKind::ChunkedFetch { chunk: 4 })
+        );
+    }
+
+    #[test]
+    fn parse_accepts_cli_aliases_and_rejects_junk() {
+        assert_eq!(
+            ScheduleKind::parse("thread"),
+            Some(ScheduleKind::ThreadMapped)
+        );
+        assert_eq!(
+            ScheduleKind::parse("warp"),
+            Some(ScheduleKind::GroupMapped(32))
+        );
+        assert_eq!(
+            ScheduleKind::parse("block"),
+            Some(ScheduleKind::GroupMapped(128))
+        );
+        assert_eq!(ScheduleKind::parse("merge"), Some(ScheduleKind::MergePath));
+        assert_eq!(
+            ScheduleKind::parse("nzsplit"),
+            Some(ScheduleKind::NonzeroSplit)
+        );
+        assert_eq!(
+            ScheduleKind::parse("stealing"),
+            Some(ScheduleKind::WorkStealing {
+                chunk: dynamic::DEFAULT_CHUNK
+            })
+        );
+        assert_eq!(
+            ScheduleKind::parse("fetch"),
+            Some(ScheduleKind::ChunkedFetch {
+                chunk: dynamic::DEFAULT_CHUNK
+            })
+        );
+        for junk in ["", "auto", "thread:2", "merge-path:4", "work-stealing:x"] {
+            assert_eq!(ScheduleKind::parse(junk), None, "{junk:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn segment_keys_order_canonically() {
+        let a = SegmentKey {
+            tile: 1,
+            atom_begin: 9,
+        };
+        let b = SegmentKey {
+            tile: 2,
+            atom_begin: 0,
+        };
+        let c = SegmentKey {
+            tile: 2,
+            atom_begin: 4,
+        };
+        assert!(a < b && b < c);
+        let s = Segment {
+            tile: 7,
+            atom_begin: 3,
+            atom_end: 5,
+        };
+        assert_eq!(
+            s.key(),
+            SegmentKey {
+                tile: 7,
+                atom_begin: 3
+            }
+        );
     }
 
     #[test]

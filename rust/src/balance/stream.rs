@@ -48,14 +48,21 @@ pub enum ScheduleDescriptor {
 
 impl ScheduleDescriptor {
     /// Descriptor for `kind` over `src` at `workers` parallel workers, or
-    /// `None` when the schedule is not streaming-capable (Binning/LRB).
+    /// `None` when the schedule is not a streaming-capable planned
+    /// schedule: Binning/LRB materialize, and the dynamic kinds are
+    /// described by [`super::dynamic::DynamicDescriptor`] instead (their
+    /// chunk decomposition is exposed as a descriptor via
+    /// [`super::dynamic::DynamicDescriptor::chunk_view`]).
     pub fn new(kind: ScheduleKind, src: &impl WorkSource, workers: usize) -> Option<Self> {
         Some(match kind {
             ScheduleKind::ThreadMapped => Self::thread_mapped(src, workers),
             ScheduleKind::GroupMapped(g) => Self::group_mapped(src, workers, g),
             ScheduleKind::MergePath => Self::merge_path(src, workers),
             ScheduleKind::NonzeroSplit => Self::nonzero_split(src, workers),
-            ScheduleKind::Binning | ScheduleKind::Lrb => return None,
+            ScheduleKind::Binning
+            | ScheduleKind::Lrb
+            | ScheduleKind::WorkStealing { .. }
+            | ScheduleKind::ChunkedFetch { .. } => return None,
         })
     }
 

@@ -4,7 +4,7 @@
 //! Chapter-4 schedule descriptor with the §5-style two-phase tile fixup.
 
 use crate::balance::stream::{self, ScheduleDescriptor};
-use crate::balance::Segment;
+use crate::balance::{Segment, SegmentKey};
 use crate::runtime::{HostTensor, Runtime};
 use crate::sim::gpu::Precision;
 use crate::sim::{self, CostModel, CtaWork, GpuSpec};
@@ -52,17 +52,18 @@ pub fn mac_segment_acc(
 }
 
 /// Fold partial-tile accumulators into C in the order given — the
-/// deterministic phase-2 fixup (worker order reproduces the sequential
-/// reference's accumulation order bit for bit).
+/// deterministic phase-2 fixup (canonical segment order — within a tile,
+/// ascending k-iteration order — reproduces the sequential reference's
+/// accumulation order bit for bit).
 pub fn apply_mac_partials(
     c: &mut DenseMat,
     shape: GemmShape,
     blk: Blocking,
-    partials: &[(u32, Vec<f64>)],
+    partials: &[(SegmentKey, Vec<f64>)],
 ) {
     let tiles_n = shape.n.div_ceil(blk.bn);
-    for (tile, acc) in partials {
-        let tile = *tile as usize;
+    for (key, acc) in partials {
+        let tile = key.tile as usize;
         c.add_window(
             acc,
             (tile / tiles_n) * blk.bm,
@@ -73,8 +74,8 @@ pub fn apply_mac_partials(
     }
 }
 
-/// Phase 1 of the parallel MAC path: per-segment partial tiles for the
-/// descriptor's `workers` range, in (worker, segment) order.
+/// Phase 1 of the parallel MAC path: segment-keyed partial tiles for the
+/// descriptor's `workers` range.
 pub fn mac_shard_partials(
     a: &DenseMat,
     b: &DenseMat,
@@ -83,11 +84,11 @@ pub fn mac_shard_partials(
     desc: &ScheduleDescriptor,
     offsets: &[usize],
     workers: std::ops::Range<usize>,
-) -> Vec<(u32, Vec<f64>)> {
+) -> Vec<(SegmentKey, Vec<f64>)> {
     let mut out = Vec::new();
     for w in workers.start..workers.end.min(desc.workers()) {
         for s in stream::worker_segments(*desc, offsets, w) {
-            out.push((s.tile, mac_segment_acc(a, b, shape, blk, s)));
+            out.push((s.key(), mac_segment_acc(a, b, shape, blk, s)));
         }
     }
     out

@@ -83,9 +83,9 @@ pub fn frontier_assignment(
     out
 }
 
-/// Phase-1 partials of a frontier shard (workers `[w0, w1)`), in
-/// (worker, segment) order; the phase-2 fixup is
-/// [`crate::exec::spmv::apply_partials`].
+/// Segment-keyed phase-1 partials of a frontier shard (workers
+/// `[w0, w1)`); the phase-2 fixup is
+/// [`crate::exec::spmv::apply_partials`] in canonical segment order.
 pub fn frontier_shard_partials(
     graph: &Csr,
     frontier: &[u32],
@@ -93,11 +93,11 @@ pub fn frontier_shard_partials(
     desc: &stream::ScheduleDescriptor,
     w0: usize,
     w1: usize,
-) -> Vec<(u32, f64)> {
+) -> Vec<(crate::balance::SegmentKey, f64)> {
     let mut out = Vec::new();
     for w in w0..w1.min(desc.workers()) {
         for s in stream::worker_segments(*desc, offsets, w) {
-            out.push((s.tile, frontier_segment_sum(graph, frontier, offsets, s)));
+            out.push((s.key(), frontier_segment_sum(graph, frontier, offsets, s)));
         }
     }
     out

@@ -31,7 +31,7 @@ use std::sync::Arc;
 
 use crate::balance::stream::{self, ScheduleDescriptor};
 use crate::balance::{
-    self, fingerprint, prefix, roofline, Assignment, OffsetsSource, ScheduleKind,
+    self, fingerprint, prefix, roofline, Assignment, OffsetsSource, ScheduleKind, SegmentKey,
 };
 use crate::sparse::Csr;
 use crate::streamk::{Blocking, GemmShape};
@@ -73,21 +73,32 @@ fn sparse_row_prior(matrix: &Csr, plan_workers: usize) -> ScheduleKind {
 ///   materialized twin (the engine may use either representation for the
 ///   same plan).
 /// * [`shard`](WorkKernel::shard) must touch no shared output (disjoint
-///   worker ranges run concurrently), and
-///   [`reduce`](WorkKernel::reduce) folds shard partials *in worker
-///   order*, reproducing [`execute_stream`](WorkKernel::execute_stream)'s
-///   accumulation sequence bit for bit at any shard count — the §5-style
-///   two-phase fixup.  Empty shards and zero-atom workers must be no-ops.
+///   worker ranges run concurrently) and must key every partial by its
+///   segment's [`SegmentKey`].
+/// * [`reduce`](WorkKernel::reduce) orders shard partials **canonically**
+///   — ascending `(tile, atom_begin)`, via [`canonical_partials`] — before
+///   folding them, so the result is independent of how the partials were
+///   produced or delivered: fixed worker-range shards, stolen chunks and
+///   cursor-claimed chunks all reduce bit-identically.  Within one tile
+///   the canonical order *is* ascending atom order, which is every
+///   sequential executor's accumulation order, so the reduction
+///   reproduces [`execute_stream`](WorkKernel::execute_stream) bit for
+///   bit at any shard count and under any claiming policy — the §5-style
+///   two-phase fixup, made claim-order-blind.  Empty shards and
+///   zero-atom workers must be no-ops.
 /// * The checksum is a deterministic reduction of the full result,
-///   independent of thread count for a fixed schedule.
+///   independent of thread count for a fixed schedule, and bit-identical
+///   between a dynamic schedule and planned `ThreadMapped` on the same
+///   tile set (both process whole tiles in ascending atom order).
 ///
 /// What the engine provides for free in exchange: plan caching keyed by
 /// [`fingerprint`](WorkKernel::fingerprint), adaptive ε-greedy schedule
 /// tuning, intra-problem worker-range splitting across the pool, proxy
 /// cost metering, and the bench/CI surfaces.
 pub trait WorkKernel {
-    /// Phase-1 output of one worker-range shard: per-segment partial
-    /// results, ordered (worker, segment), carrying no shared state.
+    /// Phase-1 output of one worker-range shard: segment-keyed partial
+    /// results, carrying no shared state.  The producing order is
+    /// irrelevant — [`reduce`](WorkKernel::reduce) sorts by key.
     type Partials: Send + 'static;
 
     /// Problem-family name ("spmv", "spgemm", …) for reports and mixes.
@@ -117,11 +128,14 @@ pub trait WorkKernel {
     /// (Binning/LRB plans); returns the checksum.
     fn execute_assignment(&self, asg: &Assignment) -> f64;
 
-    /// Phase 1: partials for workers `[w0, w1)` of the descriptor's plan.
+    /// Phase 1: segment-keyed partials for workers `[w0, w1)` of the
+    /// descriptor's plan.  (A dynamically-claimed chunk is the worker
+    /// range `[j, j+1)` of its descriptor's chunk view.)
     fn shard(&self, desc: &ScheduleDescriptor, w0: usize, w1: usize) -> Self::Partials;
 
-    /// Phase 2: fold shard partials — in shard order, which is worker
-    /// order — into the output and return its checksum.
+    /// Phase 2: fold shard partials — in canonical segment order,
+    /// regardless of shard arrival order — into the output and return its
+    /// checksum.
     fn reduce(&self, shards: Vec<Self::Partials>) -> f64;
 
     /// Tiles in the tile set.
@@ -139,6 +153,18 @@ pub trait WorkKernel {
 /// [`WorkKernel::Partials`]); only the kernel that produced it can
 /// reduce it.
 pub type BoxedPartials = Box<dyn Any + Send>;
+
+/// Flatten shard partials and order them canonically: ascending
+/// `(tile, atom_begin)`.  Keys are unique within one plan (segments are
+/// disjoint), so the order is total and independent of how the shards
+/// were produced or delivered — the primitive every kernel's
+/// [`WorkKernel::reduce`] builds on, and what makes dynamically-claimed
+/// execution reduce bit-identically to planned execution.
+pub fn canonical_partials<V>(shards: Vec<Vec<(SegmentKey, V)>>) -> Vec<(SegmentKey, V)> {
+    let mut all: Vec<(SegmentKey, V)> = shards.into_iter().flatten().collect();
+    all.sort_by_key(|&(key, _)| key);
+    all
+}
 
 /// Object-safe face of [`WorkKernel`]: what the engine stores and calls.
 /// Implemented for every `WorkKernel` by the blanket impl below.
@@ -225,7 +251,7 @@ impl SpmvKernel {
 }
 
 impl WorkKernel for SpmvKernel {
-    type Partials = Vec<(u32, f64)>;
+    type Partials = Vec<(SegmentKey, f64)>;
 
     fn kind_name(&self) -> &'static str {
         "spmv"
@@ -255,9 +281,7 @@ impl WorkKernel for SpmvKernel {
     }
     fn reduce(&self, shards: Vec<Self::Partials>) -> f64 {
         let mut y = vec![0.0f64; self.matrix.rows];
-        for parts in &shards {
-            spmv::apply_partials(&mut y, parts);
-        }
+        spmv::apply_partials(&mut y, &canonical_partials(shards));
         y.iter().sum()
     }
 }
@@ -293,7 +317,7 @@ impl SpmmKernel {
 }
 
 impl WorkKernel for SpmmKernel {
-    type Partials = Vec<(u32, Vec<f64>)>;
+    type Partials = Vec<(SegmentKey, Vec<f64>)>;
 
     fn kind_name(&self) -> &'static str {
         "spmm"
@@ -325,9 +349,7 @@ impl WorkKernel for SpmmKernel {
     }
     fn reduce(&self, shards: Vec<Self::Partials>) -> f64 {
         let mut y = vec![0.0f64; self.matrix.rows * self.n];
-        for parts in &shards {
-            spmm::apply_partials(&mut y, self.n, parts);
-        }
+        spmm::apply_partials(&mut y, self.n, &canonical_partials(shards));
         y.iter().sum()
     }
 }
@@ -365,7 +387,7 @@ impl GemmKernel {
 }
 
 impl WorkKernel for GemmKernel {
-    type Partials = Vec<(u32, Vec<f64>)>;
+    type Partials = Vec<(SegmentKey, Vec<f64>)>;
 
     fn kind_name(&self) -> &'static str {
         "gemm"
@@ -404,9 +426,7 @@ impl WorkKernel for GemmKernel {
     }
     fn reduce(&self, shards: Vec<Self::Partials>) -> f64 {
         let mut c = DenseMat::zeros(self.shape.m, self.shape.n);
-        for parts in &shards {
-            gemm::apply_mac_partials(&mut c, self.shape, self.blocking, parts);
-        }
+        gemm::apply_mac_partials(&mut c, self.shape, self.blocking, &canonical_partials(shards));
         c.data.iter().sum()
     }
 }
@@ -439,7 +459,7 @@ impl FrontierKernel {
 }
 
 impl WorkKernel for FrontierKernel {
-    type Partials = Vec<(u32, f64)>;
+    type Partials = Vec<(SegmentKey, f64)>;
 
     fn kind_name(&self) -> &'static str {
         "frontier"
@@ -470,9 +490,7 @@ impl WorkKernel for FrontierKernel {
     }
     fn reduce(&self, shards: Vec<Self::Partials>) -> f64 {
         let mut out = vec![0.0f64; self.frontier.len()];
-        for parts in &shards {
-            spmv::apply_partials(&mut out, parts);
-        }
+        spmv::apply_partials(&mut out, &canonical_partials(shards));
         out.iter().sum()
     }
 }
@@ -518,7 +536,7 @@ impl SpgemmKernel {
 }
 
 impl WorkKernel for SpgemmKernel {
-    type Partials = Vec<(u32, Vec<(u32, f64)>)>;
+    type Partials = Vec<(SegmentKey, Vec<(u32, f64)>)>;
 
     fn kind_name(&self) -> &'static str {
         "spgemm"
@@ -554,17 +572,15 @@ impl WorkKernel for SpgemmKernel {
                 spgemm::for_each_segment_product(&self.a, &self.b, &self.work, s, |col, v| {
                     products.push((col, v));
                 });
-                out.push((s.tile, products));
+                out.push((s.key(), products));
             }
         }
         out
     }
     fn reduce(&self, shards: Vec<Self::Partials>) -> f64 {
         let mut slab = spgemm::RowSlab::new(&self.work);
-        for shard in &shards {
-            for (tile, products) in shard {
-                slab.push(*tile, products);
-            }
+        for (key, products) in &canonical_partials(shards) {
+            slab.push(key.tile, products);
         }
         spgemm::checksum(&slab.finalize(self.a.rows, self.b.cols))
     }
@@ -628,6 +644,45 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn reduce_is_blind_to_shard_delivery_order() {
+        // The segment-keyed contract: reversing shard delivery must not
+        // move a single bit — this is what lets dynamically-claimed chunks
+        // reduce through the same path as planned worker ranges.
+        let a = Arc::new(gen::power_law(160, 160, 80, 1.6, 31));
+        let b = Arc::new(gen::uniform(160, 120, 4, 32));
+        let graph = Arc::new(gen::rmat(7, 4, 33));
+        let frontier: Vec<u32> = (0..graph.rows as u32).step_by(2).collect();
+        let kernels: Vec<Arc<dyn DynKernel>> = vec![
+            Arc::new(SpmvKernel::new(a.clone())),
+            Arc::new(SpmmKernel::new(a.clone(), 3)),
+            Arc::new(SpgemmKernel::new(a.clone(), b)),
+            Arc::new(GemmKernel::new(GemmShape::new(64, 48, 40), Blocking::new(16, 16, 8), 9)),
+            Arc::new(FrontierKernel::new(graph, frontier)),
+        ];
+        for k in &kernels {
+            let src_offsets = k.offsets().to_vec();
+            let src = OffsetsSource::new(&src_offsets);
+            let desc = ScheduleKind::MergePath.descriptor(&src, 24).unwrap();
+            let want = k.execute_stream(&desc);
+            let shard_at = |w: usize| k.shard_dyn(&desc, w, w + 1);
+            let forward: Vec<_> = (0..desc.workers()).map(shard_at).collect();
+            let reversed: Vec<_> = (0..desc.workers()).rev().map(shard_at).collect();
+            assert_eq!(
+                k.reduce_dyn(forward).to_bits(),
+                want.to_bits(),
+                "{}: forward delivery diverged",
+                k.kind_name()
+            );
+            assert_eq!(
+                k.reduce_dyn(reversed).to_bits(),
+                want.to_bits(),
+                "{}: reversed delivery diverged",
+                k.kind_name()
+            );
         }
     }
 

@@ -3,7 +3,7 @@
 //! is exactly the reuse argument of §4.4.3.
 
 use crate::balance::stream::{self, ScheduleDescriptor};
-use crate::balance::{Assignment, Segment};
+use crate::balance::{Assignment, Segment, SegmentKey};
 use crate::sparse::Csr;
 
 /// One segment's share of every output column (the "new loop" of
@@ -45,10 +45,10 @@ pub fn execute_stream_host(a: &Csr, x: &[f64], n: usize, desc: &ScheduleDescript
     y
 }
 
-/// Phase 1 of the two-phase parallel path: per-segment partial output rows
-/// (all `n` columns) for workers `[w0, w1)`, in (worker, segment) order.
-/// Disjoint worker ranges read disjoint atoms, so shards run concurrently;
-/// [`apply_partials`] is the phase-2 fixup.
+/// Phase 1 of the two-phase parallel path: segment-keyed partial output
+/// rows (all `n` columns) for workers `[w0, w1)`.  Disjoint worker ranges
+/// read disjoint atoms, so shards run concurrently; [`apply_partials`] is
+/// the phase-2 fixup.
 pub fn shard_partials(
     a: &Csr,
     x: &[f64],
@@ -56,7 +56,7 @@ pub fn shard_partials(
     desc: &ScheduleDescriptor,
     w0: usize,
     w1: usize,
-) -> Vec<(u32, Vec<f64>)> {
+) -> Vec<(SegmentKey, Vec<f64>)> {
     let mut out = Vec::new();
     for w in w0..w1.min(desc.workers()) {
         for s in stream::worker_segments(*desc, &a.offsets, w) {
@@ -68,18 +68,19 @@ pub fn shard_partials(
                 }
                 *slot = sum;
             }
-            out.push((s.tile, row));
+            out.push((s.key(), row));
         }
     }
     out
 }
 
-/// Phase 2: fold partial rows — in worker order — into the `rows x n`
-/// output, reproducing [`execute_stream_host`]'s accumulation sequence bit
-/// for bit at any shard count.
-pub fn apply_partials(y: &mut [f64], n: usize, partials: &[(u32, Vec<f64>)]) {
-    for (tile, row) in partials {
-        let base = *tile as usize * n;
+/// Phase 2: fold partial rows — in canonical segment order (within a tile,
+/// ascending atom order) — into the `rows x n` output, reproducing
+/// [`execute_stream_host`]'s accumulation sequence bit for bit at any
+/// shard count and under any claiming policy.
+pub fn apply_partials(y: &mut [f64], n: usize, partials: &[(SegmentKey, Vec<f64>)]) {
+    for (key, row) in partials {
+        let base = key.tile as usize * n;
         for (j, v) in row.iter().enumerate() {
             y[base + j] += v;
         }

@@ -3,7 +3,7 @@
 //! the bandwidth-bound simulated timing of each schedule.
 
 use crate::balance::stream::{self, ScheduleDescriptor};
-use crate::balance::{Assignment, Granularity, ScheduleKind, Segment};
+use crate::balance::{Assignment, Granularity, ScheduleKind, Segment, SegmentKey};
 use crate::runtime::{HostTensor, Runtime};
 use crate::sim::{self, CtaWork, GpuSpec, SpmvCost};
 use crate::sparse::Csr;
@@ -44,33 +44,36 @@ pub fn execute_stream_host(a: &Csr, x: &[f64], desc: &ScheduleDescriptor) -> Vec
     y
 }
 
-/// Phase 1 of the two-phase parallel path: per-segment partial sums for
-/// workers `[w0, w1)`, in (worker, segment) order.  Disjoint worker
-/// ranges read disjoint atoms, so shards run concurrently without
-/// synchronization; a tile split across shards is reconciled by
-/// [`apply_partials`] (phase 2 — the Stream-K-style tile fixup).
+/// Phase 1 of the two-phase parallel path: segment-keyed partial sums for
+/// workers `[w0, w1)`.  Disjoint worker ranges read disjoint atoms, so
+/// shards run concurrently without synchronization; a tile split across
+/// shards is reconciled by [`apply_partials`] (phase 2 — the
+/// Stream-K-style tile fixup).
 pub fn shard_partials(
     a: &Csr,
     x: &[f64],
     desc: &ScheduleDescriptor,
     w0: usize,
     w1: usize,
-) -> Vec<(u32, f64)> {
+) -> Vec<(SegmentKey, f64)> {
     let mut out = Vec::new();
     for w in w0..w1.min(desc.workers()) {
         for s in stream::worker_segments(*desc, &a.offsets, w) {
-            out.push((s.tile, segment_sum(a, x, s)));
+            out.push((s.key(), segment_sum(a, x, s)));
         }
     }
     out
 }
 
-/// Phase 2: the deterministic tile fixup — partials applied in worker
-/// order reproduce the sequential reference's accumulation order bit for
-/// bit, at any shard count.
-pub fn apply_partials(y: &mut [f64], partials: &[(u32, f64)]) {
-    for &(tile, sum) in partials {
-        y[tile as usize] += sum;
+/// Phase 2: the deterministic tile fixup.  Partials applied in canonical
+/// segment order — ascending `(tile, atom_begin)`, which within any tile
+/// is ascending atom order — reproduce the sequential reference's
+/// accumulation bit for bit, at any shard count and regardless of who
+/// computed which segment (see
+/// [`crate::exec::kernel::canonical_partials`]).
+pub fn apply_partials(y: &mut [f64], partials: &[(SegmentKey, f64)]) {
+    for &(key, sum) in partials {
+        y[key.tile as usize] += sum;
     }
 }
 

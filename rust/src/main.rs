@@ -36,7 +36,9 @@ USAGE:
   gpulb gemm  [--m M --n N --k K] [--decomp streamk|dp|fixed:S|hybrid1|hybrid2]
               [--prec f16f32|f64] [--check-runtime]
   gpulb serve [--threads N] [--batches B] [--scale 0|1] [--plan-workers W]
-              [--schedule auto|adaptive|thread|warp|block|merge|nzsplit|binning|lrb]
+              [--schedule auto|adaptive|thread|warp|block|merge|nzsplit|binning|lrb
+                         |work-stealing[:CHUNK]|chunked-fetch[:CHUNK]]
+              [--candidates thread-mapped,merge-path,work-stealing,...]
               [--epsilon E] [--min-samples S] [--seed SEED] [--proxy-feedback]
               [--split-threshold ATOMS]
   gpulb serve --bench [--batches B] [--scale 0|1] [--out FILE]
@@ -214,19 +216,13 @@ fn cmd_gemm(args: &Args) -> gpulb::Result<()> {
     Ok(())
 }
 
-/// Schedule names accepted by `serve --schedule` ("auto" / unknown = None,
-/// meaning the per-family default).
+/// Schedule names accepted by `serve --schedule` and `--candidates`
+/// ("auto" / unknown = None, meaning the per-family default).  Both the
+/// CLI short aliases and the canonical [`ScheduleKind::name`] spellings
+/// parse, including the dynamic kinds (`work-stealing[:CHUNK]`,
+/// `chunked-fetch[:CHUNK]`).
 fn parse_schedule_name(s: &str) -> Option<ScheduleKind> {
-    match s {
-        "thread" => Some(ScheduleKind::ThreadMapped),
-        "warp" => Some(ScheduleKind::GroupMapped(32)),
-        "block" => Some(ScheduleKind::GroupMapped(128)),
-        "merge" => Some(ScheduleKind::MergePath),
-        "nzsplit" => Some(ScheduleKind::NonzeroSplit),
-        "binning" => Some(ScheduleKind::Binning),
-        "lrb" => Some(ScheduleKind::Lrb),
-        _ => None,
-    }
+    ScheduleKind::parse(s)
 }
 
 /// Parse `--key` as `T`, erroring on a malformed value (absent = default).
@@ -257,10 +253,37 @@ fn parse_schedule_policy(args: &Args) -> gpulb::Result<serve::SchedulePolicy> {
             Some(kind) => serve::SchedulePolicy::Fixed(kind),
             None => anyhow::bail!(
                 "unknown --schedule `{name}`; expected \
-                 auto|adaptive|thread|warp|block|merge|nzsplit|binning|lrb"
+                 auto|adaptive|thread|warp|block|merge|nzsplit|binning|lrb\
+                 |work-stealing[:CHUNK]|chunked-fetch[:CHUNK]"
             ),
         },
     })
+}
+
+/// Parse `--candidates` (comma-separated schedule names) into the tuner's
+/// candidate set.  Empty / absent = the default set.  Only meaningful
+/// under `--schedule adaptive`; rejected otherwise so a bench run is
+/// never silently attributed to a selector that ignored the flag.
+fn parse_candidates(
+    args: &Args,
+    policy: serve::SchedulePolicy,
+) -> gpulb::Result<Vec<ScheduleKind>> {
+    let Some(list) = args.opt("candidates") else {
+        return Ok(Vec::new());
+    };
+    anyhow::ensure!(
+        matches!(policy, serve::SchedulePolicy::Adaptive { .. }),
+        "--candidates requires --schedule adaptive"
+    );
+    let mut out = Vec::new();
+    for name in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        match parse_schedule_name(name) {
+            Some(kind) => out.push(kind),
+            None => anyhow::bail!("unknown candidate schedule `{name}` in --candidates"),
+        }
+    }
+    anyhow::ensure!(!out.is_empty(), "--candidates lists no schedules");
+    Ok(out)
 }
 
 fn policy_name(policy: serve::SchedulePolicy) -> String {
@@ -329,6 +352,7 @@ fn cmd_serve(args: &Args) -> gpulb::Result<()> {
         } else {
             serve::CostFeedback::Measured
         },
+        candidates: parse_candidates(args, policy)?,
         cache_capacity: opt_strict(args, "cache-capacity", 1024)?,
         split_min_atoms: opt_strict(args, "split-threshold", serve::DEFAULT_SPLIT_MIN_ATOMS)?,
     };
@@ -360,13 +384,24 @@ fn cmd_serve(args: &Args) -> gpulb::Result<()> {
         let report = engine.execute_batch(&mix);
         println!(
             "batch {batch_no}: {:>8.1} problems/sec  \
-             (cache {:.0}% hit, {} entries; pool {} pops / {} steals)",
+             (cache {:.0}% hit, {} entries; pool {} pops / {} steals / {} fetches)",
             report.problems_per_sec(),
             report.cache.hit_rate() * 100.0,
             report.cache.entries,
             report.pool.pops,
-            report.pool.steals
+            report.pool.steals,
+            report.pool.fetches
         );
+        if report.dynamic_problems > 0 {
+            println!(
+                "         dynamic: {} problems claimed {} chunks at runtime",
+                report.dynamic_problems, report.dynamic_chunks
+            );
+        }
+        if batch_no == 1 && !report.candidates.is_empty() {
+            let names: Vec<&str> = report.candidates.iter().map(|k| k.name()).collect();
+            println!("         candidates: {}", names.join(","));
+        }
         if report.tuner.adaptive > 0 {
             println!(
                 "         tuner: {:.0}% converged ({} exploits, {} explorations, {} priors)",

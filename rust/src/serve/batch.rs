@@ -15,7 +15,7 @@
 
 use std::sync::Arc;
 
-use crate::balance::{adaptive, OffsetsSource, ScheduleKind};
+use crate::balance::{adaptive, dynamic, OffsetsSource, ScheduleKind};
 use crate::exec::kernel::{
     DynKernel, FrontierKernel, GemmKernel, SpgemmKernel, SpmmKernel, SpmvKernel,
 };
@@ -134,13 +134,15 @@ pub fn plan(
 }
 
 /// Deterministic proxy cost of an entry (stream-computed for descriptors,
-/// walked for materialized plans — bit-identical either way).
+/// walked for materialized plans — bit-identical either way; the greedy
+/// claiming model for dynamic entries).
 pub fn proxy_cost_entry(problem: &Problem, kind: ScheduleKind, entry: &PlanEntry) -> f64 {
     let (tiles, atoms) = problem.tile_set_size();
     match entry {
         PlanEntry::Descriptor(d) => {
             adaptive::proxy_cost_stream(d, problem.offsets(), tiles, atoms)
         }
+        PlanEntry::Dynamic(dd) => dynamic::proxy_cost_dynamic(dd, problem.offsets()),
         PlanEntry::Materialized(asg) => adaptive::proxy_cost(kind, asg, tiles, atoms),
     }
 }
@@ -173,6 +175,11 @@ pub fn execute_planned(
     let start = std::time::Instant::now();
     let checksum = match entry {
         PlanEntry::Descriptor(d) => problem.kernel.execute_stream(d),
+        // Sequential execution of a dynamic plan: walk the canonical
+        // chunk decomposition in claim order — the one-claimant special
+        // case of runtime claiming, and the reference the parallel
+        // claimed path must reproduce bit for bit.
+        PlanEntry::Dynamic(dd) => problem.kernel.execute_stream(&dd.chunk_view()),
         PlanEntry::Materialized(asg) => problem.kernel.execute_assignment(asg),
     };
     let cost = match cfg.feedback {
@@ -183,7 +190,7 @@ pub fn execute_planned(
 }
 
 /// Execute workers `[w0, w1)` of a split problem's descriptor plan
-/// (phase 1 of the two-phase path): per-segment partials, no shared
+/// (phase 1 of the two-phase path): segment-keyed partials, no shared
 /// output, safe to run concurrently with every other shard.
 pub fn execute_shard(
     problem: &Problem,
@@ -194,10 +201,22 @@ pub fn execute_shard(
     problem.kernel.shard_dyn(desc, w0, w1)
 }
 
-/// Phase 2: fold shard partials — in shard order, which is worker order —
-/// into the problem's output and return its checksum.  The accumulation
-/// sequence is identical to the sequential stream executor's, so the
-/// result is bit-identical at any shard count.
+/// Execute one dynamically-claimed chunk of a dynamic plan (phase 1 of
+/// the claimed path): chunk `j` is the worker range `[j, j+1)` of the
+/// descriptor's canonical chunk view.
+pub fn execute_chunk(
+    problem: &Problem,
+    dd: &dynamic::DynamicDescriptor,
+    j: usize,
+) -> BoxedPartials {
+    problem.kernel.shard_dyn(&dd.chunk_view(), j, j + 1)
+}
+
+/// Phase 2: fold shard partials into the problem's output and return its
+/// checksum.  Partials are segment-keyed and the kernel orders them
+/// canonically, so the result is bit-identical at any shard count and
+/// regardless of delivery order — fixed worker ranges and
+/// dynamically-claimed chunks reduce through this same point.
 pub fn reduce_shards(problem: &Problem, shards: Vec<BoxedPartials>) -> f64 {
     problem.kernel.reduce_dyn(shards)
 }

@@ -17,7 +17,7 @@
 //! shared runner was slow.
 
 use crate::balance::adaptive::{proxy_cost, proxy_cost_stream, CANDIDATES};
-use crate::balance::{self, OffsetsSource, ScheduleKind, WorkSource};
+use crate::balance::{self, dynamic, OffsetsSource, ScheduleKind, WorkSource};
 use crate::benchutil::{self, FamilyPoint};
 use crate::corpus::{gemm_landscape_grid, sparse_corpus};
 use crate::metrics;
@@ -28,8 +28,10 @@ use super::plan_cache::{fingerprint, PlanCache, PlanEntry, PlanKey};
 use super::tuner::{ScheduleTuner, DEFAULT_EPSILON, DEFAULT_MIN_SAMPLES, DEFAULT_SEED};
 
 /// Default tuner rounds: enough for warmup
-/// (`|CANDIDATES| * min_samples` selections per entry) plus steady state.
-pub const DEFAULT_ROUNDS: usize = 10;
+/// (`|CANDIDATES| * min_samples` = 12 selections per entry, one per
+/// round) plus steady-state rounds, so every family's converged pick —
+/// planned or dynamic — reflects the full candidate set.
+pub const DEFAULT_ROUNDS: usize = 16;
 /// Default plan worker count (matches [`super::ServeConfig::default`]).
 pub const DEFAULT_PLAN_WORKERS: usize = 256;
 /// Blocking for the GEMM grid's MAC-iteration tile sets.
@@ -56,12 +58,12 @@ impl LandscapeEntry {
 }
 
 /// Build the landscape: the sparse corpus (each entry keeps its corpus
-/// family), the GEMM geometry grid (family `gemm-grid`), and the
-/// closed-form tile sets of the served SpGEMM and SpMM workloads
-/// (families `spgemm` and `spmm`, from the `promoted_families` builder
-/// below).  `scale` is
-/// clamped to `[0, 1]` — the gate's landscape has exactly two sizes, and
-/// a larger value must not relabel identical data.
+/// family), the GEMM geometry grid (family `gemm-grid`), the closed-form
+/// tile sets of the served SpGEMM and SpMM workloads (families `spgemm`
+/// and `spmm`, from the `promoted_families` builder below), and the
+/// blocked-skew `hotrow` family where the dynamic schedules win.
+/// `scale` is clamped to `[0, 1]` — the gate's landscape has exactly two
+/// sizes, and a larger value must not relabel identical data.
 pub fn build_landscape(scale: usize) -> Vec<LandscapeEntry> {
     let scale = scale.min(1);
     let mut out = Vec::new();
@@ -90,6 +92,52 @@ pub fn build_landscape(scale: usize) -> Vec<LandscapeEntry> {
         });
     }
     out.extend(promoted_families(scale));
+    out.extend(hotrow_family(scale));
+    out
+}
+
+/// The "hotrow" family: closed-form blocked-skew tile sets — contiguous
+/// hot-row blocks ahead of a uniform tail — where every static plan
+/// quantizes badly (strided maps stack the hot rows, contiguous shares
+/// concentrate them, searched splits pay their setup) and runtime chunk
+/// claiming wins.  The first two shapes are exactly the
+/// [`crate::sparse::gen::hotrow`] matrices [`super::mix::corpus_mix`]
+/// serves, so the gate and serve traffic share fingerprints.  The prior
+/// is merge-path (the §4.5.2 answer to skew): the tuner must *discover*
+/// dynamic from measured feedback, which the convergence test pins.
+fn hotrow_family(scale: usize) -> Vec<LandscapeEntry> {
+    let n = if scale == 0 { 1024 } else { 4096 };
+    let mut out = Vec::new();
+    let mut push = |stem: &str, lens: Vec<usize>| {
+        let offsets = balance::prefix::exclusive(&lens);
+        let fp = fingerprint(SALT_SPMV, &OffsetsSource::new(&offsets));
+        out.push(LandscapeEntry {
+            name: format!("{stem}_{n}"),
+            family: "hotrow",
+            offsets,
+            fingerprint: fp,
+            prior: ScheduleKind::MergePath,
+        });
+    };
+    let block = |hot: usize, hot_len: usize, tail: usize| -> Vec<usize> {
+        (0..n).map(|r| if r < hot { hot_len } else { tail }).collect()
+    };
+    push("hotrow_block", block(n / 64, 512, 16));
+    push("hotrow_wide", block(n / 16, 256, 8));
+    push(
+        "hotrow_stair",
+        (0..n)
+            .map(|r| {
+                if r < n / 256 {
+                    1024
+                } else if r < n / 16 {
+                    128
+                } else {
+                    8
+                }
+            })
+            .collect(),
+    );
     out
 }
 
@@ -157,6 +205,7 @@ pub fn run_landscape(scale: usize, rounds: usize, plan_workers: usize) -> Vec<Fa
             PlanEntry::Descriptor(d) => {
                 proxy_cost_stream(&d, &entry.offsets, src.num_tiles(), src.num_atoms())
             }
+            PlanEntry::Dynamic(dd) => dynamic::proxy_cost_dynamic(&dd, &entry.offsets),
             PlanEntry::Materialized(asg) => {
                 proxy_cost(kind, &asg, src.num_tiles(), src.num_atoms())
             }
@@ -243,7 +292,7 @@ mod tests {
         assert!(entries.iter().any(|e| e.family == "gemm-grid"));
         assert!(entries.iter().any(|e| e.family == "uniform"));
         assert!(entries.iter().any(|e| e.family == "power-law"));
-        for family in ["spgemm", "spmm"] {
+        for family in ["spgemm", "spmm", "hotrow"] {
             assert_eq!(
                 entries.iter().filter(|e| e.family == family).count(),
                 3,
@@ -291,6 +340,7 @@ mod tests {
                     PlanEntry::Descriptor(d) => {
                         proxy_cost_stream(&d, &e.offsets, src.num_tiles(), src.num_atoms())
                     }
+                    PlanEntry::Dynamic(dd) => dynamic::proxy_cost_dynamic(&dd, &e.offsets),
                     PlanEntry::Materialized(asg) => {
                         proxy_cost(kind, &asg, src.num_tiles(), src.num_atoms())
                     }
@@ -299,18 +349,73 @@ mod tests {
             }
         }
         for e in &entries {
-            let src = OffsetsSource::new(&e.offsets);
             let best = tuner.best(e.fingerprint, workers).unwrap_or(e.prior);
-            let cost_of = |kind: ScheduleKind| {
-                let plan = kind.assign(&src, workers);
-                proxy_cost(kind, &plan, src.num_tiles(), src.num_atoms())
-            };
+            let cost_of =
+                |kind: ScheduleKind| balance::adaptive::proxy_cost_for(kind, &e.offsets, workers);
             assert!(
                 cost_of(best) <= cost_of(e.prior) + 1e-9,
                 "{}: learned {:?} worse than prior {:?}",
                 e.name,
                 best,
                 e.prior
+            );
+        }
+    }
+
+    #[test]
+    fn tuner_discovers_dynamic_on_hotrow_and_planned_on_uniform() {
+        // The acceptance property of the dynamic promotion: on the
+        // blocked-skew hotrow family the converged pick is a dynamic
+        // schedule; on regular uniform tile sets it stays planned (the
+        // claim overhead buys nothing there).
+        let entries = build_landscape(0);
+        let workers = 64;
+        let tuner = ScheduleTuner::new(DEFAULT_EPSILON, DEFAULT_MIN_SAMPLES, DEFAULT_SEED);
+        let cache = PlanCache::new(4096);
+        for _ in 0..DEFAULT_ROUNDS {
+            for e in &entries {
+                let (kind, _) = tuner.select(e.fingerprint, workers, || e.prior);
+                let src = OffsetsSource::new(&e.offsets);
+                let key = PlanKey {
+                    fingerprint: e.fingerprint,
+                    schedule: kind,
+                    workers,
+                };
+                let cost = match cache.plan(key, &src) {
+                    PlanEntry::Descriptor(d) => {
+                        proxy_cost_stream(&d, &e.offsets, src.num_tiles(), src.num_atoms())
+                    }
+                    PlanEntry::Dynamic(dd) => dynamic::proxy_cost_dynamic(&dd, &e.offsets),
+                    PlanEntry::Materialized(asg) => {
+                        proxy_cost(kind, &asg, src.num_tiles(), src.num_atoms())
+                    }
+                };
+                tuner.record(e.fingerprint, kind, workers, cost);
+            }
+        }
+        for e in entries.iter().filter(|e| e.family == "hotrow") {
+            let best = tuner
+                .best(e.fingerprint, workers)
+                .expect("hotrow warmup completed");
+            assert!(
+                best.is_dynamic(),
+                "{}: converged to planned {:?} — dynamic must win blocked skew",
+                e.name,
+                best
+            );
+        }
+        for e in entries
+            .iter()
+            .filter(|e| e.name.starts_with("uniform_256"))
+        {
+            let best = tuner
+                .best(e.fingerprint, workers)
+                .expect("uniform warmup completed");
+            assert!(
+                !best.is_dynamic(),
+                "{}: converged to dynamic {:?} — planned must win regular tiles",
+                e.name,
+                best
             );
         }
     }

@@ -76,6 +76,15 @@ pub fn corpus_mix(scale: usize) -> Vec<Problem> {
         out.push(Problem::spmm(m, sm_cols));
     }
 
+    // Hotrow SpMV: closed-form blocked skew (a contiguous hot-row block
+    // ahead of a uniform tail) — the shape where static plans quantize
+    // badly and the dynamic schedules earn their keep.  Same tile sets as
+    // the landscape's "hotrow" family, so serve traffic and the perf gate
+    // exercise the same fingerprints.
+    let hr_n = if scale == 0 { 1024 } else { 4096 };
+    out.push(Problem::spmv(Arc::new(gen::hotrow(hr_n, hr_n, hr_n / 64, 512, 16))));
+    out.push(Problem::spmv(Arc::new(gen::hotrow(hr_n, hr_n, hr_n / 16, 256, 8))));
+
     // Frontier expansions: every BFS level of a connected R-MAT graph.
     let rmat_scale = if scale == 0 { 9 } else { 12 };
     let graph = Arc::new(connected_rmat(rmat_scale, 8, 2022));

@@ -14,7 +14,14 @@
 //! Problems above [`ServeConfig::split_min_atoms`] are additionally split
 //! into worker-range shards across the pool (intra-problem parallelism),
 //! reduced by a deterministic two-phase tile fixup that keeps checksums
-//! bit-identical to sequential execution.
+//! bit-identical to sequential execution.  Problems on a *dynamic*
+//! schedule ([`ScheduleKind::WorkStealing`] / [`ScheduleKind::ChunkedFetch`])
+//! skip planning altogether: above the same split threshold, real threads
+//! claim canonical tile chunks at execution time
+//! ([`crate::balance::dynamic`]; smaller problems walk their chunks whole
+//! inside the batch pool) and the same segment-keyed fixup keeps their
+//! checksums bit-identical either way — the §3.3.5 dynamic policies
+//! promoted from the `balance/queue` simulation to the engine.
 //!
 //! The engine is workload-agnostic: all work processing goes through the
 //! kernel trait's dispatch points in [`batch`], never through per-kind
@@ -49,7 +56,7 @@ pub use tuner::{CostFeedback, Decision, SchedulePolicy, ScheduleTuner};
 use std::time::{Duration, Instant};
 
 use crate::balance::stream::ScheduleDescriptor;
-use crate::balance::ScheduleKind;
+use crate::balance::{dynamic, ScheduleKind};
 use crate::benchutil;
 
 /// Default atom count above which one problem is split into worker-range
@@ -57,7 +64,7 @@ use crate::benchutil;
 pub const DEFAULT_SPLIT_MIN_ATOMS: usize = 1 << 20;
 
 /// Engine configuration.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ServeConfig {
     /// Worker threads executing problems (clamped to the batch size).
     pub threads: usize,
@@ -70,14 +77,25 @@ pub struct ServeConfig {
     /// What cost sample each execution feeds the tuner (wall-clock or the
     /// deterministic proxy).
     pub feedback: CostFeedback,
+    /// The candidate set an `Adaptive` policy explores: empty = the
+    /// default [`crate::balance::adaptive::CANDIDATES`] (planned +
+    /// dynamic); non-empty = exactly these kinds, in order (the CLI's
+    /// `--candidates` list).  Ignored under `Auto`/`Fixed`.
+    pub candidates: Vec<ScheduleKind>,
     /// Plan-cache capacity in entries.
     pub cache_capacity: usize,
     /// Problems with at least this many atoms (and a streaming-capable
-    /// schedule) are split into worker-range shards executed across the
-    /// pool — intra-problem parallelism for the few-huge-problems batch
-    /// the whole-problem path serializes.  Smaller problems batch whole.
-    /// Checksums are bit-identical either way (two-phase fixup), so this
-    /// is purely a throughput knob.
+    /// planned schedule) are split into worker-range shards executed
+    /// across the pool — intra-problem parallelism for the
+    /// few-huge-problems batch the whole-problem path serializes.
+    /// Smaller problems batch whole.  Checksums are bit-identical either
+    /// way (two-phase fixup), so this is purely a throughput knob.
+    /// Problems on a *dynamic* schedule use the same threshold for the
+    /// real claimed path: at or above it (and with more than one thread)
+    /// their chunks are claimed at runtime across the pool's threads;
+    /// below it they run whole inside the batch pool — the sequential
+    /// canonical chunk walk — so a batch of many small dynamic problems
+    /// keeps its inter-problem parallelism.
     pub split_min_atoms: usize,
 }
 
@@ -90,6 +108,7 @@ impl Default for ServeConfig {
             plan_workers: 256,
             schedule: SchedulePolicy::Auto,
             feedback: CostFeedback::Measured,
+            candidates: Vec::new(),
             cache_capacity: 1024,
             split_min_atoms: DEFAULT_SPLIT_MIN_ATOMS,
         }
@@ -136,8 +155,18 @@ pub struct BatchReport {
     pub split_problems: usize,
     /// Total shard tasks dispatched (0 when nothing split).
     pub shards: usize,
+    /// Problems executed through runtime chunk claiming (dynamic
+    /// schedules at more than one thread).
+    pub dynamic_problems: usize,
+    /// Total chunks claimed by dynamic problems this batch.
+    pub dynamic_chunks: usize,
+    /// The candidate set the adaptive tuner explored (empty under
+    /// `Auto`/`Fixed`).
+    pub candidates: Vec<ScheduleKind>,
     /// Tuner selection counters for this batch.
     pub tuner: TunerBatchStats,
+    /// Pool counters; dynamic chunk steals and cursor fetches fold into
+    /// `steals`/`fetches` here.
     pub pool: PoolStats,
     /// Cumulative cache counters at batch end.
     pub cache: CacheStats,
@@ -163,7 +192,8 @@ pub struct ServeEngine {
 impl ServeEngine {
     pub fn new(cfg: ServeConfig) -> Self {
         let cache = PlanCache::new(cfg.cache_capacity);
-        let tuner = ScheduleTuner::from_policy(cfg.schedule);
+        let tuner = ScheduleTuner::from_policy(cfg.schedule)
+            .map(|t| t.with_candidates(&cfg.candidates));
         ServeEngine { cfg, cache, tuner }
     }
 
@@ -184,15 +214,18 @@ impl ServeEngine {
     /// fetched from (or inserted into) the engine's cache, so repeated
     /// batches over recurring problem shapes skip planning entirely.
     ///
-    /// Four phases: (1) schedules are selected serially in submission
-    /// order (so adaptive selection is deterministic at any thread count)
-    /// and large streaming-planned problems are split into worker-range
-    /// shards, (2) the pool executes whole problems and shards with
+    /// Five phases: (1) schedules are selected serially in submission
+    /// order (so adaptive selection is deterministic at any thread count),
+    /// large streaming-planned problems are split into worker-range
+    /// shards, and dynamically-scheduled problems are routed to the
+    /// claimed path, (2) the pool executes whole problems and shards with
     /// weight-aware seeding plus stealing, (3) shard partials reduce in
-    /// worker order — the deterministic tile fixup keeping checksums
-    /// bit-identical to sequential execution at any thread count — and
-    /// (4) every problem's cost sample is fed back to the tuner, again in
-    /// submission order.
+    /// canonical segment order — the deterministic fixup keeping checksums
+    /// bit-identical to sequential execution at any thread count — (4)
+    /// dynamic problems execute through real runtime chunk claiming
+    /// (stealing deques or a shared cursor) and reduce through the same
+    /// canonical fixup, and (5) every problem's cost sample is fed back
+    /// to the tuner, again in submission order.
     pub fn execute_batch(&self, problems: &[Problem]) -> BatchReport {
         let start = Instant::now();
         let workers = self.cfg.plan_workers.max(1);
@@ -218,9 +251,32 @@ impl ServeEngine {
             })
             .collect();
 
-        // Split decision, serial pre-dispatch: a problem splits when the
-        // pool can use it, it is big enough, and its plan streams (the
-        // descriptor is fetched through the cache exactly once here).
+        // Dynamic-execution decision, serial pre-dispatch: a problem on a
+        // dynamic schedule executes through real runtime chunk claiming
+        // when more than one thread runs and it is big enough to be worth
+        // dedicating the pool to (the split_min_atoms threshold — the
+        // same intra- vs inter-problem-parallelism tradeoff the split
+        // path makes).  Below the threshold, or at one thread, it runs
+        // whole inside the batch pool — the sequential canonical chunk
+        // walk — with identical checksums either way.
+        let dynamic_plans: Vec<Option<dynamic::DynamicDescriptor>> = problems
+            .iter()
+            .zip(&schedules)
+            .map(|(p, &kind)| {
+                if threads <= 1 || !kind.is_dynamic() || p.atoms() < self.cfg.split_min_atoms {
+                    return None;
+                }
+                match batch::plan(p, kind, &self.cache, workers) {
+                    PlanEntry::Dynamic(dd) if dd.chunks() > 0 => Some(dd),
+                    _ => None,
+                }
+            })
+            .collect();
+
+        // Split decision, serial pre-dispatch: a planned problem splits
+        // when the pool can use it, it is big enough, and its plan
+        // streams (the descriptor is fetched through the cache exactly
+        // once here).
         let split: Vec<Option<ScheduleDescriptor>> = problems
             .iter()
             .zip(&schedules)
@@ -228,7 +284,10 @@ impl ServeEngine {
                 // Non-streaming schedules (Binning/LRB) can never split:
                 // skip them here so their (materialized, expensive) plans
                 // are still built inside pool workers, not serially.
+                // Dynamic schedules never split either — they go through
+                // runtime claiming instead.
                 if threads <= 1
+                    || kind.is_dynamic()
                     || p.atoms() < self.cfg.split_min_atoms
                     || matches!(kind, ScheduleKind::Binning | ScheduleKind::Lrb)
                 {
@@ -247,8 +306,12 @@ impl ServeEngine {
         }
         let mut tasks: Vec<Task> = Vec::with_capacity(problems.len());
         let mut shard_counts = vec![0usize; problems.len()];
-        for (i, desc) in split.iter().enumerate() {
-            match desc {
+        for i in 0..problems.len() {
+            if dynamic_plans[i].is_some() {
+                // Executed through the claimed path below, not the pool.
+                continue;
+            }
+            match &split[i] {
                 Some(d) => {
                     let shards = threads.min(d.workers());
                     let per = d.workers().div_ceil(shards);
@@ -271,7 +334,7 @@ impl ServeEngine {
                 parts: batch::BoxedPartials,
             },
         }
-        let (outs, pool) = pool::execute_weighted(
+        let (outs, mut pool) = pool::execute_weighted(
             threads,
             &tasks,
             |t| match *t {
@@ -327,6 +390,41 @@ impl ServeEngine {
                 samples[i] = Some(ExecSample { checksum, cost });
             }
         }
+
+        // The claimed path: dynamic problems execute one after another,
+        // each internally parallel — `threads` workers claim the
+        // problem's canonical chunks at runtime (per-worker deques with
+        // stealing, or one shared cursor) and the segment-keyed canonical
+        // reduction makes the checksum identical to sequential execution
+        // no matter who claimed what.
+        let mut dynamic_problems = 0usize;
+        let mut dynamic_chunks = 0usize;
+        for (i, p) in problems.iter().enumerate() {
+            let Some(dd) = &dynamic_plans[i] else { continue };
+            let t0 = Instant::now();
+            let (parts, dstats) =
+                dynamic::execute_claimed(dd, threads, |j| batch::execute_chunk(p, dd, j));
+            let checksum = batch::reduce_shards(p, parts);
+            let cost = match self.cfg.feedback {
+                // Core-time, not latency: the claimed path monopolizes
+                // its claimant threads while whole problems are timed on
+                // one contended pool thread, so scaling elapsed by the
+                // engaged claimants keeps the tuner's samples comparable
+                // across the two execution modes (the split path's
+                // summed shard times have the same unit).
+                CostFeedback::Measured => {
+                    t0.elapsed().as_secs_f64() * threads.min(dd.chunks()).max(1) as f64
+                }
+                CostFeedback::Proxy => {
+                    batch::proxy_cost_entry(p, schedules[i], &PlanEntry::Dynamic(*dd))
+                }
+            };
+            samples[i] = Some(ExecSample { checksum, cost });
+            dynamic_problems += 1;
+            dynamic_chunks += dd.chunks();
+            pool.steals += dstats.steals;
+            pool.fetches += dstats.fetches;
+        }
         let samples: Vec<ExecSample> = samples
             .into_iter()
             .map(|s| s.expect("every problem executed"))
@@ -345,6 +443,13 @@ impl ServeEngine {
             schedules,
             split_problems: split.iter().flatten().count(),
             shards: shard_counts.iter().sum(),
+            dynamic_problems,
+            dynamic_chunks,
+            candidates: self
+                .tuner
+                .as_ref()
+                .map(|t| t.candidates().to_vec())
+                .unwrap_or_default(),
             tuner: stats,
             pool,
             cache: self.cache.stats(),
@@ -383,7 +488,10 @@ pub fn throughput_sweep(
     thread_counts
         .iter()
         .map(|&threads| {
-            let engine = ServeEngine::new(ServeConfig { threads, ..base });
+            let engine = ServeEngine::new(ServeConfig {
+                threads,
+                ..base.clone()
+            });
             let start = Instant::now();
             let mut problems = 0usize;
             let mut checksum = 0.0f64;
@@ -533,6 +641,63 @@ mod tests {
         assert!(split.shards >= mix.len(), "shards: {}", split.shards);
         // The two-phase fixup keeps the split result bit-identical.
         assert_eq!(split.checksums, whole.checksums);
+    }
+
+    #[test]
+    fn dynamic_schedules_claim_chunks_and_match_thread_mapped() {
+        let mix = tiny_mix();
+        let reference = ServeEngine::new(ServeConfig {
+            threads: 1,
+            schedule: SchedulePolicy::Fixed(ScheduleKind::ThreadMapped),
+            ..ServeConfig::default()
+        })
+        .execute_batch(&mix)
+        .checksums;
+        for kind in [
+            ScheduleKind::WorkStealing { chunk: 4 },
+            ScheduleKind::ChunkedFetch { chunk: 4 },
+        ] {
+            for threads in [1usize, 4] {
+                let engine = ServeEngine::new(ServeConfig {
+                    threads,
+                    schedule: SchedulePolicy::Fixed(kind),
+                    split_min_atoms: 1,
+                    ..ServeConfig::default()
+                });
+                let report = engine.execute_batch(&mix);
+                // Whole tiles in canonical order: identical numerics to
+                // the planned thread-mapped reference, at any threads.
+                assert_eq!(report.checksums, reference, "{kind:?} x{threads}");
+                if threads > 1 {
+                    assert_eq!(report.dynamic_problems, mix.len(), "{kind:?}");
+                    assert!(report.dynamic_chunks > 0);
+                    match kind {
+                        ScheduleKind::ChunkedFetch { .. } => assert_eq!(
+                            report.pool.fetches,
+                            report.dynamic_chunks as u64,
+                            "every chunk claimed through the cursor"
+                        ),
+                        _ => assert_eq!(report.pool.fetches, 0),
+                    }
+                } else {
+                    // One thread: the sequential canonical walk, no
+                    // claiming machinery.
+                    assert_eq!((report.dynamic_problems, report.dynamic_chunks), (0, 0));
+                    assert_eq!(report.pool.fetches, 0);
+                }
+            }
+            // Below the split threshold, small dynamic problems run whole
+            // inside the batch pool (inter-problem parallelism preserved)
+            // — same checksums, no claiming machinery.
+            let below = ServeEngine::new(ServeConfig {
+                threads: 4,
+                schedule: SchedulePolicy::Fixed(kind),
+                ..ServeConfig::default()
+            })
+            .execute_batch(&mix);
+            assert_eq!(below.checksums, reference, "{kind:?} below threshold");
+            assert_eq!((below.dynamic_problems, below.dynamic_chunks), (0, 0));
+        }
     }
 
     #[test]

@@ -26,6 +26,7 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
+use crate::balance::dynamic::DynamicDescriptor;
 use crate::balance::stream::ScheduleDescriptor;
 use crate::balance::{Assignment, ScheduleKind, WorkSource};
 
@@ -38,18 +39,26 @@ pub struct PlanKey {
     pub workers: usize,
 }
 
-/// A cached plan: an O(1) descriptor for streaming-capable schedules, or
-/// the materialized per-worker segment lists for Binning/LRB.
+/// A cached plan: an O(1) descriptor for streaming-capable planned
+/// schedules, an O(1) dynamic descriptor for the runtime-claimed kinds
+/// (nothing to materialize — the entry is just the canonical chunk
+/// decomposition of the fingerprinted tile set), or the materialized
+/// per-worker segment lists for Binning/LRB.
 #[derive(Debug, Clone)]
 pub enum PlanEntry {
     Descriptor(ScheduleDescriptor),
+    Dynamic(DynamicDescriptor),
     Materialized(Arc<Assignment>),
 }
 
 impl PlanEntry {
     /// Compute the entry for a (schedule, source, workers) triple:
-    /// descriptor when streaming-capable, materialized otherwise.
+    /// descriptor when streaming-capable, dynamic descriptor for dynamic
+    /// kinds, materialized otherwise.
     pub fn compute(schedule: ScheduleKind, src: &impl WorkSource, workers: usize) -> PlanEntry {
+        if let Some(dd) = DynamicDescriptor::new(schedule, src, workers) {
+            return PlanEntry::Dynamic(dd);
+        }
         match ScheduleDescriptor::new(schedule, src, workers) {
             Some(desc) => PlanEntry::Descriptor(desc),
             None => PlanEntry::Materialized(Arc::new(schedule.assign(src, workers))),
@@ -60,10 +69,17 @@ impl PlanEntry {
         matches!(self, PlanEntry::Descriptor(_))
     }
 
-    /// Number of workers the plan creates.
+    /// Whether this entry describes a dynamic (runtime-claimed) schedule.
+    pub fn is_dynamic(&self) -> bool {
+        matches!(self, PlanEntry::Dynamic(_))
+    }
+
+    /// Number of workers the plan creates (for dynamic entries: the
+    /// claimable chunks of the canonical decomposition).
     pub fn workers(&self) -> usize {
         match self {
             PlanEntry::Descriptor(d) => d.workers(),
+            PlanEntry::Dynamic(dd) => dd.chunks(),
             PlanEntry::Materialized(asg) => asg.workers.len(),
         }
     }
@@ -287,6 +303,37 @@ mod tests {
                 "{kind:?} has no streaming descriptor"
             );
         }
+    }
+
+    #[test]
+    fn dynamic_kinds_cache_descriptor_only_entries() {
+        // Dynamic schedules have nothing to materialize: the cache holds
+        // only the O(1) chunk decomposition keyed by the tile-set
+        // fingerprint, never per-worker segment vectors.
+        let src = OffsetsSource::new(&OFFS);
+        let cache = PlanCache::new(16);
+        for (i, kind) in [
+            ScheduleKind::WorkStealing { chunk: 2 },
+            ScheduleKind::ChunkedFetch { chunk: 2 },
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let k = PlanKey {
+                fingerprint: 200 + i as u64,
+                schedule: kind,
+                workers: 4,
+            };
+            let entry = cache.plan(k, &src);
+            assert!(entry.is_dynamic(), "{kind:?} must cache a dynamic entry");
+            let PlanEntry::Dynamic(dd) = entry else {
+                unreachable!()
+            };
+            assert_eq!(dd.kind, kind);
+            assert_eq!(dd.chunks(), 1); // 2 tiles / chunk 2
+            assert_eq!(dd.pool, 4);
+        }
+        assert_eq!(cache.stats().misses, 2);
     }
 
     #[test]

@@ -18,13 +18,20 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::thread;
 
-/// Aggregate pop/steal counters for one batch execution.
+/// Aggregate pop/steal/fetch counters for one batch execution.
+///
+/// `pops` and `steals` come from this pool's deques; dynamic problems
+/// executed through [`crate::balance::dynamic`] fold their claim counters
+/// in too (chunk steals into `steals`, cursor claims into `fetches`), so
+/// one report shows all runtime balancing that happened in a batch.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PoolStats {
     /// Jobs taken from the worker's own deque.
     pub pops: u64,
-    /// Jobs stolen from another worker's deque.
+    /// Jobs (or dynamic chunks) stolen from another worker's deque.
     pub steals: u64,
+    /// Dynamic chunks claimed from a shared atomic cursor (chunked fetch).
+    pub fetches: u64,
     /// Workers that actually ran (after clamping to the job count).
     pub threads: usize,
 }
@@ -53,8 +60,7 @@ where
 /// [`execute`] with weight-aware seeding: jobs are placed heaviest-first
 /// onto the least-loaded deque (LPT), so a batch holding one huge
 /// problem's shards next to many small whole problems starts balanced
-/// instead of relying purely on stealing.  Deterministic: ties break on
-/// the lower job index / worker index.
+/// instead of relying purely on stealing.  Seeding is [`lpt_seed`].
 pub fn execute_weighted<J, T, F, W>(
     threads: usize,
     jobs: &[J],
@@ -67,26 +73,37 @@ where
     F: Fn(&J) -> T + Sync,
     W: Fn(&J) -> u64,
 {
-    let seed = |threads: usize| -> Vec<VecDeque<usize>> {
-        let mut order: Vec<usize> = (0..jobs.len()).collect();
-        // Stable sort: equal weights keep submission order.
-        order.sort_by_key(|&i| std::cmp::Reverse(weight(&jobs[i])));
-        let mut seeds: Vec<VecDeque<usize>> = (0..threads).map(|_| VecDeque::new()).collect();
-        let mut loads = vec![0u128; threads];
-        for i in order {
-            let w = (0..threads)
-                .min_by_key(|&t| loads[t])
-                .expect("at least one worker");
-            seeds[w].push_back(i);
-            loads[w] += u128::from(weight(&jobs[i]).max(1));
-        }
-        seeds
-    };
-    run_pool(threads, jobs, seed, run)
+    let weights: Vec<u64> = jobs.iter().map(&weight).collect();
+    run_pool(threads, jobs, |threads| lpt_seed(&weights, threads), run)
+}
+
+/// Deterministic LPT seeding: jobs sorted heaviest-first — ties broken
+/// explicitly on the lower job index, never on incidental sort-internal
+/// order — each placed on the least-loaded deque (load ties keep the
+/// lower worker index).  Fully determined by (weights, threads), which
+/// the seeding-order test pins.
+pub fn lpt_seed(weights: &[u64], threads: usize) -> Vec<VecDeque<usize>> {
+    let threads = threads.max(1);
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_unstable_by_key(|&i| (std::cmp::Reverse(weights[i]), i));
+    let mut seeds: Vec<VecDeque<usize>> = (0..threads).map(|_| VecDeque::new()).collect();
+    let mut loads = vec![0u128; threads];
+    for i in order {
+        let w = (0..threads)
+            .min_by_key(|&t| loads[t])
+            .expect("at least one worker");
+        seeds[w].push_back(i);
+        loads[w] += u128::from(weights[i].max(1));
+    }
+    seeds
 }
 
 /// The shared pool body: clamp threads, seed the deques, run the
 /// pop-own / steal-from-richest worker loop, return results in job order.
+///
+/// NOTE: `balance/dynamic.rs::execute_stealing` mirrors this loop at
+/// chunk granularity (`balance` cannot depend on `serve`); a change to
+/// the termination or ordering protocol here must be applied there too.
 fn run_pool<J, T, F>(
     threads: usize,
     jobs: &[J],
@@ -104,6 +121,7 @@ where
         let stats = PoolStats {
             pops: jobs.len() as u64,
             steals: 0,
+            fetches: 0,
             threads: 1,
         };
         return (results, stats);
@@ -170,6 +188,7 @@ where
     let stats = PoolStats {
         pops: pops.load(Ordering::Relaxed),
         steals: steals.load(Ordering::Relaxed),
+        fetches: 0,
         threads,
     };
     (results, stats)
@@ -230,6 +249,27 @@ mod tests {
         let want: Vec<u64> = jobs.iter().map(|&j| j * 3).collect();
         assert_eq!(got, want);
         assert_eq!(stats.pops + stats.steals, jobs.len() as u64);
+    }
+
+    #[test]
+    fn lpt_seeding_order_is_pinned_and_ties_break_on_job_index() {
+        // Equal weights: LPT must fall back to job-index order, not
+        // whatever the sort happened to leave — pinned exactly.
+        let seeds = lpt_seed(&[7, 7, 7, 7, 7], 2);
+        let as_vecs: Vec<Vec<usize>> = seeds.iter().map(|q| q.iter().copied().collect()).collect();
+        assert_eq!(as_vecs, vec![vec![0, 2, 4], vec![1, 3]]);
+
+        // Mixed weights: heaviest first, equal-weight runs in index order,
+        // load ties to the lower worker index.
+        let seeds = lpt_seed(&[1, 8, 8, 2, 1], 2);
+        let as_vecs: Vec<Vec<usize>> = seeds.iter().map(|q| q.iter().copied().collect()).collect();
+        // Order placed: 1 -> w0 (loads 8,0), 2 -> w1 (8,8), 3 -> w0 on
+        // the load tie (10,8), 0 -> w1 (10,9), 4 -> w1 again (10,10).
+        assert_eq!(as_vecs, vec![vec![1, 3], vec![2, 0, 4]]);
+
+        // Degenerate shapes stay well-formed.
+        assert_eq!(lpt_seed(&[], 3).len(), 3);
+        assert_eq!(lpt_seed(&[5], 0).len(), 1);
     }
 
     #[test]

@@ -92,6 +92,10 @@ pub struct ScheduleTuner {
     epsilon: f64,
     min_samples: u32,
     rng: Mutex<Rng>,
+    /// The candidate set this tuner explores ([`CANDIDATES`] unless
+    /// overridden via [`ScheduleTuner::with_candidates`], e.g. from the
+    /// CLI's `--candidates` list).
+    candidates: Vec<ScheduleKind>,
 }
 
 impl ScheduleTuner {
@@ -101,7 +105,24 @@ impl ScheduleTuner {
             epsilon: epsilon.clamp(0.0, 1.0),
             min_samples: min_samples.max(1),
             rng: Mutex::new(Rng::new(seed)),
+            candidates: CANDIDATES.to_vec(),
         }
+    }
+
+    /// Replace the candidate set (an empty slice keeps the default
+    /// [`CANDIDATES`]).  Duplicates are dropped, order is preserved —
+    /// warmup explores and ties resolve in this order.
+    pub fn with_candidates(mut self, candidates: &[ScheduleKind]) -> Self {
+        if !candidates.is_empty() {
+            let mut set = Vec::with_capacity(candidates.len());
+            for &kind in candidates {
+                if !set.contains(&kind) {
+                    set.push(kind);
+                }
+            }
+            self.candidates = set;
+        }
+        self
     }
 
     pub fn from_policy(policy: SchedulePolicy) -> Option<ScheduleTuner> {
@@ -117,6 +138,11 @@ impl ScheduleTuner {
 
     pub fn history(&self) -> &PerfHistory {
         &self.history
+    }
+
+    /// The candidate set this tuner explores.
+    pub fn candidates(&self) -> &[ScheduleKind] {
+        &self.candidates
     }
 
     /// Choose a schedule for a fingerprint (see module docs for the
@@ -135,19 +161,26 @@ impl ScheduleTuner {
         // candidate); cold start, warmup target and EWMA argmin are all
         // answered from it — this runs serially per problem on the
         // engine's pre-dispatch path.
-        let estimates = self.history.snapshot(fingerprint, workers);
+        let estimates = self.history.snapshot(&self.candidates, fingerprint, workers);
         let no_samples = estimates
             .iter()
             .all(|(_, e)| e.map(|e| e.samples).unwrap_or(0) == 0);
         if no_samples {
-            return (prior(), Decision::Prior);
+            let kind = prior();
+            if self.candidates.contains(&kind) {
+                return (kind, Decision::Prior);
+            }
+            // A prior outside the candidate set can never seed the
+            // candidates' history, so returning it would lock this
+            // fingerprint out of warmup forever (restricted --candidates
+            // sets hit this); fall through to forced exploration instead.
         }
         if let Some(kind) = least_sampled_of(&estimates, self.min_samples) {
             return (kind, Decision::Explore);
         }
         let mut rng = self.rng.lock().unwrap();
         if rng.f64() < self.epsilon {
-            let kind = CANDIDATES[rng.below(CANDIDATES.len())];
+            let kind = self.candidates[rng.below(self.candidates.len())];
             return (kind, Decision::Explore);
         }
         drop(rng);
@@ -172,7 +205,8 @@ impl ScheduleTuner {
     /// Current converged pick for a fingerprint, if the history supports
     /// one (exploit-only, no exploration draw).
     pub fn best(&self, fingerprint: u64, workers: usize) -> Option<ScheduleKind> {
-        self.history.best(fingerprint, workers, self.min_samples)
+        self.history
+            .best(&self.candidates, fingerprint, workers, self.min_samples)
     }
 }
 
@@ -265,6 +299,30 @@ mod tests {
                 b.select(FP, W, || ScheduleKind::MergePath)
             );
         }
+    }
+
+    #[test]
+    fn restricted_candidate_set_bounds_selection() {
+        let set = [
+            ScheduleKind::MergePath,
+            ScheduleKind::WorkStealing { chunk: 8 },
+        ];
+        let t = ScheduleTuner::new(0.5, 1, 3).with_candidates(&set);
+        assert_eq!(t.candidates(), &set);
+        for _ in 0..50 {
+            let (kind, decision) = t.select(FP, W, || ScheduleKind::MergePath);
+            assert!(
+                set.contains(&kind),
+                "{kind:?} selected outside the candidate set ({decision:?})"
+            );
+            t.record(FP, kind, W, 5.0);
+        }
+        // Empty override keeps the default set; duplicates collapse.
+        let d = ScheduleTuner::new(0.1, 1, 3).with_candidates(&[]);
+        assert_eq!(d.candidates(), &CANDIDATES);
+        let dup = ScheduleTuner::new(0.1, 1, 3)
+            .with_candidates(&[ScheduleKind::MergePath, ScheduleKind::MergePath]);
+        assert_eq!(dup.candidates(), &[ScheduleKind::MergePath]);
     }
 
     #[test]

@@ -29,6 +29,33 @@ pub fn uniform(rows: usize, cols: usize, nnz_per_row: usize, seed: u64) -> Csr {
     Csr::from_coo(&coo)
 }
 
+/// Closed-form "hotrow" matrix: a contiguous block of `hot` rows holding
+/// `hot_len` nonzeros each ahead of a uniform `tail_len` tail — the
+/// blocked skew that quantizes badly under contiguous static shares and
+/// strided tile maps, which is where dynamic chunk claiming wins.  No RNG
+/// anywhere (columns stride deterministically, values are a fixed ramp),
+/// so landscape baselines over these tile sets regenerate by formula.
+pub fn hotrow(rows: usize, cols: usize, hot: usize, hot_len: usize, tail_len: usize) -> Csr {
+    let cols = cols.max(1);
+    let hot = hot.min(rows);
+    let mut offsets = Vec::with_capacity(rows + 1);
+    let mut indices: Vec<u32> = Vec::new();
+    let mut values: Vec<f64> = Vec::new();
+    offsets.push(0usize);
+    for r in 0..rows {
+        let row_len = if r < hot { hot_len } else { tail_len };
+        let len = row_len.min(cols);
+        for j in 0..len {
+            // Distinct columns per row: j strides 1, the row offsets the
+            // start so the band wraps differently per row.
+            indices.push((((r * 7) + j) % cols) as u32);
+            values.push(0.5 + ((r + j) % 13) as f64 * 0.25);
+        }
+        offsets.push(indices.len());
+    }
+    Csr::from_parts(rows, cols, offsets, indices, values).expect("hotrow shape is well-formed")
+}
+
 /// Power-law row lengths (Zipf exponent `alpha`, typical 1.6–2.2): a few
 /// enormous rows, a long tail of tiny ones — the scale-free imbalance case.
 pub fn power_law(rows: usize, cols: usize, max_degree: usize, alpha: f64, seed: u64) -> Csr {
@@ -125,6 +152,23 @@ pub fn wide_short(rows: usize, cols: usize, nnz_per_row: usize, seed: u64) -> Cs
 mod tests {
     use super::*;
     use crate::sparse::stats;
+
+    #[test]
+    fn hotrow_is_closed_form_and_blocked() {
+        let a = hotrow(128, 128, 8, 32, 4);
+        assert_eq!((a.rows, a.cols), (128, 128));
+        for r in 0..8 {
+            assert_eq!(a.row_nnz(r), 32, "hot row {r}");
+        }
+        for r in 8..128 {
+            assert_eq!(a.row_nnz(r), 4, "tail row {r}");
+        }
+        // Closed form: bit-identical regeneration, no RNG state anywhere.
+        assert_eq!(hotrow(128, 128, 8, 32, 4), a);
+        // Row lengths clamp to the column count.
+        let tiny = hotrow(4, 2, 2, 100, 50);
+        assert!(tiny.offsets.windows(2).all(|w| w[1] - w[0] <= 2));
+    }
 
     #[test]
     fn uniform_row_lengths_regular() {

@@ -1,0 +1,226 @@
+//! Dynamic schedules, end to end: the acceptance matrix for the §3.3.5
+//! promotion from simulation to the serve engine.
+//!
+//! * For every kernel family (spmv, spmm, spgemm, gemm, frontier), the
+//!   checksum under `WorkStealing` and `ChunkedFetch` at 1/2/4/8 threads
+//!   is **bit-identical** to the planned `ThreadMapped` checksum for the
+//!   same problem — the segment-keyed canonical reduction at work.
+//! * The `balance/queue` virtual-time simulation and the real executors
+//!   agree on the same workload: same tiles processed, same total atoms,
+//!   and the simulated chunked-fetch pop count equals the real cursor
+//!   claim count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use gpulb::balance::dynamic::{self, DynamicDescriptor};
+use gpulb::balance::queue::{self, QueuePolicy, QueueParams};
+use gpulb::balance::{OffsetsSource, ScheduleKind};
+use gpulb::serve::{Problem, SchedulePolicy, ServeConfig, ServeEngine};
+use gpulb::sparse::gen;
+use gpulb::streamk::{Blocking, GemmShape};
+
+const DYNAMIC_KINDS: [ScheduleKind; 2] = [
+    ScheduleKind::WorkStealing { chunk: 8 },
+    ScheduleKind::ChunkedFetch { chunk: 8 },
+];
+
+/// One problem per kernel family, sized so every family has real skew.
+fn five_kernel_mix() -> Vec<Problem> {
+    let a = Arc::new(gen::power_law(192, 192, 96, 1.6, 71));
+    let b = Arc::new(gen::uniform(192, 128, 4, 72));
+    let graph = Arc::new(gen::rmat(7, 4, 73));
+    let frontier: Vec<u32> = (0..graph.rows as u32).step_by(2).collect();
+    vec![
+        Problem::spmv(a.clone()),
+        Problem::spmm(a.clone(), 3),
+        Problem::spgemm(a, b),
+        Problem::gemm(GemmShape::new(64, 48, 40), Blocking::new(16, 16, 8), 9),
+        Problem::frontier(graph, frontier),
+    ]
+}
+
+fn engine(threads: usize, kind: ScheduleKind) -> ServeEngine {
+    ServeEngine::new(ServeConfig {
+        threads,
+        plan_workers: 64,
+        schedule: SchedulePolicy::Fixed(kind),
+        // Force the real claimed path for every problem size (dynamic
+        // problems below this threshold run whole in the batch pool).
+        split_min_atoms: 1,
+        ..ServeConfig::default()
+    })
+}
+
+#[test]
+fn dynamic_checksums_bit_identical_to_thread_mapped_across_threads() {
+    let mix = five_kernel_mix();
+    let reference = engine(1, ScheduleKind::ThreadMapped)
+        .execute_batch(&mix)
+        .checksums;
+    for kind in DYNAMIC_KINDS {
+        for threads in [1usize, 2, 4, 8] {
+            let report = engine(threads, kind).execute_batch(&mix);
+            for (i, (got, want)) in report.checksums.iter().zip(&reference).enumerate() {
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "{} under {kind:?} x{threads} diverged from planned \
+                     thread-mapped: {got} vs {want}",
+                    mix[i].kind_name()
+                );
+            }
+            if threads > 1 {
+                assert_eq!(
+                    report.dynamic_problems,
+                    mix.len(),
+                    "{kind:?} x{threads}: every problem must take the claimed path"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dynamic_checksums_are_repeatable_across_runs() {
+    // Claim order is nondeterministic; results must not be.  Re-running
+    // the same dynamic batch at high thread counts lands on the same bits
+    // every time.
+    let mix = five_kernel_mix();
+    for kind in DYNAMIC_KINDS {
+        let first = engine(8, kind).execute_batch(&mix).checksums;
+        for _ in 0..3 {
+            let again = engine(8, kind).execute_batch(&mix).checksums;
+            let same = first
+                .iter()
+                .zip(&again)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "{kind:?}: nondeterministic checksums");
+        }
+    }
+}
+
+#[test]
+fn queue_simulation_cross_validates_real_dynamic_execution() {
+    // The same workload, twice: once through the §3.3.5 virtual-time
+    // simulation (`balance/queue`), once through the real promoted
+    // executors — tiles, atoms and (for chunked fetch) claim counts must
+    // line up, and the real execution's numerics must match the planned
+    // reference.
+    let a = Arc::new(gen::hotrow(512, 512, 16, 64, 4));
+    let lens: Vec<usize> = (0..a.rows).map(|r| a.row_nnz(r)).collect();
+    let atoms: usize = lens.iter().sum();
+    assert_eq!(atoms, 16 * 64 + 496 * 4);
+    let threads = 4;
+    let chunk = 8usize;
+
+    // Virtual time: one task per tile, chunked fetch drains `chunk` tasks
+    // per synchronized pop.
+    let stealing_sim = queue::simulate(
+        QueuePolicy::Stealing,
+        threads,
+        lens.clone(),
+        |_| Vec::new(),
+        QueueParams::default(),
+    );
+    assert_eq!(stealing_sim.processed, a.rows, "sim must process every tile");
+    let fetch_sim = queue::simulate(
+        QueuePolicy::ChunkedFetch { chunk },
+        threads,
+        lens.clone(),
+        |_| Vec::new(),
+        QueueParams::default(),
+    );
+    assert_eq!(fetch_sim.processed, a.rows);
+
+    // Real time: the same tile set claimed in `chunk`-tile runs.
+    let offsets = a.offsets.clone();
+    let src = OffsetsSource::new(&offsets);
+    for kind in [
+        ScheduleKind::WorkStealing {
+            chunk: chunk as u32,
+        },
+        ScheduleKind::ChunkedFetch {
+            chunk: chunk as u32,
+        },
+    ] {
+        let dd = DynamicDescriptor::new(kind, &src, 64).unwrap();
+        let claimed_atoms = AtomicUsize::new(0);
+        let claimed_tiles = AtomicUsize::new(0);
+        let (chunks_seen, stats) = dynamic::execute_claimed(&dd, threads, |j| {
+            let t0 = j * chunk;
+            let t1 = (t0 + chunk).min(a.rows);
+            claimed_tiles.fetch_add(t1 - t0, Ordering::Relaxed);
+            claimed_atoms.fetch_add(offsets[t1] - offsets[t0], Ordering::Relaxed);
+            j
+        });
+        assert_eq!(chunks_seen.len(), dd.chunks(), "{kind:?}");
+        assert_eq!(stats.claims, dd.chunks() as u64);
+        // Exactly the simulation's coverage: every tile once, every atom
+        // once.
+        assert_eq!(claimed_tiles.into_inner(), a.rows, "{kind:?}");
+        assert_eq!(claimed_atoms.into_inner(), atoms, "{kind:?}");
+        if let ScheduleKind::ChunkedFetch { .. } = kind {
+            // One amortized synchronized claim per chunk — the very count
+            // the simulation models as `pops`.
+            assert_eq!(stats.fetches as usize, fetch_sim.pops, "{kind:?}");
+        }
+    }
+
+    // And the numerics: real dynamic execution of this matrix equals the
+    // planned thread-mapped checksum, bit for bit.
+    let mix = vec![Problem::spmv(a)];
+    let want = engine(1, ScheduleKind::ThreadMapped)
+        .execute_batch(&mix)
+        .checksums[0];
+    for kind in DYNAMIC_KINDS {
+        let got = engine(threads, kind).execute_batch(&mix).checksums[0];
+        assert_eq!(got.to_bits(), want.to_bits(), "{kind:?}");
+    }
+}
+
+#[test]
+fn adaptive_with_restricted_dynamic_candidates_keeps_bitwise_determinism() {
+    // An adaptive engine exploring a CLI-style restricted candidate set
+    // that mixes a planned schedule with the dynamic kinds: traces replay
+    // per seed and checksums stay bit-identical across thread counts even
+    // though dynamic executions claim at runtime.
+    let mix = five_kernel_mix();
+    let candidates = vec![ScheduleKind::MergePath, DYNAMIC_KINDS[0], DYNAMIC_KINDS[1]];
+    let cfg = |threads: usize| ServeConfig {
+        threads,
+        plan_workers: 64,
+        schedule: SchedulePolicy::Adaptive {
+            epsilon: 0.05,
+            min_samples: 1,
+            seed: 99,
+        },
+        feedback: gpulb::serve::CostFeedback::Proxy,
+        candidates: candidates.clone(),
+        split_min_atoms: 1,
+        ..ServeConfig::default()
+    };
+    let runs: Vec<(Vec<Vec<ScheduleKind>>, Vec<Vec<u64>>)> = [1usize, 4]
+        .iter()
+        .map(|&threads| {
+            let e = ServeEngine::new(cfg(threads));
+            let mut traces = Vec::new();
+            let mut sums = Vec::new();
+            for _ in 0..8 {
+                let report = e.execute_batch(&mix);
+                assert_eq!(report.candidates, candidates, "candidate set surfaced");
+                assert!(
+                    report.schedules.iter().all(|k| candidates.contains(k)),
+                    "selection outside the restricted set"
+                );
+                sums.push(report.checksums.iter().map(|c| c.to_bits()).collect());
+                traces.push(report.schedules);
+            }
+            (traces, sums)
+        })
+        .collect();
+    assert_eq!(runs[0].0, runs[1].0, "trace must not depend on threads");
+    assert_eq!(runs[0].1, runs[1].1, "checksums must not depend on threads");
+    // The dynamic kinds actually got explored, not just listed.
+    assert!(runs[0].0.iter().flatten().any(|k| k.is_dynamic()));
+}

@@ -2,18 +2,19 @@
 //!
 //! A synthetic two-fingerprint landscape where the deterministic proxy
 //! meter makes `ThreadMapped` measurably best for one work source (a ring
-//! of 1-atom tiles) and `MergePath` for the other (a few huge tiles next
-//! to thousands of tiny ones).  The adaptive engine must converge to the
-//! per-fingerprint best for >= 90% of post-warmup executions, keep
-//! checksums bit-identical to every `Fixed` run across 1/2/4/8 threads
-//! (weights are 1.0, so all reductions are exact integer sums), replay the
-//! same schedule trace for the same seed at any thread count, and use the
-//! shape prior on a cold start.
+//! of 1-atom tiles) and the dynamic `ChunkedFetch` for the other (a few
+//! huge tiles next to thousands of tiny ones — runtime chunk claiming
+//! spreads the hubs where static shares stack them).  The adaptive engine
+//! must converge to the per-fingerprint best for >= 90% of post-warmup
+//! executions, keep checksums bit-identical to every `Fixed` run across
+//! 1/2/4/8 threads (weights are 1.0, so all reductions are exact integer
+//! sums), replay the same schedule trace for the same seed at any thread
+//! count, and use the shape prior on a cold start.
 
 use std::sync::Arc;
 
-use gpulb::balance::adaptive::{proxy_cost, CANDIDATES};
-use gpulb::balance::{OffsetsSource, ScheduleKind, WorkSource};
+use gpulb::balance::adaptive::{proxy_cost_for, CANDIDATES};
+use gpulb::balance::ScheduleKind;
 use gpulb::serve::{CostFeedback, Problem, SchedulePolicy, ServeConfig, ServeEngine};
 use gpulb::sparse::Csr;
 
@@ -56,7 +57,8 @@ fn ring_graph(n: usize) -> Arc<Csr> {
 }
 
 /// A few hub vertices with huge unit-weight neighbor lists next to a long
-/// tail of degree-1 vertices: the mixed-skew source merge-path wins.
+/// tail of degree-1 vertices: the mixed-skew source where runtime chunk
+/// claiming (chunked fetch) beats every static plan.
 fn hub_tail_graph(hubs: usize, hub_degree: usize, tail: usize) -> Arc<Csr> {
     let rows = hubs + tail;
     let cols = hub_degree;
@@ -90,14 +92,11 @@ fn problem_offsets(p: &Problem) -> Vec<usize> {
     p.offsets().to_vec()
 }
 
-/// Proxy-cost argmin over the candidate set — the schedule a converged
-/// tuner must settle on.
+/// Proxy-cost argmin over the candidate set (planned and dynamic, each
+/// through its own cost model) — the schedule a converged tuner must
+/// settle on.
 fn proxy_argmin(offsets: &[usize]) -> ScheduleKind {
-    let src = OffsetsSource::new(offsets);
-    let cost = |kind: ScheduleKind| {
-        let plan = kind.assign(&src, PLAN_WORKERS);
-        proxy_cost(kind, &plan, src.num_tiles(), src.num_atoms())
-    };
+    let cost = |kind: ScheduleKind| proxy_cost_for(kind, offsets, PLAN_WORKERS);
     CANDIDATES
         .iter()
         .copied()
@@ -120,11 +119,19 @@ fn two_fingerprint_mix() -> Vec<Problem> {
 #[test]
 fn landscape_has_distinct_per_fingerprint_winners() {
     // The premise of every test below: the proxy meter separates the two
-    // fingerprints with different best schedules.
+    // fingerprints with different best schedules — and the skewed one's
+    // winner is *dynamic*, so convergence below proves the tuner
+    // discovers runtime claiming from measured feedback alone.
     let u = proxy_argmin(&problem_offsets(&uniform_problem()));
     let s = proxy_argmin(&problem_offsets(&skewed_problem()));
     assert_eq!(u, ScheduleKind::ThreadMapped);
-    assert_eq!(s, ScheduleKind::MergePath);
+    assert_eq!(
+        s,
+        ScheduleKind::ChunkedFetch {
+            chunk: gpulb::balance::dynamic::DEFAULT_CHUNK
+        }
+    );
+    assert!(s.is_dynamic());
 }
 
 #[test]
@@ -138,7 +145,7 @@ fn adaptive_converges_to_per_fingerprint_best() {
 
     let engine = ServeEngine::new(adaptive_cfg(2));
     // Warmup: cold-start prior + forced exploration of all candidates
-    // (4 candidates x min_samples 2 = 8 selections per fingerprint; the
+    // (6 candidates x min_samples 2 = 12 selections per fingerprint; the
     // mix supplies 4 per batch).
     for _ in 0..5 {
         engine.execute_batch(&mix);

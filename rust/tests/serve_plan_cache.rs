@@ -38,6 +38,7 @@ fn random_matrix(rng: &mut Rng) -> Csr {
 fn materialized(entry: &PlanEntry, a: &Csr) -> gpulb::balance::Assignment {
     match entry {
         PlanEntry::Descriptor(d) => stream::materialize(*d, a),
+        PlanEntry::Dynamic(dd) => dd.assign_snapshot(a),
         PlanEntry::Materialized(asg) => (**asg).clone(),
     }
 }

@@ -1,0 +1,238 @@
+#!/usr/bin/env python3
+"""Exact Python port of the deterministic proxy-cost pipeline.
+
+Ports `balance::stream` worker segment walks, `balance::adaptive`
+proxy costs (planned schedules) and `balance::dynamic::proxy_cost_dynamic`
+(the greedy claiming model), plus the converged-pick argmin, so landscape
+baseline rows over *closed-form* tile sets (no RNG) can be computed — and
+audited — without a Rust toolchain.  Used to produce the committed
+`hotrow` row of BENCH_baseline.json and to double-check the winners the
+schedule-selection tests pin.
+
+Run: python3 tools/proxy_port.py
+"""
+import math
+
+SEG_OVERHEAD = 2
+
+# Candidate order mirrors balance::adaptive::CANDIDATES (ties keep the
+# earlier entry).
+CANDIDATES = [
+    ("thread-mapped", "tm", None),
+    ("warp-mapped", "gm", 32),
+    ("merge-path", "mp", None),
+    ("nonzero-split", "nz", None),
+    ("work-stealing", "dyn", ("steal", 8)),
+    ("chunked-fetch", "dyn", ("fetch", 8)),
+]
+
+
+def merge_path_search(offsets, d):
+    tiles = len(offsets) - 1
+    atoms = offsets[-1]
+    lo = max(d - atoms, 0)
+    hi = min(d, tiles)
+    while lo < hi:
+        mid = lo + -(-(hi - lo) // 2)
+        if offsets[mid] <= d - mid:
+            lo = mid
+        else:
+            hi = mid - 1
+    return lo, d - lo
+
+
+def atom_range_segments(offsets, begin, end):
+    """Segments of atom range [begin, end): (tile, length) pairs."""
+    if begin >= end:
+        return []
+    # tile_of_atom(begin)
+    import bisect
+    row = bisect.bisect_right(offsets, begin) - 1
+    out = []
+    cursor = begin
+    while cursor < end:
+        while row + 1 < len(offsets) and offsets[row + 1] <= cursor:
+            row += 1
+        seg_end = min(end, offsets[row + 1])
+        out.append((row, seg_end - cursor))
+        cursor = seg_end
+    return out
+
+
+def planned_worker_seglens(kind, offsets, workers):
+    """Per-worker [seg lengths] for a planned streaming schedule."""
+    tiles = len(offsets) - 1
+    atoms = offsets[-1]
+    w_ = max(workers, 1)
+    out = []
+    if kind == "tm":
+        n_workers = min(w_, max(tiles, 1))
+        for w in range(n_workers):
+            out.append([offsets[t + 1] - offsets[t] for t in range(w, tiles, w_)])
+    elif kind == "gm":
+        per_group = max(-(-tiles // w_), 1)
+        n_workers = -(-tiles // per_group) if tiles else 0
+        for w in range(n_workers):
+            t0, t1 = w * per_group, min((w + 1) * per_group, tiles)
+            out.append([offsets[t + 1] - offsets[t] for t in range(t0, t1)])
+    elif kind == "mp":
+        total = tiles + atoms
+        per_diag = -(-total // w_) if total else 0
+        n_workers = 1 if total == 0 else -(-total // per_diag)
+        for w in range(n_workers):
+            d0, d1 = min(w * per_diag, total), min((w + 1) * per_diag, total)
+            (_, a0) = merge_path_search(offsets, d0)
+            (_, a1) = merge_path_search(offsets, d1)
+            out.append([l for (_, l) in atom_range_segments(offsets, a0, a1)])
+    elif kind == "nz":
+        per_worker = max(-(-atoms // w_), 1)
+        n_workers = 1 if atoms == 0 else -(-atoms // per_worker)
+        for w in range(n_workers):
+            a0, a1 = min(w * per_worker, atoms), min((w + 1) * per_worker, atoms)
+            out.append([l for (_, l) in atom_range_segments(offsets, a0, a1)])
+    return out
+
+
+def setup_cost(kind, tiles, atoms):
+    if kind == "tm":
+        return 0.0
+    if kind == "gm":
+        return 4.0
+    if kind == "mp":
+        return 2.0 * math.log2(float(tiles + atoms) + 1.0)
+    if kind == "nz":
+        return math.log2(float(tiles) + 1.0)
+    raise ValueError(kind)
+
+
+def proxy_planned(kind, g, offsets, workers):
+    gg = g if g else 1
+    makespan = 0
+    for seglens in planned_worker_seglens(kind, offsets, workers):
+        steps = sum(SEG_OVERHEAD + -(-l // gg) for l in seglens)
+        makespan = max(makespan, steps)
+    tiles, atoms = len(offsets) - 1, offsets[-1]
+    return setup_cost(kind, tiles, atoms) + float(makespan)
+
+
+CLAIM = {"fetch": 1, "steal": 2}
+SETUP_DYN = {"fetch": 4.0, "steal": 6.0}
+
+
+def proxy_dynamic(policy, chunk, offsets, pool):
+    tiles = len(offsets) - 1
+    g = 32
+    chunks = -(-tiles // chunk)
+    pool = max(1, min(pool, max(chunks, 1)))
+    loads = [0] * pool
+    for j in range(chunks):
+        t0, t1 = j * chunk, min((j + 1) * chunk, tiles)
+        steps = CLAIM[policy]
+        for t in range(t0, t1):
+            steps += SEG_OVERHEAD + -(-(offsets[t + 1] - offsets[t]) // g)
+        w = min(range(pool), key=lambda i: loads[i])
+        loads[w] += steps
+    return SETUP_DYN[policy] + float(max(loads) if loads else 0)
+
+
+def proxy_for(cand, offsets, workers):
+    name, kind, param = cand
+    if kind == "dyn":
+        policy, chunk = param
+        return proxy_dynamic(policy, chunk, offsets, workers)
+    return proxy_planned(kind, param, offsets, workers)
+
+
+def argmin_candidate(offsets, workers):
+    best = None
+    for cand in CANDIDATES:
+        c = proxy_for(cand, offsets, workers)
+        if best is None or c < best[1]:
+            best = (cand[0], c)
+    return best
+
+
+def prefix(lens):
+    out = [0]
+    for l in lens:
+        out.append(out[-1] + l)
+    return out
+
+
+def hotrow_entries(n):
+    block = lambda hot, hot_len, tail: [hot_len if r < hot else tail for r in range(n)]
+    stair = [
+        1024 if r < n // 256 else (128 if r < n // 16 else 8) for r in range(n)
+    ]
+    return [
+        (f"hotrow_block_{n}", block(n // 64, 512, 16)),
+        (f"hotrow_wide_{n}", block(n // 16, 256, 8)),
+        (f"hotrow_stair_{n}", stair),
+    ]
+
+
+def geomean(xs):
+    logs = [math.log(x) for x in xs if x > 0.0]
+    return math.exp(sum(logs) / len(logs))
+
+
+def report(title, entries, workers):
+    print(f"== {title} (plan workers {workers})")
+    values = []
+    for name, lens in entries:
+        offsets = prefix(lens)
+        atoms = offsets[-1]
+        costs = {c[0]: proxy_for(c, offsets, workers) for c in CANDIDATES}
+        win, win_cost = argmin_candidate(offsets, workers)
+        values.append(atoms / max(win_cost, 1e-9))
+        detail = "  ".join(f"{k}={v:.1f}" for k, v in costs.items())
+        print(f"  {name}: winner={win} cost={win_cost:.3f}  [{detail}]")
+    print(f"  family geomean throughput: {geomean(values):.6f}")
+    return geomean(values)
+
+
+if __name__ == "__main__":
+    # The committed BENCH_baseline.json hotrow row (scale 1, plan workers
+    # 256 = serve::landscape::DEFAULT_PLAN_WORKERS).
+    report("hotrow scale 1 (baseline row)", hotrow_entries(4096), 256)
+
+    # The scale-0 landscape the convergence test sweeps at 64 workers.
+    report("hotrow scale 0 (test)", hotrow_entries(1024), 64)
+    report(
+        "uniform_256 scale 0 (test)",
+        [("uniform_256_d8", [8] * 256), ("uniform_256_d32", [32] * 256)],
+        64,
+    )
+
+    # Winners the serve_adaptive tests pin at 64 plan workers.
+    report("ring 256x1 (serve_adaptive uniform)", [("ring", [1] * 256)], 64)
+    report(
+        "hub_tail 4x4096 + 4096x1 (serve_adaptive skewed)",
+        [("hub_tail", [4096] * 4 + [1] * 4096)],
+        64,
+    )
+
+    # Promoted spgemm/spmm families (scale 1): committed values must not
+    # move, so the planned winners must survive the dynamic candidates.
+    n = 4096
+    hub = lambda big, small: [big if r < 4 else small for r in range(n)]
+    ramp = [8 + (r % 16) * 8 for r in range(n)]
+    band = [2 + r % 4 for r in range(n)]
+    report(
+        "promoted spgemm (scale 1)",
+        [
+            ("spgemm_uniform", [48] * n),
+            ("spgemm_hub", hub(8 * n, 16)),
+            ("spgemm_ramp", ramp),
+        ],
+        256,
+    )
+    report(
+        "promoted spmm (scale 1)",
+        [
+            ("spmm_uniform_d8", [8] * n),
+            ("spmm_hub", hub(n, 2)),
+            ("spmm_band", band),
+        ],
+        256,
+    )
