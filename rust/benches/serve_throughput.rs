@@ -32,7 +32,7 @@ fn main() {
         &mix,
         &[1, 2, 4, 8],
         batches,
-        serve::ServeConfig::default(),
+        serve::ServeConfig::builder().build().unwrap(),
         "BENCH_serve.json",
     )
     .unwrap();

@@ -1,5 +1,5 @@
 //! Measured-feedback schedule selection: the data structures behind the
-//! online tuner ([`crate::serve::tuner`]).
+//! serving layer's online tuner (`crate::serve::tuner`).
 //!
 //! The §4.5.2 heuristic and the roofline model ([`super::roofline`]) pick a
 //! schedule from *shape priors*; the related systems we track (Atos,
@@ -44,7 +44,7 @@ pub const CANDIDATES: [ScheduleKind; 6] = [
 ];
 
 /// Everything a measured cost depends on (mirrors
-/// [`crate::serve::plan_cache::PlanKey`]).
+/// [`crate::serve::PlanKey`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct PerfKey {
     pub fingerprint: u64,
@@ -62,7 +62,7 @@ pub struct CostEstimate {
 }
 
 /// Concurrent performance history: lock-striped `HashMap`s (the same
-/// read-mostly discipline as [`crate::serve::plan_cache::PlanCache`],
+/// read-mostly discipline as [`crate::serve::PlanCache`],
 /// sharded so recording from many workers doesn't serialize on one lock).
 pub struct PerfHistory {
     stripes: Vec<Mutex<HashMap<PerfKey, CostEstimate>>>,

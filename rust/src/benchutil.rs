@@ -181,31 +181,72 @@ pub fn write_throughput_json(
     Ok(())
 }
 
-/// One per-family aggregate for the landscape bench artifact
-/// (`BENCH_landscape.json` and the committed `BENCH_baseline.json`).
+/// Whether larger or smaller family values are better — throughput rows
+/// are higher-is-better, the ingest latency rows lower-is-better.  The
+/// JSON field is `"better": "higher" | "lower"`; documents without it
+/// (e.g. the pre-existing `BENCH_baseline.json`) parse as higher-is-better.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Direction {
+    #[default]
+    HigherIsBetter,
+    LowerIsBetter,
+}
+
+impl Direction {
+    fn as_json(self) -> &'static str {
+        match self {
+            Direction::HigherIsBetter => "higher",
+            Direction::LowerIsBetter => "lower",
+        }
+    }
+}
+
+/// One per-family aggregate for the landscape/ingest bench artifacts
+/// (`BENCH_landscape.json`, `BENCH_ingest.json`, and the committed
+/// baselines).
 #[derive(Debug, Clone, PartialEq)]
 pub struct FamilyPoint {
     pub family: String,
     pub problems: usize,
-    /// Geomean throughput in deterministic proxy units (atoms/proxy-step).
+    /// The family's scalar value — geomean throughput for landscape rows
+    /// (atoms/proxy-step), a latency percentile or request rate for
+    /// ingest rows.  The field name is historical.
     pub geomean_throughput: f64,
+    /// Which way improvement points for this family.
+    pub direction: Direction,
 }
 
 /// Render family points as a JSON document (hand-rolled like
 /// [`throughput_json`]; [`crate::jsonlite`] parses it back in
 /// [`diff_family_json`] and the tests).
 pub fn family_json(bench: &str, scale: usize, points: &[FamilyPoint]) -> String {
+    family_json_with_unit(bench, "atoms/proxy-step", scale, points)
+}
+
+/// [`family_json`] with an explicit `unit` string (the ingest artifact
+/// mixes milliseconds and requests/sec).
+pub fn family_json_with_unit(
+    bench: &str,
+    unit: &str,
+    scale: usize,
+    points: &[FamilyPoint],
+) -> String {
     let mut out = String::new();
     out.push_str("{\n");
     out.push_str(&format!("  \"bench\": \"{bench}\",\n"));
-    out.push_str("  \"unit\": \"atoms/proxy-step\",\n");
+    out.push_str(&format!("  \"unit\": \"{unit}\",\n"));
     out.push_str(&format!("  \"scale\": {scale},\n"));
     out.push_str("  \"families\": [\n");
     for (i, p) in points.iter().enumerate() {
         let sep = if i + 1 == points.len() { "" } else { "," };
         out.push_str(&format!(
-            "    {{\"family\": \"{}\", \"problems\": {}, \"geomean_throughput\": {:.6}}}{}\n",
-            p.family, p.problems, p.geomean_throughput, sep
+            "    {{\"family\": \"{}\", \"problems\": {}, \"geomean_throughput\": {:.6}, \
+             \"better\": \"{}\"}}{}\n",
+            p.family,
+            p.problems,
+            p.geomean_throughput,
+            p.direction.as_json(),
+            sep
         ));
     }
     out.push_str("  ]\n}\n");
@@ -229,21 +270,28 @@ pub struct FamilyDiff {
     pub family: String,
     pub base: f64,
     pub current: f64,
-    /// `current / base` — < 1 means the family got slower.
+    /// `current / base` — which side of 1 is a regression depends on
+    /// `direction`.
     pub ratio: f64,
+    /// Improvement direction (from the baseline document).
+    pub direction: Direction,
 }
 
 impl FamilyDiff {
-    /// A regression under `tolerance` (e.g. 0.2 = fail below 80% of base).
+    /// A regression under `tolerance` (e.g. 0.2 = fail below 80% of base
+    /// for higher-is-better families, above 120% for lower-is-better).
     pub fn is_regression(&self, tolerance: f64) -> bool {
-        self.ratio < 1.0 - tolerance
+        match self.direction {
+            Direction::HigherIsBetter => self.ratio < 1.0 - tolerance,
+            Direction::LowerIsBetter => self.ratio > 1.0 + tolerance,
+        }
     }
 }
 
 struct FamilyDoc {
     scale: u64,
-    /// (family, problems, geomean_throughput) in document order.
-    families: Vec<(String, u64, f64)>,
+    /// (family, problems, geomean_throughput, direction) in document order.
+    families: Vec<(String, u64, f64, Direction)>,
 }
 
 fn parse_families(text: &str) -> crate::Result<FamilyDoc> {
@@ -270,7 +318,13 @@ fn parse_families(text: &str) -> crate::Result<FamilyDoc> {
             .get("geomean_throughput")
             .and_then(|v| v.as_f64())
             .ok_or_else(|| anyhow::anyhow!("family {name} missing \"geomean_throughput\""))?;
-        families.push((name.to_string(), problems, value));
+        // Absent in older documents: default higher-is-better.
+        let direction = match f.get("better").and_then(|v| v.as_str()) {
+            None | Some("higher") => Direction::HigherIsBetter,
+            Some("lower") => Direction::LowerIsBetter,
+            Some(other) => anyhow::bail!("family {name} has unknown \"better\" value {other:?}"),
+        };
+        families.push((name.to_string(), problems, value, direction));
     }
     Ok(FamilyDoc { scale, families })
 }
@@ -291,16 +345,21 @@ pub fn diff_family_json(base_text: &str, current_text: &str) -> crate::Result<Ve
         current.scale
     );
     let mut out = Vec::with_capacity(base.families.len());
-    for (family, base_n, base_v) in base.families {
-        let (cur_n, cur_v) = current
+    for (family, base_n, base_v, base_dir) in base.families {
+        let (cur_n, cur_v, cur_dir) = current
             .families
             .iter()
-            .find(|(f, _, _)| *f == family)
-            .map(|&(_, n, v)| (n, v))
+            .find(|(f, _, _, _)| *f == family)
+            .map(|&(_, n, v, d)| (n, v, d))
             .ok_or_else(|| anyhow::anyhow!("family \"{family}\" missing from current results"))?;
         anyhow::ensure!(
             base_n == cur_n,
             "family \"{family}\" problem count changed ({base_n} vs {cur_n}): \
+             not comparable — refresh the baseline"
+        );
+        anyhow::ensure!(
+            base_dir == cur_dir,
+            "family \"{family}\" changed improvement direction: \
              not comparable — refresh the baseline"
         );
         let ratio = if base_v > 0.0 {
@@ -313,6 +372,7 @@ pub fn diff_family_json(base_text: &str, current_text: &str) -> crate::Result<Ve
             base: base_v,
             current: cur_v,
             ratio,
+            direction: base_dir,
         });
     }
     Ok(out)
@@ -384,11 +444,13 @@ mod tests {
                 family: "uniform".to_string(),
                 problems: 6,
                 geomean_throughput: 50.0,
+                direction: Direction::HigherIsBetter,
             },
             FamilyPoint {
                 family: "power-law".to_string(),
                 problems: 6,
                 geomean_throughput: 40.0,
+                direction: Direction::HigherIsBetter,
             },
         ]
     }
@@ -440,6 +502,53 @@ mod tests {
     fn diff_fails_on_missing_family() {
         let base = family_json("landscape", 1, &family_points());
         let current = family_json("landscape", 1, &family_points()[..1]);
+        assert!(diff_family_json(&base, &current).is_err());
+    }
+
+    fn latency_points(p95: f64) -> Vec<FamilyPoint> {
+        vec![FamilyPoint {
+            family: "latency_p95_ms".to_string(),
+            problems: 64,
+            geomean_throughput: p95,
+            direction: Direction::LowerIsBetter,
+        }]
+    }
+
+    #[test]
+    fn lower_is_better_families_regress_upward() {
+        let base = family_json_with_unit("ingest", "ms", 1, &latency_points(2.0));
+        // 50% slower (higher latency): a regression at 20% tolerance.
+        let current = family_json_with_unit("ingest", "ms", 1, &latency_points(3.0));
+        let diffs = diff_family_json(&base, &current).unwrap();
+        assert_eq!(diffs[0].direction, Direction::LowerIsBetter);
+        assert!(diffs[0].is_regression(0.2), "{:?}", diffs[0]);
+        // 25% *faster* (lower latency): an improvement, never a regression.
+        let current = family_json_with_unit("ingest", "ms", 1, &latency_points(1.5));
+        let diffs = diff_family_json(&base, &current).unwrap();
+        assert!(!diffs[0].is_regression(0.2), "{:?}", diffs[0]);
+        // Within tolerance either way: fine.
+        let current = family_json_with_unit("ingest", "ms", 1, &latency_points(2.3));
+        assert!(!diff_family_json(&base, &current).unwrap()[0].is_regression(0.2));
+    }
+
+    #[test]
+    fn missing_better_field_defaults_to_higher_is_better() {
+        // Hand-built document without the "better" field — the committed
+        // pre-direction baselines must keep parsing.
+        let legacy = "{\n  \"bench\": \"landscape\",\n  \"scale\": 1,\n  \"families\": [\n    \
+                      {\"family\": \"uniform\", \"problems\": 6, \"geomean_throughput\": 50.0}\n  ]\n}\n";
+        let current = family_json("landscape", 1, &family_points()[..1]);
+        let diffs = diff_family_json(legacy, &current).unwrap();
+        assert_eq!(diffs[0].direction, Direction::HigherIsBetter);
+        assert!((diffs[0].ratio - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diff_fails_on_direction_change() {
+        let base = family_json_with_unit("ingest", "ms", 1, &latency_points(2.0));
+        let mut flipped = latency_points(2.0);
+        flipped[0].direction = Direction::HigherIsBetter;
+        let current = family_json_with_unit("ingest", "ms", 1, &flipped);
         assert!(diff_family_json(&base, &current).is_err());
     }
 

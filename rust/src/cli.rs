@@ -1,6 +1,18 @@
 //! Tiny CLI argument parser (offline build: no clap).
 //!
-//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Two layers:
+//!
+//! * [`Args::parse`] — the schema-less scanner (`--flag`, `--key value`,
+//!   `--key=value`, positionals).  Ambiguous by construction: without a
+//!   schema it cannot know whether `--bench 3` is a boolean flag followed
+//!   by a positional or an option with value `3`, so a `--key` followed
+//!   by a non-`--` token always consumes it.
+//! * [`CommandSpec::parse`] — the table-driven layer `main.rs` uses: every
+//!   subcommand declares its flags ([`FlagSpec`]: name, value shape,
+//!   default, help) once, the parser resolves the boolean-vs-value
+//!   ambiguity from the table, rejects unknown flags, and the same table
+//!   generates the `--help` text ([`CommandSpec::help`] /
+//!   [`render_usage`]).
 
 use std::collections::BTreeMap;
 
@@ -59,6 +71,113 @@ impl Args {
     }
 }
 
+/// One declared flag of a subcommand: `--name`.  `value` is the
+/// placeholder shown in help (`--threads <N>`); `None` marks a boolean
+/// flag that never consumes the next token.  `default` is documentation —
+/// the value the call site falls back to — so help stays honest without
+/// the parser inventing values.
+#[derive(Debug, Clone, Copy)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub value: Option<&'static str>,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// One subcommand's declared surface: flags plus the strings the
+/// generated usage text needs.
+#[derive(Debug, Clone, Copy)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub summary: &'static str,
+    /// Positional placeholder, e.g. `"[ID|all]"`; `None` = no positionals.
+    pub positional: Option<&'static str>,
+    pub flags: &'static [FlagSpec],
+}
+
+impl CommandSpec {
+    pub fn flag(&self, name: &str) -> Option<&FlagSpec> {
+        self.flags.iter().find(|f| f.name == name)
+    }
+
+    /// Parse an argv tail against this table: boolean flags never consume
+    /// the next token, value flags must get one (inline `=` or the next
+    /// token), unknown flags are errors.
+    pub fn parse<I: IntoIterator<Item = String>>(&self, argv: I) -> crate::Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter();
+        while let Some(arg) = it.next() {
+            let Some(key) = arg.strip_prefix("--") else {
+                out.positional.push(arg);
+                continue;
+            };
+            let (k, inline) = match key.split_once('=') {
+                Some((k, v)) => (k, Some(v.to_string())),
+                None => (key, None),
+            };
+            let spec = self.flag(k).ok_or_else(|| {
+                anyhow::anyhow!("unknown flag --{k} for `{}` (try `help`)", self.name)
+            })?;
+            match (spec.value, inline) {
+                (None, None) => out.flags.push(k.to_string()),
+                (None, Some(_)) => anyhow::bail!("--{k} is a boolean flag and takes no value"),
+                (Some(_), Some(v)) => {
+                    out.options.insert(k.to_string(), v);
+                }
+                (Some(placeholder), None) => {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("--{k} expects a value <{placeholder}>"))?;
+                    out.options.insert(k.to_string(), v);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// The subcommand's help block, generated from the table.
+    pub fn help(&self) -> String {
+        let mut out = String::new();
+        let positional = self.positional.map(|p| format!(" {p}")).unwrap_or_default();
+        let flagmark = if self.flags.is_empty() {
+            ""
+        } else {
+            " [flags]"
+        };
+        out.push_str(&format!(
+            "  {}{}{}\n      {}\n",
+            self.name, positional, flagmark, self.summary
+        ));
+        for f in self.flags {
+            let left = match f.value {
+                Some(v) => format!("--{} <{}>", f.name, v),
+                None => format!("--{}", f.name),
+            };
+            let default = f
+                .default
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            out.push_str(&format!("      {left:<24} {}{default}\n", f.help));
+        }
+        out
+    }
+}
+
+/// Full usage text: a header line followed by every subcommand's
+/// generated help block.
+pub fn render_usage(header: &str, commands: &[CommandSpec]) -> String {
+    let mut out = String::new();
+    out.push_str(header);
+    if !header.ends_with('\n') {
+        out.push('\n');
+    }
+    for c in commands {
+        out.push('\n');
+        out.push_str(&c.help());
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -95,7 +214,62 @@ mod tests {
     fn trailing_flag_not_eating_positional() {
         let a = Args::parse(argv("--check-runtime pos"));
         // "pos" doesn't start with -- so it is consumed as the value; this
-        // is the documented `--key value` behavior.
+        // is the documented `--key value` behavior of the schema-less
+        // layer (the spec-aware CommandSpec::parse resolves it correctly).
         assert_eq!(a.opt("check-runtime"), Some("pos"));
+    }
+
+    const SPEC: CommandSpec = CommandSpec {
+        name: "demo",
+        summary: "a demo command",
+        positional: Some("[ID]"),
+        flags: &[
+            FlagSpec {
+                name: "scale",
+                value: Some("N"),
+                default: Some("1"),
+                help: "problem scale",
+            },
+            FlagSpec {
+                name: "bench",
+                value: None,
+                default: None,
+                help: "run the bench",
+            },
+        ],
+    };
+
+    #[test]
+    fn spec_parse_resolves_boolean_vs_value() {
+        // The schema-less wart, fixed: a boolean flag followed by a
+        // positional does not eat it.
+        let a = SPEC.parse(argv("--bench pos")).unwrap();
+        assert!(a.has_flag("bench"));
+        assert_eq!(a.positional, vec!["pos"]);
+        // Value flags still take the next token or the = form.
+        let a = SPEC.parse(argv("--scale 2 --bench")).unwrap();
+        assert_eq!(a.opt_usize("scale", 1), 2);
+        assert!(a.has_flag("bench"));
+        let a = SPEC.parse(argv("--scale=3")).unwrap();
+        assert_eq!(a.opt_usize("scale", 1), 3);
+    }
+
+    #[test]
+    fn spec_parse_rejects_bad_usage() {
+        assert!(SPEC.parse(argv("--nope 1")).is_err(), "unknown flag");
+        assert!(SPEC.parse(argv("--bench=1")).is_err(), "boolean with value");
+        assert!(SPEC.parse(argv("--scale")).is_err(), "missing value");
+    }
+
+    #[test]
+    fn help_is_generated_from_the_table() {
+        let h = SPEC.help();
+        assert!(h.contains("demo [ID] [flags]"), "{h}");
+        assert!(h.contains("--scale <N>"), "{h}");
+        assert!(h.contains("(default: 1)"), "{h}");
+        assert!(h.contains("--bench"), "{h}");
+        let usage = render_usage("usage: demo <command>", &[SPEC]);
+        assert!(usage.starts_with("usage: demo <command>\n"));
+        assert!(usage.contains("a demo command"));
     }
 }

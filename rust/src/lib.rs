@@ -37,3 +37,27 @@ pub mod streamk;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;
+
+/// The stable serving surface in one import.
+///
+/// ```
+/// use gpulb::prelude::*;
+///
+/// let cfg = ServeConfig::builder().threads(2).build().unwrap();
+/// let engine = Engine::new(cfg);
+/// let report: BatchReport = engine.execute_batch(&[]);
+/// assert_eq!(report.problems, 0);
+/// ```
+///
+/// Everything here is re-exported from its home module; internal engine
+/// machinery (batch execution, plan cache internals, the tuner) stays
+/// `pub(crate)` behind the [`serve`] facade.
+pub mod prelude {
+    pub use crate::balance::ScheduleKind;
+    pub use crate::exec::kernel::{DynKernel, WorkKernel};
+    pub use crate::serve::ServeEngine as Engine;
+    pub use crate::serve::{
+        BatchReport, ConfigError, CostFeedback, IngestClass, IngestConfig, IngestReport, Problem,
+        SchedulePolicy, ServeConfig, ServeConfigBuilder, ServeEngine,
+    };
+}

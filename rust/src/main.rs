@@ -1,19 +1,13 @@
 //! `gpulb` — CLI for the GPU Load Balancing reproduction.
 //!
-//! ```text
-//! gpulb figures [ID|all] [--scale 0|1|2] [--out DIR]
-//! gpulb spmv  [--matrix SPEC] [--schedule NAME] [--check-runtime]
-//! gpulb gemm  [--m M --n N --k K] [--decomp NAME] [--prec P] [--check-runtime]
-//! gpulb serve [--threads N] [--batches B] [--scale 0|1] [--schedule NAME|adaptive]
-//! gpulb serve --bench [--out FILE]
-//! gpulb landscape [--scale 0|1] [--rounds R] [--out FILE]
-//! gpulb bench-diff BASE.json CURRENT.json [--tolerance 0.2]
-//! gpulb info
-//! ```
+//! Every subcommand declares its flags in a [`CommandSpec`] table below;
+//! the same table drives parsing (unknown flags are errors, boolean vs
+//! value flags are unambiguous) and generates the usage text, so help and
+//! behavior cannot drift apart.  Run `gpulb help` for the full surface.
 
 use gpulb::balance::{self, ScheduleKind};
 use gpulb::baselines::vendor_gemm;
-use gpulb::cli::Args;
+use gpulb::cli::{Args, CommandSpec, FlagSpec};
 use gpulb::exec::{dense::DenseMat, gemm as gemm_exec, spmv as spmv_exec};
 use gpulb::report::figures::{self, Scale};
 use gpulb::report::fmt;
@@ -24,29 +18,339 @@ use gpulb::sim::SpmvCost;
 use gpulb::sparse::{gen, mtx};
 use gpulb::streamk::{self, decomp, Blocking, Decomposition, GemmShape};
 
-const USAGE: &str = "\
+const HEADER: &str = "\
 gpulb — GPU Load Balancing reproduction (Osama 2022)
 
 USAGE:
-  gpulb figures [ID|all] [--scale 0|1|2] [--out DIR]
-  gpulb ablations [--scale 0|1]
-  gpulb spmv  [--matrix powerlaw:N|uniform:N:D|banded:N:B|rmat:S:E|file.mtx]
-              [--schedule auto|thread|warp|block|merge|nzsplit|binning|lrb]
-              [--check-runtime]
-  gpulb gemm  [--m M --n N --k K] [--decomp streamk|dp|fixed:S|hybrid1|hybrid2]
-              [--prec f16f32|f64] [--check-runtime]
-  gpulb serve [--threads N] [--batches B] [--scale 0|1] [--plan-workers W]
-              [--schedule auto|adaptive|thread|warp|block|merge|nzsplit|binning|lrb
-                         |work-stealing[:CHUNK]|chunked-fetch[:CHUNK]]
-              [--candidates thread-mapped,merge-path,work-stealing,...]
-              [--epsilon E] [--min-samples S] [--seed SEED] [--proxy-feedback]
-              [--split-threshold ATOMS]
-  gpulb serve --bench [--batches B] [--scale 0|1] [--out FILE]
-  gpulb serve --bench --single-large [--batches B] [--min-speedup X] [--out FILE]
-  gpulb landscape  [--scale 0|1] [--rounds R] [--plan-workers W] [--out FILE]
-  gpulb bench-diff BASE.json CURRENT.json [--tolerance 0.2]
-  gpulb info
-";
+  gpulb <command> [flags]
+
+COMMANDS:";
+
+const SCHEDULE_NAMES: &str = "auto|adaptive|thread|warp|block|merge|nzsplit|binning|lrb\
+                              |work-stealing[:CHUNK]|chunked-fetch[:CHUNK]";
+
+/// The default seed of the ingest arrival traces (`serve --ingest`).
+const DEFAULT_TRACE_SEED: u64 = 0x1A7E_5EED;
+
+const FIGURES_SPEC: CommandSpec = CommandSpec {
+    name: "figures",
+    summary: "run the paper's figure/table experiments",
+    positional: Some("[ID|all]"),
+    flags: &[
+        FlagSpec {
+            name: "scale",
+            value: Some("0|1|2"),
+            default: Some("1"),
+            help: "problem scale",
+        },
+        FlagSpec {
+            name: "out",
+            value: Some("DIR"),
+            default: None,
+            help: "also write per-figure CSVs into DIR",
+        },
+    ],
+};
+
+const ABLATIONS_SPEC: CommandSpec = CommandSpec {
+    name: "ablations",
+    summary: "run the ablation tables",
+    positional: None,
+    flags: &[FlagSpec {
+        name: "scale",
+        value: Some("0|1"),
+        default: Some("1"),
+        help: "problem scale",
+    }],
+};
+
+const SPMV_SPEC: CommandSpec = CommandSpec {
+    name: "spmv",
+    summary: "one SpMV through schedule selection, execution, and the cost model",
+    positional: None,
+    flags: &[
+        FlagSpec {
+            name: "matrix",
+            value: Some("SPEC"),
+            default: Some("powerlaw:4096"),
+            help: "powerlaw:N | uniform:N:D | banded:N:B | rmat:S:E | file.mtx",
+        },
+        FlagSpec {
+            name: "schedule",
+            value: Some("NAME"),
+            default: Some("auto"),
+            help: "load-balancing schedule (auto = heuristic selector)",
+        },
+        FlagSpec {
+            name: "check-runtime",
+            value: None,
+            default: None,
+            help: "also execute through the PJRT runtime and compare",
+        },
+    ],
+};
+
+const GEMM_SPEC: CommandSpec = CommandSpec {
+    name: "gemm",
+    summary: "one GEMM through a Stream-K style decomposition and the cost model",
+    positional: None,
+    flags: &[
+        FlagSpec {
+            name: "m",
+            value: Some("M"),
+            default: Some("512"),
+            help: "rows of A/C",
+        },
+        FlagSpec {
+            name: "n",
+            value: Some("N"),
+            default: Some("512"),
+            help: "cols of B/C",
+        },
+        FlagSpec {
+            name: "k",
+            value: Some("K"),
+            default: Some("512"),
+            help: "inner dimension",
+        },
+        FlagSpec {
+            name: "decomp",
+            value: Some("NAME"),
+            default: Some("streamk"),
+            help: "streamk | dp | fixed:S | hybrid1 | hybrid2",
+        },
+        FlagSpec {
+            name: "prec",
+            value: Some("P"),
+            default: Some("f16f32"),
+            help: "f16f32 | f64",
+        },
+        FlagSpec {
+            name: "check-runtime",
+            value: None,
+            default: None,
+            help: "also execute through the PJRT runtime and compare",
+        },
+    ],
+};
+
+const SERVE_SPEC: CommandSpec = CommandSpec {
+    name: "serve",
+    summary: "batch-serving engine over a mixed problem corpus",
+    positional: None,
+    flags: &[
+        FlagSpec {
+            name: "threads",
+            value: Some("N"),
+            default: Some("all cores"),
+            help: "engine worker threads",
+        },
+        FlagSpec {
+            name: "batches",
+            value: Some("B"),
+            default: Some("3"),
+            help: "batches to run (bench: per sweep point)",
+        },
+        FlagSpec {
+            name: "scale",
+            value: Some("0|1"),
+            default: Some("1"),
+            help: "problem-mix scale",
+        },
+        FlagSpec {
+            name: "plan-workers",
+            value: Some("W"),
+            default: Some("256"),
+            help: "planned workers per schedule",
+        },
+        FlagSpec {
+            name: "schedule",
+            value: Some("NAME"),
+            default: Some("auto"),
+            help: SCHEDULE_NAMES,
+        },
+        FlagSpec {
+            name: "candidates",
+            value: Some("LIST"),
+            default: None,
+            help: "comma-separated candidate schedules (adaptive only)",
+        },
+        FlagSpec {
+            name: "epsilon",
+            value: Some("E"),
+            default: Some("0.1"),
+            help: "adaptive exploration rate",
+        },
+        FlagSpec {
+            name: "min-samples",
+            value: Some("S"),
+            default: Some("2"),
+            help: "adaptive samples per arm before exploiting",
+        },
+        FlagSpec {
+            name: "seed",
+            value: Some("SEED"),
+            default: None,
+            help: "adaptive tuner RNG seed",
+        },
+        FlagSpec {
+            name: "proxy-feedback",
+            value: None,
+            default: None,
+            help: "feed the tuner deterministic proxy costs, not wall time",
+        },
+        FlagSpec {
+            name: "cache-capacity",
+            value: Some("N"),
+            default: Some("1024"),
+            help: "plan cache entries",
+        },
+        FlagSpec {
+            name: "split-threshold",
+            value: Some("ATOMS"),
+            default: Some("1048576"),
+            help: "min atoms before a problem splits across threads",
+        },
+        FlagSpec {
+            name: "bench",
+            value: None,
+            default: None,
+            help: "run the 1/2/4/8-thread sweep and write JSON",
+        },
+        FlagSpec {
+            name: "single-large",
+            value: None,
+            default: None,
+            help: "bench one >=1M-nnz SpMV split across threads",
+        },
+        FlagSpec {
+            name: "min-speedup",
+            value: Some("X"),
+            default: None,
+            help: "fail the single-large bench below this 8-vs-1 speedup",
+        },
+        FlagSpec {
+            name: "out",
+            value: Some("FILE"),
+            default: None,
+            help: "output JSON path (bench modes)",
+        },
+        FlagSpec {
+            name: "ingest",
+            value: None,
+            default: None,
+            help: "open-loop ingest mode: replay a seeded arrival trace",
+        },
+        FlagSpec {
+            name: "arrival",
+            value: Some("KIND"),
+            default: Some("poisson"),
+            help: "arrival process: poisson | bursty",
+        },
+        FlagSpec {
+            name: "rate",
+            value: Some("RPS"),
+            default: Some("2000"),
+            help: "mean arrival rate (requests/sec)",
+        },
+        FlagSpec {
+            name: "requests",
+            value: Some("N"),
+            default: Some("256"),
+            help: "trace length in requests",
+        },
+        FlagSpec {
+            name: "burst",
+            value: Some("K"),
+            default: Some("8"),
+            help: "arrivals per burst (bursty arrivals only)",
+        },
+        FlagSpec {
+            name: "trace-seed",
+            value: Some("SEED"),
+            default: Some("444489453"),
+            help: "arrival-trace RNG seed",
+        },
+        FlagSpec {
+            name: "max-batch",
+            value: Some("N"),
+            default: Some("8"),
+            help: "largest micro-batch the ingest drainer cuts",
+        },
+        FlagSpec {
+            name: "max-wait",
+            value: Some("MS"),
+            default: Some("1"),
+            help: "ingest batching window in milliseconds",
+        },
+    ],
+};
+
+const LANDSCAPE_SPEC: CommandSpec = CommandSpec {
+    name: "landscape",
+    summary: "deterministic proxy-metric sweep (the CI perf-gate artifact)",
+    positional: None,
+    flags: &[
+        FlagSpec {
+            name: "scale",
+            value: Some("0|1"),
+            default: Some("1"),
+            help: "problem scale",
+        },
+        FlagSpec {
+            name: "rounds",
+            value: Some("R"),
+            default: Some("16"),
+            help: "batches per workload family",
+        },
+        FlagSpec {
+            name: "plan-workers",
+            value: Some("W"),
+            default: Some("256"),
+            help: "planned workers per schedule",
+        },
+        FlagSpec {
+            name: "out",
+            value: Some("FILE"),
+            default: Some("BENCH_landscape.json"),
+            help: "output JSON path",
+        },
+    ],
+};
+
+const BENCH_DIFF_SPEC: CommandSpec = CommandSpec {
+    name: "bench-diff",
+    summary: "diff two bench JSON files, failing on per-family regressions",
+    positional: Some("BASE.json CURRENT.json"),
+    flags: &[FlagSpec {
+        name: "tolerance",
+        value: Some("T"),
+        default: Some("0.2"),
+        help: "allowed fractional regression per family",
+    }],
+};
+
+const INFO_SPEC: CommandSpec = CommandSpec {
+    name: "info",
+    summary: "show the PJRT runtime platform and artifact manifest",
+    positional: None,
+    flags: &[],
+};
+
+const SPECS: [CommandSpec; 8] = [
+    FIGURES_SPEC,
+    ABLATIONS_SPEC,
+    SPMV_SPEC,
+    GEMM_SPEC,
+    SERVE_SPEC,
+    LANDSCAPE_SPEC,
+    BENCH_DIFF_SPEC,
+    INFO_SPEC,
+];
+
+fn usage() -> String {
+    gpulb::cli::render_usage(HEADER, &SPECS)
+}
 
 fn parse_matrix(spec: &str) -> gpulb::Result<gpulb::sparse::Csr> {
     if spec.ends_with(".mtx") {
@@ -244,18 +548,14 @@ fn opt_strict<T: std::str::FromStr>(args: &Args, key: &str, default: T) -> gpulb
 fn parse_schedule_policy(args: &Args) -> gpulb::Result<serve::SchedulePolicy> {
     Ok(match args.opt("schedule") {
         Some("adaptive") => serve::SchedulePolicy::Adaptive {
-            epsilon: opt_strict(args, "epsilon", serve::tuner::DEFAULT_EPSILON)?,
-            min_samples: opt_strict(args, "min-samples", serve::tuner::DEFAULT_MIN_SAMPLES)?,
-            seed: opt_strict(args, "seed", serve::tuner::DEFAULT_SEED)?,
+            epsilon: opt_strict(args, "epsilon", serve::DEFAULT_EPSILON)?,
+            min_samples: opt_strict(args, "min-samples", serve::DEFAULT_MIN_SAMPLES)?,
+            seed: opt_strict(args, "seed", serve::DEFAULT_SEED)?,
         },
         Some("auto") | None => serve::SchedulePolicy::Auto,
         Some(name) => match parse_schedule_name(name) {
             Some(kind) => serve::SchedulePolicy::Fixed(kind),
-            None => anyhow::bail!(
-                "unknown --schedule `{name}`; expected \
-                 auto|adaptive|thread|warp|block|merge|nzsplit|binning|lrb\
-                 |work-stealing[:CHUNK]|chunked-fetch[:CHUNK]"
-            ),
+            None => anyhow::bail!("unknown --schedule `{name}`; expected {SCHEDULE_NAMES}"),
         },
     })
 }
@@ -298,7 +598,38 @@ fn policy_name(policy: serve::SchedulePolicy) -> String {
     }
 }
 
+/// Build the engine config from the serve flags, through the validating
+/// builder.  `feedback` is resolved by the caller because the bench mode
+/// may override it (with a printed note) before the build.
+fn serve_config_from_args(
+    args: &Args,
+    policy: serve::SchedulePolicy,
+    feedback: serve::CostFeedback,
+) -> gpulb::Result<serve::ServeConfig> {
+    let default_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let candidates = parse_candidates(args, policy)?;
+    let mut builder = serve::ServeConfig::builder()
+        .threads(opt_strict(args, "threads", default_threads)?)
+        .plan_workers(opt_strict(args, "plan-workers", 256)?)
+        .schedule(policy)
+        .feedback(feedback)
+        .cache_capacity(opt_strict(args, "cache-capacity", 1024)?)
+        .split_min_atoms(opt_strict(args, "split-threshold", serve::DEFAULT_SPLIT_MIN_ATOMS)?);
+    // Absent --candidates means "the tuner's default set": leave the
+    // builder field unset rather than passing an empty (invalid) list.
+    if !candidates.is_empty() {
+        builder = builder.candidates(candidates);
+    }
+    Ok(builder.build()?)
+}
+
 fn cmd_serve(args: &Args) -> gpulb::Result<()> {
+    if args.has_flag("ingest") {
+        return cmd_serve_ingest(args);
+    }
+
     // Strict parsing: a typo'd knob must not silently write BENCH_serve.json
     // (or print batch reports) for a run the user never asked for.
     let scale = opt_strict(args, "scale", 1)?;
@@ -339,37 +670,27 @@ fn cmd_serve(args: &Args) -> gpulb::Result<()> {
         atoms
     );
 
-    let default_threads = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1);
     let policy = parse_schedule_policy(args)?;
-    let cfg = serve::ServeConfig {
-        threads: opt_strict(args, "threads", default_threads)?,
-        plan_workers: opt_strict(args, "plan-workers", 256)?,
-        schedule: policy,
-        feedback: if args.has_flag("proxy-feedback") {
-            serve::CostFeedback::Proxy
-        } else {
-            serve::CostFeedback::Measured
-        },
-        candidates: parse_candidates(args, policy)?,
-        cache_capacity: opt_strict(args, "cache-capacity", 1024)?,
-        split_min_atoms: opt_strict(args, "split-threshold", serve::DEFAULT_SPLIT_MIN_ATOMS)?,
+    let mut feedback = if args.has_flag("proxy-feedback") {
+        serve::CostFeedback::Proxy
+    } else {
+        serve::CostFeedback::Measured
     };
+    if args.has_flag("bench")
+        && matches!(policy, serve::SchedulePolicy::Adaptive { .. })
+        && feedback == serve::CostFeedback::Measured
+    {
+        // The sweep asserts bit-equal checksums across thread counts,
+        // which needs replayable schedule traces — wall-clock feedback
+        // would let sweep points diverge.
+        feedback = serve::CostFeedback::Proxy;
+        println!("note: adaptive bench forces --proxy-feedback for deterministic traces");
+    }
+    let cfg = serve_config_from_args(args, policy, feedback)?;
 
     if args.has_flag("bench") {
-        let mut bench_cfg = cfg;
-        if matches!(bench_cfg.schedule, serve::SchedulePolicy::Adaptive { .. })
-            && bench_cfg.feedback == serve::CostFeedback::Measured
-        {
-            // The sweep asserts bit-equal checksums across thread counts,
-            // which needs replayable schedule traces — wall-clock feedback
-            // would let sweep points diverge.
-            bench_cfg.feedback = serve::CostFeedback::Proxy;
-            println!("note: adaptive bench forces --proxy-feedback for deterministic traces");
-        }
         let out = args.opt_or("out", "BENCH_serve.json");
-        serve::run_bench(&mix, &[1, 2, 4, 8], batches, bench_cfg, &out)?;
+        serve::run_bench(&mix, &[1, 2, 4, 8], batches, cfg, &out)?;
         return Ok(());
     }
 
@@ -411,6 +732,111 @@ fn cmd_serve(args: &Args) -> gpulb::Result<()> {
                 report.tuner.priors
             );
         }
+    }
+    Ok(())
+}
+
+/// `serve --ingest`: replay a seeded open-loop arrival trace through the
+/// ingest front-end on its deterministic virtual clock, then report
+/// tail latency (overall and per class against the SLO budgets) and
+/// sustained throughput.  `--bench` pins the configuration — fixed
+/// merge-path schedule, proxy feedback, closed-form gate catalog — so the
+/// emitted `BENCH_ingest.json` is bit-reproducible across hosts and
+/// diffable by the CI perf gate.
+fn cmd_serve_ingest(args: &Args) -> gpulb::Result<()> {
+    let scale = opt_strict(args, "scale", 1)?;
+    let requests = opt_strict(args, "requests", 256usize)?;
+    let rate: f64 = opt_strict(args, "rate", 2000.0)?;
+    anyhow::ensure!(
+        rate.is_finite() && rate > 0.0,
+        "--rate must be a positive requests/sec value"
+    );
+    let burst = opt_strict(args, "burst", 8usize)?;
+    let seed: u64 = opt_strict(args, "trace-seed", DEFAULT_TRACE_SEED)?;
+    let max_batch = opt_strict(args, "max-batch", 8usize)?;
+    let max_wait_ms: f64 = opt_strict(args, "max-wait", 1.0)?;
+    anyhow::ensure!(
+        max_wait_ms.is_finite() && max_wait_ms > 0.0,
+        "--max-wait must be positive milliseconds"
+    );
+    let ingest_cfg = serve::IngestConfig::builder()
+        .max_batch(max_batch)
+        .max_wait(std::time::Duration::from_secs_f64(max_wait_ms * 1e-3))
+        .build()?;
+
+    let bench = args.has_flag("bench");
+    let (catalog, cfg) = if bench {
+        // The gate configuration: a fixed schedule and proxy feedback make
+        // the virtual-clock latencies a pure function of (catalog, trace,
+        // window), independent of host speed and thread count.
+        let cfg = serve::ServeConfig::builder()
+            .schedule(serve::SchedulePolicy::Fixed(ScheduleKind::MergePath))
+            .feedback(serve::CostFeedback::Proxy)
+            .plan_workers(256)
+            .build()?;
+        (serve::ingest_gate_catalog(scale), cfg)
+    } else {
+        let policy = parse_schedule_policy(args)?;
+        let feedback = if args.has_flag("proxy-feedback") {
+            serve::CostFeedback::Proxy
+        } else {
+            serve::CostFeedback::Measured
+        };
+        (
+            serve::corpus_mix(scale),
+            serve_config_from_args(args, policy, feedback)?,
+        )
+    };
+
+    let arrival = args.opt_or("arrival", "poisson");
+    let arrivals = match arrival.as_str() {
+        "poisson" => serve::poisson_trace(catalog.len(), requests, rate, seed),
+        "bursty" => serve::bursty_trace(catalog.len(), requests, rate, burst, seed),
+        other => anyhow::bail!("unknown --arrival `{other}`; expected poisson|bursty"),
+    };
+
+    let engine = serve::ServeEngine::new(cfg);
+    let report = serve::ingest::run_trace(&engine, &catalog, &arrivals, &ingest_cfg)?;
+
+    println!(
+        "ingest: {} requests over {} catalog problems, {} arrivals at {} req/s \
+         (seed {seed:#x})",
+        report.requests,
+        catalog.len(),
+        arrival,
+        fmt(rate)
+    );
+    println!(
+        "batching: {} micro-batches (mean {:.1} req/batch, window {} req / {} ms)",
+        report.batches,
+        report.mean_batch(),
+        max_batch,
+        fmt(max_wait_ms)
+    );
+    println!(
+        "latency: p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms; sustained {:.1} req/s",
+        report.p50 * 1e3,
+        report.p95 * 1e3,
+        report.p99 * 1e3,
+        report.sustained_rps
+    );
+    for c in &report.classes {
+        println!(
+            "  {:<12} {:>5} req  p50 {:>8.3} ms  p99 {:>8.3} ms  \
+             SLO {:>5.0} ms  violations {:.1}%",
+            c.class.name(),
+            c.requests,
+            c.p50 * 1e3,
+            c.p99 * 1e3,
+            c.slo_secs * 1e3,
+            c.slo_violations * 100.0
+        );
+    }
+
+    if bench {
+        let out = args.opt_or("out", "BENCH_ingest.json");
+        serve::ingest::write_ingest_json(&out, scale, &report)?;
+        println!("wrote {out}");
     }
     Ok(())
 }
@@ -489,11 +915,18 @@ fn cmd_info() -> gpulb::Result<()> {
 fn main() -> gpulb::Result<()> {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
-        print!("{USAGE}");
+        print!("{}", usage());
         return Ok(());
     }
     let cmd = argv.remove(0);
-    let args = Args::parse(argv);
+    if matches!(cmd.as_str(), "help" | "--help" | "-h") {
+        print!("{}", usage());
+        return Ok(());
+    }
+    let Some(spec) = SPECS.iter().find(|s| s.name == cmd) else {
+        anyhow::bail!("unknown command `{cmd}`\n{}", usage());
+    };
+    let args = spec.parse(argv)?;
     match cmd.as_str() {
         "figures" => cmd_figures(&args),
         "ablations" => {
@@ -508,10 +941,6 @@ fn main() -> gpulb::Result<()> {
         "landscape" => cmd_landscape(&args),
         "bench-diff" => cmd_bench_diff(&args),
         "info" => cmd_info(),
-        "help" | "--help" | "-h" => {
-            print!("{USAGE}");
-            Ok(())
-        }
-        other => anyhow::bail!("unknown command `{other}`\n{USAGE}"),
+        other => unreachable!("unmatched command `{other}` with a spec"),
     }
 }

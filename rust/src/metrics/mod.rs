@@ -121,6 +121,44 @@ mod tests {
     }
 
     #[test]
+    fn percentile_empty_is_nan() {
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert!(percentile(&[], p).is_nan(), "p{p} of empty set");
+        }
+    }
+
+    #[test]
+    fn percentile_single_sample_is_that_sample_at_every_p() {
+        for p in [0.0, 1.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[7.25], p), 7.25, "p{p}");
+        }
+    }
+
+    #[test]
+    fn percentile_duplicates_collapse() {
+        let xs = [3.0, 3.0, 3.0, 3.0, 3.0];
+        for p in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(percentile(&xs, p), 3.0, "p{p}");
+        }
+        // Duplicates mixed with one outlier: the median stays on the mode.
+        let xs = [1.0, 1.0, 1.0, 1.0, 100.0];
+        assert_eq!(percentile(&xs, 50.0), 1.0);
+    }
+
+    #[test]
+    fn p99_on_small_n_interpolates_toward_the_max() {
+        // n = 5: rank = 0.99 * 4 = 3.96, between the 4th and 5th samples.
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let p99 = percentile(&xs, 99.0);
+        assert!((p99 - 4.96).abs() < 1e-12, "p99={p99}");
+        // n = 2: p99 sits just below the max.
+        let p99 = percentile(&[0.0, 10.0], 99.0);
+        assert!((p99 - 9.9).abs() < 1e-12, "p99={p99}");
+        // p99 never exceeds the max, never drops below the median.
+        assert!(p99 <= 10.0 && p99 >= 5.0);
+    }
+
+    #[test]
     fn summary_fields() {
         let s = speedup_summary(&[0.5, 1.0, 2.0, 8.0]);
         assert!((s.peak - 8.0).abs() < 1e-12);

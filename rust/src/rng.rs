@@ -76,6 +76,14 @@ impl Rng {
         (self.range_f64(lo.ln(), hi.ln())).exp()
     }
 
+    /// Exponential inter-arrival gap with the given rate (mean `1/rate`)
+    /// via inverse-CDF — the Poisson-process step of the ingest arrival
+    /// traces.  Always finite and non-negative: `1 - f64()` is in (0, 1].
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        -(1.0 - self.f64()).ln() / rate
+    }
+
     /// Standard normal via Box–Muller.
     pub fn normal(&mut self) -> f64 {
         let u1 = self.f64().max(1e-300);
@@ -160,6 +168,25 @@ mod tests {
         let n = 100_000;
         let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
         assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn exponential_is_nonnegative_with_mean_near_inverse_rate() {
+        let mut r = Rng::new(29);
+        let rate = 2000.0;
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let v = r.exponential(rate);
+            assert!(v.is_finite() && v >= 0.0, "bad sample {v}");
+            sum += v;
+        }
+        let mean = sum / n as f64;
+        assert!(
+            (mean - 1.0 / rate).abs() < 0.05 / rate,
+            "mean={mean}, want ~{}",
+            1.0 / rate
+        );
     }
 
     #[test]

@@ -160,7 +160,7 @@ pub fn execute(
     cache: &PlanCache,
     cfg: &ServeConfig,
 ) -> ExecSample {
-    let entry = plan(problem, kind, cache, cfg.plan_workers.max(1));
+    let entry = plan(problem, kind, cache, cfg.plan_workers);
     execute_planned(problem, kind, &entry, cfg)
 }
 
@@ -227,11 +227,11 @@ mod tests {
     use crate::sparse::gen;
 
     fn cfg() -> ServeConfig {
-        ServeConfig {
-            threads: 1,
-            plan_workers: 64,
-            ..ServeConfig::default()
-        }
+        ServeConfig::builder()
+            .threads(1)
+            .plan_workers(64)
+            .build()
+            .unwrap()
     }
 
     #[test]
@@ -277,10 +277,12 @@ mod tests {
         let matrix = Arc::new(gen::uniform(128, 128, 4, 3));
         let problem = Problem::spmv(matrix);
         let cache = PlanCache::new(64);
-        let cfg = ServeConfig {
-            feedback: CostFeedback::Proxy,
-            ..cfg()
-        };
+        let cfg = ServeConfig::builder()
+            .threads(1)
+            .plan_workers(64)
+            .feedback(CostFeedback::Proxy)
+            .build()
+            .unwrap();
         let a = execute(&problem, ScheduleKind::MergePath, &cache, &cfg);
         let b = execute(&problem, ScheduleKind::MergePath, &cache, &cfg);
         assert_eq!(a, b, "proxy cost must not depend on the host");

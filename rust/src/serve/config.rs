@@ -1,0 +1,337 @@
+//! Validated construction of the serve-layer configuration.
+//!
+//! [`ServeConfig`] outgrew struct-literal construction (seven fields, no
+//! longer `Copy`), so all construction goes through [`ServeConfig::builder`]
+//! — pinned by the source-grep test `tests/engine_decoupling.rs`.  The
+//! builder's [`ServeConfigBuilder::build`] validates every knob once and
+//! returns a typed [`ConfigError`], which lets the engine trust the
+//! invariants (`threads >= 1`, `plan_workers >= 1`, …) instead of
+//! re-clamping with `.max(1)` on its hot path.  The same error type is
+//! shared by the ingest front-end's batching-window config
+//! ([`crate::serve::ingest::IngestConfig`]), which is deliberately a
+//! separate surface: arrival/batching policy is programmable on its own,
+//! not more fields bolted onto the engine config.
+
+use std::fmt;
+
+use crate::balance::ScheduleKind;
+
+use super::tuner::{CostFeedback, SchedulePolicy};
+
+/// Default atom count above which one problem is split into worker-range
+/// shards across the pool (see [`ServeConfig::split_min_atoms`]).
+pub const DEFAULT_SPLIT_MIN_ATOMS: usize = 1 << 20;
+
+/// Engine configuration.  Construct through [`ServeConfig::builder`] (or
+/// [`Default`] for the stock setup); the builder validates once so the
+/// engine never has to defend against zero thread counts or out-of-range
+/// tuner knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Worker threads executing problems (clamped to the batch size).
+    pub threads: usize,
+    /// Workers each *plan* targets — the simulated device parallelism each
+    /// Assignment is built for, independent of host thread count.
+    pub plan_workers: usize,
+    /// How schedules are chosen: static per-family default, one fixed
+    /// schedule, or the online ε-greedy tuner.
+    pub schedule: SchedulePolicy,
+    /// What cost sample each execution feeds the tuner (wall-clock or the
+    /// deterministic proxy).
+    pub feedback: CostFeedback,
+    /// The candidate set an `Adaptive` policy explores: empty = the
+    /// default [`crate::balance::adaptive::CANDIDATES`] (planned +
+    /// dynamic); non-empty = exactly these kinds, in order (the CLI's
+    /// `--candidates` list).  Ignored under `Auto`/`Fixed`.
+    pub candidates: Vec<ScheduleKind>,
+    /// Plan-cache capacity in entries.
+    pub cache_capacity: usize,
+    /// Problems with at least this many atoms (and a streaming-capable
+    /// planned schedule) are split into worker-range shards executed
+    /// across the pool — intra-problem parallelism for the
+    /// few-huge-problems batch the whole-problem path serializes.
+    /// Smaller problems batch whole.  Checksums are bit-identical either
+    /// way (two-phase fixup), so this is purely a throughput knob.
+    /// Problems on a *dynamic* schedule use the same threshold for the
+    /// real claimed path: at or above it (and with more than one thread)
+    /// their chunks are claimed at runtime across the pool's threads;
+    /// below it they run whole inside the batch pool — the sequential
+    /// canonical chunk walk — so a batch of many small dynamic problems
+    /// keeps its inter-problem parallelism.
+    pub split_min_atoms: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            plan_workers: 256,
+            schedule: SchedulePolicy::Auto,
+            feedback: CostFeedback::Measured,
+            candidates: Vec::new(),
+            cache_capacity: 1024,
+            split_min_atoms: DEFAULT_SPLIT_MIN_ATOMS,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Start a builder seeded with the [`Default`] values.
+    pub fn builder() -> ServeConfigBuilder {
+        ServeConfigBuilder::default()
+    }
+
+    /// The same config at a different thread count (normalized to >= 1) —
+    /// the sweep helpers' per-point override.
+    pub fn with_threads(mut self, threads: usize) -> ServeConfig {
+        self.threads = threads.max(1);
+        self
+    }
+}
+
+/// Chained-setter builder for [`ServeConfig`].  Unset knobs fall back to
+/// the [`Default`] values; [`ServeConfigBuilder::build`] validates the
+/// result.
+#[derive(Debug, Clone, Default)]
+pub struct ServeConfigBuilder {
+    threads: Option<usize>,
+    plan_workers: Option<usize>,
+    schedule: Option<SchedulePolicy>,
+    feedback: Option<CostFeedback>,
+    candidates: Option<Vec<ScheduleKind>>,
+    cache_capacity: Option<usize>,
+    split_min_atoms: Option<usize>,
+}
+
+impl ServeConfigBuilder {
+    /// Worker threads executing problems (must be >= 1).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+
+    /// Simulated device parallelism each plan targets (must be >= 1).
+    pub fn plan_workers(mut self, plan_workers: usize) -> Self {
+        self.plan_workers = Some(plan_workers);
+        self
+    }
+
+    /// Schedule-selection policy (`Adaptive` knobs are validated).
+    pub fn schedule(mut self, schedule: SchedulePolicy) -> Self {
+        self.schedule = Some(schedule);
+        self
+    }
+
+    /// Cost-sample source fed back to the tuner.
+    pub fn feedback(mut self, feedback: CostFeedback) -> Self {
+        self.feedback = Some(feedback);
+        self
+    }
+
+    /// Explicit adaptive candidate set (must be non-empty when set; leave
+    /// unset for the default [`crate::balance::adaptive::CANDIDATES`]).
+    pub fn candidates(mut self, candidates: Vec<ScheduleKind>) -> Self {
+        self.candidates = Some(candidates);
+        self
+    }
+
+    /// Plan-cache capacity in entries (must be >= 1).
+    pub fn cache_capacity(mut self, cache_capacity: usize) -> Self {
+        self.cache_capacity = Some(cache_capacity);
+        self
+    }
+
+    /// Split threshold in atoms (see [`ServeConfig::split_min_atoms`]).
+    pub fn split_min_atoms(mut self, split_min_atoms: usize) -> Self {
+        self.split_min_atoms = Some(split_min_atoms);
+        self
+    }
+
+    /// Validate and produce the config.
+    pub fn build(self) -> Result<ServeConfig, ConfigError> {
+        let d = ServeConfig::default();
+        let cfg = ServeConfig {
+            threads: self.threads.unwrap_or(d.threads),
+            plan_workers: self.plan_workers.unwrap_or(d.plan_workers),
+            schedule: self.schedule.unwrap_or(d.schedule),
+            feedback: self.feedback.unwrap_or(d.feedback),
+            candidates: match self.candidates {
+                None => Vec::new(),
+                Some(c) if c.is_empty() => return Err(ConfigError::EmptyCandidates),
+                Some(c) => c,
+            },
+            cache_capacity: self.cache_capacity.unwrap_or(d.cache_capacity),
+            split_min_atoms: self.split_min_atoms.unwrap_or(d.split_min_atoms),
+        };
+        if cfg.threads == 0 {
+            return Err(ConfigError::ZeroThreads);
+        }
+        if cfg.plan_workers == 0 {
+            return Err(ConfigError::ZeroPlanWorkers);
+        }
+        if cfg.cache_capacity == 0 {
+            return Err(ConfigError::ZeroCacheCapacity);
+        }
+        if let SchedulePolicy::Adaptive {
+            epsilon,
+            min_samples,
+            ..
+        } = cfg.schedule
+        {
+            if !epsilon.is_finite() || !(0.0..=1.0).contains(&epsilon) {
+                return Err(ConfigError::Epsilon(epsilon));
+            }
+            if min_samples == 0 {
+                return Err(ConfigError::ZeroMinSamples);
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+/// A rejected configuration knob, from [`ServeConfigBuilder::build`] or
+/// the ingest config builder.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ConfigError {
+    /// `threads` must be >= 1.
+    ZeroThreads,
+    /// `plan_workers` must be >= 1.
+    ZeroPlanWorkers,
+    /// `cache_capacity` must be >= 1.
+    ZeroCacheCapacity,
+    /// Adaptive `epsilon` must be finite and within `[0, 1]`.
+    Epsilon(f64),
+    /// Adaptive `min_samples` must be >= 1.
+    ZeroMinSamples,
+    /// An explicit candidate set must name at least one schedule.
+    EmptyCandidates,
+    /// Ingest `max_batch` must be >= 1.
+    ZeroMaxBatch,
+    /// Ingest `max_wait` must be positive.
+    ZeroMaxWait,
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::ZeroThreads => write!(f, "threads must be at least 1"),
+            ConfigError::ZeroPlanWorkers => write!(f, "plan_workers must be at least 1"),
+            ConfigError::ZeroCacheCapacity => write!(f, "cache_capacity must be at least 1"),
+            ConfigError::Epsilon(e) => {
+                write!(f, "epsilon must be finite and within [0, 1], got {e}")
+            }
+            ConfigError::ZeroMinSamples => write!(f, "min_samples must be at least 1"),
+            ConfigError::EmptyCandidates => {
+                write!(f, "an explicit candidate set must be non-empty")
+            }
+            ConfigError::ZeroMaxBatch => write!(f, "max_batch must be at least 1"),
+            ConfigError::ZeroMaxWait => write!(f, "max_wait must be positive"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unset_builder_matches_default() {
+        let built = ServeConfig::builder().build().unwrap();
+        let def = ServeConfig::default();
+        assert_eq!(built.threads, def.threads);
+        assert_eq!(built.plan_workers, def.plan_workers);
+        assert_eq!(built.schedule, def.schedule);
+        assert_eq!(built.feedback, def.feedback);
+        assert_eq!(built.candidates, def.candidates);
+        assert_eq!(built.cache_capacity, def.cache_capacity);
+        assert_eq!(built.split_min_atoms, def.split_min_atoms);
+    }
+
+    #[test]
+    fn setters_override_each_knob() {
+        let cfg = ServeConfig::builder()
+            .threads(3)
+            .plan_workers(64)
+            .schedule(SchedulePolicy::Fixed(ScheduleKind::MergePath))
+            .feedback(CostFeedback::Proxy)
+            .candidates(vec![ScheduleKind::MergePath, ScheduleKind::ThreadMapped])
+            .cache_capacity(7)
+            .split_min_atoms(5)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.threads, 3);
+        assert_eq!(cfg.plan_workers, 64);
+        assert_eq!(cfg.schedule, SchedulePolicy::Fixed(ScheduleKind::MergePath));
+        assert_eq!(cfg.feedback, CostFeedback::Proxy);
+        assert_eq!(cfg.candidates.len(), 2);
+        assert_eq!(cfg.cache_capacity, 7);
+        assert_eq!(cfg.split_min_atoms, 5);
+    }
+
+    #[test]
+    fn zero_knobs_are_rejected() {
+        assert_eq!(
+            ServeConfig::builder().threads(0).build().unwrap_err(),
+            ConfigError::ZeroThreads
+        );
+        assert_eq!(
+            ServeConfig::builder().plan_workers(0).build().unwrap_err(),
+            ConfigError::ZeroPlanWorkers
+        );
+        assert_eq!(
+            ServeConfig::builder().cache_capacity(0).build().unwrap_err(),
+            ConfigError::ZeroCacheCapacity
+        );
+    }
+
+    #[test]
+    fn adaptive_knobs_are_validated() {
+        let adaptive = |epsilon, min_samples| {
+            ServeConfig::builder()
+                .schedule(SchedulePolicy::Adaptive {
+                    epsilon,
+                    min_samples,
+                    seed: 1,
+                })
+                .build()
+        };
+        assert!(adaptive(0.0, 1).is_ok());
+        assert!(adaptive(1.0, 1).is_ok());
+        assert_eq!(adaptive(1.5, 1).unwrap_err(), ConfigError::Epsilon(1.5));
+        assert_eq!(adaptive(-0.1, 1).unwrap_err(), ConfigError::Epsilon(-0.1));
+        assert!(matches!(
+            adaptive(f64::NAN, 1).unwrap_err(),
+            ConfigError::Epsilon(_)
+        ));
+        assert_eq!(adaptive(0.1, 0).unwrap_err(), ConfigError::ZeroMinSamples);
+    }
+
+    #[test]
+    fn explicit_empty_candidate_set_is_rejected() {
+        assert_eq!(
+            ServeConfig::builder()
+                .candidates(Vec::new())
+                .build()
+                .unwrap_err(),
+            ConfigError::EmptyCandidates
+        );
+    }
+
+    #[test]
+    fn with_threads_overrides_and_normalizes() {
+        let cfg = ServeConfig::builder().threads(2).build().unwrap();
+        assert_eq!(cfg.clone().with_threads(8).threads, 8);
+        assert_eq!(cfg.with_threads(0).threads, 1);
+    }
+
+    #[test]
+    fn errors_display_and_convert() {
+        let err: anyhow::Error = ConfigError::ZeroThreads.into();
+        assert!(err.to_string().contains("threads"));
+        assert!(ConfigError::Epsilon(2.0).to_string().contains("epsilon"));
+    }
+}

@@ -1,0 +1,740 @@
+//! Open-loop ingest front-end: the serving layer's front door.
+//!
+//! Producers submit problems tagged with a priority/deadline class
+//! ([`IngestClass`]) into an MPSC queue; a drainer cuts micro-batches
+//! under a configurable batching window ([`IngestConfig`]: `max_batch`
+//! requests or `max_wait` seconds, whichever first) and feeds them to the
+//! existing [`ServeEngine`] — plan cache, tuner, and split/dynamic
+//! machinery unchanged, so every per-problem bit-identity contract holds
+//! through the front-end.  Two drivers share the batching and reporting
+//! logic:
+//!
+//! * [`run_trace`] — deterministic replay of a seeded arrival trace
+//!   (see [`crate::serve::poisson_trace`] / [`crate::serve::bursty_trace`])
+//!   on a **virtual clock**: batch cuts come from the pure
+//!   [`cut_batches`], service times from the deterministic proxy cost
+//!   ([`crate::balance::adaptive::proxy_cost_for`]) at
+//!   [`PROXY_VIRT_SECS`] per proxy step.  Same seed + same config ⇒
+//!   identical cuts, latencies, and checksums — this is what
+//!   `gpulb serve --ingest --bench` gates in CI.
+//! * [`IngestServer`] — the real threaded front-end: an
+//!   `std::sync::mpsc` queue, a drainer thread enforcing the same window
+//!   semantics in wall-clock time, and per-request completion tickets.
+//!   Throughput-true but not latency-deterministic, so it is smoke-tested
+//!   rather than gated.
+//!
+//! Per-request latency is tracked enqueue → batch-cut → complete and
+//! folded into [`IngestReport`] as p50/p95/p99 + sustained throughput,
+//! overall and per class against each class's SLO budget.
+
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::balance::adaptive::proxy_cost_for;
+use crate::metrics;
+
+use super::batch::Problem;
+use super::config::ConfigError;
+use super::ServeEngine;
+
+/// Virtual seconds per deterministic proxy-cost step — the service-time
+/// scale of the [`run_trace`] latency model.  One proxy step ≈ one
+/// simulated device cycle group; 1 µs keeps gate latencies in a readable
+/// millisecond range at the gate catalog's problem sizes.
+pub const PROXY_VIRT_SECS: f64 = 1e-6;
+
+/// Priority/deadline class a producer tags each submission with.
+/// Lower-priority values drain first within a micro-batch; the SLO budget
+/// is what [`IngestReport`] scores violations against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IngestClass {
+    /// Latency-sensitive traffic (tightest SLO, drains first).
+    Interactive,
+    /// The default request class.
+    Standard,
+    /// Throughput traffic (loosest SLO, drains last).
+    Bulk,
+}
+
+impl IngestClass {
+    /// Every class, in priority order.
+    pub const ALL: [IngestClass; 3] = [
+        IngestClass::Interactive,
+        IngestClass::Standard,
+        IngestClass::Bulk,
+    ];
+
+    /// Drain priority within a micro-batch (lower drains first).
+    pub fn priority(self) -> u8 {
+        match self {
+            IngestClass::Interactive => 0,
+            IngestClass::Standard => 1,
+            IngestClass::Bulk => 2,
+        }
+    }
+
+    /// The class's latency SLO budget in (virtual) seconds.
+    pub fn slo_secs(self) -> f64 {
+        match self {
+            IngestClass::Interactive => 0.005,
+            IngestClass::Standard => 0.025,
+            IngestClass::Bulk => 0.250,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            IngestClass::Interactive => "interactive",
+            IngestClass::Standard => "standard",
+            IngestClass::Bulk => "bulk",
+        }
+    }
+}
+
+/// One event of a seeded arrival trace: a request for catalog entry
+/// `problem` arriving at virtual time `at` with class `class`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Arrival {
+    /// Arrival (enqueue) time in virtual seconds.
+    pub at: f64,
+    pub class: IngestClass,
+    /// Index into the problem catalog the trace runs over.
+    pub problem: usize,
+}
+
+/// Batching-window configuration: a micro-batch is cut when it holds
+/// `max_batch` requests or when `max_wait` has elapsed since its first
+/// request arrived, whichever comes first.  A deliberately separate
+/// surface from [`super::ServeConfig`] — arrival/batching policy is
+/// programmable on its own, per the decoupling thesis.
+#[derive(Debug, Clone)]
+pub struct IngestConfig {
+    /// Largest micro-batch the drainer cuts (>= 1).
+    pub max_batch: usize,
+    /// Longest a request waits for batch-mates (> 0).
+    pub max_wait: Duration,
+}
+
+impl Default for IngestConfig {
+    fn default() -> Self {
+        IngestConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+        }
+    }
+}
+
+impl IngestConfig {
+    /// Start a builder seeded with the [`Default`] values.
+    pub fn builder() -> IngestConfigBuilder {
+        IngestConfigBuilder::default()
+    }
+}
+
+/// Chained-setter builder for [`IngestConfig`]; `build` validates
+/// (`max_batch >= 1`, `max_wait > 0`) and shares
+/// [`ConfigError`] with the serve-config builder.
+#[derive(Debug, Clone, Default)]
+pub struct IngestConfigBuilder {
+    max_batch: Option<usize>,
+    max_wait: Option<Duration>,
+}
+
+impl IngestConfigBuilder {
+    pub fn max_batch(mut self, max_batch: usize) -> Self {
+        self.max_batch = Some(max_batch);
+        self
+    }
+
+    pub fn max_wait(mut self, max_wait: Duration) -> Self {
+        self.max_wait = Some(max_wait);
+        self
+    }
+
+    pub fn build(self) -> Result<IngestConfig, ConfigError> {
+        let d = IngestConfig::default();
+        let cfg = IngestConfig {
+            max_batch: self.max_batch.unwrap_or(d.max_batch),
+            max_wait: self.max_wait.unwrap_or(d.max_wait),
+        };
+        if cfg.max_batch == 0 {
+            return Err(ConfigError::ZeroMaxBatch);
+        }
+        if cfg.max_wait.is_zero() {
+            return Err(ConfigError::ZeroMaxWait);
+        }
+        Ok(cfg)
+    }
+}
+
+/// One micro-batch cut from an arrival trace: trace entries
+/// `first..first + len`, cut at virtual time `cut_at`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchCut {
+    /// When the batch left the queue: the window expiry of its first
+    /// request, or the arrival that filled it to `max_batch`.
+    pub cut_at: f64,
+    pub first: usize,
+    pub len: usize,
+}
+
+/// Cut a sorted arrival trace into micro-batches under the batching
+/// window: a batch closes when it reaches `max_batch` requests, or at
+/// `max_wait` seconds after its first request arrived — whichever comes
+/// first.  Pure and total: every arrival lands in exactly one cut, cut
+/// times are non-decreasing, and no cut is empty or oversized.
+pub fn cut_batches(arrivals: &[Arrival], max_batch: usize, max_wait: f64) -> Vec<BatchCut> {
+    assert!(max_batch >= 1, "max_batch must be at least 1");
+    assert!(max_wait > 0.0, "max_wait must be positive");
+    debug_assert!(arrivals.windows(2).all(|w| w[0].at <= w[1].at));
+    let mut cuts = Vec::new();
+    let mut first = 0usize;
+    for i in 0..arrivals.len() {
+        // The window of the open batch expired before arrival i: close it.
+        if i > first && arrivals[i].at > arrivals[first].at + max_wait {
+            cuts.push(BatchCut {
+                cut_at: arrivals[first].at + max_wait,
+                first,
+                len: i - first,
+            });
+            first = i;
+        }
+        // Arrival i filled the open batch: close it immediately.
+        if i + 1 - first == max_batch {
+            cuts.push(BatchCut {
+                cut_at: arrivals[i].at,
+                first,
+                len: max_batch,
+            });
+            first = i + 1;
+        }
+    }
+    if first < arrivals.len() {
+        cuts.push(BatchCut {
+            cut_at: arrivals[first].at + max_wait,
+            first,
+            len: arrivals.len() - first,
+        });
+    }
+    cuts
+}
+
+/// Per-request ledger entry: the enqueue → batch-cut → complete
+/// timestamps (virtual seconds for [`run_trace`], wall seconds since
+/// server start for [`IngestServer`]) plus the result checksum.
+#[derive(Debug, Clone, Copy)]
+pub struct IngestRecord {
+    /// Trace position ([`run_trace`]) or drain sequence ([`IngestServer`]).
+    pub index: usize,
+    pub class: IngestClass,
+    /// Enqueue time.
+    pub arrived: f64,
+    /// When the request's micro-batch was cut.
+    pub cut: f64,
+    /// Completion time.
+    pub done: f64,
+    /// The engine's per-problem checksum — bit-identical to the same
+    /// problem run directly through `execute_batch`.
+    pub checksum: f64,
+}
+
+impl IngestRecord {
+    /// Enqueue-to-complete latency in seconds.
+    pub fn latency(&self) -> f64 {
+        self.done - self.arrived
+    }
+
+    /// Time spent waiting for the batching window in seconds.
+    pub fn queue_wait(&self) -> f64 {
+        self.cut - self.arrived
+    }
+}
+
+/// Latency summary for one request class.
+#[derive(Debug, Clone)]
+pub struct ClassLatency {
+    pub class: IngestClass,
+    pub requests: usize,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    /// The class's SLO budget ([`IngestClass::slo_secs`]).
+    pub slo_secs: f64,
+    /// Fraction of requests whose latency exceeded the budget.
+    pub slo_violations: f64,
+}
+
+/// Outcome of one ingest run: tail-latency and throughput summaries over
+/// the per-request ledger.
+#[derive(Debug, Clone)]
+pub struct IngestReport {
+    pub requests: usize,
+    /// Micro-batches cut.
+    pub batches: usize,
+    /// Overall latency percentiles in seconds.
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    /// Requests per second over the span from first arrival to last
+    /// completion — the open-loop sustained throughput.
+    pub sustained_rps: f64,
+    /// Last completion time (seconds on the run's clock).
+    pub makespan: f64,
+    /// Per-class latency + SLO summaries, in [`IngestClass::ALL`] order
+    /// (classes with no requests are omitted).
+    pub classes: Vec<ClassLatency>,
+    /// The full ledger, ordered by [`IngestRecord::index`].
+    pub records: Vec<IngestRecord>,
+    /// Host wall time the run took (not part of the determinism contract).
+    pub wall: Duration,
+}
+
+impl IngestReport {
+    /// Per-request checksums in ledger order — the parity witness against
+    /// direct `execute_batch` runs.
+    pub fn checksums(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.checksum).collect()
+    }
+
+    /// Mean requests per micro-batch.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Fold a ledger into the latency/throughput report.
+fn summarize(mut records: Vec<IngestRecord>, batches: usize, wall: Duration) -> IngestReport {
+    records.sort_by_key(|r| r.index);
+    let latencies: Vec<f64> = records.iter().map(IngestRecord::latency).collect();
+    let makespan = records.iter().map(|r| r.done).fold(0.0f64, f64::max);
+    let span = makespan
+        - records
+            .iter()
+            .map(|r| r.arrived)
+            .fold(f64::INFINITY, f64::min);
+    let sustained_rps = if records.is_empty() || span <= 0.0 {
+        0.0
+    } else {
+        records.len() as f64 / span
+    };
+    let classes = IngestClass::ALL
+        .iter()
+        .filter_map(|&class| {
+            let lats: Vec<f64> = records
+                .iter()
+                .filter(|r| r.class == class)
+                .map(IngestRecord::latency)
+                .collect();
+            if lats.is_empty() {
+                return None;
+            }
+            let budget = class.slo_secs();
+            Some(ClassLatency {
+                class,
+                requests: lats.len(),
+                p50: metrics::percentile(&lats, 50.0),
+                p95: metrics::percentile(&lats, 95.0),
+                p99: metrics::percentile(&lats, 99.0),
+                slo_secs: budget,
+                slo_violations: metrics::fraction(&lats, |l| l > budget),
+            })
+        })
+        .collect();
+    IngestReport {
+        requests: records.len(),
+        batches,
+        p50: metrics::percentile(&latencies, 50.0),
+        p95: metrics::percentile(&latencies, 95.0),
+        p99: metrics::percentile(&latencies, 99.0),
+        sustained_rps,
+        makespan,
+        classes,
+        records,
+        wall,
+    }
+}
+
+/// Deterministically replay a seeded arrival trace against a catalog on a
+/// virtual clock (see the module docs).  Per cut, requests drain in
+/// (class priority, arrival order); each micro-batch goes through
+/// [`ServeEngine::execute_batch`] unchanged, so checksums are
+/// bit-identical to running the same problems directly.  Completion times
+/// come from the deterministic proxy cost of each problem's chosen
+/// schedule, accumulated in drain order from the batch's start time
+/// (`max(cut time, previous batch done)`) — so the same seed and config
+/// reproduce the same cuts, latencies, and checksums on any host.
+pub fn run_trace(
+    engine: &ServeEngine,
+    catalog: &[Problem],
+    arrivals: &[Arrival],
+    cfg: &IngestConfig,
+) -> crate::Result<IngestReport> {
+    anyhow::ensure!(!catalog.is_empty(), "empty problem catalog");
+    anyhow::ensure!(
+        arrivals.iter().all(|a| a.problem < catalog.len()),
+        "arrival references a problem outside the catalog"
+    );
+    anyhow::ensure!(
+        arrivals.windows(2).all(|w| w[0].at <= w[1].at),
+        "arrival trace must be sorted by time"
+    );
+    let wall_start = Instant::now();
+    let workers = engine.config().plan_workers;
+    let cuts = cut_batches(arrivals, cfg.max_batch, cfg.max_wait.as_secs_f64());
+    let mut records = Vec::with_capacity(arrivals.len());
+    let mut done_prev = 0.0f64;
+    for cut in &cuts {
+        let mut order: Vec<usize> = (cut.first..cut.first + cut.len).collect();
+        order.sort_by_key(|&i| (arrivals[i].class.priority(), i));
+        let batch: Vec<Problem> = order
+            .iter()
+            .map(|&i| catalog[arrivals[i].problem].clone())
+            .collect();
+        let report = engine.execute_batch(&batch);
+        let mut clock = done_prev.max(cut.cut_at);
+        for (k, &i) in order.iter().enumerate() {
+            let offsets = catalog[arrivals[i].problem].offsets();
+            clock += proxy_cost_for(report.schedules[k], offsets, workers) * PROXY_VIRT_SECS;
+            records.push(IngestRecord {
+                index: i,
+                class: arrivals[i].class,
+                arrived: arrivals[i].at,
+                cut: cut.cut_at,
+                done: clock,
+                checksum: report.checksums[k],
+            });
+        }
+        done_prev = clock;
+    }
+    Ok(summarize(records, cuts.len(), wall_start.elapsed()))
+}
+
+/// A completed request's result, delivered through its [`Ticket`].
+#[derive(Debug, Clone, Copy)]
+pub struct Completion {
+    pub checksum: f64,
+    /// Submit-to-complete wall latency in seconds.
+    pub latency: f64,
+}
+
+struct Submission {
+    problem: Problem,
+    class: IngestClass,
+    submitted: Instant,
+    respond: mpsc::Sender<Completion>,
+}
+
+/// The real threaded open-loop front-end: producers submit through
+/// cloned [`IngestHandle`]s, a drainer thread cuts micro-batches under
+/// the same window semantics as [`cut_batches`] (in wall-clock time) and
+/// feeds them to the engine.  Drop all handles, then call
+/// [`IngestServer::finish`] to join the drainer and collect the report.
+pub struct IngestServer {
+    tx: mpsc::Sender<Submission>,
+    drainer: JoinHandle<(Vec<IngestRecord>, usize)>,
+    started: Instant,
+}
+
+/// A clonable producer endpoint for an [`IngestServer`].
+#[derive(Clone)]
+pub struct IngestHandle {
+    tx: mpsc::Sender<Submission>,
+}
+
+/// A pending request's completion receiver.
+pub struct Ticket {
+    rx: mpsc::Receiver<Completion>,
+}
+
+impl Ticket {
+    /// Block until the request's micro-batch completes.
+    pub fn wait(self) -> crate::Result<Completion> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("ingest server dropped the request"))
+    }
+}
+
+impl IngestHandle {
+    /// Enqueue one problem under a class; returns the completion ticket.
+    pub fn submit(&self, problem: Problem, class: IngestClass) -> crate::Result<Ticket> {
+        let (respond, rx) = mpsc::channel();
+        self.tx
+            .send(Submission {
+                problem,
+                class,
+                submitted: Instant::now(),
+                respond,
+            })
+            .map_err(|_| anyhow::anyhow!("ingest server is shut down"))?;
+        Ok(Ticket { rx })
+    }
+}
+
+impl IngestServer {
+    /// Spawn the drainer thread over an engine.
+    pub fn start(engine: Arc<ServeEngine>, cfg: IngestConfig) -> IngestServer {
+        let (tx, rx) = mpsc::channel::<Submission>();
+        let started = Instant::now();
+        let drainer = std::thread::spawn(move || drain_loop(&engine, &cfg, &rx, started));
+        IngestServer {
+            tx,
+            drainer,
+            started,
+        }
+    }
+
+    /// A new producer endpoint.
+    pub fn handle(&self) -> IngestHandle {
+        IngestHandle {
+            tx: self.tx.clone(),
+        }
+    }
+
+    /// Shut down: close the server's own queue end, join the drainer
+    /// (which drains remaining submissions first), and summarize.  All
+    /// [`IngestHandle`]s must be dropped first or this blocks forever.
+    pub fn finish(self) -> crate::Result<IngestReport> {
+        let IngestServer {
+            tx,
+            drainer,
+            started,
+        } = self;
+        drop(tx);
+        let (records, batches) = drainer
+            .join()
+            .map_err(|_| anyhow::anyhow!("ingest drainer panicked"))?;
+        Ok(summarize(records, batches, started.elapsed()))
+    }
+}
+
+/// The drainer: block for a first submission, then collect batch-mates
+/// until the window (opened at the first submission) expires or the batch
+/// fills, drain in (class priority, submission order), execute, respond.
+fn drain_loop(
+    engine: &ServeEngine,
+    cfg: &IngestConfig,
+    rx: &mpsc::Receiver<Submission>,
+    started: Instant,
+) -> (Vec<IngestRecord>, usize) {
+    let mut records = Vec::new();
+    let mut batches = 0usize;
+    let mut seq = 0usize;
+    while let Ok(first) = rx.recv() {
+        let deadline = Instant::now() + cfg.max_wait;
+        let mut pending = vec![first];
+        while pending.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(s) => pending.push(s),
+                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // Stable sort: within a class, submission order is preserved.
+        pending.sort_by_key(|s| s.class.priority());
+        let cut = Instant::now();
+        let problems: Vec<Problem> = pending.iter().map(|s| s.problem.clone()).collect();
+        let report = engine.execute_batch(&problems);
+        let done = Instant::now();
+        let cut_s = cut.duration_since(started).as_secs_f64();
+        let done_s = done.duration_since(started).as_secs_f64();
+        for (s, &checksum) in pending.iter().zip(&report.checksums) {
+            let completion = Completion {
+                checksum,
+                latency: done.duration_since(s.submitted).as_secs_f64(),
+            };
+            // A producer that dropped its ticket just doesn't get notified.
+            let _ = s.respond.send(completion);
+            records.push(IngestRecord {
+                index: seq,
+                class: s.class,
+                arrived: s.submitted.duration_since(started).as_secs_f64(),
+                cut: cut_s,
+                done: done_s,
+                checksum,
+            });
+            seq += 1;
+        }
+        batches += 1;
+    }
+    (records, batches)
+}
+
+/// Write the `BENCH_ingest.json` artifact: the latency family
+/// (p50/p95/p99, milliseconds, lower-is-better) plus sustained throughput
+/// (requests/sec, higher-is-better) — the rows the CI bench-diff gate
+/// compares against the committed baseline.
+pub fn write_ingest_json(path: &str, scale: usize, report: &IngestReport) -> crate::Result<()> {
+    use crate::benchutil::{family_json_with_unit, Direction, FamilyPoint};
+    let point = |family: &str, value: f64, direction| FamilyPoint {
+        family: family.to_string(),
+        problems: report.requests,
+        geomean_throughput: value,
+        direction,
+    };
+    let points = vec![
+        point("latency_p50_ms", report.p50 * 1e3, Direction::LowerIsBetter),
+        point("latency_p95_ms", report.p95 * 1e3, Direction::LowerIsBetter),
+        point("latency_p99_ms", report.p99 * 1e3, Direction::LowerIsBetter),
+        point(
+            "throughput_rps",
+            report.sustained_rps,
+            Direction::HigherIsBetter,
+        ),
+    ];
+    std::fs::write(
+        path,
+        family_json_with_unit("ingest", "ms / requests-per-sec", scale, &points),
+    )?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn at(t: f64) -> Arrival {
+        Arrival {
+            at: t,
+            class: IngestClass::Standard,
+            problem: 0,
+        }
+    }
+
+    #[test]
+    fn window_cut_fires_at_max_wait() {
+        // Three arrivals, the third far outside the first's window.
+        let cuts = cut_batches(&[at(0.0), at(0.5), at(10.0)], 8, 1.0);
+        assert_eq!(
+            cuts,
+            vec![
+                BatchCut {
+                    cut_at: 1.0,
+                    first: 0,
+                    len: 2
+                },
+                BatchCut {
+                    cut_at: 11.0,
+                    first: 2,
+                    len: 1
+                },
+            ]
+        );
+    }
+
+    #[test]
+    fn full_batch_cuts_immediately() {
+        let cuts = cut_batches(&[at(0.0), at(0.1), at(0.2), at(0.3)], 2, 100.0);
+        assert_eq!(cuts.len(), 2);
+        assert_eq!((cuts[0].cut_at, cuts[0].first, cuts[0].len), (0.1, 0, 2));
+        assert_eq!((cuts[1].cut_at, cuts[1].first, cuts[1].len), (0.3, 2, 2));
+    }
+
+    #[test]
+    fn max_batch_one_is_pass_through() {
+        let cuts = cut_batches(&[at(0.0), at(0.5)], 1, 1.0);
+        assert_eq!(cuts.len(), 2);
+        assert!(cuts.iter().all(|c| c.len == 1));
+        // A batch of one cuts at its own arrival, not the window expiry.
+        assert_eq!(cuts[0].cut_at, 0.0);
+    }
+
+    #[test]
+    fn cuts_partition_the_trace_monotonically() {
+        let arrivals: Vec<Arrival> = (0..97).map(|i| at(i as f64 * 0.013)).collect();
+        for (max_batch, max_wait) in [(1usize, 0.5), (3, 0.02), (8, 0.1), (100, 0.05)] {
+            let cuts = cut_batches(&arrivals, max_batch, max_wait);
+            let total: usize = cuts.iter().map(|c| c.len).sum();
+            assert_eq!(total, arrivals.len(), "lost arrivals");
+            let mut next = 0usize;
+            let mut prev_cut = f64::NEG_INFINITY;
+            for c in &cuts {
+                assert_eq!(c.first, next, "cuts must tile the trace");
+                assert!(c.len >= 1 && c.len <= max_batch);
+                assert!(c.cut_at >= prev_cut, "cut times regressed");
+                // Every member arrived at or before the cut, within window.
+                assert!(arrivals[c.first].at + max_wait >= c.cut_at - 1e-12);
+                assert!(arrivals[c.first + c.len - 1].at <= c.cut_at + 1e-12);
+                prev_cut = c.cut_at;
+                next += c.len;
+            }
+        }
+    }
+
+    #[test]
+    fn empty_trace_has_no_cuts() {
+        assert!(cut_batches(&[], 8, 1.0).is_empty());
+    }
+
+    #[test]
+    fn class_priorities_and_budgets_are_ordered() {
+        let p: Vec<u8> = IngestClass::ALL.iter().map(|c| c.priority()).collect();
+        assert_eq!(p, vec![0, 1, 2]);
+        let budgets: Vec<f64> = IngestClass::ALL.iter().map(|c| c.slo_secs()).collect();
+        assert!(budgets.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn ingest_config_builder_validates() {
+        assert_eq!(
+            IngestConfig::builder().max_batch(0).build().unwrap_err(),
+            ConfigError::ZeroMaxBatch
+        );
+        assert_eq!(
+            IngestConfig::builder()
+                .max_wait(Duration::ZERO)
+                .build()
+                .unwrap_err(),
+            ConfigError::ZeroMaxWait
+        );
+        let cfg = IngestConfig::builder()
+            .max_batch(4)
+            .max_wait(Duration::from_millis(2))
+            .build()
+            .unwrap();
+        assert_eq!(cfg.max_batch, 4);
+        assert_eq!(cfg.max_wait, Duration::from_millis(2));
+    }
+
+    #[test]
+    fn summarize_scores_slo_violations_per_class() {
+        let rec = |i: usize, class, arrived: f64, done: f64| IngestRecord {
+            index: i,
+            class,
+            arrived,
+            cut: arrived,
+            done,
+            checksum: 1.0,
+        };
+        // One interactive request blown (20ms > 5ms), one fine; two bulk
+        // requests well under their 250ms budget.
+        let records = vec![
+            rec(0, IngestClass::Interactive, 0.0, 0.020),
+            rec(1, IngestClass::Interactive, 0.0, 0.001),
+            rec(2, IngestClass::Bulk, 0.0, 0.050),
+            rec(3, IngestClass::Bulk, 0.1, 0.150),
+        ];
+        let report = summarize(records, 2, Duration::ZERO);
+        assert_eq!(report.requests, 4);
+        assert_eq!(report.batches, 2);
+        assert_eq!(report.classes.len(), 2, "standard class omitted");
+        let interactive = &report.classes[0];
+        assert_eq!(interactive.class, IngestClass::Interactive);
+        assert_eq!(interactive.requests, 2);
+        assert!((interactive.slo_violations - 0.5).abs() < 1e-12);
+        let bulk = &report.classes[1];
+        assert_eq!(bulk.slo_violations, 0.0);
+        assert!((report.makespan - 0.150).abs() < 1e-12);
+        // Span = 0.150 - 0.0; 4 requests.
+        assert!((report.sustained_rps - 4.0 / 0.150).abs() < 1e-9);
+    }
+}

@@ -101,7 +101,7 @@ pub fn build_landscape(scale: usize) -> Vec<LandscapeEntry> {
 /// quantizes badly (strided maps stack the hot rows, contiguous shares
 /// concentrate them, searched splits pay their setup) and runtime chunk
 /// claiming wins.  The first two shapes are exactly the
-/// [`crate::sparse::gen::hotrow`] matrices [`super::mix::corpus_mix`]
+/// [`crate::sparse::gen::hotrow`] matrices [`super::corpus_mix`]
 /// serves, so the gate and serve traffic share fingerprints.  The prior
 /// is merge-path (the §4.5.2 answer to skew): the tuner must *discover*
 /// dynamic from measured feedback, which the convergence test pins.
@@ -237,6 +237,7 @@ pub fn run_landscape(scale: usize, rounds: usize, plan_workers: usize) -> Vec<Fa
             family: family.to_string(),
             problems: v.len(),
             geomean_throughput: metrics::geomean(&v),
+            direction: benchutil::Direction::HigherIsBetter,
         })
         .collect()
 }

@@ -1,15 +1,18 @@
 //! Deterministic problem mixes over the evaluation corpora — the
 //! construction side of the serve layer, kept separate from the engine so
-//! engine code stays workload-agnostic.
+//! engine code stays workload-agnostic — plus the seeded arrival traces
+//! (Poisson and bursty) the ingest front-end replays.
 
 use std::sync::Arc;
 
 use crate::corpus::{gemm_shapes, sparse_corpus};
 use crate::exec::graph;
+use crate::rng::Rng;
 use crate::sparse::{gen, Coo, Csr};
 use crate::streamk::Blocking;
 
 use super::batch::Problem;
+use super::ingest::{Arrival, IngestClass};
 
 /// An R-MAT graph unioned with a ring (guarantees every vertex has a
 /// neighbor, so BFS from vertex 0 reaches the whole graph).
@@ -112,6 +115,99 @@ pub fn single_large_mix() -> Vec<Problem> {
     vec![Problem::spmv(matrix)]
 }
 
+/// The ingest gate catalog: closed-form hotrow SpMV problems only, so the
+/// committed `BENCH_ingest_baseline.json` values are reproducible (and
+/// auditable) from `tools/ingest_port.py` without a Rust toolchain — the
+/// same reasoning as the landscape's hotrow baseline row.  `scale` 0 is
+/// the smoke catalog; `scale >= 1` is the gate catalog.
+pub fn ingest_gate_catalog(scale: usize) -> Vec<Problem> {
+    let shapes: &[(usize, usize, usize, usize)] = if scale == 0 {
+        &[
+            (1024, 16, 512, 16),
+            (1024, 64, 128, 8),
+            (512, 8, 256, 16),
+            (512, 32, 128, 8),
+        ]
+    } else {
+        &[
+            (4096, 64, 512, 16),
+            (4096, 256, 256, 8),
+            (2048, 32, 512, 16),
+            (2048, 128, 256, 8),
+            (1024, 16, 512, 16),
+            (1024, 64, 128, 8),
+        ]
+    };
+    shapes
+        .iter()
+        .map(|&(n, hot, hot_len, tail)| {
+            Problem::spmv(Arc::new(gen::hotrow(n, n, hot, hot_len, tail)))
+        })
+        .collect()
+}
+
+/// Draw a request class: 20% interactive, 60% standard, 20% bulk.
+fn draw_class(rng: &mut Rng) -> IngestClass {
+    let u = rng.f64();
+    if u < 0.2 {
+        IngestClass::Interactive
+    } else if u < 0.8 {
+        IngestClass::Standard
+    } else {
+        IngestClass::Bulk
+    }
+}
+
+/// Seeded open-loop Poisson arrival trace: `requests` events at `rate`
+/// requests per (virtual) second, exponential inter-arrival gaps, each
+/// tagged with a class and an index into a `problems`-sized catalog.  The
+/// per-event draw order (gap, class, problem) is part of the determinism
+/// contract `tools/ingest_port.py` mirrors.
+pub fn poisson_trace(problems: usize, requests: usize, rate: f64, seed: u64) -> Vec<Arrival> {
+    assert!(problems > 0, "empty problem catalog");
+    assert!(rate > 0.0, "arrival rate must be positive");
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    (0..requests)
+        .map(|_| {
+            t += rng.exponential(rate);
+            let class = draw_class(&mut rng);
+            let problem = rng.below(problems);
+            Arrival { at: t, class, problem }
+        })
+        .collect()
+}
+
+/// Seeded bursty arrival trace: bursts of `burst` back-to-back events
+/// (gaps of `0.1/rate`) separated by idle gaps of `burst/rate`, holding
+/// roughly the same average rate as the Poisson trace.  Class/problem
+/// draws follow the same per-event order as [`poisson_trace`].
+pub fn bursty_trace(
+    problems: usize,
+    requests: usize,
+    rate: f64,
+    burst: usize,
+    seed: u64,
+) -> Vec<Arrival> {
+    assert!(problems > 0, "empty problem catalog");
+    assert!(rate > 0.0, "arrival rate must be positive");
+    let burst = burst.max(1);
+    let dt_in = 0.1 / rate;
+    let dt_gap = burst as f64 / rate;
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    (0..requests)
+        .map(|k| {
+            if k > 0 {
+                t += if k % burst == 0 { dt_gap } else { dt_in };
+            }
+            let class = draw_class(&mut rng);
+            let problem = rng.below(problems);
+            Arrival { at: t, class, problem }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -138,5 +234,57 @@ mod tests {
         let mix = single_large_mix();
         assert_eq!(mix.len(), 1);
         assert!(mix[0].atoms() >= 1 << 20, "atoms: {}", mix[0].atoms());
+    }
+
+    #[test]
+    fn poisson_trace_is_seeded_sorted_and_classed() {
+        let a = poisson_trace(4, 200, 2000.0, 0x1A7E);
+        let b = poisson_trace(4, 200, 2000.0, 0x1A7E);
+        assert_eq!(a, b, "same seed must replay the same trace");
+        assert_ne!(a, poisson_trace(4, 200, 2000.0, 0x1A7F));
+        assert!(a.windows(2).all(|w| w[0].at <= w[1].at), "unsorted trace");
+        assert!(a.iter().all(|e| e.at > 0.0 && e.problem < 4));
+        for class in [
+            IngestClass::Interactive,
+            IngestClass::Standard,
+            IngestClass::Bulk,
+        ] {
+            assert!(
+                a.iter().any(|e| e.class == class),
+                "trace never drew {class:?}"
+            );
+        }
+        // The empirical rate is in the right ballpark (law of large numbers
+        // at n = 200, generous factor-of-two band).
+        let span = a.last().unwrap().at;
+        let rate = 200.0 / span;
+        assert!((1000.0..4000.0).contains(&rate), "rate ~{rate}");
+    }
+
+    #[test]
+    fn bursty_trace_clusters_arrivals() {
+        let t = bursty_trace(4, 64, 1000.0, 8, 7);
+        assert_eq!(t.len(), 64);
+        assert!(t.windows(2).all(|w| w[0].at <= w[1].at));
+        // Gap structure: within a burst 0.1/rate, between bursts 8/rate.
+        let d1 = t[1].at - t[0].at;
+        let d8 = t[8].at - t[7].at;
+        assert!(d8 > 50.0 * d1, "no burst structure: {d1} vs {d8}");
+        assert_eq!(t, bursty_trace(4, 64, 1000.0, 8, 7));
+    }
+
+    #[test]
+    fn ingest_gate_catalog_is_closed_form_hotrow() {
+        for scale in [0usize, 1] {
+            let cat = ingest_gate_catalog(scale);
+            assert!(cat.len() >= 4);
+            assert!(cat.iter().all(|p| p.kind_name() == "spmv"));
+            // Deterministic: fingerprints replay.
+            let again = ingest_gate_catalog(scale);
+            for (x, y) in cat.iter().zip(&again) {
+                assert_eq!(x.fingerprint(), y.fingerprint());
+            }
+        }
+        assert!(ingest_gate_catalog(1).len() > ingest_gate_catalog(0).len());
     }
 }

@@ -24,96 +24,58 @@
 //! promoted from the `balance/queue` simulation to the engine.
 //!
 //! The engine is workload-agnostic: all work processing goes through the
-//! kernel trait's dispatch points in [`batch`], never through per-kind
+//! kernel trait's dispatch points in `batch`, never through per-kind
 //! code here (pinned by `tests/engine_decoupling.rs`).
 //!
 //! Layering:
 //!
-//! * [`batch`]      — [`Problem`] (boxed kernels) + the trait dispatch
+//! * `batch`        — [`Problem`] (boxed kernels) + the trait dispatch
 //!   points the engine calls;
-//! * [`mix`]        — deterministic problem mixes over the corpora;
-//! * [`plan_cache`] — the concurrent plan-entry cache (descriptors);
+//! * [`config`]     — [`ServeConfig`] and its validating builder;
+//! * `mix`          — deterministic problem mixes over the corpora, plus
+//!   the seeded arrival traces the ingest layer replays;
+//! * `plan_cache`   — the concurrent plan-entry cache (descriptors);
 //! * [`pool`]       — the work-stealing thread pool;
-//! * [`tuner`]      — online ε-greedy schedule selection over measured
+//! * `tuner`        — online ε-greedy schedule selection over measured
 //!   feedback (the [`SchedulePolicy::Adaptive`] policy);
+//! * [`ingest`]     — the open-loop serving front-end: MPSC submission,
+//!   micro-batch cuts under a batching window, latency SLO reporting;
 //! * [`landscape`]  — the deterministic problem landscape behind the CI
 //!   perf-regression gate;
 //! * this module    — the engine, batch reports, and the bench sweep.
+//!
+//! The stable surface is re-exported here (and from [`crate::prelude`]);
+//! the engine-internal modules are `pub(crate)`.
 
-pub mod batch;
+pub(crate) mod batch;
+pub mod config;
+pub mod ingest;
 pub mod landscape;
-pub mod mix;
-pub mod plan_cache;
+pub(crate) mod mix;
+pub(crate) mod plan_cache;
 pub mod pool;
-pub mod tuner;
+pub(crate) mod tuner;
 
 pub use batch::{ExecSample, Problem};
-pub use mix::{corpus_mix, single_large_mix};
-pub use plan_cache::{CacheStats, PlanCache, PlanEntry, PlanKey};
+pub use config::{ConfigError, ServeConfig, ServeConfigBuilder, DEFAULT_SPLIT_MIN_ATOMS};
+pub use ingest::{
+    Arrival, BatchCut, ClassLatency, IngestClass, IngestConfig, IngestConfigBuilder, IngestReport,
+};
+pub use mix::{
+    bursty_trace, corpus_mix, ingest_gate_catalog, poisson_trace, single_large_mix,
+};
+pub use plan_cache::{fingerprint, CacheStats, PlanCache, PlanEntry, PlanKey};
 pub use pool::PoolStats;
-pub use tuner::{CostFeedback, Decision, SchedulePolicy, ScheduleTuner};
+pub use tuner::{
+    CostFeedback, Decision, SchedulePolicy, ScheduleTuner, DEFAULT_EPSILON, DEFAULT_MIN_SAMPLES,
+    DEFAULT_SEED,
+};
 
 use std::time::{Duration, Instant};
 
 use crate::balance::stream::ScheduleDescriptor;
 use crate::balance::{dynamic, ScheduleKind};
 use crate::benchutil;
-
-/// Default atom count above which one problem is split into worker-range
-/// shards across the pool (see [`ServeConfig::split_min_atoms`]).
-pub const DEFAULT_SPLIT_MIN_ATOMS: usize = 1 << 20;
-
-/// Engine configuration.
-#[derive(Debug, Clone)]
-pub struct ServeConfig {
-    /// Worker threads executing problems (clamped to the batch size).
-    pub threads: usize,
-    /// Workers each *plan* targets — the simulated device parallelism each
-    /// Assignment is built for, independent of host thread count.
-    pub plan_workers: usize,
-    /// How schedules are chosen: static per-family default, one fixed
-    /// schedule, or the online ε-greedy tuner.
-    pub schedule: SchedulePolicy,
-    /// What cost sample each execution feeds the tuner (wall-clock or the
-    /// deterministic proxy).
-    pub feedback: CostFeedback,
-    /// The candidate set an `Adaptive` policy explores: empty = the
-    /// default [`crate::balance::adaptive::CANDIDATES`] (planned +
-    /// dynamic); non-empty = exactly these kinds, in order (the CLI's
-    /// `--candidates` list).  Ignored under `Auto`/`Fixed`.
-    pub candidates: Vec<ScheduleKind>,
-    /// Plan-cache capacity in entries.
-    pub cache_capacity: usize,
-    /// Problems with at least this many atoms (and a streaming-capable
-    /// planned schedule) are split into worker-range shards executed
-    /// across the pool — intra-problem parallelism for the
-    /// few-huge-problems batch the whole-problem path serializes.
-    /// Smaller problems batch whole.  Checksums are bit-identical either
-    /// way (two-phase fixup), so this is purely a throughput knob.
-    /// Problems on a *dynamic* schedule use the same threshold for the
-    /// real claimed path: at or above it (and with more than one thread)
-    /// their chunks are claimed at runtime across the pool's threads;
-    /// below it they run whole inside the batch pool — the sequential
-    /// canonical chunk walk — so a batch of many small dynamic problems
-    /// keeps its inter-problem parallelism.
-    pub split_min_atoms: usize,
-}
-
-impl Default for ServeConfig {
-    fn default() -> Self {
-        ServeConfig {
-            threads: std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1),
-            plan_workers: 256,
-            schedule: SchedulePolicy::Auto,
-            feedback: CostFeedback::Measured,
-            candidates: Vec::new(),
-            cache_capacity: 1024,
-            split_min_atoms: DEFAULT_SPLIT_MIN_ATOMS,
-        }
-    }
-}
 
 /// Tuner counters for one batch (all zero under `Auto`/`Fixed`).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -228,8 +190,9 @@ impl ServeEngine {
     /// to the tuner, again in submission order.
     pub fn execute_batch(&self, problems: &[Problem]) -> BatchReport {
         let start = Instant::now();
-        let workers = self.cfg.plan_workers.max(1);
-        let threads = self.cfg.threads.max(1);
+        // The builder validated both knobs to >= 1; no defensive clamps.
+        let workers = self.cfg.plan_workers;
+        let threads = self.cfg.threads;
         let mut stats = TunerBatchStats::default();
         let schedules: Vec<ScheduleKind> = problems
             .iter()
@@ -488,10 +451,7 @@ pub fn throughput_sweep(
     thread_counts
         .iter()
         .map(|&threads| {
-            let engine = ServeEngine::new(ServeConfig {
-                threads,
-                ..base.clone()
-            });
+            let engine = ServeEngine::new(base.clone().with_threads(threads));
             let start = Instant::now();
             let mut problems = 0usize;
             let mut checksum = 0.0f64;
@@ -523,10 +483,9 @@ pub fn run_single_large_bench(
     let mix = single_large_mix();
     let atoms: usize = mix.iter().map(Problem::atoms).sum();
     anyhow::ensure!(atoms >= 1 << 20, "single-large mix too small: {atoms} atoms");
-    let cfg = ServeConfig {
-        schedule: SchedulePolicy::Fixed(ScheduleKind::MergePath),
-        ..ServeConfig::default()
-    };
+    let cfg = ServeConfig::builder()
+        .schedule(SchedulePolicy::Fixed(ScheduleKind::MergePath))
+        .build()?;
     let points = run_bench(&mix, thread_counts, batches, cfg, out_path)?;
     let (first, last) = (
         points.first().map(SweepPoint::problems_per_sec).unwrap_or(0.0),
@@ -602,10 +561,7 @@ mod tests {
 
     #[test]
     fn batch_report_counts_and_cache_growth() {
-        let engine = ServeEngine::new(ServeConfig {
-            threads: 2,
-            ..ServeConfig::default()
-        });
+        let engine = ServeEngine::new(ServeConfig::builder().threads(2).build().unwrap());
         let mix = tiny_mix();
         let first = engine.execute_batch(&mix);
         assert_eq!(first.problems, 2);
@@ -619,7 +575,7 @@ mod tests {
     #[test]
     fn sweep_checksums_agree_across_thread_counts() {
         let mix = tiny_mix();
-        let points = throughput_sweep(&mix, &[1, 2], 2, ServeConfig::default());
+        let points = throughput_sweep(&mix, &[1, 2], 2, ServeConfig::builder().build().unwrap());
         assert_eq!(points.len(), 2);
         assert_eq!(points[0].problems, points[1].problems);
         assert_eq!(points[0].checksum, points[1].checksum);
@@ -628,11 +584,13 @@ mod tests {
     #[test]
     fn splitting_preserves_checksums_and_reports_shards() {
         let mix = tiny_mix();
-        let cfg = |threads: usize, split_min_atoms: usize| ServeConfig {
-            threads,
-            schedule: SchedulePolicy::Fixed(ScheduleKind::MergePath),
-            split_min_atoms,
-            ..ServeConfig::default()
+        let cfg = |threads: usize, split_min_atoms: usize| {
+            ServeConfig::builder()
+                .threads(threads)
+                .schedule(SchedulePolicy::Fixed(ScheduleKind::MergePath))
+                .split_min_atoms(split_min_atoms)
+                .build()
+                .unwrap()
         };
         let whole = ServeEngine::new(cfg(1, usize::MAX)).execute_batch(&mix);
         assert_eq!((whole.split_problems, whole.shards), (0, 0));
@@ -646,11 +604,13 @@ mod tests {
     #[test]
     fn dynamic_schedules_claim_chunks_and_match_thread_mapped() {
         let mix = tiny_mix();
-        let reference = ServeEngine::new(ServeConfig {
-            threads: 1,
-            schedule: SchedulePolicy::Fixed(ScheduleKind::ThreadMapped),
-            ..ServeConfig::default()
-        })
+        let reference = ServeEngine::new(
+            ServeConfig::builder()
+                .threads(1)
+                .schedule(SchedulePolicy::Fixed(ScheduleKind::ThreadMapped))
+                .build()
+                .unwrap(),
+        )
         .execute_batch(&mix)
         .checksums;
         for kind in [
@@ -658,12 +618,14 @@ mod tests {
             ScheduleKind::ChunkedFetch { chunk: 4 },
         ] {
             for threads in [1usize, 4] {
-                let engine = ServeEngine::new(ServeConfig {
-                    threads,
-                    schedule: SchedulePolicy::Fixed(kind),
-                    split_min_atoms: 1,
-                    ..ServeConfig::default()
-                });
+                let engine = ServeEngine::new(
+                    ServeConfig::builder()
+                        .threads(threads)
+                        .schedule(SchedulePolicy::Fixed(kind))
+                        .split_min_atoms(1)
+                        .build()
+                        .unwrap(),
+                );
                 let report = engine.execute_batch(&mix);
                 // Whole tiles in canonical order: identical numerics to
                 // the planned thread-mapped reference, at any threads.
@@ -689,11 +651,13 @@ mod tests {
             // Below the split threshold, small dynamic problems run whole
             // inside the batch pool (inter-problem parallelism preserved)
             // — same checksums, no claiming machinery.
-            let below = ServeEngine::new(ServeConfig {
-                threads: 4,
-                schedule: SchedulePolicy::Fixed(kind),
-                ..ServeConfig::default()
-            })
+            let below = ServeEngine::new(
+                ServeConfig::builder()
+                    .threads(4)
+                    .schedule(SchedulePolicy::Fixed(kind))
+                    .build()
+                    .unwrap(),
+            )
             .execute_batch(&mix);
             assert_eq!(below.checksums, reference, "{kind:?} below threshold");
             assert_eq!((below.dynamic_problems, below.dynamic_chunks), (0, 0));
@@ -703,22 +667,26 @@ mod tests {
     #[test]
     fn single_thread_never_splits() {
         let mix = tiny_mix();
-        let engine = ServeEngine::new(ServeConfig {
-            threads: 1,
-            split_min_atoms: 1,
-            ..ServeConfig::default()
-        });
+        let engine = ServeEngine::new(
+            ServeConfig::builder()
+                .threads(1)
+                .split_min_atoms(1)
+                .build()
+                .unwrap(),
+        );
         let report = engine.execute_batch(&mix);
         assert_eq!((report.split_problems, report.shards), (0, 0));
     }
 
     #[test]
     fn fixed_policy_forces_one_schedule() {
-        let engine = ServeEngine::new(ServeConfig {
-            threads: 1,
-            schedule: SchedulePolicy::Fixed(ScheduleKind::MergePath),
-            ..ServeConfig::default()
-        });
+        let engine = ServeEngine::new(
+            ServeConfig::builder()
+                .threads(1)
+                .schedule(SchedulePolicy::Fixed(ScheduleKind::MergePath))
+                .build()
+                .unwrap(),
+        );
         let report = engine.execute_batch(&tiny_mix());
         assert!(report
             .schedules
@@ -729,16 +697,18 @@ mod tests {
 
     #[test]
     fn adaptive_policy_counts_selections_and_converges_counterwise() {
-        let engine = ServeEngine::new(ServeConfig {
-            threads: 2,
-            schedule: SchedulePolicy::Adaptive {
-                epsilon: 0.05,
-                min_samples: 1,
-                seed: 11,
-            },
-            feedback: CostFeedback::Proxy,
-            ..ServeConfig::default()
-        });
+        let engine = ServeEngine::new(
+            ServeConfig::builder()
+                .threads(2)
+                .schedule(SchedulePolicy::Adaptive {
+                    epsilon: 0.05,
+                    min_samples: 1,
+                    seed: 11,
+                })
+                .feedback(CostFeedback::Proxy)
+                .build()
+                .unwrap(),
+        );
         let mix = tiny_mix();
         let first = engine.execute_batch(&mix);
         assert_eq!(first.tuner.adaptive, mix.len() as u64);

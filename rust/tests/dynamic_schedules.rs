@@ -41,15 +41,17 @@ fn five_kernel_mix() -> Vec<Problem> {
 }
 
 fn engine(threads: usize, kind: ScheduleKind) -> ServeEngine {
-    ServeEngine::new(ServeConfig {
-        threads,
-        plan_workers: 64,
-        schedule: SchedulePolicy::Fixed(kind),
-        // Force the real claimed path for every problem size (dynamic
-        // problems below this threshold run whole in the batch pool).
-        split_min_atoms: 1,
-        ..ServeConfig::default()
-    })
+    ServeEngine::new(
+        ServeConfig::builder()
+            .threads(threads)
+            .plan_workers(64)
+            .schedule(SchedulePolicy::Fixed(kind))
+            // Force the real claimed path for every problem size (dynamic
+            // problems below this threshold run whole in the batch pool).
+            .split_min_atoms(1)
+            .build()
+            .unwrap(),
+    )
 }
 
 #[test]
@@ -187,18 +189,20 @@ fn adaptive_with_restricted_dynamic_candidates_keeps_bitwise_determinism() {
     // though dynamic executions claim at runtime.
     let mix = five_kernel_mix();
     let candidates = vec![ScheduleKind::MergePath, DYNAMIC_KINDS[0], DYNAMIC_KINDS[1]];
-    let cfg = |threads: usize| ServeConfig {
-        threads,
-        plan_workers: 64,
-        schedule: SchedulePolicy::Adaptive {
-            epsilon: 0.05,
-            min_samples: 1,
-            seed: 99,
-        },
-        feedback: gpulb::serve::CostFeedback::Proxy,
-        candidates: candidates.clone(),
-        split_min_atoms: 1,
-        ..ServeConfig::default()
+    let cfg = |threads: usize| {
+        ServeConfig::builder()
+            .threads(threads)
+            .plan_workers(64)
+            .schedule(SchedulePolicy::Adaptive {
+                epsilon: 0.05,
+                min_samples: 1,
+                seed: 99,
+            })
+            .feedback(gpulb::serve::CostFeedback::Proxy)
+            .candidates(candidates.clone())
+            .split_min_atoms(1)
+            .build()
+            .unwrap()
     };
     let runs: Vec<(Vec<Vec<ScheduleKind>>, Vec<Vec<u64>>)> = [1usize, 4]
         .iter()

@@ -8,9 +8,11 @@
 //! or calls an executor function directly fails loudly here even if it
 //! compiles and computes correctly.
 
-const ENGINE_SOURCES: [(&str, &str); 5] = [
+const ENGINE_SOURCES: [(&str, &str); 7] = [
     ("serve/mod.rs", include_str!("../src/serve/mod.rs")),
     ("serve/batch.rs", include_str!("../src/serve/batch.rs")),
+    ("serve/config.rs", include_str!("../src/serve/config.rs")),
+    ("serve/ingest.rs", include_str!("../src/serve/ingest.rs")),
     ("serve/plan_cache.rs", include_str!("../src/serve/plan_cache.rs")),
     ("serve/pool.rs", include_str!("../src/serve/pool.rs")),
     ("serve/tuner.rs", include_str!("../src/serve/tuner.rs")),
@@ -51,6 +53,56 @@ fn engine_has_no_per_kind_execution_arms() {
                 "{path} contains `{needle}`: engine code must reach work \
                  processing only through the WorkKernel trait"
             );
+        }
+    }
+}
+
+/// Everything that configures an engine, outside `serve/config.rs` (the
+/// one module allowed to name the struct's fields): the serve sources,
+/// the CLI binary, the bench harness, and every engine-driving test.
+const BUILDER_ONLY_SOURCES: [(&str, &str); 14] = [
+    ("serve/mod.rs", include_str!("../src/serve/mod.rs")),
+    ("serve/batch.rs", include_str!("../src/serve/batch.rs")),
+    ("serve/ingest.rs", include_str!("../src/serve/ingest.rs")),
+    ("serve/mix.rs", include_str!("../src/serve/mix.rs")),
+    ("serve/landscape.rs", include_str!("../src/serve/landscape.rs")),
+    ("src/main.rs", include_str!("../src/main.rs")),
+    (
+        "benches/serve_throughput.rs",
+        include_str!("../benches/serve_throughput.rs"),
+    ),
+    ("tests/serve_engine.rs", include_str!("serve_engine.rs")),
+    ("tests/serve_adaptive.rs", include_str!("serve_adaptive.rs")),
+    ("tests/kernel_shards.rs", include_str!("kernel_shards.rs")),
+    ("tests/stream_schedules.rs", include_str!("stream_schedules.rs")),
+    ("tests/dynamic_schedules.rs", include_str!("dynamic_schedules.rs")),
+    ("tests/serve_plan_cache.rs", include_str!("serve_plan_cache.rs")),
+    ("tests/ingest.rs", include_str!("ingest.rs")),
+];
+
+#[test]
+fn serve_config_is_constructed_only_through_the_builder() {
+    // The builder's `build()` is the single validation point for the
+    // engine knobs; a struct literal (or `Default::default()`) would
+    // bypass it and quietly reintroduce the old scattered `max(1)`
+    // clamps.  Return-type positions (`-> ServeConfig {`) are fine.
+    for (path, src) in BUILDER_ONLY_SOURCES {
+        assert!(
+            !src.contains("ServeConfig::default()"),
+            "{path} calls ServeConfig::default(); construct through \
+             ServeConfig::builder() so the knobs are validated"
+        );
+        let mut from = 0;
+        while let Some(pos) = src[from..].find("ServeConfig {") {
+            let at = from + pos;
+            let before = &src[..at];
+            let before = before.strip_suffix('&').unwrap_or(before);
+            assert!(
+                before.ends_with("-> "),
+                "{path} builds a ServeConfig struct literal (byte {at}); \
+                 construct through ServeConfig::builder()"
+            );
+            from = at + 1;
         }
     }
 }

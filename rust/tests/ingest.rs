@@ -1,0 +1,165 @@
+//! Ingest front-end acceptance: seeded traces replay bit-identically,
+//! checksums through the micro-batching path match direct
+//! `execute_batch` runs, priority classes drain in order, and the
+//! threaded `IngestServer` delivers the same results as the
+//! deterministic virtual-clock driver.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use gpulb::prelude::*;
+use gpulb::serve::ingest::{run_trace, IngestServer};
+use gpulb::serve::{bursty_trace, ingest_gate_catalog, poisson_trace, Arrival};
+
+/// The CI gate configuration: fixed merge-path + proxy feedback makes
+/// every latency a pure function of (catalog, trace, window).
+fn gate_engine(threads: usize) -> Engine {
+    Engine::new(
+        ServeConfig::builder()
+            .threads(threads)
+            .plan_workers(256)
+            .schedule(SchedulePolicy::Fixed(ScheduleKind::MergePath))
+            .feedback(CostFeedback::Proxy)
+            .build()
+            .unwrap(),
+    )
+}
+
+#[test]
+fn same_seed_replays_cuts_latencies_and_checksums_bitwise() {
+    let catalog = ingest_gate_catalog(0);
+    let arrivals = poisson_trace(catalog.len(), 64, 2000.0, 0xFEED);
+    let cfg = IngestConfig::builder().max_batch(4).build().unwrap();
+    let a = run_trace(&gate_engine(2), &catalog, &arrivals, &cfg).unwrap();
+    let b = run_trace(&gate_engine(2), &catalog, &arrivals, &cfg).unwrap();
+    // The virtual clock must also be independent of host thread count.
+    let c = run_trace(&gate_engine(1), &catalog, &arrivals, &cfg).unwrap();
+    assert_eq!(a.requests, 64);
+    assert_eq!(a.batches, b.batches);
+    for other in [&b, &c] {
+        assert_eq!(a.batches, other.batches);
+        for (ra, rb) in a.records.iter().zip(&other.records) {
+            assert_eq!(ra.index, rb.index);
+            assert_eq!(ra.class, rb.class);
+            assert_eq!(ra.arrived.to_bits(), rb.arrived.to_bits());
+            assert_eq!(ra.cut.to_bits(), rb.cut.to_bits());
+            assert_eq!(ra.done.to_bits(), rb.done.to_bits());
+            assert_eq!(ra.checksum.to_bits(), rb.checksum.to_bits());
+        }
+        assert_eq!(a.p50.to_bits(), other.p50.to_bits());
+        assert_eq!(a.p95.to_bits(), other.p95.to_bits());
+        assert_eq!(a.p99.to_bits(), other.p99.to_bits());
+        assert_eq!(a.sustained_rps.to_bits(), other.sustained_rps.to_bits());
+    }
+    // A different seed produces a genuinely different trace.
+    let other = poisson_trace(catalog.len(), 64, 2000.0, 0xBEEF);
+    assert_ne!(arrivals, other);
+}
+
+#[test]
+fn ingest_checksums_match_direct_execute_batch() {
+    let catalog = ingest_gate_catalog(0);
+    let direct = gate_engine(2).execute_batch(&catalog).checksums;
+    let arrivals = bursty_trace(catalog.len(), 48, 3000.0, 8, 7);
+    let cfg = IngestConfig::builder().build().unwrap();
+    let report = run_trace(&gate_engine(2), &catalog, &arrivals, &cfg).unwrap();
+    assert_eq!(report.requests, arrivals.len());
+    // Records come back in trace order; each request's checksum must be
+    // bit-identical to its catalog problem run straight through the
+    // engine — the front-end adds batching, never numerics.
+    for (rec, arr) in report.records.iter().zip(&arrivals) {
+        assert_eq!(
+            rec.checksum.to_bits(),
+            direct[arr.problem].to_bits(),
+            "request {} (problem {}) diverged from direct execution",
+            rec.index,
+            arr.problem
+        );
+    }
+}
+
+#[test]
+fn interactive_requests_drain_before_bulk_within_a_batch() {
+    let catalog = ingest_gate_catalog(0);
+    let arrivals = vec![
+        Arrival {
+            at: 0.0,
+            class: IngestClass::Bulk,
+            problem: 0,
+        },
+        Arrival {
+            at: 1e-4,
+            class: IngestClass::Interactive,
+            problem: 1,
+        },
+    ];
+    let cfg = IngestConfig::builder().max_batch(2).build().unwrap();
+    let report = run_trace(&gate_engine(1), &catalog, &arrivals, &cfg).unwrap();
+    assert_eq!(report.batches, 1, "both arrivals share one micro-batch");
+    let bulk = &report.records[0];
+    let interactive = &report.records[1];
+    assert_eq!(bulk.class, IngestClass::Bulk);
+    assert_eq!(interactive.class, IngestClass::Interactive);
+    // Same cut, but the interactive request completes first despite
+    // arriving second: priority ordering inside the batch.
+    assert_eq!(bulk.cut.to_bits(), interactive.cut.to_bits());
+    assert!(
+        interactive.done < bulk.done,
+        "interactive ({}) must drain before bulk ({})",
+        interactive.done,
+        bulk.done
+    );
+}
+
+#[test]
+fn report_accounts_every_request_per_class() {
+    let catalog = ingest_gate_catalog(0);
+    let arrivals = poisson_trace(catalog.len(), 200, 5000.0, 42);
+    let cfg = IngestConfig::builder().max_batch(8).build().unwrap();
+    let report = run_trace(&gate_engine(2), &catalog, &arrivals, &cfg).unwrap();
+    assert_eq!(report.requests, 200);
+    let class_total: usize = report.classes.iter().map(|c| c.requests).sum();
+    assert_eq!(class_total, 200, "class summaries must cover every request");
+    for c in &report.classes {
+        assert!((0.0..=1.0).contains(&c.slo_violations), "{:?}", c.class);
+        assert!(c.p50 <= c.p95 && c.p95 <= c.p99, "{:?}", c.class);
+        assert!(c.p50 >= 0.0);
+    }
+    assert!(report.sustained_rps > 0.0);
+    assert!(report.makespan > 0.0);
+    assert!(report.mean_batch() >= 1.0 && report.mean_batch() <= 8.0);
+}
+
+#[test]
+fn threaded_server_delivers_direct_execution_results() {
+    let catalog = ingest_gate_catalog(0);
+    let direct = gate_engine(2).execute_batch(&catalog).checksums;
+    let server = IngestServer::start(
+        Arc::new(gate_engine(2)),
+        IngestConfig::builder()
+            .max_batch(4)
+            .max_wait(Duration::from_millis(5))
+            .build()
+            .unwrap(),
+    );
+    let handle = server.handle();
+    let tickets: Vec<_> = catalog
+        .iter()
+        .enumerate()
+        .map(|(i, p)| (i, handle.submit(p.clone(), IngestClass::Standard).unwrap()))
+        .collect();
+    drop(handle);
+    for (i, ticket) in tickets {
+        let completion = ticket.wait().unwrap();
+        assert!(completion.latency >= 0.0);
+        assert_eq!(
+            completion.checksum.to_bits(),
+            direct[i].to_bits(),
+            "problem {i} diverged through the threaded front-end"
+        );
+    }
+    let report = server.finish().unwrap();
+    assert_eq!(report.requests, catalog.len());
+    assert!(report.batches >= 1);
+    assert!(report.records.iter().all(|r| r.done >= r.cut));
+}

@@ -121,12 +121,14 @@ fn engine_split_path_bit_identical_for_every_kernel_at_all_thread_counts() {
         Problem::frontier(a.clone(), (0..a.rows as u32).collect()),
     ];
     for kind in [ScheduleKind::MergePath, ScheduleKind::NonzeroSplit] {
-        let cfg = |threads: usize, split_min_atoms: usize| ServeConfig {
-            threads,
-            plan_workers: 64,
-            schedule: SchedulePolicy::Fixed(kind),
-            split_min_atoms,
-            ..ServeConfig::default()
+        let cfg = |threads: usize, split_min_atoms: usize| {
+            ServeConfig::builder()
+                .threads(threads)
+                .plan_workers(64)
+                .schedule(SchedulePolicy::Fixed(kind))
+                .split_min_atoms(split_min_atoms)
+                .build()
+                .unwrap()
         };
         // Reference: whole-problem sequential execution.
         let whole = ServeEngine::new(cfg(1, usize::MAX)).execute_batch(&mix);
@@ -154,13 +156,15 @@ fn spgemm_and_spmm_serve_through_cache_tuner_and_split() {
     let mix = vec![Problem::spgemm(a.clone(), b), Problem::spmm(a, 6)];
 
     // Reference: fixed merge-path, whole problems, one thread.
-    let fixed = |threads: usize, split_min_atoms: usize| ServeConfig {
-        threads,
-        plan_workers: 64,
-        schedule: SchedulePolicy::Fixed(ScheduleKind::MergePath),
-        feedback: CostFeedback::Proxy,
-        split_min_atoms,
-        ..ServeConfig::default()
+    let fixed = |threads: usize, split_min_atoms: usize| {
+        ServeConfig::builder()
+            .threads(threads)
+            .plan_workers(64)
+            .schedule(SchedulePolicy::Fixed(ScheduleKind::MergePath))
+            .feedback(CostFeedback::Proxy)
+            .split_min_atoms(split_min_atoms)
+            .build()
+            .unwrap()
     };
     let reference = ServeEngine::new(fixed(1, usize::MAX)).execute_batch(&mix);
 
@@ -175,13 +179,19 @@ fn spgemm_and_spmm_serve_through_cache_tuner_and_split() {
         // Adaptive tuner: deterministic proxy feedback replays the same
         // schedule trace at every thread count, so checksums match their
         // own 1-thread twin batch for batch.
-        let adaptive = |threads: usize| ServeConfig {
-            schedule: SchedulePolicy::Adaptive {
-                epsilon: 0.05,
-                min_samples: 1,
-                seed: 0xC0FFEE,
-            },
-            ..fixed(threads, 1)
+        let adaptive = |threads: usize| {
+            ServeConfig::builder()
+                .threads(threads)
+                .plan_workers(64)
+                .schedule(SchedulePolicy::Adaptive {
+                    epsilon: 0.05,
+                    min_samples: 1,
+                    seed: 0xC0FFEE,
+                })
+                .feedback(CostFeedback::Proxy)
+                .split_min_atoms(1)
+                .build()
+                .unwrap()
         };
         let engine = ServeEngine::new(adaptive(threads));
         let twin = ServeEngine::new(adaptive(1));

@@ -21,30 +21,34 @@ use gpulb::sparse::Csr;
 const PLAN_WORKERS: usize = 64;
 const SEED: u64 = 0xC0FFEE;
 
-fn adaptive_cfg(threads: usize) -> ServeConfig {
-    ServeConfig {
-        threads,
-        plan_workers: PLAN_WORKERS,
-        schedule: SchedulePolicy::Adaptive {
+fn adaptive_cfg_seeded(threads: usize, seed: u64) -> ServeConfig {
+    ServeConfig::builder()
+        .threads(threads)
+        .plan_workers(PLAN_WORKERS)
+        .schedule(SchedulePolicy::Adaptive {
             epsilon: 0.02,
             min_samples: 2,
-            seed: SEED,
-        },
-        feedback: CostFeedback::Proxy,
-        cache_capacity: 1024,
-        ..ServeConfig::default()
-    }
+            seed,
+        })
+        .feedback(CostFeedback::Proxy)
+        .cache_capacity(1024)
+        .build()
+        .unwrap()
+}
+
+fn adaptive_cfg(threads: usize) -> ServeConfig {
+    adaptive_cfg_seeded(threads, SEED)
 }
 
 fn fixed_cfg(threads: usize, kind: ScheduleKind) -> ServeConfig {
-    ServeConfig {
-        threads,
-        plan_workers: PLAN_WORKERS,
-        schedule: SchedulePolicy::Fixed(kind),
-        feedback: CostFeedback::Proxy,
-        cache_capacity: 1024,
-        ..ServeConfig::default()
-    }
+    ServeConfig::builder()
+        .threads(threads)
+        .plan_workers(PLAN_WORKERS)
+        .schedule(SchedulePolicy::Fixed(kind))
+        .feedback(CostFeedback::Proxy)
+        .cache_capacity(1024)
+        .build()
+        .unwrap()
 }
 
 /// Ring graph: every vertex has exactly one unit-weight neighbor — a
@@ -225,15 +229,7 @@ fn adaptive_trace_is_deterministic_across_seeds_and_threads() {
     );
     // A different seed is allowed to explore differently — but only after
     // the deterministic cold-start + warmup phases.
-    let other_cfg = ServeConfig {
-        schedule: SchedulePolicy::Adaptive {
-            epsilon: 0.02,
-            min_samples: 2,
-            seed: SEED + 1,
-        },
-        ..adaptive_cfg(1)
-    };
-    let other_engine = ServeEngine::new(other_cfg);
+    let other_engine = ServeEngine::new(adaptive_cfg_seeded(1, SEED + 1));
     let other: Vec<Vec<ScheduleKind>> = (0..10)
         .map(|_| other_engine.execute_batch(&mix).schedules)
         .collect();

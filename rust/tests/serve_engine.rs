@@ -45,10 +45,7 @@ fn engine_checksums_invariant_across_thread_counts() {
     let reports: Vec<_> = [1usize, 2, 4, 8]
         .iter()
         .map(|&threads| {
-            let engine = ServeEngine::new(ServeConfig {
-                threads,
-                ..ServeConfig::default()
-            });
+            let engine = ServeEngine::new(ServeConfig::builder().threads(threads).build().unwrap());
             engine.execute_batch(&mix)
         })
         .collect();
@@ -63,10 +60,7 @@ fn engine_checksums_invariant_across_thread_counts() {
 #[test]
 fn engine_reuses_plans_across_batches() {
     let mix = corpus_mix(0);
-    let engine = ServeEngine::new(ServeConfig {
-        threads: 4,
-        ..ServeConfig::default()
-    });
+    let engine = ServeEngine::new(ServeConfig::builder().threads(4).build().unwrap());
     let first = engine.execute_batch(&mix);
     assert!(first.cache.misses > 0);
     let misses_after_first = first.cache.misses;
@@ -86,10 +80,7 @@ fn engine_concurrent_cold_cache_is_consistent() {
     let problems: Vec<Problem> = (0..24)
         .map(|i| Problem::spmv(Arc::new(gen::power_law(200, 200, 100, 1.4, i))))
         .collect();
-    let engine = ServeEngine::new(ServeConfig {
-        threads: 8,
-        ..ServeConfig::default()
-    });
+    let engine = ServeEngine::new(ServeConfig::builder().threads(8).build().unwrap());
     let cold = engine.execute_batch(&problems);
     let warm = engine.execute_batch(&problems);
     assert_eq!(cold.checksums, warm.checksums);

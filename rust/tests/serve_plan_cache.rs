@@ -8,7 +8,7 @@
 
 use gpulb::balance::{stream, OffsetsSource, ScheduleKind};
 use gpulb::rng::Rng;
-use gpulb::serve::plan_cache::{fingerprint, PlanCache, PlanEntry, PlanKey};
+use gpulb::serve::{fingerprint, PlanCache, PlanEntry, PlanKey};
 use gpulb::sparse::{gen, Csr};
 
 const SCHEDULES: [ScheduleKind; 7] = [

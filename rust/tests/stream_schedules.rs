@@ -126,14 +126,14 @@ fn split_mix() -> Vec<Problem> {
 }
 
 fn cfg(threads: usize, kind: ScheduleKind, split_min_atoms: usize) -> ServeConfig {
-    ServeConfig {
-        threads,
-        plan_workers: 64,
-        schedule: SchedulePolicy::Fixed(kind),
-        feedback: CostFeedback::Proxy,
-        split_min_atoms,
-        ..ServeConfig::default()
-    }
+    ServeConfig::builder()
+        .threads(threads)
+        .plan_workers(64)
+        .schedule(SchedulePolicy::Fixed(kind))
+        .feedback(CostFeedback::Proxy)
+        .split_min_atoms(split_min_atoms)
+        .build()
+        .unwrap()
 }
 
 #[test]

@@ -1,0 +1,244 @@
+#!/usr/bin/env python3
+"""Toolchain-free port of the ingest gate (`gpulb serve --ingest --bench`).
+
+Mirrors, integer- and IEEE-double-exactly, the deterministic pipeline in
+`rust/src/serve/ingest.rs` + `rust/src/serve/mix.rs`:
+
+  seeded Poisson trace  ->  micro-batch cuts  ->  virtual-clock drain
+  (merge-path proxy cost per request)  ->  latency percentiles
+
+and emits the same JSON document `write_ingest_json` produces, so the
+committed `BENCH_ingest_baseline.json` can be (re)generated without a Rust
+toolchain and CI's bench-diff compares apples to apples:
+
+    python3 tools/ingest_port.py > BENCH_ingest_baseline.json
+
+The per-event draw order (gap, class, problem), the xoshiro256** stream,
+the batching-window semantics, and the drain order (class priority, then
+trace index) are all part of the determinism contract pinned by
+`rust/tests/ingest.rs`; any change on the Rust side must update this port
+and regenerate the baseline in the same PR.
+"""
+
+import sys
+
+from proxy_port import prefix, proxy_planned
+
+MASK = (1 << 64) - 1
+
+# The gate configuration (`cmd_serve_ingest` defaults in rust/src/main.rs).
+SCALE = 1
+REQUESTS = 256
+RATE = 2000.0
+TRACE_SEED = 0x1A7E_5EED
+MAX_BATCH = 8
+MAX_WAIT = 1.0e-3
+PLAN_WORKERS = 256
+PROXY_VIRT_SECS = 1e-6
+
+# (priority, slo_secs, name) per class — IngestClass::ALL order.
+CLASSES = [(0, 0.005, "interactive"), (1, 0.025, "standard"), (2, 0.250, "bulk")]
+INTERACTIVE, STANDARD, BULK = 0, 1, 2
+
+
+# --- rng.rs: splitmix64-seeded xoshiro256** ------------------------------
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Rng:
+    def __init__(self, seed):
+        s = []
+        sm = seed & MASK
+        for _ in range(4):
+            sm = (sm + 0x9E3779B97F4A7C15) & MASK
+            z = sm
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[1] * 5) & MASK, 7) * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def f64(self):
+        return (self.next_u64() >> 11) / float(1 << 53)
+
+    def below(self, n):
+        return self.next_u64() % n
+
+    def exponential(self, rate):
+        import math
+
+        return -math.log(1.0 - self.f64()) / rate
+
+
+# --- mix.rs: gate catalog + seeded arrival traces ------------------------
+
+# scale >= 1 hotrow shapes (n, hot, hot_len, tail) — `ingest_gate_catalog`.
+GATE_SHAPES = {
+    0: [(1024, 16, 512, 16), (1024, 64, 128, 8), (512, 8, 256, 16), (512, 32, 128, 8)],
+    1: [
+        (4096, 64, 512, 16),
+        (4096, 256, 256, 8),
+        (2048, 32, 512, 16),
+        (2048, 128, 256, 8),
+        (1024, 16, 512, 16),
+        (1024, 64, 128, 8),
+    ],
+}
+
+
+def hotrow_offsets(n, hot, hot_len, tail):
+    """Row offsets of `gen::hotrow(n, n, hot, hot_len, tail)`."""
+    return prefix([hot_len if r < hot else tail for r in range(n)])
+
+
+def draw_class(rng):
+    u = rng.f64()
+    if u < 0.2:
+        return INTERACTIVE
+    if u < 0.8:
+        return STANDARD
+    return BULK
+
+
+def poisson_trace(problems, requests, rate, seed):
+    """[(at, class, problem)] — draw order (gap, class, problem) per event."""
+    rng = Rng(seed)
+    t = 0.0
+    out = []
+    for _ in range(requests):
+        t += rng.exponential(rate)
+        cls = draw_class(rng)
+        problem = rng.below(problems)
+        out.append((t, cls, problem))
+    return out
+
+
+# --- ingest.rs: micro-batch cuts + virtual-clock drain -------------------
+
+
+def cut_batches(arrivals, max_batch, max_wait):
+    """[(cut_at, first, len)] — window expiry checked before batch-full."""
+    cuts = []
+    first = 0
+    for i in range(len(arrivals)):
+        if i > first and arrivals[i][0] > arrivals[first][0] + max_wait:
+            cuts.append((arrivals[first][0] + max_wait, first, i - first))
+            first = i
+        if i + 1 - first == max_batch:
+            cuts.append((arrivals[i][0], first, max_batch))
+            first = i + 1
+    if first < len(arrivals):
+        cuts.append((arrivals[first][0] + max_wait, first, len(arrivals) - first))
+    return cuts
+
+
+def run_trace(offsets_by_problem, arrivals, max_batch, max_wait, workers):
+    """Port of `run_trace`'s virtual clock for the Fixed(MergePath) gate.
+
+    Returns [(index, class, arrived, cut, done)] in trace order.  The
+    engine's checksums don't enter the latency math, so the port skips
+    the numerics entirely — proxy cost is the whole clock model.
+    """
+    cost = [
+        proxy_planned("mp", None, offs, workers) * PROXY_VIRT_SECS
+        for offs in offsets_by_problem
+    ]
+    records = []
+    done_prev = 0.0
+    for cut_at, first, length in cut_batches(arrivals, max_batch, max_wait):
+        order = sorted(range(first, first + length), key=lambda i: (arrivals[i][1], i))
+        clock = max(done_prev, cut_at)
+        for i in order:
+            clock += cost[arrivals[i][2]]
+            records.append((i, arrivals[i][1], arrivals[i][0], cut_at, clock))
+        done_prev = clock
+    records.sort(key=lambda r: r[0])
+    return records
+
+
+# --- metrics.rs percentile + report summary ------------------------------
+
+
+def percentile(xs, p):
+    import math
+
+    v = sorted(x for x in xs if not math.isnan(x))
+    if not v:
+        return float("nan")
+    rank = (p / 100.0) * (len(v) - 1)
+    lo = math.floor(rank)
+    hi = math.ceil(rank)
+    if lo == hi:
+        return v[lo]
+    return v[lo] + (rank - lo) * (v[hi] - v[lo])
+
+
+def summarize(records):
+    latencies = [done - arrived for (_, _, arrived, _, done) in records]
+    makespan = max((done for (_, _, _, _, done) in records), default=0.0)
+    span = makespan - min(arrived for (_, _, arrived, _, _) in records)
+    rps = len(records) / span if records and span > 0.0 else 0.0
+    return {
+        "p50": percentile(latencies, 50.0),
+        "p95": percentile(latencies, 95.0),
+        "p99": percentile(latencies, 99.0),
+        "rps": rps,
+    }
+
+
+# --- benchutil.rs family_json_with_unit ----------------------------------
+
+
+def ingest_json(scale, requests, summary):
+    rows = [
+        ("latency_p50_ms", summary["p50"] * 1e3, "lower"),
+        ("latency_p95_ms", summary["p95"] * 1e3, "lower"),
+        ("latency_p99_ms", summary["p99"] * 1e3, "lower"),
+        ("throughput_rps", summary["rps"], "higher"),
+    ]
+    out = ["{", '  "bench": "ingest",', '  "unit": "ms / requests-per-sec",']
+    out.append(f'  "scale": {scale},')
+    out.append('  "families": [')
+    for i, (family, value, better) in enumerate(rows):
+        sep = "" if i + 1 == len(rows) else ","
+        out.append(
+            f'    {{"family": "{family}", "problems": {requests}, '
+            f'"geomean_throughput": {value:.6f}, "better": "{better}"}}{sep}'
+        )
+    out.append("  ]")
+    out.append("}")
+    return "\n".join(out) + "\n"
+
+
+def main():
+    shapes = GATE_SHAPES[min(SCALE, 1)]
+    offsets = [hotrow_offsets(n, hot, hl, tl) for (n, hot, hl, tl) in shapes]
+    arrivals = poisson_trace(len(shapes), REQUESTS, RATE, TRACE_SEED)
+    records = run_trace(offsets, arrivals, MAX_BATCH, MAX_WAIT, PLAN_WORKERS)
+    assert len(records) == REQUESTS
+    summary = summarize(records)
+    sys.stdout.write(ingest_json(SCALE, REQUESTS, summary))
+    batches = len(cut_batches(arrivals, MAX_BATCH, MAX_WAIT))
+    print(
+        f"# {REQUESTS} requests in {batches} micro-batches, "
+        f"p95 {summary['p95'] * 1e3:.3f} ms, {summary['rps']:.1f} req/s",
+        file=sys.stderr,
+    )
+
+
+if __name__ == "__main__":
+    main()
