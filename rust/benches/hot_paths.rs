@@ -1,26 +1,106 @@
-//! Hot-path microbenchmarks (`cargo bench --bench hot_paths`) — the §Perf
-//! targets from DESIGN.md.  These are the operations on the coordinator's
-//! critical path:
+//! Hot-path microbenchmarks (`cargo bench --bench hot_paths`) — the raw
+//! host-lane speed targets of ROADMAP item 3, documented in README
+//! "Raw speed".  These are the operations on the coordinator's critical
+//! path:
 //!
 //! * merge-path 2-D diagonal search (per-thread partition cost);
+//! * incremental merge-path walker vs per-worker binary search (the
+//!   plan-build hot loop);
+//! * SpMV segment inner loop: serial left fold vs the 4-lane block tree;
+//! * SpGEMM batch flush: fresh slab vs reusable arena;
 //! * lower-bound search (nonzero splitting);
 //! * LRB / three-bin binning throughput;
 //! * schedule assignment end-to-end;
 //! * block-scheduler simulation throughput;
 //! * queue-policy simulation;
 //! * PJRT dispatch (only when artifacts are present).
+//!
+//! Flags (after `--`): `--quick` (short smoke-run windows), `--out PATH`
+//! (write the per-op `BENCH_hot_paths.json` artifact), `--gate` (enforce
+//! the self-relative speedup floors: walker vs binary-search plan build
+//! and lane vs serial SpMV inner loop, both measured within this run so
+//! absolute runner speed cancels), `--min-walker-speedup F` (default
+//! 1.2), `--min-simd-speedup F` (default 1.1).
 
-use gpulb::balance::{binning, merge_path, nonzero_split, search, thread_mapped};
-use gpulb::benchutil::Bencher;
+use gpulb::balance::{binning, merge_path, nonzero_split, search, stream, thread_mapped};
+use gpulb::balance::{OffsetsSource, ScheduleKind};
+use gpulb::benchutil::{family_json_with_unit, Bencher, Direction, FamilyPoint};
+use gpulb::exec::{lanes, spgemm};
 use gpulb::sim::{self, CtaWork, GpuSpec};
 use gpulb::sparse::gen;
 
+struct Opts {
+    quick: bool,
+    gate: bool,
+    out: Option<String>,
+    min_walker_speedup: f64,
+    min_simd_speedup: f64,
+}
+
+fn parse_opts() -> Opts {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut opts = Opts {
+        quick: false,
+        gate: false,
+        out: None,
+        min_walker_speedup: 1.2,
+        min_simd_speedup: 1.1,
+    };
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--quick" => opts.quick = true,
+            "--gate" => opts.gate = true,
+            "--out" => {
+                i += 1;
+                opts.out = Some(args.get(i).expect("--out requires a path").clone());
+            }
+            "--min-walker-speedup" => {
+                i += 1;
+                opts.min_walker_speedup = args
+                    .get(i)
+                    .expect("--min-walker-speedup requires a number")
+                    .parse()
+                    .expect("--min-walker-speedup must be a float");
+            }
+            "--min-simd-speedup" => {
+                i += 1;
+                opts.min_simd_speedup = args
+                    .get(i)
+                    .expect("--min-simd-speedup requires a number")
+                    .parse()
+                    .expect("--min-simd-speedup must be a float");
+            }
+            // Cargo may forward harness-style flags; ignore them.
+            "--bench" => {}
+            other => eprintln!("hot_paths: ignoring unknown arg {other:?}"),
+        }
+        i += 1;
+    }
+    opts
+}
+
+fn median_of(b: &Bencher, name: &str) -> f64 {
+    b.results()
+        .iter()
+        .find(|r| r.name == name)
+        .unwrap_or_else(|| panic!("bench row {name:?} missing"))
+        .ns_per_iter_median
+}
+
 fn main() {
-    let mut b = Bencher::default();
+    let opts = parse_opts();
+    let mut b = if opts.quick {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
 
     let a = gen::power_law(65_536, 65_536, 16_384, 1.7, 1);
     let offsets = &a.offsets;
     let total = a.rows + a.nnz();
+    let workers = 10_240usize;
+    let per_diag = total.div_ceil(workers).max(1);
 
     println!("# search primitives");
     b.bench("search/merge_path_search_1k_diags", || {
@@ -37,6 +117,72 @@ fn main() {
             acc += search::lower_bound(offsets, (i * 104_729) % (a.nnz() + 1));
         }
         acc
+    });
+
+    // The gated pair #1: resolving every worker boundary of a 10_240-way
+    // merge-path plan — what every stream walk used to pay as two binary
+    // searches per worker vs what the incremental walker pays now.
+    println!("\n# plan build: worker boundaries, binary search vs incremental walker");
+    b.bench("plan/merge_path_boundaries_search", || {
+        let mut acc = 0usize;
+        for w in 0..=workers {
+            acc += search::merge_path_search(offsets, (w * per_diag).min(total)).0;
+        }
+        acc
+    });
+    b.bench("plan/merge_path_boundaries_walker", || {
+        let mut walker = search::MergePathWalker::new(offsets);
+        let mut acc = 0usize;
+        for w in 0..=workers {
+            acc += walker.advance_to((w * per_diag).min(total)).0;
+        }
+        acc
+    });
+
+    // The gated pair #2: the SpMV segment inner loop on an L1/L2-resident
+    // gather target — the serial left fold the executors used before
+    // exec/lanes.rs vs the 4-lane block tree (both builds always compile
+    // both; the `simd` feature only picks the production dispatch).
+    println!("\n# spmv inner loop: serial fold vs 4-lane block tree");
+    let seg_len = 65_536usize;
+    let xs_len = 4096usize;
+    let seg_values: Vec<f64> = (0..seg_len).map(|i| (i as f64 * 0.37).sin()).collect();
+    let seg_indices: Vec<u32> = (0..seg_len)
+        .map(|i| ((i * 2654435761) % xs_len) as u32)
+        .collect();
+    let xs: Vec<f64> = (0..xs_len).map(|i| (i as f64 * 0.17).cos()).collect();
+    b.bench("spmv/inner_linear", || {
+        lanes::gather_dot_linear(&seg_values, &seg_indices, &xs)
+    });
+    b.bench("spmv/inner_lanes", || {
+        lanes::gather_dot_lanes(&seg_values, &seg_indices, &xs)
+    });
+
+    println!("\n# spgemm batch flush: fresh slab vs reusable arena");
+    let sa = gen::power_law(512, 512, 128, 1.7, 7);
+    let sb = gen::uniform(512, 256, 4, 8);
+    let work = spgemm::work_offsets(&sa, &sb);
+    let src = OffsetsSource::new(&work);
+    let desc = ScheduleKind::MergePath
+        .descriptor(&src, 64)
+        .expect("merge-path streams");
+    let scatter = |slab: &mut spgemm::RowSlab| {
+        stream::for_each_segment(desc, &work, |s| {
+            spgemm::for_each_segment_product(&sa, &sb, &work, s, |col, v| {
+                slab.push_one(s.tile, col, v);
+            });
+        });
+    };
+    b.bench("spgemm/flush_fresh_slab", || {
+        let mut slab = spgemm::RowSlab::new(&work);
+        scatter(&mut slab);
+        spgemm::checksum(&slab.finalize(sa.rows, sb.cols))
+    });
+    let mut arena = spgemm::RowSlab::new(&work);
+    b.bench("spgemm/flush_arena_reuse", || {
+        arena.reset(&work);
+        scatter(&mut arena);
+        arena.checksum_merged(sa.rows)
     });
 
     println!("\n# schedule assignment (65k x 65k power-law, 10240 workers)");
@@ -110,5 +256,55 @@ fn main() {
         });
     } else {
         println!("\n(artifacts absent: skipping PJRT dispatch bench)");
+    }
+
+    // Per-op artifact rows: one lower-is-better ns/op family per bench.
+    if let Some(path) = &opts.out {
+        let points: Vec<FamilyPoint> = b
+            .results()
+            .iter()
+            .map(|r| FamilyPoint {
+                family: r.name.clone(),
+                problems: 1,
+                geomean_throughput: r.ns_per_iter_median,
+                direction: Direction::LowerIsBetter,
+            })
+            .collect();
+        let json = family_json_with_unit("hot_paths", "ns/op", 1, &points);
+        std::fs::write(path, json).expect("write hot_paths artifact");
+        println!("\nwrote {path}");
+    }
+
+    // Self-relative speedup gates: numerator and denominator come from
+    // this same run on this same machine, so shared-runner noise cancels
+    // to first order and only the *relative* win is asserted.
+    let walker_speedup = median_of(&b, "plan/merge_path_boundaries_search")
+        / median_of(&b, "plan/merge_path_boundaries_walker");
+    let simd_speedup = median_of(&b, "spmv/inner_linear") / median_of(&b, "spmv/inner_lanes");
+    println!("\nwalker speedup vs binary-search plan build: {walker_speedup:.2}x");
+    println!("lane-kernel speedup vs serial SpMV inner loop: {simd_speedup:.2}x");
+    if opts.gate {
+        let mut failed = false;
+        if walker_speedup < opts.min_walker_speedup {
+            eprintln!(
+                "GATE FAIL: incremental walker {walker_speedup:.2}x < required {:.2}x",
+                opts.min_walker_speedup
+            );
+            failed = true;
+        }
+        if simd_speedup < opts.min_simd_speedup {
+            eprintln!(
+                "GATE FAIL: lane kernel {simd_speedup:.2}x < required {:.2}x",
+                opts.min_simd_speedup
+            );
+            failed = true;
+        }
+        if failed {
+            std::process::exit(1);
+        }
+        println!(
+            "gates passed (walker >= {:.2}x, simd >= {:.2}x)",
+            opts.min_walker_speedup, opts.min_simd_speedup
+        );
     }
 }

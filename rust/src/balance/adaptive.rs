@@ -253,13 +253,20 @@ pub fn proxy_cost_stream(
 ) -> f64 {
     let g = desc.granularity().threads().max(1) as u64;
     let mut makespan: u64 = 0;
-    for w in 0..desc.workers() {
-        let mut steps: u64 = 0;
-        for s in super::stream::worker_segments(*desc, offsets, w) {
-            steps += SEG_OVERHEAD + (s.len() as u64).div_ceil(g);
+    // One continuous walk over all workers (the incremental merge-path
+    // walker) instead of a per-worker binary-search restart; empty
+    // workers emit no segments and contribute zero steps either way.
+    let mut cur = usize::MAX;
+    let mut steps: u64 = 0;
+    super::stream::for_each_worker_segment(*desc, offsets, |w, s| {
+        if w != cur {
+            makespan = makespan.max(steps);
+            steps = 0;
+            cur = w;
         }
-        makespan = makespan.max(steps);
-    }
+        steps += SEG_OVERHEAD + (s.len() as u64).div_ceil(g);
+    });
+    makespan = makespan.max(steps);
     setup_cost(desc.kind(), tiles, atoms) + makespan as f64
 }
 

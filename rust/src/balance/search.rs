@@ -77,6 +77,76 @@ pub fn merge_path_search(offsets: &[usize], d: usize) -> (usize, usize) {
     (lo, d - lo)
 }
 
+/// Incremental merge-path walker: [`merge_path_search`] amortized over a
+/// *monotone* sequence of diagonals.
+///
+/// The search invariant — the answer `i` is the largest index with
+/// `offsets[i] + i <= d` — is monotone in `i` (because `offsets[i] + i`
+/// is strictly increasing) *and* the answer is monotone in `d` (pinned by
+/// `merge_path_is_monotone_and_consistent`).  So a walker that remembers
+/// the previous frontier only ever advances, and resolving every plan
+/// boundary of a stream walk costs `O(tiles + diagonals)` total instead
+/// of `O(diagonals · log(tiles + atoms))` — the same trick as
+/// [`vectorized_sorted_search`], lifted to the 2-D diagonal search.
+///
+/// `advance_to(d)` returns exactly `merge_path_search(offsets, d)`,
+/// including the row-ends-win-ties convention, for any non-decreasing
+/// sequence of `d` (equality pinned bitwise by the tests below and, end
+/// to end, by `tests/stream_schedules.rs`).
+#[derive(Debug, Clone)]
+pub struct MergePathWalker<'a> {
+    offsets: &'a [usize],
+    tiles: usize,
+    /// Rows consumed at the last resolved diagonal (the frontier).
+    i: usize,
+    /// Last resolved diagonal (monotonicity guard).
+    d: usize,
+}
+
+impl<'a> MergePathWalker<'a> {
+    /// Walker positioned at diagonal 0.
+    pub fn new(offsets: &'a [usize]) -> Self {
+        MergePathWalker {
+            offsets,
+            tiles: offsets.len() - 1,
+            i: 0,
+            d: 0,
+        }
+    }
+
+    /// Walker seeded at diagonal `d` with a single binary search — the
+    /// entry point for a mid-plan worker range `[w0, w1)`.
+    pub fn seeded(offsets: &'a [usize], d: usize) -> (Self, (usize, usize)) {
+        let (i, j) = merge_path_search(offsets, d);
+        (
+            MergePathWalker {
+                offsets,
+                tiles: offsets.len() - 1,
+                i,
+                d,
+            },
+            (i, j),
+        )
+    }
+
+    /// Resolve diagonal `d` (`>=` every previously resolved diagonal):
+    /// returns `(rows consumed, atoms consumed)` with the same value as
+    /// `merge_path_search(offsets, d)`.
+    #[inline]
+    pub fn advance_to(&mut self, d: usize) -> (usize, usize) {
+        debug_assert!(d >= self.d, "walker diagonals must be non-decreasing");
+        debug_assert!(d <= self.tiles + *self.offsets.last().unwrap());
+        self.d = d;
+        // Consume row-ends while the invariant still holds at the new
+        // diagonal; `offsets[i] + i` is strictly increasing, so this stops
+        // at exactly the search's answer.
+        while self.i < self.tiles && self.offsets[self.i + 1] + self.i + 1 <= d {
+            self.i += 1;
+        }
+        (self.i, d - self.i)
+    }
+}
+
 /// Vectorized sorted search (§3.4.2; Baxter's ModernGPU load-balanced
 /// search): given *sorted* queries and the sorted offsets array, find each
 /// query's owning tile in a single merge pass — `O(Q + T)` total instead of
@@ -205,5 +275,75 @@ mod tests {
         // All-empty tiles: path consumes row-ends immediately.
         let offsets = [0usize, 0, 0, 0];
         assert_eq!(merge_path_search(&offsets, 2), (2, 0));
+    }
+
+    #[test]
+    fn walker_matches_search_on_every_diagonal() {
+        // The whole equivalence, exhaustively: a fresh walker advanced
+        // through all diagonals in order lands on the binary search's
+        // answer at each one — including empty rows and the endpoints.
+        let cases: Vec<Vec<usize>> = vec![
+            vec![0],
+            vec![0, 0, 0, 0],
+            vec![0, 2],
+            vec![0, 3, 3, 4, 10, 10, 12],
+            vec![0, 10_000],
+            (0..=64).collect(),
+        ];
+        for offsets in &cases {
+            let total = offsets.len() - 1 + *offsets.last().unwrap();
+            let mut walker = MergePathWalker::new(offsets);
+            for d in 0..=total {
+                assert_eq!(
+                    walker.advance_to(d),
+                    merge_path_search(offsets, d),
+                    "diverged at d={d} on {offsets:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn walker_matches_search_on_random_strided_diagonals() {
+        // Plan boundaries stride by per_diag, not by 1; the walker must
+        // land exactly even when it skips many diagonals per step — and a
+        // seeded walker must agree with a fresh one from any start.
+        let mut rng = crate::rng::Rng::new(41);
+        for _ in 0..30 {
+            let tiles = rng.range(1, 80);
+            let lens: Vec<usize> = (0..tiles)
+                .map(|_| if rng.below(3) == 0 { 0 } else { rng.below(40) })
+                .collect();
+            let offsets = crate::balance::prefix::exclusive(&lens);
+            let total = tiles + *offsets.last().unwrap();
+            let stride = rng.range(1, 17);
+            let mut walker = MergePathWalker::new(&offsets);
+            let mut d = 0usize;
+            loop {
+                assert_eq!(walker.advance_to(d), merge_path_search(&offsets, d));
+                let (_, at) = MergePathWalker::seeded(&offsets, d);
+                assert_eq!(at, merge_path_search(&offsets, d));
+                if d == total {
+                    break;
+                }
+                d = (d + stride).min(total);
+            }
+        }
+    }
+
+    #[test]
+    fn seeded_walker_continues_like_a_fresh_one() {
+        let offsets = [0usize, 3, 3, 4, 10, 10, 12];
+        let total = offsets.len() - 1 + 12;
+        for seed_d in 0..=total {
+            let (mut walker, _) = MergePathWalker::seeded(&offsets, seed_d);
+            for d in seed_d..=total {
+                assert_eq!(
+                    walker.advance_to(d),
+                    merge_path_search(&offsets, d),
+                    "seed {seed_d} diverged at d={d}"
+                );
+            }
+        }
     }
 }

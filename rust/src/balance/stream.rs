@@ -18,7 +18,7 @@
 //! ([`ScheduleDescriptor::new`] returns `None` and callers fall back to
 //! [`ScheduleKind::assign`]).
 
-use super::search::{merge_path_search, tile_of_atom};
+use super::search::{merge_path_search, tile_of_atom, MergePathWalker};
 use super::{Assignment, Granularity, ScheduleKind, Segment, WorkSource, WorkerAssignment};
 
 /// O(1) descriptor of a streaming-capable schedule's plan: everything a
@@ -274,14 +274,126 @@ pub fn worker_segments(desc: ScheduleDescriptor, offsets: &[usize], w: usize) ->
     SegmentIter { offsets, state }
 }
 
+/// The shared walk behind [`for_each_segment`], [`for_each_segment_in`]
+/// and [`materialize`]: visit every segment of workers `[w0, w1)` in
+/// worker order, calling `f(worker, segment)`.
+///
+/// Tile-strided schedules simply iterate their per-worker streams (no
+/// searches there).  The atom-range schedules (merge-path,
+/// nonzero-split) used to pay **two** 2-D binary searches per worker
+/// ([`worker_segments`]'s `d0`/`d1` probes); here one seed search at the
+/// `w0` boundary plus an incremental [`MergePathWalker`] / row cursor
+/// resolves every subsequent boundary in O(tiles + atoms + workers)
+/// total.  The emitted segments are identical to the per-worker streams —
+/// the cursor and row state carry across worker boundaries exactly where
+/// the per-worker iterator would have re-derived them — which
+/// `tests/stream_schedules.rs` pins end to end.
+fn walk_segments(
+    desc: ScheduleDescriptor,
+    offsets: &[usize],
+    w0: usize,
+    w1: usize,
+    mut f: impl FnMut(usize, Segment),
+) {
+    let w1 = w1.min(desc.workers());
+    if w0 >= w1 {
+        return;
+    }
+    match desc {
+        ScheduleDescriptor::ThreadMapped { .. } | ScheduleDescriptor::GroupMapped { .. } => {
+            for w in w0..w1 {
+                for s in worker_segments(desc, offsets, w) {
+                    f(w, s);
+                }
+            }
+        }
+        ScheduleDescriptor::MergePath {
+            tiles,
+            atoms,
+            per_diag,
+        } => {
+            let total = tiles + atoms;
+            let (mut walker, (row_seed, j0)) =
+                MergePathWalker::seeded(offsets, (w0 * per_diag).min(total));
+            let mut cursor = j0;
+            let mut row = row_seed.min(tiles.saturating_sub(1));
+            for w in w0..w1 {
+                let d1 = ((w + 1) * per_diag).min(total);
+                let (_, j1) = walker.advance_to(d1);
+                while cursor < j1 {
+                    while row + 1 < offsets.len() && offsets[row + 1] <= cursor {
+                        row += 1;
+                    }
+                    let seg_end = j1.min(offsets[row + 1]);
+                    f(
+                        w,
+                        Segment {
+                            tile: row as u32,
+                            atom_begin: cursor,
+                            atom_end: seg_end,
+                        },
+                    );
+                    cursor = seg_end;
+                }
+            }
+        }
+        ScheduleDescriptor::NonzeroSplit { atoms, per_worker } => {
+            let mut cursor = (w0 * per_worker).min(atoms);
+            let mut row = if cursor < atoms {
+                tile_of_atom(offsets, cursor)
+            } else {
+                0
+            };
+            for w in w0..w1 {
+                let end = ((w + 1) * per_worker).min(atoms);
+                while cursor < end {
+                    while row + 1 < offsets.len() && offsets[row + 1] <= cursor {
+                        row += 1;
+                    }
+                    let seg_end = end.min(offsets[row + 1]);
+                    f(
+                        w,
+                        Segment {
+                            tile: row as u32,
+                            atom_begin: cursor,
+                            atom_end: seg_end,
+                        },
+                    );
+                    cursor = seg_end;
+                }
+            }
+        }
+    }
+}
+
 /// Visit every segment of `desc` in worker order — the sequential
 /// reference order — without materializing anything.
 pub fn for_each_segment(desc: ScheduleDescriptor, offsets: &[usize], mut f: impl FnMut(Segment)) {
-    for w in 0..desc.workers() {
-        for s in worker_segments(desc, offsets, w) {
-            f(s);
-        }
-    }
+    walk_segments(desc, offsets, 0, desc.workers(), |_, s| f(s));
+}
+
+/// [`for_each_segment`] with the owning worker index — what
+/// [`materialize`] and the proxy cost meter group by.
+pub fn for_each_worker_segment(
+    desc: ScheduleDescriptor,
+    offsets: &[usize],
+    f: impl FnMut(usize, Segment),
+) {
+    walk_segments(desc, offsets, 0, desc.workers(), f);
+}
+
+/// Visit every segment of workers `[w0, w1)` in worker order — the
+/// shard-range walk the two-phase executors use.  One seed search at the
+/// range start, then the incremental walk; equivalent to chaining
+/// `worker_segments(desc, offsets, w)` over the (clamped) range.
+pub fn for_each_segment_in(
+    desc: ScheduleDescriptor,
+    offsets: &[usize],
+    w0: usize,
+    w1: usize,
+    mut f: impl FnMut(Segment),
+) {
+    walk_segments(desc, offsets, w0, w1, |_, s| f(s));
 }
 
 /// Materialize the full [`Assignment`] by collecting every worker's
@@ -289,12 +401,16 @@ pub fn for_each_segment(desc: ScheduleDescriptor, offsets: &[usize], mut f: impl
 /// the four streaming schedules' `assign` functions now do.
 pub fn materialize(desc: ScheduleDescriptor, src: &impl WorkSource) -> Assignment {
     let offsets = src.offsets();
-    let workers = (0..desc.workers())
-        .map(|w| WorkerAssignment {
-            granularity: desc.granularity(),
-            segments: worker_segments(desc, offsets, w).collect(),
+    let granularity = desc.granularity();
+    let mut workers: Vec<WorkerAssignment> = (0..desc.workers())
+        .map(|_| WorkerAssignment {
+            granularity,
+            segments: Vec::new(),
         })
         .collect();
+    walk_segments(desc, offsets, 0, desc.workers(), |w, s| {
+        workers[w].segments.push(s);
+    });
     Assignment {
         schedule: desc.name(),
         workers,
@@ -388,6 +504,67 @@ mod tests {
         assert_eq!(ScheduleDescriptor::group_mapped(&src, 2, 64).name(), "group-mapped");
         assert_eq!(ScheduleDescriptor::merge_path(&src, 2).name(), "merge-path");
         assert_eq!(ScheduleDescriptor::nonzero_split(&src, 2).name(), "nonzero-split");
+    }
+
+    #[test]
+    fn continuous_walk_equals_per_worker_streams() {
+        // The incremental walk must emit exactly what chaining the
+        // per-worker iterators emits — same workers, same segments, same
+        // order — for every schedule, worker count, source shape, and
+        // every shard range [w0, w1).
+        let cases: Vec<Vec<usize>> = vec![
+            vec![0],
+            vec![0, 0, 0],
+            vec![0, 10_000],
+            vec![0, 0, 5, 5, 9, 9, 9],
+            (0..=64).collect(),
+        ];
+        for offsets in &cases {
+            let src = OffsetsSource::new(offsets);
+            for kind in STREAMING {
+                for workers in [1usize, 2, 7, 100] {
+                    let desc = ScheduleDescriptor::new(kind, &src, workers).unwrap();
+                    let n = desc.workers();
+                    let want: Vec<(usize, Segment)> = (0..n)
+                        .flat_map(|w| {
+                            worker_segments(desc, offsets, w).map(move |s| (w, s))
+                        })
+                        .collect();
+                    let mut got = Vec::new();
+                    for_each_worker_segment(desc, offsets, |w, s| got.push((w, s)));
+                    assert_eq!(got, want, "{kind:?} x{workers} on {offsets:?}");
+                    for (w0, w1) in [(0, n), (0, n / 2), (n / 2, n), (1, n.saturating_sub(1))]
+                    {
+                        let want_range: Vec<Segment> = want
+                            .iter()
+                            .filter(|(w, _)| *w >= w0 && *w < w1)
+                            .map(|&(_, s)| s)
+                            .collect();
+                        let mut got_range = Vec::new();
+                        for_each_segment_in(desc, offsets, w0, w1, |s| got_range.push(s));
+                        assert_eq!(
+                            got_range, want_range,
+                            "{kind:?} x{workers} range [{w0},{w1}) on {offsets:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn range_walk_clamps_out_of_range_workers() {
+        let offsets: Vec<usize> = vec![0, 2, 2, 9, 9, 14, 15];
+        let src = OffsetsSource::new(&offsets);
+        let desc = ScheduleDescriptor::merge_path(&src, 4);
+        let mut all = Vec::new();
+        for_each_segment(desc, &offsets, |s| all.push(s));
+        // w1 beyond the worker count clamps; an empty range is a no-op.
+        let mut clamped = Vec::new();
+        for_each_segment_in(desc, &offsets, 0, 1000, |s| clamped.push(s));
+        assert_eq!(clamped, all);
+        for_each_segment_in(desc, &offsets, 3, 3, |_| panic!("empty range visited"));
+        for_each_segment_in(desc, &offsets, 50, 60, |_| panic!("past-end range visited"));
     }
 
     #[test]

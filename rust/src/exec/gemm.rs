@@ -12,6 +12,7 @@ use crate::streamk::{Blocking, CtaPlan, GemmShape, Plan};
 use crate::Result;
 
 use super::dense::DenseMat;
+use super::lanes;
 
 /// One segment's partial-tile accumulator over the MAC-iteration tile set
 /// (tiles = output tiles, atoms = MAC iterations): the segment's share of
@@ -42,9 +43,9 @@ pub fn mac_segment_acc(
                 if av == 0.0 {
                     continue;
                 }
-                for j in 0..bn {
-                    acc[i * bn + j] += av * b_blk[l * bn + j];
-                }
+                // Independent per-element accumulators: lanes::axpy is
+                // bitwise equal to the scalar j-loop in every build.
+                lanes::axpy(&mut acc[i * bn..(i + 1) * bn], av, &b_blk[l * bn..(l + 1) * bn]);
             }
         }
     }
@@ -86,11 +87,9 @@ pub fn mac_shard_partials(
     workers: std::ops::Range<usize>,
 ) -> Vec<(SegmentKey, Vec<f64>)> {
     let mut out = Vec::new();
-    for w in workers.start..workers.end.min(desc.workers()) {
-        for s in stream::worker_segments(*desc, offsets, w) {
-            out.push((s.key(), mac_segment_acc(a, b, shape, blk, s)));
-        }
-    }
+    stream::for_each_segment_in(*desc, offsets, workers.start, workers.end, |s| {
+        out.push((s.key(), mac_segment_acc(a, b, shape, blk, s)));
+    });
     out
 }
 
@@ -177,9 +176,11 @@ pub fn execute_plan_host(a: &DenseMat, b: &DenseMat, plan: &Plan) -> DenseMat {
                         if av == 0.0 {
                             continue;
                         }
-                        for j in 0..bn {
-                            acc[i * bn + j] += av * b_blk[l * bn + j];
-                        }
+                        lanes::axpy(
+                            &mut acc[i * bn..(i + 1) * bn],
+                            av,
+                            &b_blk[l * bn..(l + 1) * bn],
+                        );
                     }
                 }
             }

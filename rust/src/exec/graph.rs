@@ -8,6 +8,7 @@
 
 use crate::balance::queue::{self, QueueParams, QueuePolicy};
 use crate::balance::{stream, OffsetsSource, ScheduleKind, Segment, WorkSource};
+use crate::exec::lanes;
 use crate::sparse::Csr;
 
 /// Run `visit` over every segment of `schedule` for `src`, in worker
@@ -43,11 +44,9 @@ pub fn frontier_segment_sum(graph: &Csr, frontier: &[u32], offsets: &[usize], s:
     let v = frontier[s.tile as usize] as usize;
     let (_, weights) = graph.row(v);
     let base = offsets[s.tile as usize];
-    let mut sum = 0.0;
-    for atom in s.atom_begin..s.atom_end {
-        sum += weights[atom - base].abs();
-    }
-    sum
+    // Canonical 4-lane block order (see `exec::lanes`): same bits with
+    // the `simd` feature on or off.
+    lanes::abs_sum(&weights[s.atom_begin - base..s.atom_end - base])
 }
 
 /// Frontier expansion from a streaming descriptor: per frontier vertex,
@@ -95,11 +94,9 @@ pub fn frontier_shard_partials(
     w1: usize,
 ) -> Vec<(crate::balance::SegmentKey, f64)> {
     let mut out = Vec::new();
-    for w in w0..w1.min(desc.workers()) {
-        for s in stream::worker_segments(*desc, offsets, w) {
-            out.push((s.key(), frontier_segment_sum(graph, frontier, offsets, s)));
-        }
-    }
+    stream::for_each_segment_in(*desc, offsets, w0, w1, |s| {
+        out.push((s.key(), frontier_segment_sum(graph, frontier, offsets, s)));
+    });
     out
 }
 

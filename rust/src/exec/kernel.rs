@@ -27,7 +27,7 @@
 //! sibling modules; the impls are thin adapters, which is the point.
 
 use std::any::Any;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::balance::stream::{self, ScheduleDescriptor};
 use crate::balance::{
@@ -507,6 +507,12 @@ pub struct SpgemmKernel {
     /// tile set schedules plan over and the exact slab pre-sizing for the
     /// downsweep.
     work: Arc<Vec<usize>>,
+    /// Scatter arena reused across flushes: reset + scatter +
+    /// `checksum_merged` leaves the slab's allocations in place, so
+    /// steady-state serving of this problem does zero per-flush
+    /// allocation on the downsweep (the §4.4.3 allocation stage runs once
+    /// at kernel construction).
+    arena: Mutex<spgemm::RowSlab>,
     fingerprint: u64,
 }
 
@@ -514,24 +520,36 @@ impl SpgemmKernel {
     pub fn new(a: Arc<Csr>, b: Arc<Csr>) -> Self {
         let work = spgemm::work_offsets(&a, &b);
         let fingerprint = fingerprint(SALT_SPGEMM, &OffsetsSource::new(&work));
+        let arena = Mutex::new(spgemm::RowSlab::new(&work));
         SpgemmKernel {
             a,
             b,
             work: Arc::new(work),
+            arena,
             fingerprint,
         }
     }
 
-    /// Run the downsweep over segments in the order `visit` yields them,
-    /// then finalize (per-row sort-merge) and checksum.
+    /// Run the downsweep over segments in the order `visit` yields them
+    /// through the reusable arena, then merge in place and checksum —
+    /// bitwise equal to finalizing a fresh slab into a CSR and summing
+    /// (see [`spgemm::RowSlab::checksum_merged`]), with no allocation in
+    /// steady state.
     fn run(&self, mut visit: impl FnMut(&mut dyn FnMut(balance::Segment))) -> f64 {
-        let mut slab = spgemm::RowSlab::new(&self.work);
+        let mut slab = self.arena.lock().unwrap();
+        slab.reset(&self.work);
         visit(&mut |s| {
             spgemm::for_each_segment_product(&self.a, &self.b, &self.work, s, |col, v| {
                 slab.push_one(s.tile, col, v);
             });
         });
-        spgemm::checksum(&slab.finalize(self.a.rows, self.b.cols))
+        slab.checksum_merged(self.a.rows)
+    }
+
+    /// Allocated entry capacity of the scatter arena — lets tests pin
+    /// that repeated flushes reuse it instead of growing.
+    pub fn arena_capacity(&self) -> usize {
+        self.arena.lock().unwrap().entry_capacity()
     }
 }
 
@@ -566,23 +584,22 @@ impl WorkKernel for SpgemmKernel {
     }
     fn shard(&self, desc: &ScheduleDescriptor, w0: usize, w1: usize) -> Self::Partials {
         let mut out = Vec::new();
-        for w in w0..w1.min(desc.workers()) {
-            for s in stream::worker_segments(*desc, &self.work, w) {
-                let mut products = Vec::with_capacity(s.len());
-                spgemm::for_each_segment_product(&self.a, &self.b, &self.work, s, |col, v| {
-                    products.push((col, v));
-                });
-                out.push((s.key(), products));
-            }
-        }
+        stream::for_each_segment_in(*desc, &self.work, w0, w1, |s| {
+            let mut products = Vec::with_capacity(s.len());
+            spgemm::for_each_segment_product(&self.a, &self.b, &self.work, s, |col, v| {
+                products.push((col, v));
+            });
+            out.push((s.key(), products));
+        });
         out
     }
     fn reduce(&self, shards: Vec<Self::Partials>) -> f64 {
-        let mut slab = spgemm::RowSlab::new(&self.work);
+        let mut slab = self.arena.lock().unwrap();
+        slab.reset(&self.work);
         for (key, products) in &canonical_partials(shards) {
             slab.push(key.tile, products);
         }
-        spgemm::checksum(&slab.finalize(self.a.rows, self.b.cols))
+        slab.checksum_merged(self.a.rows)
     }
 }
 

@@ -1,0 +1,269 @@
+//! Lane-width inner-loop primitives behind the `simd` cargo feature
+//! (ROADMAP item 3; see README §Raw speed).
+//!
+//! Stable-Rust SIMD: each primitive has an explicitly 4-wide chunked
+//! implementation (`*_lanes`) the autovectorizer cannot miss — the loop
+//! body is a straight-line block over `chunks_exact(LANES)` arrays with
+//! no cross-lane dependence — and an element-wise scalar twin
+//! (`*_scalar`).  **Both are always compiled**; the `simd` feature only
+//! selects which one the dispatching wrapper calls, so either build can
+//! test the other's path and CI's feature matrix keeps both green.
+//!
+//! # Bit-identity across the feature flag
+//!
+//! f64 addition is not associative, so a vectorizable reduction must fix
+//! *one* association tree and use it in both builds.  The canonical
+//! intra-segment order for the reducing primitives ([`gather_dot`],
+//! [`abs_sum`]) is the **4-lane block tree**: atoms are taken in
+//! ascending order in blocks of [`LANES`]; within a block the four
+//! products fold pairwise (`(p0 + p1) + (p2 + p3)`); block sums fold
+//! serially into the accumulator; the `< LANES` remainder folds
+//! linearly.  The scalar twin evaluates the identical expression tree
+//! element-wise, and Rust guarantees IEEE-754 semantics (no FMA
+//! contraction, no reassociation), so the two implementations are
+//! bitwise equal — `tests/simd_identity.rs` pins this at the primitive
+//! level and through every served kernel.  [`axpy`] updates independent
+//! accumulators (no reduction), so its two implementations are trivially
+//! bitwise equal at any width.
+//!
+//! The serial-chain left fold the executors used before this module
+//! ([`gather_dot_linear`], [`abs_sum_linear`]) is kept as the
+//! reference for correctness tests (any fixed order is within 1e-9 of
+//! any other on the served workloads) and as the baseline the
+//! `hot_paths` bench gates the lane kernels against: its loop-carried
+//! add chain serializes on add latency, which no instruction scheduling
+//! can hide, while the block tree exposes one serial add per [`LANES`]
+//! atoms.
+
+/// Lane width of the canonical block tree (f64x4 — one AVX2 register).
+pub const LANES: usize = 4;
+
+/// Gathered dot product `Σ values[k] · x[indices[k]]` in the canonical
+/// 4-lane block order — the SpMV segment inner loop.  Dispatches on the
+/// `simd` feature; both targets compute the identical expression tree.
+#[inline]
+pub fn gather_dot(values: &[f64], indices: &[u32], x: &[f64]) -> f64 {
+    if cfg!(feature = "simd") {
+        gather_dot_lanes(values, indices, x)
+    } else {
+        gather_dot_scalar(values, indices, x)
+    }
+}
+
+/// Explicitly 4-wide [`gather_dot`]: block loads, a lane-wise product
+/// array, the pairwise in-block fold.
+pub fn gather_dot_lanes(values: &[f64], indices: &[u32], x: &[f64]) -> f64 {
+    debug_assert_eq!(values.len(), indices.len());
+    let mut sum = 0.0f64;
+    let mut vc = values.chunks_exact(LANES);
+    let mut ic = indices.chunks_exact(LANES);
+    for (v, idx) in vc.by_ref().zip(ic.by_ref()) {
+        let mut p = [0.0f64; LANES];
+        for (pl, (vl, il)) in p.iter_mut().zip(v.iter().zip(idx)) {
+            *pl = vl * x[*il as usize];
+        }
+        sum += (p[0] + p[1]) + (p[2] + p[3]);
+    }
+    for (v, il) in vc.remainder().iter().zip(ic.remainder()) {
+        sum += v * x[*il as usize];
+    }
+    sum
+}
+
+/// Element-wise scalar twin of [`gather_dot_lanes`]: the same block
+/// tree, one lane at a time — bitwise equal by IEEE determinism.
+pub fn gather_dot_scalar(values: &[f64], indices: &[u32], x: &[f64]) -> f64 {
+    debug_assert_eq!(values.len(), indices.len());
+    let n = values.len();
+    let main = n - n % LANES;
+    let mut sum = 0.0f64;
+    let mut k = 0usize;
+    while k < main {
+        let p0 = values[k] * x[indices[k] as usize];
+        let p1 = values[k + 1] * x[indices[k + 1] as usize];
+        let p2 = values[k + 2] * x[indices[k + 2] as usize];
+        let p3 = values[k + 3] * x[indices[k + 3] as usize];
+        sum += (p0 + p1) + (p2 + p3);
+        k += LANES;
+    }
+    while k < n {
+        sum += values[k] * x[indices[k] as usize];
+        k += 1;
+    }
+    sum
+}
+
+/// The pre-lane serial left fold (`sum += v·x[i]`, one loop-carried add
+/// per atom): the bench baseline and test reference, not a production
+/// path.
+pub fn gather_dot_linear(values: &[f64], indices: &[u32], x: &[f64]) -> f64 {
+    let mut sum = 0.0f64;
+    for (v, il) in values.iter().zip(indices) {
+        sum += v * x[*il as usize];
+    }
+    sum
+}
+
+/// `Σ |w|` over a contiguous slice in the canonical 4-lane block order —
+/// the frontier segment inner loop.
+#[inline]
+pub fn abs_sum(weights: &[f64]) -> f64 {
+    if cfg!(feature = "simd") {
+        abs_sum_lanes(weights)
+    } else {
+        abs_sum_scalar(weights)
+    }
+}
+
+/// Explicitly 4-wide [`abs_sum`].
+pub fn abs_sum_lanes(weights: &[f64]) -> f64 {
+    let mut sum = 0.0f64;
+    let mut wc = weights.chunks_exact(LANES);
+    for w in wc.by_ref() {
+        sum += (w[0].abs() + w[1].abs()) + (w[2].abs() + w[3].abs());
+    }
+    for w in wc.remainder() {
+        sum += w.abs();
+    }
+    sum
+}
+
+/// Element-wise scalar twin of [`abs_sum_lanes`] — bitwise equal.
+pub fn abs_sum_scalar(weights: &[f64]) -> f64 {
+    let n = weights.len();
+    let main = n - n % LANES;
+    let mut sum = 0.0f64;
+    let mut k = 0usize;
+    while k < main {
+        sum += (weights[k].abs() + weights[k + 1].abs())
+            + (weights[k + 2].abs() + weights[k + 3].abs());
+        k += LANES;
+    }
+    while k < n {
+        sum += weights[k].abs();
+        k += 1;
+    }
+    sum
+}
+
+/// The pre-lane serial fold of [`abs_sum`] (bench baseline / reference).
+pub fn abs_sum_linear(weights: &[f64]) -> f64 {
+    let mut sum = 0.0f64;
+    for w in weights {
+        sum += w.abs();
+    }
+    sum
+}
+
+/// `acc[l] += v · xs[l]` over a dense strip — the SpMM column-tile and
+/// GEMM inner loop.  Every accumulator is independent, so lane and
+/// scalar codegen are bitwise equal at any width; the feature only picks
+/// the shape the autovectorizer sees.
+#[inline]
+pub fn axpy(acc: &mut [f64], v: f64, xs: &[f64]) {
+    if cfg!(feature = "simd") {
+        axpy_lanes(acc, v, xs);
+    } else {
+        axpy_scalar(acc, v, xs);
+    }
+}
+
+/// Explicitly 4-wide [`axpy`].
+pub fn axpy_lanes(acc: &mut [f64], v: f64, xs: &[f64]) {
+    debug_assert_eq!(acc.len(), xs.len());
+    let mut ac = acc.chunks_exact_mut(LANES);
+    let mut xc = xs.chunks_exact(LANES);
+    for (a, x) in ac.by_ref().zip(xc.by_ref()) {
+        a[0] += v * x[0];
+        a[1] += v * x[1];
+        a[2] += v * x[2];
+        a[3] += v * x[3];
+    }
+    for (a, x) in ac.into_remainder().iter_mut().zip(xc.remainder()) {
+        *a += v * x;
+    }
+}
+
+/// Element-wise [`axpy`].
+pub fn axpy_scalar(acc: &mut [f64], v: f64, xs: &[f64]) {
+    debug_assert_eq!(acc.len(), xs.len());
+    for (a, x) in acc.iter_mut().zip(xs) {
+        *a += v * x;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_case(rng: &mut Rng, n: usize, xs: usize) -> (Vec<f64>, Vec<u32>, Vec<f64>) {
+        let values: Vec<f64> = (0..n).map(|_| rng.below(2000) as f64 * 1e-3 - 1.0).collect();
+        let indices: Vec<u32> = (0..n).map(|_| rng.below(xs) as u32).collect();
+        let x: Vec<f64> = (0..xs).map(|_| rng.below(2000) as f64 * 7e-4 - 0.7).collect();
+        (values, indices, x)
+    }
+
+    #[test]
+    fn lanes_and_scalar_are_bitwise_equal_at_every_length() {
+        // The cross-build identity in miniature: remainder lengths 0..3,
+        // block counts 0..8+, negative values (abs paths), duplicates.
+        let mut rng = Rng::new(91);
+        for n in 0..40 {
+            let (values, indices, x) = random_case(&mut rng, n, 64);
+            let a = gather_dot_lanes(&values, &indices, &x);
+            let b = gather_dot_scalar(&values, &indices, &x);
+            assert_eq!(a.to_bits(), b.to_bits(), "gather_dot n={n}");
+            assert_eq!(gather_dot(&values, &indices, &x).to_bits(), a.to_bits());
+            let c = abs_sum_lanes(&values);
+            let d = abs_sum_scalar(&values);
+            assert_eq!(c.to_bits(), d.to_bits(), "abs_sum n={n}");
+            assert_eq!(abs_sum(&values).to_bits(), c.to_bits());
+        }
+    }
+
+    #[test]
+    fn axpy_variants_are_bitwise_equal() {
+        let mut rng = Rng::new(93);
+        for n in 0..40 {
+            let (values, _, _) = random_case(&mut rng, n, 8);
+            let xs: Vec<f64> = (0..n).map(|i| (i as f64 * 0.31).sin()).collect();
+            let mut a: Vec<f64> = values.clone();
+            let mut b: Vec<f64> = values.clone();
+            let mut c: Vec<f64> = values;
+            axpy_lanes(&mut a, 1.7, &xs);
+            axpy_scalar(&mut b, 1.7, &xs);
+            axpy(&mut c, 1.7, &xs);
+            assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()), "n={n}");
+            assert!(a.iter().zip(&c).all(|(x, y)| x.to_bits() == y.to_bits()), "n={n}");
+        }
+    }
+
+    #[test]
+    fn block_tree_close_to_linear_fold() {
+        // Different association trees: not bitwise, but within the usual
+        // 1e-9 envelope on served-scale segments.
+        let mut rng = Rng::new(97);
+        let (values, indices, x) = random_case(&mut rng, 10_000, 512);
+        let tree = gather_dot(&values, &indices, &x);
+        let linear = gather_dot_linear(&values, &indices, &x);
+        assert!((tree - linear).abs() < 1e-9, "{tree} vs {linear}");
+        let ta = abs_sum(&values);
+        let la = abs_sum_linear(&values);
+        assert!((ta - la).abs() < 1e-9, "{ta} vs {la}");
+    }
+
+    #[test]
+    fn empty_and_single_inputs() {
+        assert_eq!(gather_dot(&[], &[], &[1.0]), 0.0);
+        assert_eq!(abs_sum(&[]), 0.0);
+        let v = [2.0f64];
+        let i = [0u32];
+        let x = [3.0f64];
+        assert_eq!(gather_dot(&v, &i, &x), 6.0);
+        assert_eq!(gather_dot_linear(&v, &i, &x), 6.0);
+        let mut acc = [0.0f64];
+        axpy(&mut acc, 2.0, &[5.0]);
+        assert_eq!(acc[0], 10.0);
+    }
+}

@@ -17,6 +17,7 @@ pub mod dense;
 pub mod gemm;
 pub mod graph;
 pub mod kernel;
+pub mod lanes;
 pub mod spgemm;
 pub mod spmm;
 pub mod spmv;

@@ -115,6 +115,69 @@ impl RowSlab {
         }
     }
 
+    /// Re-arm the slab for another batch flush, keeping every allocation:
+    /// the entry slab, bounds, and cursor vectors only grow if the new
+    /// problem is strictly larger than anything served before.  In steady
+    /// state (same problem class flush after flush) this is
+    /// allocation-free — the serve engine's arena-reuse contract.
+    pub fn reset(&mut self, bounds: &[usize]) {
+        self.bounds.clear();
+        self.bounds.extend_from_slice(bounds);
+        self.cursor.clear();
+        self.cursor.extend_from_slice(&bounds[..bounds.len() - 1]);
+        let need = *bounds.last().unwrap_or(&0);
+        if need > self.entries.len() {
+            self.entries.resize(need, (0u32, 0.0f64));
+        }
+    }
+
+    /// Allocated entry capacity (high-water mark across resets) — lets
+    /// tests pin that steady-state reuse does not grow the arena.
+    pub fn entry_capacity(&self) -> usize {
+        self.entries.capacity()
+    }
+
+    /// The downsweep's in-place per-row sort-merge: stable-sort each row
+    /// region by column, fold duplicates in scatter order, return the
+    /// merged length per row.
+    fn merge_rows(&mut self, rows: usize) -> Vec<usize> {
+        let mut merged = vec![0usize; rows];
+        for r in 0..rows {
+            let row = &mut self.entries[self.bounds[r]..self.cursor[r]];
+            row.sort_by_key(|&(col, _)| col);
+            let mut w = 0usize;
+            let mut i = 0usize;
+            while i < row.len() {
+                let e = row[i];
+                if w > 0 && row[w - 1].0 == e.0 {
+                    row[w - 1].1 += e.1;
+                } else {
+                    row[w] = e;
+                    w += 1;
+                }
+                i += 1;
+            }
+            merged[r] = w;
+        }
+        merged
+    }
+
+    /// Merge in place and checksum without assembling a CSR: sums merged
+    /// values in (row, column) order — the exact fold order of
+    /// [`checksum`] over [`RowSlab::finalize`]'s output, hence bitwise
+    /// equal to it — with zero allocation beyond the per-row lengths.
+    /// Consumes the scattered contents; [`RowSlab::reset`] re-arms.
+    pub fn checksum_merged(&mut self, rows: usize) -> f64 {
+        let merged = self.merge_rows(rows);
+        let mut sum = 0.0f64;
+        for r in 0..rows {
+            for &(_, v) in &self.entries[self.bounds[r]..self.bounds[r] + merged[r]] {
+                sum += v;
+            }
+        }
+        sum
+    }
+
     /// Scatter one product into its row region.
     #[inline]
     pub fn push_one(&mut self, row: u32, col: u32, value: f64) {
@@ -138,24 +201,7 @@ impl RowSlab {
     /// duplicates in scatter (= worker) order, then assemble the output
     /// CSR with one exact-size allocation per array.
     pub fn finalize(mut self, rows: usize, cols: usize) -> Csr {
-        let mut merged = vec![0usize; rows];
-        for r in 0..rows {
-            let row = &mut self.entries[self.bounds[r]..self.cursor[r]];
-            row.sort_by_key(|&(col, _)| col);
-            let mut w = 0usize;
-            let mut i = 0usize;
-            while i < row.len() {
-                let e = row[i];
-                if w > 0 && row[w - 1].0 == e.0 {
-                    row[w - 1].1 += e.1;
-                } else {
-                    row[w] = e;
-                    w += 1;
-                }
-                i += 1;
-            }
-            merged[r] = w;
-        }
+        let merged = self.merge_rows(rows);
         let offsets = prefix::exclusive(&merged);
         let total = *offsets.last().unwrap();
         let mut indices = Vec::with_capacity(total);
@@ -335,6 +381,57 @@ mod tests {
             assert!(close(&got, &want), "{kind:?} product-space diverged");
         }
         assert_eq!(src.num_atoms(), *work.last().unwrap());
+    }
+
+    #[test]
+    fn slab_reset_reuses_capacity_and_checksum_merged_matches_finalize() {
+        let a = gen::power_law(80, 64, 32, 1.7, 311);
+        let b = gen::power_law(64, 56, 28, 1.5, 312);
+        let work = work_offsets(&a, &b);
+        let src = OffsetsSource::new(&work);
+        let desc = ScheduleKind::MergePath.descriptor(&src, 16).unwrap();
+        let scatter = |slab: &mut RowSlab| {
+            crate::balance::stream::for_each_segment(desc, &work, |s| {
+                for_each_segment_product(&a, &b, &work, s, |col, v| {
+                    slab.push_one(s.tile, col, v);
+                });
+            });
+        };
+
+        // Fresh slab through finalize: the reference checksum.
+        let mut fresh = RowSlab::new(&work);
+        scatter(&mut fresh);
+        let want = checksum(&fresh.finalize(a.rows, b.cols));
+
+        // Arena: two flushes through reset + checksum_merged.  The second
+        // flush must not grow the arena and both must match bitwise.
+        let mut arena = RowSlab::new(&work);
+        scatter(&mut arena);
+        let first = arena.checksum_merged(a.rows);
+        let cap = arena.entry_capacity();
+        arena.reset(&work);
+        scatter(&mut arena);
+        let second = arena.checksum_merged(a.rows);
+        assert_eq!(first.to_bits(), want.to_bits(), "merged != finalize path");
+        assert_eq!(second.to_bits(), want.to_bits(), "reused slab diverged");
+        assert_eq!(arena.entry_capacity(), cap, "second flush grew the arena");
+    }
+
+    #[test]
+    fn slab_reset_grows_only_for_larger_problems() {
+        let small = vec![0usize, 2, 5];
+        let big = vec![0usize, 4, 9];
+        let mut slab = RowSlab::new(&small);
+        slab.reset(&big);
+        assert!(slab.entry_capacity() >= 9);
+        let cap = slab.entry_capacity();
+        slab.reset(&small); // shrink: capacity retained, no realloc
+        assert_eq!(slab.entry_capacity(), cap);
+        slab.push_one(0, 3, 1.5);
+        slab.push_one(1, 1, 2.5);
+        let c = slab.finalize(2, 4);
+        assert_eq!(c.row_nnz(0), 1);
+        assert_eq!(c.row_nnz(1), 1);
     }
 
     #[test]

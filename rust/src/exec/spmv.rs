@@ -4,19 +4,23 @@
 
 use crate::balance::stream::{self, ScheduleDescriptor};
 use crate::balance::{Assignment, Granularity, ScheduleKind, Segment, SegmentKey};
+use crate::exec::lanes;
 use crate::runtime::{HostTensor, Runtime};
 use crate::sim::{self, CtaWork, GpuSpec, SpmvCost};
 use crate::sparse::Csr;
 use crate::Result;
 
-/// One segment's partial dot product.
+/// One segment's partial dot product, in the canonical 4-lane block
+/// order of [`lanes::gather_dot`] — the same expression tree with the
+/// `simd` feature on or off, so segment partials are bitwise identical
+/// in every build.
 #[inline]
 fn segment_sum(a: &Csr, x: &[f64], s: Segment) -> f64 {
-    let mut sum = 0.0;
-    for k in s.atom_begin..s.atom_end {
-        sum += a.values[k] * x[a.indices[k] as usize];
-    }
-    sum
+    lanes::gather_dot(
+        &a.values[s.atom_begin..s.atom_end],
+        &a.indices[s.atom_begin..s.atom_end],
+        x,
+    )
 }
 
 /// Host execution: every worker's segments accumulate into y (the uniform
@@ -57,11 +61,9 @@ pub fn shard_partials(
     w1: usize,
 ) -> Vec<(SegmentKey, f64)> {
     let mut out = Vec::new();
-    for w in w0..w1.min(desc.workers()) {
-        for s in stream::worker_segments(*desc, &a.offsets, w) {
-            out.push((s.key(), segment_sum(a, x, s)));
-        }
-    }
+    stream::for_each_segment_in(*desc, &a.offsets, w0, w1, |s| {
+        out.push((s.key(), segment_sum(a, x, s)));
+    });
     out
 }
 

@@ -1,0 +1,211 @@
+//! The `simd` feature's cross-build contract, end to end: with the
+//! feature on or off, every served checksum is **bitwise identical**,
+//! because both builds compute the same canonical 4-lane block-tree
+//! reduction (`exec/lanes.rs`) — only the loop shape the autovectorizer
+//! sees changes.  CI runs this suite in both builds (the feature-matrix
+//! leg), so the assertions here pin:
+//!
+//! * the lane primitives against their scalar twins, bit for bit, at
+//!   every remainder length;
+//! * every served kernel family × {ThreadMapped, MergePath,
+//!   WorkStealing} × 1/2/4/8 threads: checksums invariant across thread
+//!   counts and schedules — the same matrix `tests/dynamic_schedules.rs`
+//!   pins, now load-bearing for the vectorized inner loops;
+//! * the production SpMV path against an independent scalar
+//!   reimplementation of the canonical order (so the dispatch wrapper
+//!   cannot silently change the tree);
+//! * the SpGEMM arena: a second flush reuses capacity (no growth) and
+//!   matches a fresh-slab run bitwise.
+
+use std::sync::Arc;
+
+use gpulb::balance::{stream, OffsetsSource, ScheduleKind};
+use gpulb::exec::kernel::{SpgemmKernel, WorkKernel};
+use gpulb::exec::{lanes, spmv};
+use gpulb::serve::{Problem, SchedulePolicy, ServeConfig, ServeEngine};
+use gpulb::sparse::gen;
+use gpulb::streamk::{Blocking, GemmShape};
+
+/// One problem per kernel family, sized so every family has real skew
+/// (the `dynamic_schedules` mix).
+fn five_kernel_mix() -> Vec<Problem> {
+    let a = Arc::new(gen::power_law(192, 192, 96, 1.6, 71));
+    let b = Arc::new(gen::uniform(192, 128, 4, 72));
+    let graph = Arc::new(gen::rmat(7, 4, 73));
+    let frontier: Vec<u32> = (0..graph.rows as u32).step_by(2).collect();
+    vec![
+        Problem::spmv(a.clone()),
+        Problem::spmm(a.clone(), 3),
+        Problem::spgemm(a, b),
+        Problem::gemm(GemmShape::new(64, 48, 40), Blocking::new(16, 16, 8), 9),
+        Problem::frontier(graph, frontier),
+    ]
+}
+
+fn engine(threads: usize, kind: ScheduleKind) -> ServeEngine {
+    ServeEngine::new(
+        ServeConfig::builder()
+            .threads(threads)
+            .plan_workers(64)
+            .schedule(SchedulePolicy::Fixed(kind))
+            .split_min_atoms(1)
+            .build()
+            .unwrap(),
+    )
+}
+
+#[test]
+fn lane_primitives_bitwise_equal_scalar_twins() {
+    // Exhaustive remainder coverage (0..3 tail lanes, 0..n blocks) plus
+    // irregular data: whichever impl the feature dispatches to, the other
+    // must produce the same bits.
+    for n in 0..67usize {
+        let values: Vec<f64> = (0..n).map(|i| ((i * 37 + 11) as f64 * 0.013).sin()).collect();
+        let indices: Vec<u32> = (0..n).map(|i| ((i * 53) % 97) as u32).collect();
+        let x: Vec<f64> = (0..97).map(|i| (i as f64 * 0.29).cos()).collect();
+        let dot_l = lanes::gather_dot_lanes(&values, &indices, &x);
+        let dot_s = lanes::gather_dot_scalar(&values, &indices, &x);
+        assert_eq!(dot_l.to_bits(), dot_s.to_bits(), "gather_dot n={n}");
+        assert_eq!(lanes::gather_dot(&values, &indices, &x).to_bits(), dot_l.to_bits());
+        let abs_l = lanes::abs_sum_lanes(&values);
+        let abs_s = lanes::abs_sum_scalar(&values);
+        assert_eq!(abs_l.to_bits(), abs_s.to_bits(), "abs_sum n={n}");
+        assert_eq!(lanes::abs_sum(&values).to_bits(), abs_l.to_bits());
+        let mut acc_l = values.clone();
+        let mut acc_s = values.clone();
+        let xs: Vec<f64> = (0..n).map(|i| (i as f64 * 0.41).sin()).collect();
+        lanes::axpy_lanes(&mut acc_l, -0.73, &xs);
+        lanes::axpy_scalar(&mut acc_s, -0.73, &xs);
+        let same = acc_l.iter().zip(&acc_s).all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "axpy n={n}");
+    }
+}
+
+#[test]
+fn spmv_production_path_matches_independent_block_tree() {
+    // Reimplement the canonical 4-lane block tree from its spec, without
+    // exec/lanes.rs: blocks of 4 ascending, (p0+p1)+(p2+p3) per block,
+    // linear remainder.  The production executor must match bit for bit
+    // in either build — this is what keeps the dispatch wrapper honest.
+    let a = gen::power_law(300, 300, 150, 1.6, 21);
+    let x: Vec<f64> = (0..a.cols).map(|i| (i as f64 * 0.37).sin()).collect();
+    let mut want = vec![0.0f64; a.rows];
+    for r in 0..a.rows {
+        let (k0, k1) = (a.offsets[r], a.offsets[r + 1]);
+        let n = k1 - k0;
+        let main = k0 + (n - n % 4);
+        let mut sum = 0.0f64;
+        let mut k = k0;
+        while k < main {
+            let p0 = a.values[k] * x[a.indices[k] as usize];
+            let p1 = a.values[k + 1] * x[a.indices[k + 1] as usize];
+            let p2 = a.values[k + 2] * x[a.indices[k + 2] as usize];
+            let p3 = a.values[k + 3] * x[a.indices[k + 3] as usize];
+            sum += (p0 + p1) + (p2 + p3);
+            k += 4;
+        }
+        while k < k1 {
+            sum += a.values[k] * x[a.indices[k] as usize];
+            k += 1;
+        }
+        want[r] = sum;
+    }
+    // Thread-mapped at 1 plan worker per row boundary keeps one segment
+    // per row, so the executor's per-segment tree is the per-row tree.
+    let desc = ScheduleKind::ThreadMapped
+        .descriptor(&a, a.rows)
+        .expect("thread-mapped streams");
+    let got = spmv::execute_stream_host(&a, &x, &desc);
+    assert_eq!(got.len(), want.len());
+    for (r, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "row {r}: {g} vs {w}");
+    }
+}
+
+#[test]
+fn served_checksums_invariant_across_threads_all_schedules() {
+    // Every served kernel × {ThreadMapped, MergePath, WorkStealing} ×
+    // 1/2/4/8 threads: bitwise-equal checksums per (kernel, schedule),
+    // and ThreadMapped == MergePath == WorkStealing per kernel (whole
+    // tiles ascending == canonical segment reduction).  CI runs this with
+    // the feature on and off; the engine-level checksums must be the same
+    // bits in both builds.
+    let mix = five_kernel_mix();
+    let kinds = [
+        ScheduleKind::ThreadMapped,
+        ScheduleKind::MergePath,
+        ScheduleKind::WorkStealing { chunk: 8 },
+    ];
+    let reference = engine(1, ScheduleKind::ThreadMapped)
+        .execute_batch(&mix)
+        .checksums;
+    for kind in kinds {
+        for threads in [1usize, 2, 4, 8] {
+            let got = engine(threads, kind).execute_batch(&mix).checksums;
+            for (i, (g, w)) in got.iter().zip(&reference).enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    w.to_bits(),
+                    "{} under {kind:?} x{threads}: {g} vs {w}",
+                    mix[i].kind_name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn spgemm_arena_reuses_capacity_and_matches_fresh_kernel_bitwise() {
+    let a = Arc::new(gen::power_law(160, 160, 80, 1.6, 31));
+    let b = Arc::new(gen::uniform(160, 120, 4, 32));
+    let kernel = SpgemmKernel::new(a.clone(), b.clone());
+    let offsets = WorkKernel::offsets(&kernel).to_vec();
+    let src = OffsetsSource::new(&offsets);
+    let desc = ScheduleKind::MergePath.descriptor(&src, 24).unwrap();
+
+    // First flush warms the arena; capacity is now at its high-water mark.
+    let first = WorkKernel::execute_stream(&kernel, &desc);
+    let cap = kernel.arena_capacity();
+    assert!(cap >= *offsets.last().unwrap(), "arena must hold every product");
+
+    // Second flush: same bits, zero growth.
+    let second = WorkKernel::execute_stream(&kernel, &desc);
+    assert_eq!(second.to_bits(), first.to_bits(), "reused arena diverged");
+    assert_eq!(kernel.arena_capacity(), cap, "second flush grew the arena");
+
+    // The two-phase reduce path shares the arena too.
+    let mid = desc.workers().div_ceil(2);
+    let shards = vec![
+        WorkKernel::shard(&kernel, &desc, 0, mid),
+        WorkKernel::shard(&kernel, &desc, mid, desc.workers()),
+    ];
+    let reduced = WorkKernel::reduce(&kernel, shards);
+    assert_eq!(reduced.to_bits(), first.to_bits(), "reduce path diverged");
+    assert_eq!(kernel.arena_capacity(), cap, "reduce grew the arena");
+
+    // And a fresh kernel lands on the same bits as the warmed one.
+    let fresh = SpgemmKernel::new(a, b);
+    let fresh_sum = WorkKernel::execute_stream(&fresh, &desc);
+    assert_eq!(fresh_sum.to_bits(), first.to_bits(), "fresh kernel diverged");
+}
+
+#[test]
+fn stream_walk_unaffected_by_lane_dispatch() {
+    // The walker rewrite and the lane kernels are independent changes;
+    // this pins that segment *shapes* (not just sums) are identical to
+    // the per-worker iterator in whichever build runs this suite.
+    let a = gen::power_law(400, 400, 200, 1.6, 17);
+    for kind in [
+        ScheduleKind::ThreadMapped,
+        ScheduleKind::MergePath,
+        ScheduleKind::NonzeroSplit,
+    ] {
+        let desc = kind.descriptor(&a, 48).unwrap();
+        let mut walked = Vec::new();
+        stream::for_each_segment(desc, &a.offsets, |s| walked.push(s));
+        let legacy: Vec<_> = (0..desc.workers())
+            .flat_map(|w| stream::worker_segments(desc, &a.offsets, w))
+            .collect();
+        assert_eq!(walked, legacy, "{kind:?} walk diverged");
+    }
+}

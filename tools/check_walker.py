@@ -1,0 +1,212 @@
+#!/usr/bin/env python3
+"""Cross-validation of the incremental merge-path walker.
+
+Exact Python port of `balance::search::MergePathWalker` and the
+continuous segment walk in `balance::stream::walk_segments`, checked
+against ports of the binary-search `merge_path_search` and the legacy
+per-worker `worker_segments` iterator — the same equivalences the Rust
+suites (`search.rs` walker tests, `stream.rs`
+`continuous_walk_equals_per_worker_streams`, and
+`tests/stream_schedules.rs`) pin.  Lets the walker rewrite be audited
+without a Rust toolchain.
+
+Run: python3 tools/check_walker.py
+"""
+import random
+
+
+# ---- ports of balance/search.rs ------------------------------------------
+
+def merge_path_search(offsets, d):
+    tiles = len(offsets) - 1
+    atoms = offsets[-1]
+    assert d <= tiles + atoms
+    lo = max(0, d - atoms)
+    hi = min(d, tiles)
+    while lo < hi:
+        mid = lo + (hi - lo + 1) // 2
+        if offsets[mid] <= d - mid:
+            lo = mid
+        else:
+            hi = mid - 1
+    return lo, d - lo
+
+
+def tile_of_atom(offsets, a):
+    # upper_bound(offsets, a) - 1
+    lo, hi = 0, len(offsets)
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if offsets[mid] <= a:
+            lo = mid + 1
+        else:
+            hi = mid
+    return lo - 1
+
+
+class MergePathWalker:
+    def __init__(self, offsets, d=0):
+        self.offsets = offsets
+        self.tiles = len(offsets) - 1
+        self.i, _ = merge_path_search(offsets, d)
+        self.d = d
+
+    def advance_to(self, d):
+        assert d >= self.d
+        self.d = d
+        while self.i < self.tiles and self.offsets[self.i + 1] + self.i + 1 <= d:
+            self.i += 1
+        return self.i, d - self.i
+
+
+# ---- port of the legacy per-worker streams (stream.rs worker_segments) ---
+
+def atoms_walk(offsets, cursor, end, row):
+    out = []
+    while cursor < end:
+        while row + 1 < len(offsets) and offsets[row + 1] <= cursor:
+            row += 1
+        seg_end = min(end, offsets[row + 1])
+        out.append((row, cursor, seg_end))
+        cursor = seg_end
+    return out
+
+
+def worker_segments_mp(offsets, per_diag, w):
+    tiles = len(offsets) - 1
+    total = tiles + offsets[-1]
+    d0 = min(w * per_diag, total)
+    d1 = min((w + 1) * per_diag, total)
+    row_start, atom_start = merge_path_search(offsets, d0)
+    _, atom_end = merge_path_search(offsets, d1)
+    if atom_end <= atom_start:
+        return []
+    return atoms_walk(offsets, atom_start, atom_end, min(row_start, max(tiles - 1, 0)))
+
+
+def worker_segments_nz(offsets, per_worker, w):
+    atoms = offsets[-1]
+    begin = min(w * per_worker, atoms)
+    end = min((w + 1) * per_worker, atoms)
+    if begin >= end:
+        return []
+    return atoms_walk(offsets, begin, end, tile_of_atom(offsets, begin))
+
+
+# ---- port of the new continuous walk (stream.rs walk_segments) -----------
+
+def walk_mp(offsets, per_diag, w0, w1):
+    tiles = len(offsets) - 1
+    total = tiles + offsets[-1]
+    walker = MergePathWalker(offsets, min(w0 * per_diag, total))
+    row_seed, cursor = merge_path_search(offsets, min(w0 * per_diag, total))
+    row = min(row_seed, max(tiles - 1, 0))
+    out = []
+    for w in range(w0, w1):
+        _, j1 = walker.advance_to(min((w + 1) * per_diag, total))
+        while cursor < j1:
+            while row + 1 < len(offsets) and offsets[row + 1] <= cursor:
+                row += 1
+            seg_end = min(j1, offsets[row + 1])
+            out.append((w, row, cursor, seg_end))
+            cursor = seg_end
+    return out
+
+
+def walk_nz(offsets, per_worker, w0, w1):
+    atoms = offsets[-1]
+    cursor = min(w0 * per_worker, atoms)
+    row = tile_of_atom(offsets, cursor) if cursor < atoms else 0
+    out = []
+    for w in range(w0, w1):
+        end = min((w + 1) * per_worker, atoms)
+        while cursor < end:
+            while row + 1 < len(offsets) and offsets[row + 1] <= cursor:
+                row += 1
+            seg_end = min(end, offsets[row + 1])
+            out.append((w, row, cursor, seg_end))
+            cursor = seg_end
+    return out
+
+
+def ceil_div(a, b):
+    return -(-a // b)
+
+
+def mp_workers(offsets, workers):
+    # mirrors ScheduleDescriptor::merge_path + workers()
+    tiles = len(offsets) - 1
+    total = tiles + offsets[-1]
+    per_diag = ceil_div(total, max(workers, 1))
+    if total == 0:
+        return per_diag, 1
+    return per_diag, ceil_div(total, per_diag)
+
+
+def nz_workers(offsets, workers):
+    atoms = offsets[-1]
+    per_worker = max(ceil_div(atoms, max(workers, 1)), 1)
+    return per_worker, (1 if atoms == 0 else ceil_div(atoms, per_worker))
+
+
+def random_offsets(rng, tiles):
+    lens = [0 if rng.random() < 0.3 else rng.randrange(40) for _ in range(tiles)]
+    out = [0]
+    for l in lens:
+        out.append(out[-1] + l)
+    return out
+
+
+def main():
+    rng = random.Random(41)
+    shapes = [
+        [0],
+        [0, 0, 0, 0],
+        [0, 2],
+        [0, 3, 3, 4, 10, 10, 12],
+        [0, 10_000],
+        list(range(65)),
+    ] + [random_offsets(rng, rng.randrange(1, 120)) for _ in range(60)]
+
+    checked = 0
+    for offsets in shapes:
+        tiles = len(offsets) - 1
+        total = tiles + offsets[-1]
+
+        # 1. walker == binary search on every diagonal, fresh and seeded.
+        walker = MergePathWalker(offsets)
+        for d in range(total + 1):
+            assert walker.advance_to(d) == merge_path_search(offsets, d), \
+                f"walker != search at d={d} on {offsets}"
+        for seed_d in range(0, total + 1, max(1, total // 7)):
+            w = MergePathWalker(offsets, seed_d)
+            for d in range(seed_d, total + 1, 3):
+                assert w.advance_to(d) == merge_path_search(offsets, d)
+
+        # 2. continuous walk == concatenated per-worker streams, for
+        #    full plans and shard sub-ranges.
+        for workers in (1, 2, 7, 100):
+            per_diag, n = mp_workers(offsets, workers)
+            want = [(w, *seg) for w in range(n)
+                    for seg in worker_segments_mp(offsets, per_diag, w)]
+            assert walk_mp(offsets, per_diag, 0, n) == want, \
+                f"mp walk diverged x{workers} on {offsets}"
+            per_worker, n2 = nz_workers(offsets, workers)
+            want_nz = [(w, *seg) for w in range(n2)
+                       for seg in worker_segments_nz(offsets, per_worker, w)]
+            assert walk_nz(offsets, per_worker, 0, n2) == want_nz, \
+                f"nz walk diverged x{workers} on {offsets}"
+            for (w0, w1) in [(0, n), (0, n // 2), (n // 2, n), (1, max(n - 1, 0))]:
+                want_r = [t for t in want if w0 <= t[0] < w1]
+                assert walk_mp(offsets, per_diag, w0, w1) == want_r
+            for (w0, w1) in [(0, n2), (n2 // 2, n2), (1, max(n2 - 1, 0))]:
+                want_r = [t for t in want_nz if w0 <= t[0] < w1]
+                assert walk_nz(offsets, per_worker, w0, w1) == want_r
+            checked += 1
+
+    print(f"OK: walker == binary search and continuous walk == per-worker "
+          f"streams across {len(shapes)} shapes / {checked} plan configs")
+
+
+if __name__ == "__main__":
+    main()
