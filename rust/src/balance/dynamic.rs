@@ -29,7 +29,7 @@
 //! surface.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::thread;
 
@@ -181,9 +181,34 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
+    let cancel = AtomicBool::new(false);
+    execute_claimed_guarded(dd, threads, &cancel, process).expect("claimed worker panicked")
+}
+
+/// [`execute_claimed`] with a cancellation guard: every worker observes
+/// `cancel` at each chunk-claim boundary and stops claiming once it is
+/// raised, so a watchdog (or a failing sibling chunk) can interrupt a
+/// long dynamic cursor loop without waiting for it to drain.  Returns
+/// `None` when the execution was interrupted — by the flag, or by a
+/// worker dying to a panic that escaped `process` — in which case the
+/// partial results are discarded (the serve layer re-executes the whole
+/// problem through its retry ladder; partial chunk output is useless
+/// without every sibling).
+pub fn execute_claimed_guarded<T, F>(
+    dd: &DynamicDescriptor,
+    threads: usize,
+    cancel: &AtomicBool,
+    process: F,
+) -> Option<(Vec<T>, DynamicStats)>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
     match dd.kind {
-        ScheduleKind::WorkStealing { .. } => execute_stealing(threads, dd.chunks(), process),
-        _ => execute_fetch(threads, dd.chunks(), process),
+        ScheduleKind::WorkStealing { .. } => {
+            execute_stealing_guarded(threads, dd.chunks(), cancel, process)
+        }
+        _ => execute_fetch_guarded(threads, dd.chunks(), cancel, process),
     }
 }
 
@@ -194,54 +219,70 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    let threads = threads.max(1).min(chunks.max(1));
-    if threads == 1 {
-        let results = (0..chunks).map(&process).collect();
-        let stats = DynamicStats {
-            claims: chunks as u64,
-            steals: 0,
-            fetches: chunks as u64,
-        };
-        return (results, stats);
-    }
+    let cancel = AtomicBool::new(false);
+    execute_fetch_guarded(threads, chunks, &cancel, process).expect("fetch worker panicked")
+}
 
-    let cursor = AtomicUsize::new(0);
-    let mut slots: Vec<Option<T>> = Vec::with_capacity(chunks);
-    slots.resize_with(chunks, || None);
-    thread::scope(|scope| {
-        let cursor = &cursor;
-        let process = &process;
-        let handles: Vec<_> = (0..threads)
-            .map(|_| {
-                scope.spawn(move || {
-                    let mut done: Vec<(usize, T)> = Vec::new();
-                    loop {
-                        let j = cursor.fetch_add(1, Ordering::Relaxed);
-                        if j >= chunks {
-                            break;
-                        }
-                        done.push((j, process(j)));
-                    }
-                    done
-                })
-            })
-            .collect();
-        for handle in handles {
-            for (j, value) in handle.join().expect("fetch worker panicked") {
-                slots[j] = Some(value);
-            }
-        }
-    });
-    let results = slots
-        .into_iter()
-        .map(|slot| slot.expect("chunk left unclaimed"))
-        .collect();
+/// [`execute_fetch`] with the cancellation guard (see
+/// [`execute_claimed_guarded`] for the interruption semantics).
+pub fn execute_fetch_guarded<T, F>(
+    threads: usize,
+    chunks: usize,
+    cancel: &AtomicBool,
+    process: F,
+) -> Option<(Vec<T>, DynamicStats)>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(chunks.max(1));
     let stats = DynamicStats {
         claims: chunks as u64,
         steals: 0,
         fetches: chunks as u64,
     };
-    (results, stats)
+    if threads == 1 {
+        let mut results = Vec::with_capacity(chunks);
+        for j in 0..chunks {
+            if cancel.load(Ordering::Relaxed) {
+                return None;
+            }
+            results.push(process(j));
+        }
+        return Some((results, stats));
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let died = AtomicBool::new(false);
+    let slots: Vec<Mutex<Option<T>>> = (0..chunks).map(|_| Mutex::new(None)).collect();
+    thread::scope(|scope| {
+        let cursor = &cursor;
+        let process = &process;
+        let slots = &slots;
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(move || loop {
+                    // The claim boundary is the interruption point: a
+                    // chunk in flight finishes, but no new chunk starts
+                    // once the flag is up.
+                    if cancel.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let j = cursor.fetch_add(1, Ordering::Relaxed);
+                    if j >= chunks {
+                        break;
+                    }
+                    *lock_clean(&slots[j]) = Some(process(j));
+                })
+            })
+            .collect();
+        for handle in handles {
+            if handle.join().is_err() {
+                died.store(true, Ordering::Relaxed);
+            }
+        }
+    });
+    collect_guarded(slots, cancel, &died).map(|results| (results, stats))
 }
 
 /// Work-stealing claim: chunk indices seeded round-robin into per-worker
@@ -260,15 +301,37 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
+    let cancel = AtomicBool::new(false);
+    execute_stealing_guarded(threads, chunks, &cancel, process).expect("stealing worker panicked")
+}
+
+/// [`execute_stealing`] with the cancellation guard (see
+/// [`execute_claimed_guarded`] for the interruption semantics).
+pub fn execute_stealing_guarded<T, F>(
+    threads: usize,
+    chunks: usize,
+    cancel: &AtomicBool,
+    process: F,
+) -> Option<(Vec<T>, DynamicStats)>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
     let threads = threads.max(1).min(chunks.max(1));
     if threads == 1 {
-        let results = (0..chunks).map(&process).collect();
+        let mut results = Vec::with_capacity(chunks);
+        for j in 0..chunks {
+            if cancel.load(Ordering::Relaxed) {
+                return None;
+            }
+            results.push(process(j));
+        }
         let stats = DynamicStats {
             claims: chunks as u64,
             steals: 0,
             fetches: 0,
         };
-        return (results, stats);
+        return Some((results, stats));
     }
 
     let mut seeds: Vec<VecDeque<usize>> = (0..threads).map(|_| VecDeque::new()).collect();
@@ -278,59 +341,86 @@ where
     let lens: Vec<AtomicUsize> = seeds.iter().map(|q| AtomicUsize::new(q.len())).collect();
     let deques: Vec<Mutex<VecDeque<usize>>> = seeds.into_iter().map(Mutex::new).collect();
     let steals = AtomicU64::new(0);
+    let died = AtomicBool::new(false);
 
-    let mut slots: Vec<Option<T>> = Vec::with_capacity(chunks);
-    slots.resize_with(chunks, || None);
+    let slots: Vec<Mutex<Option<T>>> = (0..chunks).map(|_| Mutex::new(None)).collect();
     thread::scope(|scope| {
         let deques = &deques;
         let lens = &lens;
         let steals = &steals;
         let process = &process;
+        let slots = &slots;
         let handles: Vec<_> = (0..threads)
             .map(|w| {
-                scope.spawn(move || {
-                    let mut done: Vec<(usize, T)> = Vec::new();
-                    let mut my_steals = 0u64;
-                    loop {
-                        if let Some(j) = pop_own(deques, lens, w) {
-                            done.push((j, process(j)));
-                        } else if let Some(j) = steal(deques, lens, w) {
-                            my_steals += 1;
-                            done.push((j, process(j)));
-                        } else if lens.iter().all(|l| l.load(Ordering::Acquire) == 0) {
-                            break;
-                        } else {
-                            thread::yield_now();
-                        }
+                scope.spawn(move || loop {
+                    // Claim boundary doubles as the interruption point.
+                    if cancel.load(Ordering::Relaxed) {
+                        break;
                     }
-                    steals.fetch_add(my_steals, Ordering::Relaxed);
-                    done
+                    if let Some(j) = pop_own(deques, lens, w) {
+                        *lock_clean(&slots[j]) = Some(process(j));
+                    } else if let Some(j) = steal(deques, lens, w) {
+                        steals.fetch_add(1, Ordering::Relaxed);
+                        *lock_clean(&slots[j]) = Some(process(j));
+                    } else if lens.iter().all(|l| l.load(Ordering::Acquire) == 0) {
+                        break;
+                    } else {
+                        thread::yield_now();
+                    }
                 })
             })
             .collect();
         for handle in handles {
-            for (j, value) in handle.join().expect("stealing worker panicked") {
-                slots[j] = Some(value);
+            if handle.join().is_err() {
+                died.store(true, Ordering::Relaxed);
             }
         }
     });
-    let results = slots
-        .into_iter()
-        .map(|slot| slot.expect("chunk left unclaimed"))
-        .collect();
     let stats = DynamicStats {
         claims: chunks as u64,
         steals: steals.load(Ordering::Relaxed),
         fetches: 0,
     };
-    (results, stats)
+    collect_guarded(slots, cancel, &died).map(|results| (results, stats))
+}
+
+/// Unwrap the per-chunk result slots of a guarded execution: `None` when
+/// the run was interrupted (flag raised, or a worker died and its
+/// in-flight chunk is missing); otherwise every slot is filled and the
+/// results come back in canonical chunk order.
+fn collect_guarded<T>(
+    slots: Vec<Mutex<Option<T>>>,
+    cancel: &AtomicBool,
+    died: &AtomicBool,
+) -> Option<Vec<T>> {
+    if cancel.load(Ordering::Relaxed) || died.load(Ordering::Relaxed) {
+        return None;
+    }
+    Some(
+        slots
+            .into_iter()
+            .map(|slot| {
+                slot.into_inner()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .expect("chunk left unclaimed")
+            })
+            .collect(),
+    )
+}
+
+/// Lock with poison recovery — same rationale as `serve/pool.rs`: the
+/// critical sections are short push/pop updates that are never left
+/// half-done, so a guard poisoned by a dying worker is structurally
+/// sound.
+fn lock_clean<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 fn pop_own(deques: &[Mutex<VecDeque<usize>>], lens: &[AtomicUsize], w: usize) -> Option<usize> {
     if lens[w].load(Ordering::Acquire) == 0 {
         return None;
     }
-    let mut deque = deques[w].lock().unwrap();
+    let mut deque = lock_clean(&deques[w]);
     let job = deque.pop_front();
     if job.is_some() {
         lens[w].fetch_sub(1, Ordering::Release);
@@ -346,7 +436,7 @@ fn steal(deques: &[Mutex<VecDeque<usize>>], lens: &[AtomicUsize], w: usize) -> O
             .filter(|&(_, len)| len > 0)
             .max_by_key(|&(_, len)| len);
         let (v, _) = victim?;
-        let mut deque = deques[v].lock().unwrap();
+        let mut deque = lock_clean(&deques[v]);
         if let Some(job) = deque.pop_back() {
             lens[v].fetch_sub(1, Ordering::Release);
             return Some(job);
@@ -439,6 +529,45 @@ mod tests {
         assert_eq!(results.len(), 64);
         assert_eq!(stats.claims, 64);
         assert!(stats.steals > 0, "steals={}", stats.steals);
+    }
+
+    #[test]
+    fn raised_cancel_flag_interrupts_every_claim_path() {
+        let cancel = AtomicBool::new(true);
+        // Pre-raised: no chunk starts, the run reports interruption —
+        // on the threaded paths and the single-claimant inline paths.
+        assert!(execute_fetch_guarded(4, 100, &cancel, |j| j).is_none());
+        assert!(execute_stealing_guarded(4, 100, &cancel, |j| j).is_none());
+        assert!(execute_fetch_guarded(1, 100, &cancel, |j| j).is_none());
+        assert!(execute_stealing_guarded(1, 100, &cancel, |j| j).is_none());
+    }
+
+    #[test]
+    fn chunk_panic_interrupts_instead_of_hanging() {
+        // A chunk that kills its worker: the guarded executors report
+        // interruption (no result vector) instead of wedging on the
+        // dead worker or propagating the panic to the caller.
+        use std::sync::atomic::AtomicBool;
+        for threads in [2usize, 4] {
+            let first = AtomicBool::new(true);
+            let cancel = AtomicBool::new(false);
+            let got = execute_fetch_guarded(threads, 64, &cancel, |j| {
+                if j == 3 && first.swap(false, Ordering::SeqCst) {
+                    panic!("injected chunk fault");
+                }
+                j
+            });
+            assert!(got.is_none(), "fetch x{threads} must report interruption");
+            let first = AtomicBool::new(true);
+            let cancel = AtomicBool::new(false);
+            let got = execute_stealing_guarded(threads, 64, &cancel, |j| {
+                if j == 3 && first.swap(false, Ordering::SeqCst) {
+                    panic!("injected chunk fault");
+                }
+                j
+            });
+            assert!(got.is_none(), "stealing x{threads} must report interruption");
+        }
     }
 
     #[test]

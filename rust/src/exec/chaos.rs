@@ -1,0 +1,342 @@
+//! Seeded fault injection: the chaos harness behind `serve --chaos`.
+//!
+//! A [`FaultPlan`] deterministically assigns at most one fault to each
+//! problem of a batch (keyed by submission index, xoshiro-seeded — the
+//! decision is a pure function of `(seed, rate, index)`, independent of
+//! thread count or claim order), and [`ChaosKernel`] injects that fault
+//! into any [`DynKernel`] by delegation: same fingerprint, same tile
+//! set, same checksums — plus exactly one failure the first time the
+//! trigger site runs.  Three failure modes, one per engine recovery
+//! path:
+//!
+//! * [`FaultKind::Panic`] — an unwinding panic at a worker-range
+//!   boundary (whole-problem execution, or the shard/chunk whose range
+//!   covers the fault's target worker).  Exercises `catch_unwind`
+//!   isolation and the retry ladder.
+//! * [`FaultKind::Stall`] — a panic carrying [`StallFault`], the
+//!   kernel-contract marker for "this execution wedged past its budget".
+//!   Virtual, not wall-clock: tests stay fast and the timeout counter
+//!   stays deterministic.  Exercises deadline classification.
+//! * [`FaultKind::Poison`] — a non-finite checksum out of the reduction
+//!   (a corrupted partial surfacing at phase 2).  Exercises poisoned-
+//!   result detection.
+//!
+//! Each fault fires **exactly once** per kernel instance (an atomic
+//! latch): the retry ladder's fallback re-execution then runs clean, so
+//! a recovered problem's checksum is bit-identical to the fault-free
+//! run — which is precisely the property `tests/fault_tolerance.rs`
+//! pins.
+
+use std::panic::panic_any;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::balance::stream::ScheduleDescriptor;
+use crate::balance::{Assignment, ScheduleKind};
+use crate::rng::Rng;
+
+use super::kernel::{BoxedPartials, DynKernel, StallFault};
+
+/// Default seed for `serve --chaos` (any value works; pinned so CI's
+/// smoke run is reproducible without passing `--fault-seed`).
+pub const DEFAULT_FAULT_SEED: u64 = 0xC4A0_5EED;
+
+/// Default per-problem fault probability for `serve --chaos`.
+pub const DEFAULT_FAULT_RATE: f64 = 0.05;
+
+/// Virtual stall length injected by [`FaultKind::Stall`] faults drawn
+/// from a [`FaultPlan`] — comfortably past every ingest-class SLO.
+pub const DEFAULT_STALL_VIRT_SECS: f64 = 1.0;
+
+/// One injected failure mode (see the module docs for what each
+/// exercises).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Unwinding panic; `worker` (mod the plan's worker count) picks the
+    /// shard/chunk that throws on the sharded paths.
+    Panic {
+        /// Raw target-worker draw; reduced mod the descriptor's worker
+        /// count at trigger time so it is valid for any plan.
+        worker: u64,
+    },
+    /// Stall signalled via [`StallFault`] — classified as a timeout, not
+    /// a panic, by the engine.
+    Stall {
+        /// Virtual seconds the execution pretends to wedge for.
+        virt_secs: f64,
+    },
+    /// Corrupted partial: the reduction yields a non-finite checksum.
+    Poison,
+}
+
+/// Deterministic per-problem fault assignment: a pure function of
+/// `(seed, rate, index)`.  Query order is irrelevant — each index gets
+/// its own splitmix-derived stream.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultPlan {
+    seed: u64,
+    rate: f64,
+}
+
+impl FaultPlan {
+    /// A plan injecting faults into roughly `rate` of all problems
+    /// (clamped to `[0, 1]`; non-finite rates inject nothing).
+    pub fn new(seed: u64, rate: f64) -> FaultPlan {
+        let rate = if rate.is_finite() {
+            rate.clamp(0.0, 1.0)
+        } else {
+            0.0
+        };
+        FaultPlan { seed, rate }
+    }
+
+    /// The plan's seed.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The plan's (clamped) fault rate.
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    /// The fault assigned to problem `index`, if any.
+    pub fn fault_for(&self, index: usize) -> Option<FaultKind> {
+        let mut rng = Rng::new(
+            self.seed ^ (index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        if rng.f64() >= self.rate {
+            return None;
+        }
+        Some(match rng.below(3) {
+            0 => FaultKind::Panic {
+                worker: rng.next_u64(),
+            },
+            1 => FaultKind::Stall {
+                virt_secs: DEFAULT_STALL_VIRT_SECS,
+            },
+            _ => FaultKind::Poison,
+        })
+    }
+}
+
+/// A [`DynKernel`] wrapper that delegates everything to its inner kernel
+/// — same fingerprint, tile set, schedules and checksums — and injects
+/// its assigned [`FaultKind`] exactly once (atomic latch), the first
+/// time a trigger site runs.  Wrapping with no fault is the identity.
+pub struct ChaosKernel {
+    inner: Arc<dyn DynKernel>,
+    fault: FaultKind,
+    fired: AtomicBool,
+}
+
+impl ChaosKernel {
+    /// Wrap `inner` with an injected fault; `None` returns `inner`
+    /// unchanged (zero overhead on the no-fault path).
+    pub fn wrap(inner: Arc<dyn DynKernel>, fault: Option<FaultKind>) -> Arc<dyn DynKernel> {
+        match fault {
+            None => inner,
+            Some(fault) => Arc::new(ChaosKernel {
+                inner,
+                fault,
+                fired: AtomicBool::new(false),
+            }),
+        }
+    }
+
+    /// The wrapped fault.
+    pub fn fault(&self) -> FaultKind {
+        self.fault
+    }
+
+    /// Whether the fault has already fired (later executions run clean).
+    pub fn has_fired(&self) -> bool {
+        self.fired.load(Ordering::Acquire)
+    }
+
+    /// Claim the one-shot latch; `true` exactly once across all threads.
+    fn arm(&self) -> bool {
+        self.fired
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// Throw the armed fault from a whole-problem execution site.
+    /// Returns the poisoned checksum for [`FaultKind::Poison`]; the
+    /// other kinds unwind.
+    fn throw(&self) -> f64 {
+        match self.fault {
+            FaultKind::Panic { .. } => panic!("injected chaos fault: panic"),
+            FaultKind::Stall { virt_secs } => panic_any(StallFault { virt_secs }),
+            FaultKind::Poison => f64::NAN,
+        }
+    }
+}
+
+impl DynKernel for ChaosKernel {
+    fn kind_name(&self) -> &'static str {
+        self.inner.kind_name()
+    }
+    fn fingerprint(&self) -> u64 {
+        self.inner.fingerprint()
+    }
+    fn offsets(&self) -> &[usize] {
+        self.inner.offsets()
+    }
+    fn num_tiles(&self) -> usize {
+        self.inner.num_tiles()
+    }
+    fn num_atoms(&self) -> usize {
+        self.inner.num_atoms()
+    }
+    fn static_schedule(&self) -> ScheduleKind {
+        self.inner.static_schedule()
+    }
+    fn cold_start_prior(&self, plan_workers: usize) -> ScheduleKind {
+        self.inner.cold_start_prior(plan_workers)
+    }
+    fn execute_stream(&self, desc: &ScheduleDescriptor) -> f64 {
+        // Whole-problem execution covers every worker range, so any
+        // fault kind may fire here.
+        if self.arm() {
+            return self.throw();
+        }
+        self.inner.execute_stream(desc)
+    }
+    fn execute_assignment(&self, asg: &Assignment) -> f64 {
+        if self.arm() {
+            return self.throw();
+        }
+        self.inner.execute_assignment(asg)
+    }
+    fn shard_dyn(&self, desc: &ScheduleDescriptor, w0: usize, w1: usize) -> BoxedPartials {
+        // Panics and stalls fire inside the shard/chunk whose worker
+        // range covers the fault's target worker — exactly one range per
+        // plan, so sharded and dynamically-claimed execution both throw
+        // from exactly one worker thread.  Poison passes through: it
+        // surfaces at the reduction, like a real corrupted partial.
+        let target = match self.fault {
+            FaultKind::Panic { worker } => Some(worker),
+            // Stalls have no target draw of their own; pin to worker 0
+            // so the first-claimed chunk throws.
+            FaultKind::Stall { .. } => Some(0),
+            FaultKind::Poison => None,
+        };
+        if let Some(target) = target {
+            let workers = desc.workers().max(1);
+            let target = (target % workers as u64) as usize;
+            if (w0..w1).contains(&target) && self.arm() {
+                self.throw();
+            }
+        }
+        self.inner.shard_dyn(desc, w0, w1)
+    }
+    fn reduce_dyn(&self, shards: Vec<BoxedPartials>) -> f64 {
+        // Poison surfaces here (phase 2); the inner reduction still runs
+        // so the arena/slab state stays consistent for the retry.
+        let sum = self.inner.reduce_dyn(shards);
+        if self.fault == FaultKind::Poison && self.arm() {
+            return f64::NAN;
+        }
+        sum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balance::OffsetsSource;
+    use crate::exec::kernel::SpmvKernel;
+    use crate::sparse::gen;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    fn kernel() -> Arc<dyn DynKernel> {
+        Arc::new(SpmvKernel::new(Arc::new(gen::uniform(64, 64, 4, 7))))
+    }
+
+    fn descriptor(k: &Arc<dyn DynKernel>) -> ScheduleDescriptor {
+        let offsets = k.offsets().to_vec();
+        let src = OffsetsSource::new(&offsets);
+        ScheduleKind::MergePath
+            .descriptor(&src, 8)
+            .expect("merge-path streams any tile set")
+    }
+
+    #[test]
+    fn fault_plan_is_a_pure_function_of_seed_and_index() {
+        let plan = FaultPlan::new(42, 0.5);
+        let first: Vec<_> = (0..64).map(|i| plan.fault_for(i)).collect();
+        // Re-query in reverse order: identical decisions.
+        let second: Vec<_> = (0..64).rev().map(|i| plan.fault_for(63 - i)).collect();
+        assert_eq!(first, second);
+        let hits = first.iter().filter(|f| f.is_some()).count();
+        assert!(hits > 0, "rate 0.5 over 64 draws injected nothing");
+        assert!(
+            FaultPlan::new(42, 0.0).fault_for(0).is_none(),
+            "rate 0 must inject nothing"
+        );
+    }
+
+    #[test]
+    fn wrapping_without_a_fault_is_the_identity() {
+        let inner = kernel();
+        let wrapped = ChaosKernel::wrap(inner.clone(), None);
+        assert!(Arc::ptr_eq(&inner, &wrapped));
+    }
+
+    #[test]
+    fn panic_fault_fires_exactly_once_then_runs_clean() {
+        let inner = kernel();
+        let desc = descriptor(&inner);
+        let want = inner.execute_stream(&desc);
+        let chaotic = ChaosKernel::wrap(inner, Some(FaultKind::Panic { worker: 0 }));
+        let first = catch_unwind(AssertUnwindSafe(|| chaotic.execute_stream(&desc)));
+        assert!(first.is_err(), "armed panic fault must unwind");
+        let second = chaotic.execute_stream(&desc);
+        assert_eq!(second.to_bits(), want.to_bits(), "retry must be bit-identical");
+    }
+
+    #[test]
+    fn stall_fault_carries_the_stall_marker() {
+        let inner = kernel();
+        let desc = descriptor(&inner);
+        let chaotic = ChaosKernel::wrap(inner, Some(FaultKind::Stall { virt_secs: 2.5 }));
+        let err = catch_unwind(AssertUnwindSafe(|| chaotic.execute_stream(&desc)))
+            .expect_err("armed stall fault must unwind");
+        let stall = err
+            .downcast_ref::<StallFault>()
+            .expect("stall payload downcasts to StallFault");
+        assert_eq!(stall.virt_secs, 2.5);
+    }
+
+    #[test]
+    fn poison_fault_yields_one_non_finite_checksum() {
+        let inner = kernel();
+        let desc = descriptor(&inner);
+        let want = inner.execute_stream(&desc);
+        let chaotic = ChaosKernel::wrap(inner, Some(FaultKind::Poison));
+        assert!(chaotic.execute_stream(&desc).is_nan());
+        let second = chaotic.execute_stream(&desc);
+        assert_eq!(second.to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn sharded_panic_fires_in_the_targeted_range_only() {
+        let inner = kernel();
+        let desc = descriptor(&inner);
+        let workers = desc.workers();
+        assert!(workers >= 2, "need a multi-worker plan for this test");
+        let chaotic = ChaosKernel::wrap(inner.clone(), Some(FaultKind::Panic { worker: 0 }));
+        // A range that excludes worker 0 passes through untouched.
+        let ok = catch_unwind(AssertUnwindSafe(|| chaotic.shard_dyn(&desc, 1, workers)));
+        assert!(ok.is_ok(), "non-target shard must not throw");
+        // The covering range throws, exactly once.
+        let hit = catch_unwind(AssertUnwindSafe(|| chaotic.shard_dyn(&desc, 0, 1)));
+        assert!(hit.is_err(), "target shard must throw");
+        // Fault-free re-execution reduces bit-identically to the inner kernel.
+        let want = inner.execute_stream(&desc);
+        let parts: Vec<BoxedPartials> =
+            (0..workers).map(|w| chaotic.shard_dyn(&desc, w, w + 1)).collect();
+        assert_eq!(chaotic.reduce_dyn(parts).to_bits(), want.to_bits());
+    }
+}

@@ -154,6 +154,19 @@ pub trait WorkKernel {
 /// reduce it.
 pub type BoxedPartials = Box<dyn Any + Send>;
 
+/// Panic payload a kernel throws to signal a *stall* rather than a bug:
+/// the execution would have wedged past any useful budget (in the chaos
+/// harness, for a virtual `virt_secs` — no wall-clock sleep, so tests
+/// stay fast and deterministic).  The engine's panic isolation downcasts
+/// for this type and classifies the failure as a timeout instead of a
+/// panic, which routes it through the same retry ladder but keeps the
+/// two failure counters honest.
+#[derive(Debug, Clone, Copy)]
+pub struct StallFault {
+    /// Virtual seconds the execution would have stalled for.
+    pub virt_secs: f64,
+}
+
 /// Flatten shard partials and order them canonically: ascending
 /// `(tile, atom_begin)`.  Keys are unique within one plan (segments are
 /// disjoint), so the order is total and independent of how the shards
@@ -536,7 +549,11 @@ impl SpgemmKernel {
     /// (see [`spgemm::RowSlab::checksum_merged`]), with no allocation in
     /// steady state.
     fn run(&self, mut visit: impl FnMut(&mut dyn FnMut(balance::Segment))) -> f64 {
-        let mut slab = self.arena.lock().unwrap();
+        // A panic while a previous holder had the arena (e.g. an injected
+        // fault mid-downsweep) poisons the mutex, but the slab carries no
+        // cross-flush state — `reset` rebuilds it below — so recovering
+        // the guard is always safe and keeps a retried problem runnable.
+        let mut slab = self.arena.lock().unwrap_or_else(|e| e.into_inner());
         slab.reset(&self.work);
         visit(&mut |s| {
             spgemm::for_each_segment_product(&self.a, &self.b, &self.work, s, |col, v| {
@@ -549,7 +566,10 @@ impl SpgemmKernel {
     /// Allocated entry capacity of the scatter arena — lets tests pin
     /// that repeated flushes reuse it instead of growing.
     pub fn arena_capacity(&self) -> usize {
-        self.arena.lock().unwrap().entry_capacity()
+        self.arena
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .entry_capacity()
     }
 }
 
@@ -594,7 +614,9 @@ impl WorkKernel for SpgemmKernel {
         out
     }
     fn reduce(&self, shards: Vec<Self::Partials>) -> f64 {
-        let mut slab = self.arena.lock().unwrap();
+        // Poison-recovering for the same reason as `run`: `reset` wipes
+        // any state a panicked holder left behind.
+        let mut slab = self.arena.lock().unwrap_or_else(|e| e.into_inner());
         slab.reset(&self.work);
         for (key, products) in &canonical_partials(shards) {
             slab.push(key.tile, products);

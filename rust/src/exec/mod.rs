@@ -13,6 +13,7 @@
 //! trait — the work-processing interface the serve engine dispatches
 //! through, making every workload here a first-class served problem.
 
+pub mod chaos;
 pub mod dense;
 pub mod gemm;
 pub mod graph;

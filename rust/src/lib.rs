@@ -54,10 +54,12 @@ pub type Result<T> = anyhow::Result<T>;
 /// `pub(crate)` behind the [`serve`] facade.
 pub mod prelude {
     pub use crate::balance::ScheduleKind;
-    pub use crate::exec::kernel::{DynKernel, WorkKernel};
+    pub use crate::exec::chaos::{ChaosKernel, FaultKind, FaultPlan};
+    pub use crate::exec::kernel::{DynKernel, StallFault, WorkKernel};
     pub use crate::serve::ServeEngine as Engine;
     pub use crate::serve::{
-        BatchReport, ConfigError, CostFeedback, IngestClass, IngestConfig, IngestReport, Problem,
-        SchedulePolicy, ServeConfig, ServeConfigBuilder, ServeEngine,
+        BatchReport, ConfigError, CostFeedback, FaultBatchStats, IngestClass, IngestConfig,
+        IngestReport, Problem, SchedulePolicy, ServeConfig, ServeConfigBuilder, ServeEngine,
+        ServeError,
     };
 }

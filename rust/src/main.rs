@@ -283,6 +283,42 @@ const SERVE_SPEC: CommandSpec = CommandSpec {
             default: Some("1"),
             help: "ingest batching window in milliseconds",
         },
+        FlagSpec {
+            name: "queue-capacity",
+            value: Some("N"),
+            default: None,
+            help: "ingest admission bound (absent = unbounded)",
+        },
+        FlagSpec {
+            name: "chaos",
+            value: None,
+            default: None,
+            help: "seeded fault injection: panic/stall/poison faults over the mix",
+        },
+        FlagSpec {
+            name: "fault-seed",
+            value: Some("SEED"),
+            default: Some("3298844397"),
+            help: "chaos fault-plan RNG seed",
+        },
+        FlagSpec {
+            name: "fault-rate",
+            value: Some("R"),
+            default: Some("0.05"),
+            help: "chaos per-problem fault probability [0,1]",
+        },
+        FlagSpec {
+            name: "max-retries",
+            value: Some("N"),
+            default: Some("1"),
+            help: "fallback re-executions for a failed problem",
+        },
+        FlagSpec {
+            name: "deadline",
+            value: Some("MS"),
+            default: None,
+            help: "per-problem execution deadline in ms (absent = none)",
+        },
     ],
 };
 
@@ -616,7 +652,20 @@ fn serve_config_from_args(
         .schedule(policy)
         .feedback(feedback)
         .cache_capacity(opt_strict(args, "cache-capacity", 1024)?)
-        .split_min_atoms(opt_strict(args, "split-threshold", serve::DEFAULT_SPLIT_MIN_ATOMS)?);
+        .split_min_atoms(opt_strict(args, "split-threshold", serve::DEFAULT_SPLIT_MIN_ATOMS)?)
+        .max_retries(opt_strict(args, "max-retries", serve::DEFAULT_MAX_RETRIES)?);
+    // Absent --deadline means "no watchdog": leave the builder field
+    // unset rather than inventing a sentinel duration.
+    if let Some(ms) = args.opt("deadline") {
+        let ms: f64 = ms
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid --deadline value `{ms}`"))?;
+        anyhow::ensure!(
+            ms.is_finite() && ms > 0.0,
+            "--deadline must be a positive millisecond count"
+        );
+        builder = builder.deadline(std::time::Duration::from_secs_f64(ms / 1e3));
+    }
     // Absent --candidates means "the tuner's default set": leave the
     // builder field unset rather than passing an empty (invalid) list.
     if !candidates.is_empty() {
@@ -688,6 +737,14 @@ fn cmd_serve(args: &Args) -> gpulb::Result<()> {
     }
     let cfg = serve_config_from_args(args, policy, feedback)?;
 
+    if args.has_flag("chaos") {
+        anyhow::ensure!(
+            !args.has_flag("bench"),
+            "--chaos and --bench are mutually exclusive"
+        );
+        return cmd_serve_chaos(args, &mix, cfg, batches);
+    }
+
     if args.has_flag("bench") {
         let out = args.opt_or("out", "BENCH_serve.json");
         serve::run_bench(&mix, &[1, 2, 4, 8], batches, cfg, &out)?;
@@ -736,6 +793,119 @@ fn cmd_serve(args: &Args) -> gpulb::Result<()> {
     Ok(())
 }
 
+/// `serve --chaos`: the seeded fault-injection smoke.  Wraps every mix
+/// problem in a [`gpulb::exec::chaos::ChaosKernel`] carrying the fault
+/// (if any) the pinned [`gpulb::exec::chaos::FaultPlan`] assigns to its
+/// index, runs `--batches` batches, and checks the recovery contract:
+/// every non-failed checksum matches a fault-free reference run
+/// bit-for-bit (merge-path-scheduled problems compare within 1e-9, since
+/// the `ThreadMapped` fallback is only ~1e-9-equal to merge-path), and
+/// fault counters are a pure function of the plan — deterministic across
+/// thread counts and reruns.  `--out` writes the counters as JSON for
+/// the CI artifact.
+fn cmd_serve_chaos(
+    args: &Args,
+    mix: &[serve::Problem],
+    cfg: serve::ServeConfig,
+    batches: usize,
+) -> gpulb::Result<()> {
+    use gpulb::exec::chaos::{ChaosKernel, FaultPlan, DEFAULT_FAULT_RATE, DEFAULT_FAULT_SEED};
+    let seed: u64 = opt_strict(args, "fault-seed", DEFAULT_FAULT_SEED)?;
+    let rate: f64 = opt_strict(args, "fault-rate", DEFAULT_FAULT_RATE)?;
+    anyhow::ensure!(
+        rate.is_finite() && (0.0..=1.0).contains(&rate),
+        "--fault-rate must be in [0,1]"
+    );
+    let plan = FaultPlan::new(seed, rate);
+    let faulted = (0..mix.len())
+        .filter(|&i| plan.fault_for(i).is_some())
+        .count();
+    println!(
+        "chaos: fault plan seed {seed:#x}, rate {rate}; {faulted} of {} problems carry a fault",
+        mix.len()
+    );
+
+    // Fault-free reference on a fresh engine with the same config: the
+    // recovery contract's bit-identity witness.
+    let reference = serve::ServeEngine::new(cfg.clone())
+        .execute_batch(mix)
+        .checksums;
+
+    let chaotic: Vec<serve::Problem> = mix
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            serve::Problem::from_kernel(ChaosKernel::wrap(p.kernel().clone(), plan.fault_for(i)))
+        })
+        .collect();
+    let engine = serve::ServeEngine::new(cfg);
+    let mut totals = serve::FaultBatchStats::default();
+    let mut mismatched = 0usize;
+    let mut failed = 0usize;
+    for batch_no in 1..=batches.max(1) {
+        let report = engine.execute_batch(&chaotic);
+        totals.merge(&report.faults);
+        for (i, (got, &want)) in report.checksums.iter().zip(&reference).enumerate() {
+            if report.errors[i].is_some() {
+                failed += 1;
+            } else if matches!(
+                report.schedules[i],
+                // Atom-granular schedules split segments mid-way, so their
+                // checksums are only ~1e-9-equal to the ThreadMapped
+                // fallback a recovered problem re-ran on; every whole-tile
+                // schedule must match bit-for-bit.
+                ScheduleKind::MergePath | ScheduleKind::NonzeroSplit
+            ) {
+                if (got - want).abs() > 1e-9 * want.abs().max(1.0) {
+                    mismatched += 1;
+                }
+            } else if got.to_bits() != want.to_bits() {
+                mismatched += 1;
+            }
+        }
+        let f = report.faults;
+        println!(
+            "batch {batch_no}: {} panics, {} timeouts, {} poisons; \
+             {} retries, {} recovered, {} failed",
+            f.panics, f.timeouts, f.poisons, f.retries, f.recovered, f.failed
+        );
+    }
+    println!(
+        "chaos totals: {} faults ({} panics / {} timeouts / {} poisons), \
+         {} retries, {} recovered, {} failed; {mismatched} checksum mismatches",
+        totals.faulted(),
+        totals.panics,
+        totals.timeouts,
+        totals.poisons,
+        totals.retries,
+        totals.recovered,
+        totals.failed
+    );
+    if let Some(out) = args.opt("out") {
+        let json = format!(
+            "{{\n  \"bench\": \"chaos\",\n  \"fault_seed\": {seed},\n  \"fault_rate\": {rate},\n  \
+             \"problems\": {},\n  \"faulted_problems\": {faulted},\n  \"batches\": {},\n  \
+             \"panics\": {},\n  \"timeouts\": {},\n  \"poisons\": {},\n  \"retries\": {},\n  \
+             \"recovered\": {},\n  \"failed\": {},\n  \"checksum_mismatches\": {mismatched}\n}}\n",
+            mix.len(),
+            batches.max(1),
+            totals.panics,
+            totals.timeouts,
+            totals.poisons,
+            totals.retries,
+            totals.recovered,
+            totals.failed
+        );
+        std::fs::write(out, json)?;
+        println!("wrote {out}");
+    }
+    anyhow::ensure!(
+        mismatched == 0,
+        "{mismatched} recovered checksums diverged from the fault-free reference"
+    );
+    Ok(())
+}
+
 /// `serve --ingest`: replay a seeded open-loop arrival trace through the
 /// ingest front-end on its deterministic virtual clock, then report
 /// tail latency (overall and per class against the SLO budgets) and
@@ -759,10 +929,19 @@ fn cmd_serve_ingest(args: &Args) -> gpulb::Result<()> {
         max_wait_ms.is_finite() && max_wait_ms > 0.0,
         "--max-wait must be positive milliseconds"
     );
-    let ingest_cfg = serve::IngestConfig::builder()
+    let mut ingest_builder = serve::IngestConfig::builder()
         .max_batch(max_batch)
-        .max_wait(std::time::Duration::from_secs_f64(max_wait_ms * 1e-3))
-        .build()?;
+        .max_wait(std::time::Duration::from_secs_f64(max_wait_ms * 1e-3));
+    if let Some(cap) = args.opt("queue-capacity") {
+        let cap: usize = cap
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid --queue-capacity value `{cap}`"))?;
+        ingest_builder = ingest_builder.queue_capacity(cap);
+        // The virtual-clock replay has no admission queue; the bound only
+        // applies to the threaded IngestServer front-end.
+        println!("note: --queue-capacity bounds the threaded front-end, not the trace replay");
+    }
+    let ingest_cfg = ingest_builder.build()?;
 
     let bench = args.has_flag("bench");
     let (catalog, cfg) = if bench {

@@ -13,11 +13,13 @@
 //! workload means implementing the trait in one file and adding one
 //! constructor below — no engine code changes.
 
+use std::any::Any;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 
 use crate::balance::{adaptive, dynamic, OffsetsSource, ScheduleKind};
 use crate::exec::kernel::{
-    DynKernel, FrontierKernel, GemmKernel, SpgemmKernel, SpmmKernel, SpmvKernel,
+    DynKernel, FrontierKernel, GemmKernel, SpgemmKernel, SpmmKernel, SpmvKernel, StallFault,
 };
 use crate::sparse::Csr;
 use crate::streamk::{Blocking, GemmShape};
@@ -104,6 +106,103 @@ impl Problem {
     pub fn tile_set_size(&self) -> (usize, usize) {
         (self.kernel.num_tiles(), self.kernel.num_atoms())
     }
+
+    /// The problem's kernel handle — what a fault-injection wrapper (or
+    /// any other decorator) wraps before rebuilding the problem through
+    /// [`Problem::from_kernel`].
+    pub fn kernel(&self) -> &Arc<dyn DynKernel> {
+        &self.kernel
+    }
+}
+
+/// Why one problem's execution failed — the engine's classification of a
+/// caught panic or a poisoned result, before the retry ladder runs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Failure {
+    /// The kernel panicked (a bug or an injected chaos panic).
+    Panicked,
+    /// The kernel signalled a stall via [`StallFault`] (virtual seconds
+    /// carried along), or a watchdog cancelled the execution at its
+    /// deadline.
+    Stalled(f64),
+    /// The execution completed but its checksum was non-finite — a
+    /// corrupted partial surfaced at the reduction.  (Every shipped
+    /// kernel reduces bounded operands to a finite checksum, so a
+    /// non-finite result is a fault indicator, not a legal output.)
+    Poisoned,
+}
+
+/// Classify a caught panic payload: a [`StallFault`] marker is a stall;
+/// anything else is a genuine panic.
+pub fn classify_panic(payload: &(dyn Any + Send)) -> Failure {
+    match payload.downcast_ref::<StallFault>() {
+        Some(stall) => Failure::Stalled(stall.virt_secs),
+        None => Failure::Panicked,
+    }
+}
+
+/// Run `f` with panic isolation and poison detection: a panic is caught
+/// and classified (stall vs. bug), and a finite-checksum check rejects
+/// poisoned results.  `checksum_of` extracts the value to validate.
+fn isolate<T>(f: impl FnOnce() -> T, checksum_of: impl FnOnce(&T) -> f64) -> Result<T, Failure> {
+    // `AssertUnwindSafe` is sound here: the closures borrow the problem's
+    // kernel (`Arc<dyn DynKernel>`) and engine state whose interior
+    // mutability is confined to poison-recovering mutexes (the SpGEMM
+    // arena resets itself on every acquisition) and atomics — a panic
+    // can leave no state behind that a retry could observe as broken.
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(value) if checksum_of(&value).is_finite() => Ok(value),
+        Ok(_) => Err(Failure::Poisoned),
+        Err(payload) => Err(classify_panic(payload.as_ref())),
+    }
+}
+
+/// [`execute`] with panic isolation and poison detection.
+pub fn execute_caught(
+    problem: &Problem,
+    kind: ScheduleKind,
+    cache: &PlanCache,
+    cfg: &ServeConfig,
+) -> Result<ExecSample, Failure> {
+    isolate(|| execute(problem, kind, cache, cfg), |s| s.checksum)
+}
+
+/// [`execute_planned`] with panic isolation and poison detection.
+pub fn execute_planned_caught(
+    problem: &Problem,
+    kind: ScheduleKind,
+    entry: &PlanEntry,
+    cfg: &ServeConfig,
+) -> Result<ExecSample, Failure> {
+    isolate(|| execute_planned(problem, kind, entry, cfg), |s| s.checksum)
+}
+
+/// [`execute_shard`] with panic isolation (poison is detected later, at
+/// the reduction, where the checksum exists).
+pub fn execute_shard_caught(
+    problem: &Problem,
+    desc: &crate::balance::stream::ScheduleDescriptor,
+    w0: usize,
+    w1: usize,
+) -> Result<BoxedPartials, Failure> {
+    isolate(|| execute_shard(problem, desc, w0, w1), |_| 0.0)
+}
+
+/// [`execute_chunk`] with panic isolation.
+pub fn execute_chunk_caught(
+    problem: &Problem,
+    dd: &dynamic::DynamicDescriptor,
+    j: usize,
+) -> Result<BoxedPartials, Failure> {
+    isolate(|| execute_chunk(problem, dd, j), |_| 0.0)
+}
+
+/// [`reduce_shards`] with panic isolation and poison detection.
+pub fn reduce_shards_caught(
+    problem: &Problem,
+    shards: Vec<BoxedPartials>,
+) -> Result<f64, Failure> {
+    isolate(|| reduce_shards(problem, shards), |&sum| sum)
 }
 
 /// One executed problem: its checksum (a deterministic reduction of the

@@ -13,14 +13,20 @@
 //! not more fields bolted onto the engine config.
 
 use std::fmt;
+use std::time::Duration;
 
 use crate::balance::ScheduleKind;
 
+use super::ingest::IngestClass;
 use super::tuner::{CostFeedback, SchedulePolicy};
 
 /// Default atom count above which one problem is split into worker-range
 /// shards across the pool (see [`ServeConfig::split_min_atoms`]).
 pub const DEFAULT_SPLIT_MIN_ATOMS: usize = 1 << 20;
+
+/// Default bound on the retry ladder: one fallback re-execution on the
+/// conservative planned path before a problem is reported as failed.
+pub const DEFAULT_MAX_RETRIES: usize = 1;
 
 /// Engine configuration.  Construct through [`ServeConfig::builder`] (or
 /// [`Default`] for the stock setup); the builder validates once so the
@@ -59,6 +65,18 @@ pub struct ServeConfig {
     /// canonical chunk walk — so a batch of many small dynamic problems
     /// keeps its inter-problem parallelism.
     pub split_min_atoms: usize,
+    /// Bound on the fault-recovery retry ladder: how many times a problem
+    /// that panicked, stalled, or produced a poisoned (non-finite)
+    /// checksum is re-executed on the conservative planned path
+    /// (`ThreadMapped`, single shard) before being reported as failed.
+    /// `0` disables retries entirely — the first failure is final.
+    pub max_retries: usize,
+    /// Optional wall-clock budget per batch.  When set, a watchdog raises
+    /// a cancellation flag at the deadline; dynamic claim loops observe it
+    /// at chunk-claim boundaries and bail out, and problems that were
+    /// cancelled are routed through the retry ladder.  `None` (the
+    /// default) disables the watchdog so throughput paths pay nothing.
+    pub deadline: Option<Duration>,
 }
 
 impl Default for ServeConfig {
@@ -73,6 +91,8 @@ impl Default for ServeConfig {
             candidates: Vec::new(),
             cache_capacity: 1024,
             split_min_atoms: DEFAULT_SPLIT_MIN_ATOMS,
+            max_retries: DEFAULT_MAX_RETRIES,
+            deadline: None,
         }
     }
 }
@@ -103,6 +123,8 @@ pub struct ServeConfigBuilder {
     candidates: Option<Vec<ScheduleKind>>,
     cache_capacity: Option<usize>,
     split_min_atoms: Option<usize>,
+    max_retries: Option<usize>,
+    deadline: Option<Duration>,
 }
 
 impl ServeConfigBuilder {
@@ -149,6 +171,20 @@ impl ServeConfigBuilder {
         self
     }
 
+    /// Retry-ladder bound (see [`ServeConfig::max_retries`]; `0` disables
+    /// fallback re-execution).
+    pub fn max_retries(mut self, max_retries: usize) -> Self {
+        self.max_retries = Some(max_retries);
+        self
+    }
+
+    /// Per-batch wall-clock budget (must be positive when set; see
+    /// [`ServeConfig::deadline`]).
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
     /// Validate and produce the config.
     pub fn build(self) -> Result<ServeConfig, ConfigError> {
         let d = ServeConfig::default();
@@ -164,6 +200,8 @@ impl ServeConfigBuilder {
             },
             cache_capacity: self.cache_capacity.unwrap_or(d.cache_capacity),
             split_min_atoms: self.split_min_atoms.unwrap_or(d.split_min_atoms),
+            max_retries: self.max_retries.unwrap_or(d.max_retries),
+            deadline: self.deadline.or(d.deadline),
         };
         if cfg.threads == 0 {
             return Err(ConfigError::ZeroThreads);
@@ -185,6 +223,11 @@ impl ServeConfigBuilder {
             }
             if min_samples == 0 {
                 return Err(ConfigError::ZeroMinSamples);
+            }
+        }
+        if let Some(deadline) = cfg.deadline {
+            if deadline.is_zero() {
+                return Err(ConfigError::ZeroDeadline);
             }
         }
         Ok(cfg)
@@ -211,6 +254,10 @@ pub enum ConfigError {
     ZeroMaxBatch,
     /// Ingest `max_wait` must be positive.
     ZeroMaxWait,
+    /// A `deadline` must be positive when set.
+    ZeroDeadline,
+    /// Ingest `queue_capacity` must be >= 1 when set.
+    ZeroQueueCapacity,
 }
 
 impl fmt::Display for ConfigError {
@@ -228,11 +275,72 @@ impl fmt::Display for ConfigError {
             }
             ConfigError::ZeroMaxBatch => write!(f, "max_batch must be at least 1"),
             ConfigError::ZeroMaxWait => write!(f, "max_wait must be positive"),
+            ConfigError::ZeroDeadline => write!(f, "deadline must be positive"),
+            ConfigError::ZeroQueueCapacity => {
+                write!(f, "queue_capacity must be at least 1")
+            }
         }
     }
 }
 
 impl std::error::Error for ConfigError {}
+
+/// A request-path failure surfaced to callers — on an ingest ticket, or
+/// per problem in a batch report.  Unlike [`ConfigError`] (a rejected
+/// knob, caught at build time) these describe runtime faults: load shed
+/// at admission, an exhausted retry ladder after a panic or stall, or a
+/// server that is no longer accepting work.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ServeError {
+    /// The ingest queue was at capacity for this class and the request
+    /// was rejected at admission (Bulk sheds before Standard before
+    /// Interactive — see the ingest module docs).
+    Shed {
+        /// The class the rejected request arrived under.
+        class: IngestClass,
+    },
+    /// The server has been drained (or dropped) and admits no new work.
+    Closed,
+    /// The problem panicked on every rung of the retry ladder.
+    Panicked {
+        /// Fallback re-executions attempted after the first failure.
+        retries: usize,
+    },
+    /// The problem stalled past its budget on every rung of the ladder.
+    TimedOut {
+        /// Fallback re-executions attempted after the first failure.
+        retries: usize,
+    },
+    /// The problem produced a poisoned (non-finite) checksum on every
+    /// rung of the ladder.
+    Poisoned {
+        /// Fallback re-executions attempted after the first failure.
+        retries: usize,
+    },
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Shed { class } => {
+                write!(f, "request shed at admission (class {})", class.name())
+            }
+            ServeError::Closed => write!(f, "server is draining and admits no new work"),
+            ServeError::Panicked { retries } => {
+                write!(f, "problem panicked ({retries} fallback retries exhausted)")
+            }
+            ServeError::TimedOut { retries } => {
+                write!(f, "problem stalled ({retries} fallback retries exhausted)")
+            }
+            ServeError::Poisoned { retries } => write!(
+                f,
+                "problem produced a poisoned checksum ({retries} fallback retries exhausted)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 #[cfg(test)]
 mod tests {
@@ -333,5 +441,38 @@ mod tests {
         let err: anyhow::Error = ConfigError::ZeroThreads.into();
         assert!(err.to_string().contains("threads"));
         assert!(ConfigError::Epsilon(2.0).to_string().contains("epsilon"));
+    }
+
+    #[test]
+    fn fault_knobs_default_and_validate() {
+        let cfg = ServeConfig::builder().build().unwrap();
+        assert_eq!(cfg.max_retries, DEFAULT_MAX_RETRIES);
+        assert_eq!(cfg.deadline, None);
+        let cfg = ServeConfig::builder()
+            .max_retries(0)
+            .deadline(Duration::from_millis(250))
+            .build()
+            .unwrap();
+        assert_eq!(cfg.max_retries, 0);
+        assert_eq!(cfg.deadline, Some(Duration::from_millis(250)));
+        assert_eq!(
+            ServeConfig::builder()
+                .deadline(Duration::ZERO)
+                .build()
+                .unwrap_err(),
+            ConfigError::ZeroDeadline
+        );
+    }
+
+    #[test]
+    fn serve_errors_display() {
+        let shed = ServeError::Shed {
+            class: IngestClass::Bulk,
+        };
+        assert!(shed.to_string().contains("bulk"));
+        assert!(ServeError::Closed.to_string().contains("drain"));
+        assert!(ServeError::Panicked { retries: 1 }.to_string().contains("panicked"));
+        assert!(ServeError::TimedOut { retries: 1 }.to_string().contains("stalled"));
+        assert!(ServeError::Poisoned { retries: 1 }.to_string().contains("poisoned"));
     }
 }

@@ -27,6 +27,7 @@
 //! folded into [`IngestReport`] as p50/p95/p99 + sustained throughput,
 //! overall and per class against each class's SLO budget.
 
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, RecvTimeoutError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -36,8 +37,8 @@ use crate::balance::adaptive::proxy_cost_for;
 use crate::metrics;
 
 use super::batch::Problem;
-use super::config::ConfigError;
-use super::ServeEngine;
+use super::config::{ConfigError, ServeError};
+use super::{FaultBatchStats, ServeEngine};
 
 /// Virtual seconds per deterministic proxy-cost step — the service-time
 /// scale of the [`run_trace`] latency model.  One proxy step ≈ one
@@ -91,6 +92,14 @@ impl IngestClass {
             IngestClass::Bulk => "bulk",
         }
     }
+
+    /// The class's SLO budget as an execution deadline — what callers
+    /// wire into [`super::ServeConfig::deadline`] when a serve pipeline
+    /// should cancel work that blows the class budget instead of merely
+    /// scoring the violation.
+    pub fn deadline(self) -> Duration {
+        Duration::from_secs_f64(self.slo_secs())
+    }
 }
 
 /// One event of a seeded arrival trace: a request for catalog entry
@@ -115,6 +124,12 @@ pub struct IngestConfig {
     pub max_batch: usize,
     /// Longest a request waits for batch-mates (> 0).
     pub max_wait: Duration,
+    /// Admission bound for the threaded front-end: `Some(n)` sheds new
+    /// submissions once a class's queued depth reaches its share of `n`
+    /// (`n >> priority`, so Bulk saturates first, then Standard, then
+    /// Interactive — the deterministic shed order), `None` admits
+    /// everything (the open-loop default the benches assume).
+    pub queue_capacity: Option<usize>,
 }
 
 impl Default for IngestConfig {
@@ -122,6 +137,7 @@ impl Default for IngestConfig {
         IngestConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(1),
+            queue_capacity: None,
         }
     }
 }
@@ -140,6 +156,7 @@ impl IngestConfig {
 pub struct IngestConfigBuilder {
     max_batch: Option<usize>,
     max_wait: Option<Duration>,
+    queue_capacity: Option<Option<usize>>,
 }
 
 impl IngestConfigBuilder {
@@ -153,17 +170,28 @@ impl IngestConfigBuilder {
         self
     }
 
+    /// Bound the threaded front-end's queue (see
+    /// [`IngestConfig::queue_capacity`]).
+    pub fn queue_capacity(mut self, capacity: usize) -> Self {
+        self.queue_capacity = Some(Some(capacity));
+        self
+    }
+
     pub fn build(self) -> Result<IngestConfig, ConfigError> {
         let d = IngestConfig::default();
         let cfg = IngestConfig {
             max_batch: self.max_batch.unwrap_or(d.max_batch),
             max_wait: self.max_wait.unwrap_or(d.max_wait),
+            queue_capacity: self.queue_capacity.unwrap_or(d.queue_capacity),
         };
         if cfg.max_batch == 0 {
             return Err(ConfigError::ZeroMaxBatch);
         }
         if cfg.max_wait.is_zero() {
             return Err(ConfigError::ZeroMaxWait);
+        }
+        if cfg.queue_capacity == Some(0) {
+            return Err(ConfigError::ZeroQueueCapacity);
         }
         Ok(cfg)
     }
@@ -287,6 +315,13 @@ pub struct IngestReport {
     pub classes: Vec<ClassLatency>,
     /// The full ledger, ordered by [`IngestRecord::index`].
     pub records: Vec<IngestRecord>,
+    /// Submissions shed at admission, per class in [`IngestClass::ALL`]
+    /// order (all zero without a queue bound; shed requests never reach
+    /// the ledger).
+    pub shed: [u64; 3],
+    /// Panic / timeout / poison / retry counters folded across every
+    /// micro-batch of the run.
+    pub faults: FaultBatchStats,
     /// Host wall time the run took (not part of the determinism contract).
     pub wall: Duration,
 }
@@ -306,10 +341,21 @@ impl IngestReport {
             self.requests as f64 / self.batches as f64
         }
     }
+
+    /// Total submissions shed at admission, across classes.
+    pub fn shed_total(&self) -> u64 {
+        self.shed.iter().sum()
+    }
 }
 
 /// Fold a ledger into the latency/throughput report.
-fn summarize(mut records: Vec<IngestRecord>, batches: usize, wall: Duration) -> IngestReport {
+fn summarize(
+    mut records: Vec<IngestRecord>,
+    batches: usize,
+    shed: [u64; 3],
+    faults: FaultBatchStats,
+    wall: Duration,
+) -> IngestReport {
     records.sort_by_key(|r| r.index);
     let latencies: Vec<f64> = records.iter().map(IngestRecord::latency).collect();
     let makespan = records.iter().map(|r| r.done).fold(0.0f64, f64::max);
@@ -356,6 +402,8 @@ fn summarize(mut records: Vec<IngestRecord>, batches: usize, wall: Duration) -> 
         makespan,
         classes,
         records,
+        shed,
+        faults,
         wall,
     }
 }
@@ -388,6 +436,7 @@ pub fn run_trace(
     let workers = engine.config().plan_workers;
     let cuts = cut_batches(arrivals, cfg.max_batch, cfg.max_wait.as_secs_f64());
     let mut records = Vec::with_capacity(arrivals.len());
+    let mut faults = FaultBatchStats::default();
     let mut done_prev = 0.0f64;
     for cut in &cuts {
         let mut order: Vec<usize> = (cut.first..cut.first + cut.len).collect();
@@ -397,6 +446,7 @@ pub fn run_trace(
             .map(|&i| catalog[arrivals[i].problem].clone())
             .collect();
         let report = engine.execute_batch(&batch);
+        faults.merge(&report.faults);
         let mut clock = done_prev.max(cut.cut_at);
         for (k, &i) in order.iter().enumerate() {
             let offsets = catalog[arrivals[i].problem].offsets();
@@ -412,7 +462,8 @@ pub fn run_trace(
         }
         done_prev = clock;
     }
-    Ok(summarize(records, cuts.len(), wall_start.elapsed()))
+    // The virtual replay has no admission queue, so nothing sheds here.
+    Ok(summarize(records, cuts.len(), [0; 3], faults, wall_start.elapsed()))
 }
 
 /// A completed request's result, delivered through its [`Ticket`].
@@ -427,64 +478,159 @@ struct Submission {
     problem: Problem,
     class: IngestClass,
     submitted: Instant,
-    respond: mpsc::Sender<Completion>,
+    respond: mpsc::Sender<Result<Completion, ServeError>>,
+}
+
+/// Queue messages: jobs, or the drain sentinel [`IngestServer::drain`]
+/// sends after closing admission.
+enum Msg {
+    Job(Submission),
+    Drain,
+}
+
+/// Admission bookkeeping shared by every [`IngestHandle`] and the server:
+/// per-class queued depth, per-class shed tally, and the drain latch.
+struct AdmissionState {
+    /// `Some` = shed when a class's depth reaches `capacity >> priority`.
+    capacity: Option<usize>,
+    /// Queued (submitted but not yet drained) requests per class.
+    depth: [AtomicUsize; 3],
+    /// Submissions rejected at admission per class.
+    shed: [AtomicU64; 3],
+    /// Set by [`IngestServer::drain`]: no new work is admitted.
+    closed: AtomicBool,
+}
+
+impl AdmissionState {
+    fn new(capacity: Option<usize>) -> Self {
+        AdmissionState {
+            capacity,
+            depth: [AtomicUsize::new(0), AtomicUsize::new(0), AtomicUsize::new(0)],
+            shed: [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)],
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    /// Admission check for one submission.  Sheds lower-priority classes
+    /// first: each class's share of the bound halves per priority step
+    /// (Bulk = capacity/4, Standard = capacity/2, Interactive = full),
+    /// so under pressure Bulk saturates and sheds while Interactive
+    /// still admits.  The check-then-increment is not atomic across
+    /// producers — the bound is a shed policy, not a hard rail — but a
+    /// single producer (every test and the CLI driver) sees it exactly.
+    fn admit(&self, class: IngestClass) -> Result<(), ServeError> {
+        if self.closed.load(Ordering::Acquire) {
+            return Err(ServeError::Closed);
+        }
+        let idx = class.priority() as usize;
+        if let Some(capacity) = self.capacity {
+            let share = (capacity >> class.priority()).max(1);
+            if self.depth[idx].load(Ordering::Acquire) >= share {
+                self.shed[idx].fetch_add(1, Ordering::Relaxed);
+                return Err(ServeError::Shed { class });
+            }
+        }
+        self.depth[idx].fetch_add(1, Ordering::AcqRel);
+        Ok(())
+    }
+
+    /// A queued submission left the queue for a micro-batch.
+    fn drained(&self, class: IngestClass) {
+        self.depth[class.priority() as usize].fetch_sub(1, Ordering::AcqRel);
+    }
+
+    fn shed_counts(&self) -> [u64; 3] {
+        [
+            self.shed[0].load(Ordering::Relaxed),
+            self.shed[1].load(Ordering::Relaxed),
+            self.shed[2].load(Ordering::Relaxed),
+        ]
+    }
 }
 
 /// The real threaded open-loop front-end: producers submit through
 /// cloned [`IngestHandle`]s, a drainer thread cuts micro-batches under
 /// the same window semantics as [`cut_batches`] (in wall-clock time) and
-/// feeds them to the engine.  Drop all handles, then call
-/// [`IngestServer::finish`] to join the drainer and collect the report.
+/// feeds them to the engine.  Two shutdown paths: drop all handles and
+/// call [`IngestServer::finish`], or call [`IngestServer::drain`] — which
+/// stops admission and flushes while handles still exist.
 pub struct IngestServer {
-    tx: mpsc::Sender<Submission>,
-    drainer: JoinHandle<(Vec<IngestRecord>, usize)>,
+    tx: mpsc::Sender<Msg>,
+    state: Arc<AdmissionState>,
+    drainer: JoinHandle<DrainerOut>,
     started: Instant,
 }
+
+type DrainerOut = (Vec<IngestRecord>, usize, FaultBatchStats);
 
 /// A clonable producer endpoint for an [`IngestServer`].
 #[derive(Clone)]
 pub struct IngestHandle {
-    tx: mpsc::Sender<Submission>,
+    tx: mpsc::Sender<Msg>,
+    state: Arc<AdmissionState>,
 }
 
 /// A pending request's completion receiver.
 pub struct Ticket {
-    rx: mpsc::Receiver<Completion>,
+    rx: mpsc::Receiver<Result<Completion, ServeError>>,
 }
 
 impl Ticket {
-    /// Block until the request's micro-batch completes.
-    pub fn wait(self) -> crate::Result<Completion> {
-        self.rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("ingest server dropped the request"))
+    /// Block until the request resolves: `Ok` with the completion, or the
+    /// typed reason it never will (shed at admission, server draining, or
+    /// the retry ladder exhausted).  A severed channel — the drainer died
+    /// before responding — reads as [`ServeError::Closed`], so no ticket
+    /// ever blocks forever or loses its verdict.
+    pub fn wait(self) -> Result<Completion, ServeError> {
+        match self.rx.recv() {
+            Ok(result) => result,
+            Err(_) => Err(ServeError::Closed),
+        }
     }
 }
 
 impl IngestHandle {
     /// Enqueue one problem under a class; returns the completion ticket.
+    /// Admission failures (queue bound hit, server draining) resolve the
+    /// ticket immediately with the typed error — submission itself never
+    /// fails.
     pub fn submit(&self, problem: Problem, class: IngestClass) -> crate::Result<Ticket> {
         let (respond, rx) = mpsc::channel();
-        self.tx
-            .send(Submission {
-                problem,
-                class,
-                submitted: Instant::now(),
-                respond,
-            })
-            .map_err(|_| anyhow::anyhow!("ingest server is shut down"))?;
-        Ok(Ticket { rx })
+        let ticket = Ticket { rx };
+        if let Err(err) = self.state.admit(class) {
+            let _ = respond.send(Err(err));
+            return Ok(ticket);
+        }
+        let msg = Msg::Job(Submission {
+            problem,
+            class,
+            submitted: Instant::now(),
+            respond,
+        });
+        if let Err(mpsc::SendError(msg)) = self.tx.send(msg) {
+            // The drainer is gone; hand the admission slot back and
+            // resolve the ticket instead of erroring the submit path.
+            self.state.drained(class);
+            if let Msg::Job(s) = msg {
+                let _ = s.respond.send(Err(ServeError::Closed));
+            }
+        }
+        Ok(ticket)
     }
 }
 
 impl IngestServer {
     /// Spawn the drainer thread over an engine.
     pub fn start(engine: Arc<ServeEngine>, cfg: IngestConfig) -> IngestServer {
-        let (tx, rx) = mpsc::channel::<Submission>();
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let state = Arc::new(AdmissionState::new(cfg.queue_capacity));
         let started = Instant::now();
-        let drainer = std::thread::spawn(move || drain_loop(&engine, &cfg, &rx, started));
+        let drain_state = Arc::clone(&state);
+        let drainer =
+            std::thread::spawn(move || drain_loop(&engine, &cfg, &rx, &drain_state, started));
         IngestServer {
             tx,
+            state,
             drainer,
             started,
         }
@@ -494,6 +640,7 @@ impl IngestServer {
     pub fn handle(&self) -> IngestHandle {
         IngestHandle {
             tx: self.tx.clone(),
+            state: Arc::clone(&self.state),
         }
     }
 
@@ -503,70 +650,165 @@ impl IngestServer {
     pub fn finish(self) -> crate::Result<IngestReport> {
         let IngestServer {
             tx,
+            state,
             drainer,
             started,
         } = self;
         drop(tx);
-        let (records, batches) = drainer
+        let (records, batches, faults) = drainer
             .join()
             .map_err(|_| anyhow::anyhow!("ingest drainer panicked"))?;
-        Ok(summarize(records, batches, started.elapsed()))
+        Ok(summarize(
+            records,
+            batches,
+            state.shed_counts(),
+            faults,
+            started.elapsed(),
+        ))
+    }
+
+    /// Graceful shutdown with producers still holding handles: stop
+    /// admission (further submits resolve [`ServeError::Closed`]), flush
+    /// every queued micro-batch, resolve every outstanding ticket, join
+    /// the drainer, and summarize.
+    pub fn drain(self) -> crate::Result<IngestReport> {
+        let IngestServer {
+            tx,
+            state,
+            drainer,
+            started,
+        } = self;
+        state.closed.store(true, Ordering::Release);
+        // The sentinel queues behind every admitted job (FIFO), so the
+        // drainer flushes them all before exiting.
+        let _ = tx.send(Msg::Drain);
+        drop(tx);
+        let (records, batches, faults) = drainer
+            .join()
+            .map_err(|_| anyhow::anyhow!("ingest drainer panicked"))?;
+        Ok(summarize(
+            records,
+            batches,
+            state.shed_counts(),
+            faults,
+            started.elapsed(),
+        ))
+    }
+}
+
+/// Execute one micro-batch and resolve its tickets: requests drain in
+/// (class priority, submission order); per-request verdicts come from the
+/// engine report — a typed error for problems that exhausted the retry
+/// ladder, the completion otherwise.
+fn run_micro_batch(
+    engine: &ServeEngine,
+    mut pending: Vec<Submission>,
+    started: Instant,
+    seq: &mut usize,
+    records: &mut Vec<IngestRecord>,
+    faults: &mut FaultBatchStats,
+) {
+    // Stable sort: within a class, submission order is preserved.
+    pending.sort_by_key(|s| s.class.priority());
+    let cut = Instant::now();
+    let problems: Vec<Problem> = pending.iter().map(|s| s.problem.clone()).collect();
+    let report = engine.execute_batch(&problems);
+    faults.merge(&report.faults);
+    let done = Instant::now();
+    let cut_s = cut.duration_since(started).as_secs_f64();
+    let done_s = done.duration_since(started).as_secs_f64();
+    for (k, s) in pending.iter().enumerate() {
+        let checksum = report.checksums[k];
+        let verdict = match report.errors[k] {
+            Some(err) => Err(err),
+            None => Ok(Completion {
+                checksum,
+                latency: done.duration_since(s.submitted).as_secs_f64(),
+            }),
+        };
+        // A producer that dropped its ticket just doesn't get notified.
+        let _ = s.respond.send(verdict);
+        records.push(IngestRecord {
+            index: *seq,
+            class: s.class,
+            arrived: s.submitted.duration_since(started).as_secs_f64(),
+            cut: cut_s,
+            done: done_s,
+            checksum,
+        });
+        *seq += 1;
     }
 }
 
 /// The drainer: block for a first submission, then collect batch-mates
 /// until the window (opened at the first submission) expires or the batch
-/// fills, drain in (class priority, submission order), execute, respond.
+/// fills, execute, respond.  A [`Msg::Drain`] sentinel flushes everything
+/// still queued and exits.
 fn drain_loop(
     engine: &ServeEngine,
     cfg: &IngestConfig,
-    rx: &mpsc::Receiver<Submission>,
+    rx: &mpsc::Receiver<Msg>,
+    state: &AdmissionState,
     started: Instant,
-) -> (Vec<IngestRecord>, usize) {
+) -> DrainerOut {
     let mut records = Vec::new();
     let mut batches = 0usize;
     let mut seq = 0usize;
-    while let Ok(first) = rx.recv() {
+    let mut faults = FaultBatchStats::default();
+    'serve: loop {
+        let first = match rx.recv() {
+            Ok(Msg::Job(s)) => s,
+            Ok(Msg::Drain) => break 'serve,
+            Err(_) => return (records, batches, faults),
+        };
+        state.drained(first.class);
         let deadline = Instant::now() + cfg.max_wait;
         let mut pending = vec![first];
+        let mut draining = false;
         while pending.len() < cfg.max_batch {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
             match rx.recv_timeout(deadline - now) {
-                Ok(s) => pending.push(s),
+                Ok(Msg::Job(s)) => {
+                    state.drained(s.class);
+                    pending.push(s);
+                }
+                Ok(Msg::Drain) => {
+                    draining = true;
+                    break;
+                }
                 Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
             }
         }
-        // Stable sort: within a class, submission order is preserved.
-        pending.sort_by_key(|s| s.class.priority());
-        let cut = Instant::now();
-        let problems: Vec<Problem> = pending.iter().map(|s| s.problem.clone()).collect();
-        let report = engine.execute_batch(&problems);
-        let done = Instant::now();
-        let cut_s = cut.duration_since(started).as_secs_f64();
-        let done_s = done.duration_since(started).as_secs_f64();
-        for (s, &checksum) in pending.iter().zip(&report.checksums) {
-            let completion = Completion {
-                checksum,
-                latency: done.duration_since(s.submitted).as_secs_f64(),
-            };
-            // A producer that dropped its ticket just doesn't get notified.
-            let _ = s.respond.send(completion);
-            records.push(IngestRecord {
-                index: seq,
-                class: s.class,
-                arrived: s.submitted.duration_since(started).as_secs_f64(),
-                cut: cut_s,
-                done: done_s,
-                checksum,
-            });
-            seq += 1;
+        run_micro_batch(engine, pending, started, &mut seq, &mut records, &mut faults);
+        batches += 1;
+        if draining {
+            break 'serve;
         }
+    }
+    // Drain flush: everything admitted before (or racing) the sentinel,
+    // in max_batch-sized batches, until the queue reads empty.
+    loop {
+        let mut pending = Vec::new();
+        while pending.len() < cfg.max_batch {
+            match rx.try_recv() {
+                Ok(Msg::Job(s)) => {
+                    state.drained(s.class);
+                    pending.push(s);
+                }
+                Ok(Msg::Drain) => continue,
+                Err(_) => break,
+            }
+        }
+        if pending.is_empty() {
+            break;
+        }
+        run_micro_batch(engine, pending, started, &mut seq, &mut records, &mut faults);
         batches += 1;
     }
-    (records, batches)
+    (records, batches, faults)
 }
 
 /// Write the `BENCH_ingest.json` artifact: the latency family
@@ -691,6 +933,22 @@ mod tests {
         );
         assert_eq!(
             IngestConfig::builder()
+                .queue_capacity(0)
+                .build()
+                .unwrap_err(),
+            ConfigError::ZeroQueueCapacity
+        );
+        assert_eq!(
+            IngestConfig::builder()
+                .queue_capacity(16)
+                .build()
+                .unwrap()
+                .queue_capacity,
+            Some(16)
+        );
+        assert_eq!(IngestConfig::default().queue_capacity, None);
+        assert_eq!(
+            IngestConfig::builder()
                 .max_wait(Duration::ZERO)
                 .build()
                 .unwrap_err(),
@@ -703,6 +961,47 @@ mod tests {
             .unwrap();
         assert_eq!(cfg.max_batch, 4);
         assert_eq!(cfg.max_wait, Duration::from_millis(2));
+    }
+
+    #[test]
+    fn admission_sheds_low_priority_classes_first() {
+        // Capacity 4: Interactive's share is 4, Standard's 2, Bulk's 1.
+        let state = AdmissionState::new(Some(4));
+        assert!(state.admit(IngestClass::Bulk).is_ok());
+        assert_eq!(
+            state.admit(IngestClass::Bulk),
+            Err(ServeError::Shed {
+                class: IngestClass::Bulk
+            })
+        );
+        // Standard and Interactive still admit at their larger shares.
+        assert!(state.admit(IngestClass::Standard).is_ok());
+        assert!(state.admit(IngestClass::Standard).is_ok());
+        assert_eq!(
+            state.admit(IngestClass::Standard),
+            Err(ServeError::Shed {
+                class: IngestClass::Standard
+            })
+        );
+        for _ in 0..4 {
+            assert!(state.admit(IngestClass::Interactive).is_ok());
+        }
+        assert_eq!(
+            state.admit(IngestClass::Interactive),
+            Err(ServeError::Shed {
+                class: IngestClass::Interactive
+            })
+        );
+        assert_eq!(state.shed_counts(), [1, 1, 1]);
+        // Draining a slot re-opens admission for that class.
+        state.drained(IngestClass::Bulk);
+        assert!(state.admit(IngestClass::Bulk).is_ok());
+        // The drain latch closes every class regardless of depth.
+        state.closed.store(true, Ordering::Release);
+        assert_eq!(
+            state.admit(IngestClass::Interactive),
+            Err(ServeError::Closed)
+        );
     }
 
     #[test]
@@ -723,7 +1022,13 @@ mod tests {
             rec(2, IngestClass::Bulk, 0.0, 0.050),
             rec(3, IngestClass::Bulk, 0.1, 0.150),
         ];
-        let report = summarize(records, 2, Duration::ZERO);
+        let report = summarize(
+            records,
+            2,
+            [0; 3],
+            FaultBatchStats::default(),
+            Duration::ZERO,
+        );
         assert_eq!(report.requests, 4);
         assert_eq!(report.batches, 2);
         assert_eq!(report.classes.len(), 2, "standard class omitted");

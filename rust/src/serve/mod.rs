@@ -56,8 +56,11 @@ pub(crate) mod plan_cache;
 pub mod pool;
 pub(crate) mod tuner;
 
-pub use batch::{ExecSample, Problem};
-pub use config::{ConfigError, ServeConfig, ServeConfigBuilder, DEFAULT_SPLIT_MIN_ATOMS};
+pub use batch::{ExecSample, Failure, Problem};
+pub use config::{
+    ConfigError, ServeConfig, ServeConfigBuilder, ServeError, DEFAULT_MAX_RETRIES,
+    DEFAULT_SPLIT_MIN_ATOMS,
+};
 pub use ingest::{
     Arrival, BatchCut, ClassLatency, IngestClass, IngestConfig, IngestConfigBuilder, IngestReport,
 };
@@ -71,6 +74,8 @@ pub use tuner::{
     DEFAULT_SEED,
 };
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::balance::stream::ScheduleDescriptor;
@@ -102,13 +107,61 @@ impl TunerBatchStats {
     }
 }
 
+/// Fault-tolerance counters for one batch (all zero on a clean run).
+///
+/// Every counter is a pure function of which problems failed and how —
+/// under a seeded [`crate::exec::chaos::FaultPlan`] that makes the whole
+/// struct deterministic across thread counts and reruns, which
+/// `tests/fault_tolerance.rs` pins.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultBatchStats {
+    /// Problems whose first failure was a caught panic.
+    pub panics: u64,
+    /// Problems whose first failure was a stall or deadline cancellation.
+    pub timeouts: u64,
+    /// Problems whose first failure was a non-finite (poisoned) result.
+    pub poisons: u64,
+    /// Fallback retry attempts executed (planned `ThreadMapped`, whole).
+    pub retries: u64,
+    /// Problems that failed first but succeeded on a fallback retry.
+    pub recovered: u64,
+    /// Problems that exhausted the retry ladder (NaN checksum, typed
+    /// error in [`BatchReport::errors`]).
+    pub failed: u64,
+}
+
+impl FaultBatchStats {
+    /// Problems that failed at least once this batch.
+    pub fn faulted(&self) -> u64 {
+        self.panics + self.timeouts + self.poisons
+    }
+
+    /// True when nothing failed — the fast-path batches the benches time.
+    pub fn is_clean(&self) -> bool {
+        *self == FaultBatchStats::default()
+    }
+
+    /// Accumulate another batch's counters (the ingest layer folds every
+    /// micro-batch into one run-level tally).
+    pub fn merge(&mut self, other: &FaultBatchStats) {
+        self.panics += other.panics;
+        self.timeouts += other.timeouts;
+        self.poisons += other.poisons;
+        self.retries += other.retries;
+        self.recovered += other.recovered;
+        self.failed += other.failed;
+    }
+}
+
 /// Outcome of one batch execution.
 #[derive(Debug, Clone)]
 pub struct BatchReport {
     pub problems: usize,
     pub elapsed: Duration,
     /// Per-problem checksums in submission order (deterministic across
-    /// thread counts — the correctness witness the tests pin).
+    /// thread counts — the correctness witness the tests pin).  A problem
+    /// that exhausted its retry ladder holds NaN here and a typed error
+    /// in [`BatchReport::errors`].
     pub checksums: Vec<f64>,
     /// Per-problem chosen schedule in submission order (the trace the
     /// adaptive determinism tests pin).
@@ -127,6 +180,11 @@ pub struct BatchReport {
     pub candidates: Vec<ScheduleKind>,
     /// Tuner selection counters for this batch.
     pub tuner: TunerBatchStats,
+    /// Panic / timeout / poison / retry counters for this batch.
+    pub faults: FaultBatchStats,
+    /// Per-problem terminal errors in submission order (`None` = the
+    /// checksum is good; `Some` pairs with a NaN checksum slot).
+    pub errors: Vec<Option<ServeError>>,
     /// Pool counters; dynamic chunk steals and cursor fetches fold into
     /// `steals`/`fetches` here.
     pub pool: PoolStats,
@@ -186,8 +244,20 @@ impl ServeEngine {
     /// bit-identical to sequential execution at any thread count — (4)
     /// dynamic problems execute through real runtime chunk claiming
     /// (stealing deques or a shared cursor) and reduce through the same
-    /// canonical fixup, and (5) every problem's cost sample is fed back
-    /// to the tuner, again in submission order.
+    /// canonical fixup, and (5) every *clean* problem's cost sample is
+    /// fed back to the tuner, again in submission order.
+    ///
+    /// Every kernel invocation is panic-isolated: a panic, stall, or
+    /// poisoned (non-finite) checksum becomes a classified [`Failure`]
+    /// for its problem, the problem re-executes on the conservative
+    /// planned `ThreadMapped` fallback up to [`ServeConfig::max_retries`]
+    /// times, and a problem that exhausts the ladder reports a NaN
+    /// checksum plus a typed [`ServeError`] — one bad kernel never takes
+    /// down the batch.  With [`ServeConfig::deadline`] set, a watchdog
+    /// cancels dynamic problems at their budget (claimants observe the
+    /// flag at chunk-claim boundaries); planned problems rely on the
+    /// virtual stall classification instead.  Failed and retried
+    /// problems never feed the tuner.
     pub fn execute_batch(&self, problems: &[Problem]) -> BatchReport {
         let start = Instant::now();
         // The builder validated both knobs to >= 1; no defensive clamps.
@@ -291,10 +361,10 @@ impl ServeEngine {
         }
 
         enum TaskOut {
-            Sample(ExecSample),
+            Sample(Result<ExecSample, Failure>),
             Partials {
                 elapsed: f64,
-                parts: batch::BoxedPartials,
+                parts: Result<batch::BoxedPartials, Failure>,
             },
         }
         let (outs, mut pool) = pool::execute_weighted(
@@ -306,8 +376,13 @@ impl ServeEngine {
                     (problems[problem].atoms() / shard_counts[problem].max(1)).max(1) as u64
                 }
             },
+            // Panic isolation happens here, inside the task closures: a
+            // kernel that panics, stalls, or poisons its checksum becomes
+            // a classified `Failure` for its problem, never a dead pool
+            // worker (the pool's slot adoption below it is defense in
+            // depth, not the primary containment).
             |t| match t {
-                Task::Whole(i) => TaskOut::Sample(batch::execute(
+                Task::Whole(i) => TaskOut::Sample(batch::execute_caught(
                     &problems[*i],
                     schedules[*i],
                     &self.cache,
@@ -316,7 +391,7 @@ impl ServeEngine {
                 Task::Shard { problem, w0, w1 } => {
                     let desc = split[*problem].as_ref().expect("shard task has descriptor");
                     let t0 = Instant::now();
-                    let parts = batch::execute_shard(&problems[*problem], desc, *w0, *w1);
+                    let parts = batch::execute_shard_caught(&problems[*problem], desc, *w0, *w1);
                     TaskOut::Partials {
                         elapsed: t0.elapsed().as_secs_f64(),
                         parts,
@@ -327,30 +402,59 @@ impl ServeEngine {
 
         // Reassemble per-problem samples in submission order; shard
         // partials arrive in task order, which is ascending worker order.
+        // The first failure wins per problem (task order is deterministic,
+        // so the recorded failure kind is too); one failed shard fails its
+        // whole problem and the sibling partials are dropped.
         let mut samples: Vec<Option<ExecSample>> = (0..problems.len()).map(|_| None).collect();
+        let mut failures: Vec<Option<Failure>> = vec![None; problems.len()];
         let mut shard_parts: Vec<Vec<batch::BoxedPartials>> =
             (0..problems.len()).map(|_| Vec::new()).collect();
         let mut shard_elapsed = vec![0.0f64; problems.len()];
         for (task, out) in tasks.iter().zip(outs) {
             match (task, out) {
-                (Task::Whole(i), TaskOut::Sample(s)) => samples[*i] = Some(s),
+                (Task::Whole(i), TaskOut::Sample(Ok(s))) => samples[*i] = Some(s),
+                (Task::Whole(i), TaskOut::Sample(Err(f))) => {
+                    failures[*i].get_or_insert(f);
+                }
                 (Task::Shard { problem, .. }, TaskOut::Partials { elapsed, parts }) => {
-                    shard_elapsed[*problem] += elapsed;
-                    shard_parts[*problem].push(parts);
+                    match parts {
+                        Ok(parts) => {
+                            shard_elapsed[*problem] += elapsed;
+                            shard_parts[*problem].push(parts);
+                        }
+                        Err(f) => {
+                            failures[*problem].get_or_insert(f);
+                        }
+                    }
                 }
                 _ => unreachable!("task/output kinds always pair up"),
             }
         }
         for (i, p) in problems.iter().enumerate() {
             if let Some(desc) = &split[i] {
-                let checksum = batch::reduce_shards(p, std::mem::take(&mut shard_parts[i]));
-                let cost = match self.cfg.feedback {
-                    CostFeedback::Measured => shard_elapsed[i],
-                    CostFeedback::Proxy => {
-                        batch::proxy_cost_entry(p, schedules[i], &PlanEntry::Descriptor(*desc))
+                if failures[i].is_some() {
+                    // A sibling shard already failed: the surviving
+                    // partials are useless — the retry ladder re-runs the
+                    // whole problem on the planned fallback path.
+                    shard_parts[i].clear();
+                    continue;
+                }
+                match batch::reduce_shards_caught(p, std::mem::take(&mut shard_parts[i])) {
+                    Ok(checksum) => {
+                        let cost = match self.cfg.feedback {
+                            CostFeedback::Measured => shard_elapsed[i],
+                            CostFeedback::Proxy => batch::proxy_cost_entry(
+                                p,
+                                schedules[i],
+                                &PlanEntry::Descriptor(*desc),
+                            ),
+                        };
+                        samples[i] = Some(ExecSample { checksum, cost });
                     }
-                };
-                samples[i] = Some(ExecSample { checksum, cost });
+                    Err(f) => {
+                        failures[i] = Some(f);
+                    }
+                }
             }
         }
 
@@ -365,37 +469,156 @@ impl ServeEngine {
         for (i, p) in problems.iter().enumerate() {
             let Some(dd) = &dynamic_plans[i] else { continue };
             let t0 = Instant::now();
-            let (parts, dstats) =
-                dynamic::execute_claimed(dd, threads, |j| batch::execute_chunk(p, dd, j));
-            let checksum = batch::reduce_shards(p, parts);
-            let cost = match self.cfg.feedback {
-                // Core-time, not latency: the claimed path monopolizes
-                // its claimant threads while whole problems are timed on
-                // one contended pool thread, so scaling elapsed by the
-                // engaged claimants keeps the tuner's samples comparable
-                // across the two execution modes (the split path's
-                // summed shard times have the same unit).
-                CostFeedback::Measured => {
-                    t0.elapsed().as_secs_f64() * threads.min(dd.chunks()).max(1) as f64
+            // Cancellation guard: raised by the first failing chunk and
+            // by the deadline watchdog; every claimant observes it at its
+            // next chunk-claim boundary and stops, so a fault interrupts
+            // the problem instead of hanging or wasting the pool.
+            let cancel = Arc::new(AtomicBool::new(false));
+            let chunk_failure: Mutex<Option<Failure>> = Mutex::new(None);
+            let watchdog = self.cfg.deadline.map(|deadline| {
+                let (done_tx, done_rx) = mpsc::channel::<()>();
+                let flag = Arc::clone(&cancel);
+                let handle = std::thread::spawn(move || {
+                    if matches!(
+                        done_rx.recv_timeout(deadline),
+                        Err(mpsc::RecvTimeoutError::Timeout)
+                    ) {
+                        flag.store(true, Ordering::Relaxed);
+                    }
+                });
+                (done_tx, handle)
+            });
+            let out = dynamic::execute_claimed_guarded(dd, threads, &cancel, |j| {
+                match batch::execute_chunk_caught(p, dd, j) {
+                    Ok(parts) => Some(parts),
+                    Err(f) => {
+                        chunk_failure
+                            .lock()
+                            .unwrap_or_else(|e| e.into_inner())
+                            .get_or_insert(f);
+                        cancel.store(true, Ordering::Relaxed);
+                        None
+                    }
                 }
-                CostFeedback::Proxy => {
-                    batch::proxy_cost_entry(p, schedules[i], &PlanEntry::Dynamic(*dd))
+            });
+            if let Some((done_tx, handle)) = watchdog {
+                // Ok or not: a send failure just means the watchdog
+                // already fired and exited — join either way.
+                let _ = done_tx.send(());
+                let _ = handle.join();
+            }
+            match out {
+                Some((parts, dstats)) => {
+                    let parts: Vec<batch::BoxedPartials> = parts
+                        .into_iter()
+                        .map(|slot| slot.expect("uncancelled claim produced partials"))
+                        .collect();
+                    match batch::reduce_shards_caught(p, parts) {
+                        Ok(checksum) => {
+                            let cost = match self.cfg.feedback {
+                                // Core-time, not latency: the claimed path
+                                // monopolizes its claimant threads while
+                                // whole problems are timed on one contended
+                                // pool thread, so scaling elapsed by the
+                                // engaged claimants keeps the tuner's
+                                // samples comparable across the two
+                                // execution modes (the split path's summed
+                                // shard times have the same unit).
+                                CostFeedback::Measured => {
+                                    t0.elapsed().as_secs_f64()
+                                        * threads.min(dd.chunks()).max(1) as f64
+                                }
+                                CostFeedback::Proxy => batch::proxy_cost_entry(
+                                    p,
+                                    schedules[i],
+                                    &PlanEntry::Dynamic(*dd),
+                                ),
+                            };
+                            samples[i] = Some(ExecSample { checksum, cost });
+                            dynamic_problems += 1;
+                            dynamic_chunks += dd.chunks();
+                            pool.steals += dstats.steals;
+                            pool.fetches += dstats.fetches;
+                        }
+                        Err(f) => {
+                            failures[i] = Some(f);
+                        }
+                    }
                 }
-            };
-            samples[i] = Some(ExecSample { checksum, cost });
-            dynamic_problems += 1;
-            dynamic_chunks += dd.chunks();
-            pool.steals += dstats.steals;
-            pool.fetches += dstats.fetches;
+                None => {
+                    // Interrupted: a chunk failed, or the watchdog raised
+                    // the flag at the deadline (classified as a stall of
+                    // the full budget).
+                    let first = chunk_failure.into_inner().unwrap_or_else(|e| e.into_inner());
+                    failures[i] = Some(first.unwrap_or(Failure::Stalled(
+                        self.cfg.deadline.map(|d| d.as_secs_f64()).unwrap_or(0.0),
+                    )));
+                }
+            }
+        }
+
+        // The retry ladder: every failed problem re-executes whole on the
+        // conservative planned path — `ThreadMapped`, single shard, no
+        // claiming machinery — up to `max_retries` times.  Injected chaos
+        // faults fire once per kernel instance, so a retried problem runs
+        // clean and (for schedules whose checksums match `ThreadMapped`
+        // bit-for-bit — all but `MergePath`) reduces to the exact fault-free
+        // result.  A problem that exhausts the ladder reports a NaN
+        // checksum and a typed error instead of poisoning the batch.
+        let mut faults = FaultBatchStats::default();
+        let mut errors: Vec<Option<ServeError>> = vec![None; problems.len()];
+        for (i, p) in problems.iter().enumerate() {
+            let Some(first) = failures[i] else { continue };
+            match first {
+                Failure::Panicked => faults.panics += 1,
+                Failure::Stalled(_) => faults.timeouts += 1,
+                Failure::Poisoned => faults.poisons += 1,
+            }
+            let mut outcome: Result<ExecSample, Failure> = Err(first);
+            for _ in 0..self.cfg.max_retries {
+                faults.retries += 1;
+                outcome =
+                    batch::execute_caught(p, ScheduleKind::ThreadMapped, &self.cache, &self.cfg);
+                if outcome.is_ok() {
+                    break;
+                }
+            }
+            match outcome {
+                Ok(sample) => {
+                    faults.recovered += 1;
+                    samples[i] = Some(sample);
+                }
+                Err(last) => {
+                    faults.failed += 1;
+                    let retries = self.cfg.max_retries;
+                    errors[i] = Some(match last {
+                        Failure::Panicked => ServeError::Panicked { retries },
+                        Failure::Stalled(_) => ServeError::TimedOut { retries },
+                        Failure::Poisoned => ServeError::Poisoned { retries },
+                    });
+                    samples[i] = Some(ExecSample {
+                        checksum: f64::NAN,
+                        cost: f64::NAN,
+                    });
+                }
+            }
         }
         let samples: Vec<ExecSample> = samples
             .into_iter()
-            .map(|s| s.expect("every problem executed"))
+            .map(|s| s.expect("every problem executed, recovered, or failed typed"))
             .collect();
 
+        // Feedback hygiene: only clean first-try executions feed the
+        // tuner.  A retried problem ran on the fallback schedule (its
+        // sample says nothing about the selected one) and a failed
+        // problem's cost is NaN — recording either would corrupt the
+        // EWMA history the selector exploits.
         if let Some(tuner) = &self.tuner {
-            for ((p, &kind), sample) in problems.iter().zip(&schedules).zip(&samples) {
-                tuner.record(p.fingerprint(), kind, workers, sample.cost);
+            for (i, (p, &kind)) in problems.iter().zip(&schedules).enumerate() {
+                if failures[i].is_some() {
+                    continue;
+                }
+                tuner.record(p.fingerprint(), kind, workers, samples[i].cost);
             }
         }
 
@@ -414,6 +637,8 @@ impl ServeEngine {
                 .map(|t| t.candidates().to_vec())
                 .unwrap_or_default(),
             tuner: stats,
+            faults,
+            errors,
             pool,
             cache: self.cache.stats(),
         }
@@ -570,6 +795,15 @@ mod tests {
         let second = engine.execute_batch(&mix);
         assert_eq!(second.cache.hits, 2);
         assert_eq!(first.checksums, second.checksums);
+    }
+
+    #[test]
+    fn clean_batches_report_zero_faults() {
+        let engine = ServeEngine::new(ServeConfig::builder().threads(2).build().unwrap());
+        let report = engine.execute_batch(&tiny_mix());
+        assert!(report.faults.is_clean(), "faults: {:?}", report.faults);
+        assert!(report.errors.iter().all(Option::is_none));
+        assert!(report.checksums.iter().all(|c| c.is_finite()));
     }
 
     #[test]

@@ -135,8 +135,19 @@ impl PlanCache {
     }
 
     /// Fetch the entry for `key`, computing and inserting it on a miss.
+    ///
+    /// Every lock here recovers from poisoning: plans are computed
+    /// *outside* the locks, so a panicking worker can never leave the map
+    /// or the eviction order half-updated — the poison flag carries no
+    /// information, and the serving path must survive isolated kernel
+    /// panics on sibling threads.
     pub fn get_or_compute(&self, key: PlanKey, compute: impl FnOnce() -> PlanEntry) -> PlanEntry {
-        if let Some(plan) = self.map.read().unwrap().get(&key) {
+        if let Some(plan) = self
+            .map
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(&key)
+        {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return plan.clone();
         }
@@ -144,13 +155,13 @@ impl PlanCache {
         // duplicate (see module docs) is cheaper than serializing planners.
         let plan = compute();
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let mut map = self.map.write().unwrap();
+        let mut map = self.map.write().unwrap_or_else(|e| e.into_inner());
         if let Some(existing) = map.get(&key) {
             // A racing worker inserted first; adopt its (identical) plan.
             return existing.clone();
         }
         map.insert(key, plan.clone());
-        let mut order = self.order.lock().unwrap();
+        let mut order = self.order.lock().unwrap_or_else(|e| e.into_inner());
         order.push_back(key);
         while map.len() > self.capacity {
             match order.pop_front() {
@@ -167,7 +178,7 @@ impl PlanCache {
 
     /// Cached plan count.
     pub fn len(&self) -> usize {
-        self.map.read().unwrap().len()
+        self.map.read().unwrap_or_else(|e| e.into_inner()).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -176,9 +187,12 @@ impl PlanCache {
 
     /// Drop every cached plan (counters are kept).
     pub fn clear(&self) {
-        let mut map = self.map.write().unwrap();
+        let mut map = self.map.write().unwrap_or_else(|e| e.into_inner());
         map.clear();
-        self.order.lock().unwrap().clear();
+        self.order
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clear();
     }
 
     pub fn stats(&self) -> CacheStats {

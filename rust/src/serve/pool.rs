@@ -138,8 +138,11 @@ where
     let pops = AtomicU64::new(0);
     let steals = AtomicU64::new(0);
 
-    let mut slots: Vec<Option<T>> = Vec::with_capacity(jobs.len());
-    slots.resize_with(jobs.len(), || None);
+    // Results go straight into per-job slots (disjoint, so the per-slot
+    // locks are uncontended) rather than a per-worker buffer: a worker
+    // that dies mid-batch then loses only its in-flight job, never work
+    // it already finished.
+    let slots: Vec<Mutex<Option<T>>> = (0..jobs.len()).map(|_| Mutex::new(None)).collect();
 
     thread::scope(|scope| {
         let deques = &deques;
@@ -147,43 +150,50 @@ where
         let run = &run;
         let pops = &pops;
         let steals = &steals;
+        let slots = &slots;
         let handles: Vec<_> = (0..threads)
             .map(|w| {
-                scope.spawn(move || {
-                    let mut done: Vec<(usize, T)> = Vec::new();
-                    let mut my_pops = 0u64;
-                    let mut my_steals = 0u64;
-                    loop {
-                        if let Some(i) = pop_own(deques, lens, w) {
-                            my_pops += 1;
-                            done.push((i, run(&jobs[i])));
-                        } else if let Some(i) = steal(deques, lens, w) {
-                            my_steals += 1;
-                            done.push((i, run(&jobs[i])));
-                        } else if lens.iter().all(|l| l.load(Ordering::Acquire) == 0) {
-                            // Every job has been removed from every deque;
-                            // nothing spawns new work, so we are done.
-                            break;
-                        } else {
-                            thread::yield_now();
-                        }
+                scope.spawn(move || loop {
+                    if let Some(i) = pop_own(deques, lens, w) {
+                        pops.fetch_add(1, Ordering::Relaxed);
+                        *lock_clean(&slots[i]) = Some(run(&jobs[i]));
+                    } else if let Some(i) = steal(deques, lens, w) {
+                        steals.fetch_add(1, Ordering::Relaxed);
+                        *lock_clean(&slots[i]) = Some(run(&jobs[i]));
+                    } else if lens.iter().all(|l| l.load(Ordering::Acquire) == 0) {
+                        // Every job has been removed from every deque;
+                        // nothing spawns new work, so we are done.
+                        break;
+                    } else {
+                        thread::yield_now();
                     }
-                    pops.fetch_add(my_pops, Ordering::Relaxed);
-                    steals.fetch_add(my_steals, Ordering::Relaxed);
-                    done
                 })
             })
             .collect();
+        // Panic isolation: a dead worker must not take down the batch.
+        // Its deque is drained by the survivors through the normal
+        // stealing path (the length mirrors keep them spinning until
+        // every job is claimed), so joining ignores the panic here and
+        // only the dead worker's in-flight job can be missing — the
+        // sweep below adopts it on the caller's thread.  (The engine's
+        // task closures are themselves panic-isolated, so in serving
+        // this is defense in depth for non-engine users of the pool.)
         for handle in handles {
-            for (i, value) in handle.join().expect("pool worker panicked") {
-                slots[i] = Some(value);
-            }
+            let _ = handle.join();
         }
     });
 
     let results = slots
         .into_iter()
-        .map(|slot| slot.expect("job left unexecuted"))
+        .enumerate()
+        .map(|(i, slot)| {
+            let slot = slot.into_inner().unwrap_or_else(|e| e.into_inner());
+            match slot {
+                Some(value) => value,
+                // Adopted from a worker that died mid-job: re-run inline.
+                None => run(&jobs[i]),
+            }
+        })
         .collect();
     let stats = PoolStats {
         pops: pops.load(Ordering::Relaxed),
@@ -194,12 +204,21 @@ where
     (results, stats)
 }
 
+/// Lock with poison recovery: pool state (deques, result slots) only
+/// mutates inside short push/pop critical sections that are never left
+/// half-done, so a guard poisoned by a dying worker is still
+/// structurally sound — recovering it is what keeps one panicked job
+/// from wedging every subsequent batch.
+fn lock_clean<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 /// Pop the front of the worker's own deque.
 fn pop_own(deques: &[Mutex<VecDeque<usize>>], lens: &[AtomicUsize], w: usize) -> Option<usize> {
     if lens[w].load(Ordering::Acquire) == 0 {
         return None;
     }
-    let mut deque = deques[w].lock().unwrap();
+    let mut deque = lock_clean(&deques[w]);
     let job = deque.pop_front();
     if job.is_some() {
         lens[w].fetch_sub(1, Ordering::Release);
@@ -217,7 +236,7 @@ fn steal(deques: &[Mutex<VecDeque<usize>>], lens: &[AtomicUsize], w: usize) -> O
             .filter(|&(_, len)| len > 0)
             .max_by_key(|&(_, len)| len);
         let (v, _) = victim?;
-        let mut deque = deques[v].lock().unwrap();
+        let mut deque = lock_clean(&deques[v]);
         if let Some(job) = deque.pop_back() {
             lens[v].fetch_sub(1, Ordering::Release);
             return Some(job);
@@ -298,6 +317,26 @@ mod tests {
         let (got, stats) = execute(1, &jobs, |&j| j + 10);
         assert_eq!(got, vec![11, 12, 13]);
         assert_eq!((stats.pops, stats.steals), (3, 0));
+    }
+
+    #[test]
+    fn worker_death_loses_no_jobs() {
+        // One job kills its worker on first execution (a latch, so the
+        // caller's adoption re-run succeeds).  The batch must still
+        // return every result in order: survivors drain the dead
+        // worker's deque by stealing, and the in-flight job is adopted.
+        use std::sync::atomic::AtomicBool;
+        let first = AtomicBool::new(true);
+        let jobs: Vec<u64> = (0..32).collect();
+        let (got, stats) = execute(4, &jobs, |&j| {
+            if j == 7 && first.swap(false, Ordering::SeqCst) {
+                panic!("injected worker death");
+            }
+            j + 1
+        });
+        let want: Vec<u64> = jobs.iter().map(|&j| j + 1).collect();
+        assert_eq!(got, want);
+        assert_eq!(stats.pops + stats.steals, jobs.len() as u64);
     }
 
     #[test]

@@ -178,7 +178,10 @@ impl ScheduleTuner {
         if let Some(kind) = least_sampled_of(&estimates, self.min_samples) {
             return (kind, Decision::Explore);
         }
-        let mut rng = self.rng.lock().unwrap();
+        // Poison-recovering lock: the Rng holds no invariant a panicking
+        // holder could break mid-update (selection must keep working after
+        // an isolated kernel panic elsewhere in the engine).
+        let mut rng = self.rng.lock().unwrap_or_else(|e| e.into_inner());
         if rng.f64() < self.epsilon {
             let kind = self.candidates[rng.below(self.candidates.len())];
             return (kind, Decision::Explore);
@@ -323,6 +326,25 @@ mod tests {
         let dup = ScheduleTuner::new(0.1, 1, 3)
             .with_candidates(&[ScheduleKind::MergePath, ScheduleKind::MergePath]);
         assert_eq!(dup.candidates(), &[ScheduleKind::MergePath]);
+    }
+
+    #[test]
+    fn failed_samples_never_shift_the_winner() {
+        let t = warmed_tuner(&all_candidates_cost(ScheduleKind::ThreadMapped));
+        assert_eq!(t.best(FP, W), Some(ScheduleKind::ThreadMapped));
+        let key = PerfKey {
+            fingerprint: FP,
+            schedule: ScheduleKind::ThreadMapped,
+            workers: W,
+        };
+        let samples_before = t.history().samples(&key);
+        // A failed or timed-out execution carries a NaN cost; the engine
+        // skips recording it, and even if one leaked through, the history
+        // rejects non-finite samples — the learned best must not move.
+        t.record(FP, ScheduleKind::ThreadMapped, W, f64::NAN);
+        t.record(FP, ScheduleKind::ThreadMapped, W, f64::INFINITY);
+        assert_eq!(t.history().samples(&key), samples_before);
+        assert_eq!(t.best(FP, W), Some(ScheduleKind::ThreadMapped));
     }
 
     #[test]

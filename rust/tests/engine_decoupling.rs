@@ -60,7 +60,7 @@ fn engine_has_no_per_kind_execution_arms() {
 /// Everything that configures an engine, outside `serve/config.rs` (the
 /// one module allowed to name the struct's fields): the serve sources,
 /// the CLI binary, the bench harness, and every engine-driving test.
-const BUILDER_ONLY_SOURCES: [(&str, &str); 14] = [
+const BUILDER_ONLY_SOURCES: [(&str, &str); 15] = [
     ("serve/mod.rs", include_str!("../src/serve/mod.rs")),
     ("serve/batch.rs", include_str!("../src/serve/batch.rs")),
     ("serve/ingest.rs", include_str!("../src/serve/ingest.rs")),
@@ -78,6 +78,7 @@ const BUILDER_ONLY_SOURCES: [(&str, &str); 14] = [
     ("tests/dynamic_schedules.rs", include_str!("dynamic_schedules.rs")),
     ("tests/serve_plan_cache.rs", include_str!("serve_plan_cache.rs")),
     ("tests/ingest.rs", include_str!("ingest.rs")),
+    ("tests/fault_tolerance.rs", include_str!("fault_tolerance.rs")),
 ];
 
 #[test]

@@ -1,0 +1,418 @@
+//! Fault-tolerance acceptance: injected panics, stalls, and poisoned
+//! checksums are isolated per problem, recovered through the planned
+//! fallback retry bit-identically, counted deterministically at any
+//! thread count, and surfaced as typed errors when the retry ladder is
+//! exhausted — while overloaded ingest queues shed deterministically and
+//! graceful drains leave no ticket unresolved.  Every engine run is
+//! wrapped in a watchdog so a hang fails the test instead of the suite.
+
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use gpulb::balance::adaptive::PerfKey;
+use gpulb::exec::chaos::{ChaosKernel, FaultPlan, DEFAULT_STALL_VIRT_SECS};
+use gpulb::prelude::*;
+use gpulb::serve::ingest::{IngestServer, Ticket};
+use gpulb::sparse::gen;
+
+/// Run `f` on a watchdog thread: a fault that hangs the engine fails the
+/// test after the timeout instead of wedging the whole suite.
+fn with_timeout<T: Send + 'static>(name: &str, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(Duration::from_secs(120)) {
+        Ok(value) => {
+            let _ = handle.join();
+            value
+        }
+        Err(_) => panic!("{name}: timed out — a fault hung the engine"),
+    }
+}
+
+/// A small mixed-shape SpMV set; big enough (with `split_min_atoms(1)`)
+/// to exercise the split and dynamic claimed paths.
+fn chaos_mix() -> Vec<Problem> {
+    vec![
+        Problem::spmv(Arc::new(gen::uniform(64, 64, 4, 7))),
+        Problem::spmv(Arc::new(gen::power_law(80, 80, 40, 1.5, 2))),
+        Problem::spmv(Arc::new(gen::banded(96, 3, 5))),
+    ]
+}
+
+/// Wrap problem `target` of the mix with `fault`; the rest stay clean.
+fn wrap_one(mix: &[Problem], target: usize, fault: FaultKind) -> Vec<Problem> {
+    mix.iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let fault = (i == target).then_some(fault);
+            Problem::from_kernel(ChaosKernel::wrap(p.kernel().clone(), fault))
+        })
+        .collect()
+}
+
+fn engine(kind: ScheduleKind, threads: usize) -> Engine {
+    Engine::new(
+        ServeConfig::builder()
+            .threads(threads)
+            .schedule(SchedulePolicy::Fixed(kind))
+            .split_min_atoms(1)
+            .build()
+            .unwrap(),
+    )
+}
+
+/// The bit-identity schedules: every dynamic kind reduces identically to
+/// planned `ThreadMapped` (the kernel contract), so the fallback retry
+/// reproduces the fault-free checksum exactly.  `MergePath` is excluded
+/// on purpose — its fixup is only ~1e-9-equal to the fallback.
+const MATRIX_SCHEDULES: [ScheduleKind; 3] = [
+    ScheduleKind::ThreadMapped,
+    ScheduleKind::WorkStealing { chunk: 8 },
+    ScheduleKind::ChunkedFetch { chunk: 8 },
+];
+
+#[test]
+fn injected_faults_recover_bit_identically_across_the_matrix() {
+    with_timeout("chaos matrix", || {
+        let mix = chaos_mix();
+        let reference = engine(ScheduleKind::ThreadMapped, 1)
+            .execute_batch(&mix)
+            .checksums;
+        let faults = [
+            FaultKind::Panic { worker: 3 },
+            FaultKind::Stall {
+                virt_secs: DEFAULT_STALL_VIRT_SECS,
+            },
+            FaultKind::Poison,
+        ];
+        for kind in MATRIX_SCHEDULES {
+            for threads in [1usize, 2, 4, 8] {
+                for fault in faults {
+                    let chaotic = wrap_one(&mix, 1, fault);
+                    let report = engine(kind, threads).execute_batch(&chaotic);
+                    let tag = format!("{kind:?} x{threads} {fault:?}");
+                    // One fault, classified by kind, recovered in one
+                    // fallback retry — deterministically, at any threads.
+                    let f = report.faults;
+                    assert_eq!(f.faulted(), 1, "{tag}: {f:?}");
+                    match fault {
+                        FaultKind::Panic { .. } => assert_eq!(f.panics, 1, "{tag}"),
+                        FaultKind::Stall { .. } => assert_eq!(f.timeouts, 1, "{tag}"),
+                        FaultKind::Poison => assert_eq!(f.poisons, 1, "{tag}"),
+                    }
+                    assert_eq!((f.retries, f.recovered, f.failed), (1, 1, 0), "{tag}");
+                    assert!(report.errors.iter().all(Option::is_none), "{tag}");
+                    // The recovery contract: bit-identical to fault-free.
+                    for (i, (got, want)) in
+                        report.checksums.iter().zip(&reference).enumerate()
+                    {
+                        assert_eq!(
+                            got.to_bits(),
+                            want.to_bits(),
+                            "{tag}: problem {i} diverged after recovery"
+                        );
+                    }
+                }
+            }
+        }
+    })
+}
+
+#[test]
+fn fault_plan_counters_are_deterministic_across_threads_and_reruns() {
+    with_timeout("fault plan determinism", || {
+        // A wider mix so a 0.5 rate faults several problems.
+        let mix: Vec<Problem> = (0..4).flat_map(|_| chaos_mix()).collect();
+        let plan = FaultPlan::new(0xC4A0_5EED, 0.5);
+        let expected_faults = (0..mix.len())
+            .filter(|&i| plan.fault_for(i).is_some())
+            .count() as u64;
+        assert!(expected_faults > 0, "seed draws no faults — pick another");
+        let reference = engine(ScheduleKind::WorkStealing { chunk: 8 }, 1)
+            .execute_batch(&mix)
+            .checksums;
+        let mut seen: Option<FaultBatchStats> = None;
+        for threads in [1usize, 2, 4, 8, 2] {
+            // Fresh wrappers per run: the one-shot latch must re-fire
+            // identically on a rerun (last iteration repeats threads=2).
+            let chaotic: Vec<Problem> = mix
+                .iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    Problem::from_kernel(ChaosKernel::wrap(p.kernel().clone(), plan.fault_for(i)))
+                })
+                .collect();
+            let report = engine(ScheduleKind::WorkStealing { chunk: 8 }, threads)
+                .execute_batch(&chaotic);
+            assert_eq!(report.faults.faulted(), expected_faults, "x{threads}");
+            assert_eq!(report.faults.recovered, expected_faults, "x{threads}");
+            assert_eq!(report.faults.failed, 0, "x{threads}");
+            match &seen {
+                None => seen = Some(report.faults),
+                Some(first) => assert_eq!(
+                    *first, report.faults,
+                    "counters diverged at {threads} threads"
+                ),
+            }
+            for (i, (got, want)) in report.checksums.iter().zip(&reference).enumerate() {
+                assert_eq!(got.to_bits(), want.to_bits(), "problem {i} x{threads}");
+            }
+        }
+    })
+}
+
+#[test]
+fn exhausted_retry_ladder_reports_typed_errors_not_poison() {
+    with_timeout("retry exhaustion", || {
+        let mix = chaos_mix();
+        // Nested wrappers fail twice: the first execution and the single
+        // fallback retry — the ladder exhausts.
+        let chaotic: Vec<Problem> = mix
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let kernel = if i == 0 {
+                    ChaosKernel::wrap(
+                        ChaosKernel::wrap(p.kernel().clone(), Some(FaultKind::Poison)),
+                        Some(FaultKind::Poison),
+                    )
+                } else {
+                    p.kernel().clone()
+                };
+                Problem::from_kernel(kernel)
+            })
+            .collect();
+        let report = engine(ScheduleKind::ThreadMapped, 4).execute_batch(&chaotic);
+        assert_eq!(
+            report.errors[0],
+            Some(ServeError::Poisoned { retries: 1 }),
+            "faults: {:?}",
+            report.faults
+        );
+        assert!(report.checksums[0].is_nan());
+        let f = report.faults;
+        assert_eq!((f.poisons, f.retries, f.recovered, f.failed), (1, 1, 0, 1));
+        // The healthy problems are untouched.
+        assert!(report.errors[1..].iter().all(Option::is_none));
+        assert!(report.checksums[1..].iter().all(|c| c.is_finite()));
+        // The typed error formats with its retry count.
+        let shown = format!("{}", report.errors[0].unwrap());
+        assert!(shown.contains('1'), "{shown}");
+    })
+}
+
+#[test]
+fn failed_problems_feed_no_tuner_samples() {
+    with_timeout("tuner hygiene", || {
+        let mix = chaos_mix();
+        // Problem 0 always times out (nested stall wrappers beat the
+        // single retry); the others run clean.
+        let chaotic: Vec<Problem> = mix
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let stall = FaultKind::Stall {
+                    virt_secs: DEFAULT_STALL_VIRT_SECS,
+                };
+                let kernel = if i == 0 {
+                    ChaosKernel::wrap(
+                        ChaosKernel::wrap(p.kernel().clone(), Some(stall)),
+                        Some(stall),
+                    )
+                } else {
+                    p.kernel().clone()
+                };
+                Problem::from_kernel(kernel)
+            })
+            .collect();
+        let cfg = ServeConfig::builder()
+            .threads(2)
+            .schedule(SchedulePolicy::Adaptive {
+                epsilon: 0.0,
+                min_samples: 1,
+                seed: 11,
+            })
+            .feedback(CostFeedback::Proxy)
+            .build()
+            .unwrap();
+        let workers = cfg.plan_workers;
+        let engine = Engine::new(cfg);
+        let report = engine.execute_batch(&chaotic);
+        assert_eq!(report.faults.failed, 1);
+        assert_eq!(report.errors[0], Some(ServeError::TimedOut { retries: 1 }));
+        let tuner = engine.tuner().expect("adaptive policy builds a tuner");
+        // The failed problem recorded nothing — a synthetic timeout can
+        // never shift the learned best for its fingerprint.
+        let fp = chaotic[0].fingerprint();
+        for &kind in tuner.candidates() {
+            assert_eq!(
+                tuner.history().samples(&PerfKey {
+                    fingerprint: fp,
+                    schedule: kind,
+                    workers,
+                }),
+                0,
+                "{kind:?} got a sample from a failed problem"
+            );
+        }
+        assert_eq!(tuner.best(fp, workers), None);
+        // The clean problems did feed back.
+        let clean_fp = chaotic[1].fingerprint();
+        let clean_samples: u32 = tuner
+            .candidates()
+            .iter()
+            .map(|&kind| {
+                tuner.history().samples(&PerfKey {
+                    fingerprint: clean_fp,
+                    schedule: kind,
+                    workers,
+                })
+            })
+            .sum();
+        assert!(clean_samples > 0, "clean problems must keep feeding back");
+    })
+}
+
+#[test]
+fn overloaded_ingest_sheds_deterministically_and_accounts_every_submission() {
+    with_timeout("shed accounting", || {
+        let mix = chaos_mix();
+        let direct = engine(ScheduleKind::ThreadMapped, 2)
+            .execute_batch(&mix)
+            .checksums;
+        let server = IngestServer::start(
+            Arc::new(engine(ScheduleKind::ThreadMapped, 2)),
+            IngestConfig::builder()
+                .max_batch(4)
+                .max_wait(Duration::from_millis(2))
+                .queue_capacity(2)
+                .build()
+                .unwrap(),
+        );
+        let handle = server.handle();
+        let submitted = 30usize;
+        let tickets: Vec<_> = (0..submitted)
+            .map(|i| {
+                let p = mix[i % mix.len()].clone();
+                (i, handle.submit(p, IngestClass::Bulk).unwrap())
+            })
+            .collect();
+        drop(handle);
+        let mut ok = 0usize;
+        let mut shed = 0usize;
+        for (i, ticket) in tickets {
+            match ticket.wait() {
+                Ok(completion) => {
+                    ok += 1;
+                    assert_eq!(
+                        completion.checksum.to_bits(),
+                        direct[i % mix.len()].to_bits(),
+                        "request {i} diverged through the front-end"
+                    );
+                }
+                Err(ServeError::Shed { class }) => {
+                    shed += 1;
+                    assert_eq!(class, IngestClass::Bulk);
+                }
+                Err(other) => panic!("request {i}: unexpected {other}"),
+            }
+        }
+        let report = server.finish().unwrap();
+        // Every submission is accounted exactly once: served or shed.
+        assert_eq!(ok + shed, submitted);
+        assert_eq!(report.requests, ok);
+        assert_eq!(report.shed_total(), shed as u64);
+        // Bulk's shed column carries all of it (Bulk-only traffic).
+        assert_eq!(report.shed, [0, 0, shed as u64]);
+        assert!(report.faults.is_clean());
+    })
+}
+
+#[test]
+fn drain_flushes_the_queue_and_resolves_every_ticket() {
+    with_timeout("graceful drain", || {
+        let mix = chaos_mix();
+        let server = IngestServer::start(
+            Arc::new(engine(ScheduleKind::ThreadMapped, 2)),
+            IngestConfig::builder()
+                .max_batch(4)
+                .max_wait(Duration::from_millis(2))
+                .build()
+                .unwrap(),
+        );
+        let handle = server.handle();
+        let tickets: Vec<_> = (0..12)
+            .map(|i| handle.submit(mix[i % mix.len()].clone(), IngestClass::Standard).unwrap())
+            .collect();
+        // Drain with the handle still alive: admission closes, queued
+        // work flushes, and every outstanding ticket resolves.
+        let report = server.drain().unwrap();
+        assert_eq!(report.requests, 12);
+        for (i, ticket) in tickets.into_iter().enumerate() {
+            let completion = ticket.wait();
+            assert!(completion.is_ok(), "ticket {i}: {completion:?}");
+        }
+        // Submissions after the drain resolve Closed instead of hanging.
+        let late = handle
+            .submit(mix[0].clone(), IngestClass::Interactive)
+            .unwrap();
+        assert_eq!(late.wait().unwrap_err(), ServeError::Closed);
+        assert!(report.records.iter().all(|r| r.checksum.is_finite()));
+    })
+}
+
+#[test]
+fn chaos_through_the_ingest_front_end_resolves_every_ticket_typed() {
+    with_timeout("ingest chaos", || {
+        let mix = chaos_mix();
+        // Problem 0: recovers after one retry.  Problem 1: exhausts the
+        // ladder and must surface its typed error on the ticket.
+        let chaotic: Vec<Problem> = mix
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let kernel = match i {
+                    0 => ChaosKernel::wrap(
+                        p.kernel().clone(),
+                        Some(FaultKind::Panic { worker: 0 }),
+                    ),
+                    1 => ChaosKernel::wrap(
+                        ChaosKernel::wrap(p.kernel().clone(), Some(FaultKind::Poison)),
+                        Some(FaultKind::Poison),
+                    ),
+                    _ => p.kernel().clone(),
+                };
+                Problem::from_kernel(kernel)
+            })
+            .collect();
+        let server = IngestServer::start(
+            Arc::new(engine(ScheduleKind::ThreadMapped, 2)),
+            IngestConfig::builder()
+                .max_batch(4)
+                .max_wait(Duration::from_millis(2))
+                .build()
+                .unwrap(),
+        );
+        let handle = server.handle();
+        let tickets: Vec<_> = chaotic
+            .iter()
+            .map(|p| handle.submit(p.clone(), IngestClass::Standard).unwrap())
+            .collect();
+        drop(handle);
+        let verdicts: Vec<_> = tickets.into_iter().map(Ticket::wait).collect();
+        assert!(verdicts[0].is_ok(), "{:?}", verdicts[0]);
+        assert_eq!(
+            verdicts[1].unwrap_err(),
+            ServeError::Poisoned { retries: 1 }
+        );
+        assert!(verdicts[2].is_ok(), "{:?}", verdicts[2]);
+        let report = server.finish().unwrap();
+        assert_eq!(report.requests, 3);
+        assert_eq!(report.faults.panics, 1);
+        assert_eq!(report.faults.poisons, 1);
+        assert_eq!(report.faults.failed, 1);
+        assert_eq!(report.faults.recovered, 1);
+    })
+}
