@@ -43,13 +43,39 @@ pub const CANDIDATES: [ScheduleKind; 6] = [
     },
 ];
 
+/// The device-class dimension of a [`PerfKey`] for samples measured on
+/// the serving host itself (single-engine serving, where no simulated
+/// device profile is in play).
+pub const HOST_DEVICE_CLASS: u64 = 0;
+
+/// Stable tag for a simulated device class (FNV-1a over the class key,
+/// e.g. `"a100"`), remapped away from [`HOST_DEVICE_CLASS`] so a cluster
+/// pool can never alias the host dimension.
+pub fn device_class_tag(class: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in class.bytes() {
+        h = (h ^ u64::from(b)).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    if h == HOST_DEVICE_CLASS {
+        1
+    } else {
+        h
+    }
+}
+
 /// Everything a measured cost depends on (mirrors
-/// [`crate::serve::PlanKey`]).
+/// [`crate::serve::PlanKey`], plus the device-class dimension: the same
+/// fingerprint tunes independently per device class, because the best
+/// schedule on a wide fast device need not be the best on a narrow slow
+/// one).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct PerfKey {
     pub fingerprint: u64,
     pub schedule: ScheduleKind,
     pub workers: usize,
+    /// Device-class tag ([`HOST_DEVICE_CLASS`] for the host, or a
+    /// [`device_class_tag`] for a simulated cluster device class).
+    pub device: u64,
 }
 
 /// EWMA cost estimate for one key.
@@ -87,6 +113,7 @@ impl PerfHistory {
         let mut h = key.fingerprint ^ 0x9e37_79b9_7f4a_7c15;
         h = h.wrapping_mul(0x100_0000_01b3) ^ key.workers as u64;
         h = h.wrapping_mul(0x100_0000_01b3) ^ schedule_tag(key.schedule);
+        h = h.wrapping_mul(0x100_0000_01b3) ^ key.device;
         &self.stripes[(h % self.stripes.len() as u64) as usize]
     }
 
@@ -118,12 +145,24 @@ impl PerfHistory {
         self.get(key).map(|e| e.samples).unwrap_or(0)
     }
 
-    /// One estimate per candidate for a (fingerprint, workers) pair — the
-    /// selector's working set, fetched in a single pass.  The candidate
-    /// set is the caller's (a tuner's configured set, or [`CANDIDATES`]).
+    /// One estimate per candidate for a (fingerprint, workers) pair on
+    /// the host device class — the selector's working set, fetched in a
+    /// single pass.  The candidate set is the caller's (a tuner's
+    /// configured set, or [`CANDIDATES`]).
     pub fn snapshot(
         &self,
         candidates: &[ScheduleKind],
+        fingerprint: u64,
+        workers: usize,
+    ) -> CandidateSnapshot {
+        self.snapshot_on(candidates, HOST_DEVICE_CLASS, fingerprint, workers)
+    }
+
+    /// [`PerfHistory::snapshot`] for an explicit device class.
+    pub fn snapshot_on(
+        &self,
+        candidates: &[ScheduleKind],
+        device: u64,
         fingerprint: u64,
         workers: usize,
     ) -> CandidateSnapshot {
@@ -134,6 +173,7 @@ impl PerfHistory {
                     fingerprint,
                     schedule: kind,
                     workers,
+                    device,
                 };
                 (kind, self.get(&key))
             })
@@ -141,7 +181,8 @@ impl PerfHistory {
     }
 
     /// The candidate with the lowest EWMA cost among those with at least
-    /// `min_samples` samples (ties keep the earlier candidate entry).
+    /// `min_samples` samples (ties keep the earlier candidate entry), on
+    /// the host device class.
     pub fn best(
         &self,
         candidates: &[ScheduleKind],
@@ -316,6 +357,7 @@ mod tests {
             fingerprint: fp,
             schedule: kind,
             workers: 8,
+            device: HOST_DEVICE_CLASS,
         }
     }
 
@@ -377,6 +419,34 @@ mod tests {
             h.record(key(3, kind), 5.0);
         }
         assert_eq!(least_sampled_of(&h.snapshot(&CANDIDATES, 3, 8), 2), None);
+    }
+
+    #[test]
+    fn device_classes_keep_separate_histories() {
+        let h = PerfHistory::new(4, 1.0);
+        let (a, v) = (device_class_tag("a100"), device_class_tag("v100"));
+        assert_ne!(a, HOST_DEVICE_CLASS);
+        assert_ne!(v, HOST_DEVICE_CLASS);
+        assert_ne!(a, v);
+        let mk = |device| PerfKey {
+            fingerprint: 9,
+            schedule: ScheduleKind::MergePath,
+            workers: 8,
+            device,
+        };
+        h.record(mk(a), 10.0);
+        h.record(mk(v), 20.0);
+        h.record(mk(HOST_DEVICE_CLASS), 30.0);
+        assert_eq!(h.get(&mk(a)).unwrap().value, 10.0);
+        assert_eq!(h.get(&mk(v)).unwrap().value, 20.0);
+        assert_eq!(h.get(&mk(HOST_DEVICE_CLASS)).unwrap().value, 30.0);
+        assert_eq!(h.len(), 3);
+        // Per-device snapshots see only their own dimension.
+        assert_eq!(
+            best_of(&h.snapshot_on(&CANDIDATES, a, 9, 8), 1),
+            Some(ScheduleKind::MergePath)
+        );
+        assert_eq!(best_of(&h.snapshot_on(&CANDIDATES, 77, 9, 8), 1), None);
     }
 
     #[test]

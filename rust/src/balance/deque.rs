@@ -1,0 +1,112 @@
+//! The stealing-deque discipline shared by every work-claiming layer:
+//! per-owner `Mutex<VecDeque>` job queues with atomic length mirrors,
+//! pop-own-front / steal-from-richest-back (Tzeng et al., §3.3.5).
+//!
+//! Three layers claim work this way — [`super::dynamic`] at intra-problem
+//! chunk granularity, [`crate::serve::pool`] at whole-job granularity, and
+//! the cluster migration pass at whole-problem granularity across device
+//! queues.  They share these primitives so the termination and ordering
+//! protocol (lengths decremented only *after* a removal, so all-zero
+//! lengths prove the queues are drained) lives in exactly one place.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::thread;
+
+/// Lock with poison recovery: the critical sections guarded here are short
+/// push/pop updates that are never left half-done, so a guard poisoned by
+/// a dying worker is structurally sound and safe to adopt.
+pub fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Seed `jobs` job indices into `queues` deques (round-robin when `seed`
+/// is identity-free is the callers' concern — this just builds the atomic
+/// length mirrors that the claim protocol requires).
+pub fn mirrors(queues: &[VecDeque<usize>]) -> Vec<AtomicUsize> {
+    queues.iter().map(|q| AtomicUsize::new(q.len())).collect()
+}
+
+/// Pop the front of worker `w`'s own deque.  The length mirror is read
+/// first as a cheap emptiness probe and decremented only after a
+/// successful removal.
+pub fn pop_own(
+    deques: &[Mutex<VecDeque<usize>>],
+    lens: &[AtomicUsize],
+    w: usize,
+) -> Option<usize> {
+    if lens[w].load(Ordering::Acquire) == 0 {
+        return None;
+    }
+    let mut deque = lock_clean(&deques[w]);
+    let job = deque.pop_front();
+    if job.is_some() {
+        lens[w].fetch_sub(1, Ordering::Release);
+    }
+    job
+}
+
+/// Steal from the back of the richest victim's deque (length ties keep
+/// the lowest victim index — `Reverse(v)` in the key, since
+/// `max_by_key` alone would keep the *last* maximum).  Returns `None`
+/// only when every other deque is observably empty; a victim drained
+/// between the scan and the lock triggers a rescan.
+pub fn steal(deques: &[Mutex<VecDeque<usize>>], lens: &[AtomicUsize], w: usize) -> Option<usize> {
+    loop {
+        let victim = (0..deques.len())
+            .filter(|&v| v != w)
+            .map(|v| (v, lens[v].load(Ordering::Acquire)))
+            .filter(|&(_, len)| len > 0)
+            .max_by_key(|&(v, len)| (len, std::cmp::Reverse(v)));
+        let (v, _) = victim?;
+        let mut deque = lock_clean(&deques[v]);
+        if let Some(job) = deque.pop_back() {
+            lens[v].fetch_sub(1, Ordering::Release);
+            return Some(job);
+        }
+        drop(deque);
+        thread::yield_now();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn queues(seeds: Vec<Vec<usize>>) -> (Vec<Mutex<VecDeque<usize>>>, Vec<AtomicUsize>) {
+        let seeds: Vec<VecDeque<usize>> = seeds.into_iter().map(VecDeque::from).collect();
+        let lens = mirrors(&seeds);
+        (seeds.into_iter().map(Mutex::new).collect(), lens)
+    }
+
+    #[test]
+    fn pop_own_drains_front_to_back() {
+        let (deques, lens) = queues(vec![vec![3, 1, 4]]);
+        assert_eq!(pop_own(&deques, &lens, 0), Some(3));
+        assert_eq!(pop_own(&deques, &lens, 0), Some(1));
+        assert_eq!(pop_own(&deques, &lens, 0), Some(4));
+        assert_eq!(pop_own(&deques, &lens, 0), None);
+        assert_eq!(lens[0].load(Ordering::Acquire), 0);
+    }
+
+    #[test]
+    fn steal_takes_back_of_richest_victim() {
+        let (deques, lens) = queues(vec![vec![], vec![10, 11], vec![20, 21, 22]]);
+        // Worker 0 steals from the richest (worker 2), from the back.
+        assert_eq!(steal(&deques, &lens, 0), Some(22));
+        // Now both victims hold two; the tie keeps the lowest index.
+        assert_eq!(steal(&deques, &lens, 0), Some(11));
+        assert_eq!(steal(&deques, &lens, 0), Some(21));
+        assert_eq!(steal(&deques, &lens, 0), Some(10));
+        assert_eq!(steal(&deques, &lens, 0), Some(20));
+        assert_eq!(steal(&deques, &lens, 0), None);
+    }
+
+    #[test]
+    fn steal_never_touches_own_deque() {
+        let (deques, lens) = queues(vec![vec![7]]);
+        assert_eq!(steal(&deques, &lens, 0), None);
+        assert_eq!(pop_own(&deques, &lens, 0), Some(7));
+    }
+}

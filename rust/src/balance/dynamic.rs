@@ -34,6 +34,7 @@ use std::sync::Mutex;
 use std::thread;
 
 use super::adaptive::SEG_OVERHEAD;
+use super::deque::{lock_clean, mirrors, pop_own, steal};
 use super::stream::{self, ScheduleDescriptor};
 use super::{Assignment, ScheduleKind, WorkSource};
 
@@ -288,14 +289,9 @@ where
 /// Work-stealing claim: chunk indices seeded round-robin into per-worker
 /// deques; pop-own-front, steal-from-richest-back when empty — the same
 /// discipline [`crate::serve::pool`] applies to whole batch jobs, here at
-/// intra-problem chunk granularity.  Length mirrors are decremented only
-/// after a removal, so all-zero lengths prove termination.
-///
-/// NOTE: this worker loop (and the `pop_own`/`steal` helpers below)
-/// deliberately mirrors `serve/pool.rs::run_pool` — `balance` cannot
-/// depend on `serve`, so the discipline is duplicated.  A change to
-/// either copy's termination or ordering protocol must be applied to
-/// both.
+/// intra-problem chunk granularity.  The claim primitives are the shared
+/// [`super::deque`] helpers, so the termination and ordering protocol
+/// lives in one place.
 pub fn execute_stealing<T, F>(threads: usize, chunks: usize, process: F) -> (Vec<T>, DynamicStats)
 where
     T: Send,
@@ -338,7 +334,7 @@ where
     for j in 0..chunks {
         seeds[j % threads].push_back(j);
     }
-    let lens: Vec<AtomicUsize> = seeds.iter().map(|q| AtomicUsize::new(q.len())).collect();
+    let lens: Vec<AtomicUsize> = mirrors(&seeds);
     let deques: Vec<Mutex<VecDeque<usize>>> = seeds.into_iter().map(Mutex::new).collect();
     let steals = AtomicU64::new(0);
     let died = AtomicBool::new(false);
@@ -406,44 +402,6 @@ fn collect_guarded<T>(
             })
             .collect(),
     )
-}
-
-/// Lock with poison recovery — same rationale as `serve/pool.rs`: the
-/// critical sections are short push/pop updates that are never left
-/// half-done, so a guard poisoned by a dying worker is structurally
-/// sound.
-fn lock_clean<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(|e| e.into_inner())
-}
-
-fn pop_own(deques: &[Mutex<VecDeque<usize>>], lens: &[AtomicUsize], w: usize) -> Option<usize> {
-    if lens[w].load(Ordering::Acquire) == 0 {
-        return None;
-    }
-    let mut deque = lock_clean(&deques[w]);
-    let job = deque.pop_front();
-    if job.is_some() {
-        lens[w].fetch_sub(1, Ordering::Release);
-    }
-    job
-}
-
-fn steal(deques: &[Mutex<VecDeque<usize>>], lens: &[AtomicUsize], w: usize) -> Option<usize> {
-    loop {
-        let victim = (0..deques.len())
-            .filter(|&v| v != w)
-            .map(|v| (v, lens[v].load(Ordering::Acquire)))
-            .filter(|&(_, len)| len > 0)
-            .max_by_key(|&(_, len)| len);
-        let (v, _) = victim?;
-        let mut deque = lock_clean(&deques[v]);
-        if let Some(job) = deque.pop_back() {
-            lens[v].fetch_sub(1, Ordering::Release);
-            return Some(job);
-        }
-        drop(deque);
-        thread::yield_now();
-    }
 }
 
 #[cfg(test)]

@@ -18,6 +18,7 @@
 
 pub mod adaptive;
 pub mod binning;
+pub mod deque;
 pub mod dynamic;
 pub mod group_mapped;
 pub mod heuristic;

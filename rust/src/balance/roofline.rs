@@ -66,6 +66,26 @@ pub fn predict(a: &Csr, workers: usize) -> RooflinePrediction {
     }
 }
 
+/// Roofline-style placement weight of one problem for device-level LPT:
+/// SpMV-family work is bandwidth-bound, so the memory-roofline traffic
+/// estimate is the atom count plus the per-tile bookkeeping charge
+/// ([`super::adaptive::SEG_OVERHEAD`] — row offsets and output writes).
+///
+/// Deliberately schedule-agnostic and coarser than the full proxy cost:
+/// placement happens *before* per-device schedule selection, and the gap
+/// between this estimate and the realized cost on skewed tile sets is
+/// exactly what cross-device migration corrects at run time.
+pub fn placement_weight(tiles: usize, atoms: usize) -> u64 {
+    atoms as u64 + super::adaptive::SEG_OVERHEAD * tiles as u64
+}
+
+/// A placement weight scaled to virtual time on a device with relative
+/// `speed` (1.0 = the reference class): the quantity device-level LPT
+/// balances.
+pub fn device_scaled_cost(weight: u64, speed: f64) -> f64 {
+    weight.max(1) as f64 / speed.max(f64::MIN_POSITIVE)
+}
+
 /// Pick the schedule with the smallest predicted inflation.
 pub fn select_schedule_roofline(a: &Csr, workers: usize) -> ScheduleKind {
     let p = predict(a, workers);
@@ -125,6 +145,18 @@ mod tests {
         let a = gen::power_law(2048, 4096, 96, 0.4, 7); // mild variance, wide
         let p = predict(&a, 2048 * 32);
         assert!(p.warp_mapped < 1.7, "{p:?}");
+    }
+
+    #[test]
+    fn placement_weight_charges_traffic_plus_tile_overhead() {
+        use crate::balance::adaptive::SEG_OVERHEAD;
+        assert_eq!(placement_weight(0, 0), 0);
+        assert_eq!(placement_weight(4, 100), 100 + 4 * SEG_OVERHEAD);
+        // Same atoms, more tiles: more bookkeeping traffic.
+        assert!(placement_weight(100, 1000) > placement_weight(10, 1000));
+        // Scaling: a 2x device halves virtual time; zero weights clamp.
+        assert_eq!(device_scaled_cost(100, 2.0), 50.0);
+        assert_eq!(device_scaled_cost(0, 1.0), 1.0);
     }
 
     #[test]

@@ -71,6 +71,48 @@ impl Args {
     }
 }
 
+/// The canonical flag order of the `serve` family — the single source of
+/// truth every serve-facing surface renders from: `main.rs`'s
+/// `SERVE_SPEC` table (so `serve --help` prints in this order) and the
+/// README's serve-flags list (between the `serve-flags:begin`/`end`
+/// markers), both pinned by tests (`main.rs` and `tests/cli_docs.rs`).
+/// Adding a serve flag means adding it here first; the tests point at
+/// whichever surface was left behind.
+pub const SERVE_FLAG_ORDER: &[&str] = &[
+    "threads",
+    "batches",
+    "scale",
+    "plan-workers",
+    "schedule",
+    "candidates",
+    "epsilon",
+    "min-samples",
+    "seed",
+    "proxy-feedback",
+    "cache-capacity",
+    "split-threshold",
+    "bench",
+    "single-large",
+    "min-speedup",
+    "out",
+    "ingest",
+    "arrival",
+    "rate",
+    "requests",
+    "burst",
+    "trace-seed",
+    "max-batch",
+    "max-wait",
+    "queue-capacity",
+    "chaos",
+    "fault-seed",
+    "fault-rate",
+    "max-retries",
+    "deadline",
+    "devices",
+    "migration",
+];
+
 /// One declared flag of a subcommand: `--name`.  `value` is the
 /// placeholder shown in help (`--threads <N>`); `None` marks a boolean
 /// flag that never consumes the next token.  `default` is documentation —

@@ -319,6 +319,18 @@ const SERVE_SPEC: CommandSpec = CommandSpec {
             default: None,
             help: "per-problem execution deadline in ms (absent = none)",
         },
+        FlagSpec {
+            name: "devices",
+            value: Some("LIST"),
+            default: None,
+            help: "cluster mode: device pools as class:count, e.g. a100:2,v100:1",
+        },
+        FlagSpec {
+            name: "migration",
+            value: Some("on|off"),
+            default: Some("on"),
+            help: "cluster mode: cross-device migration of queued work",
+        },
     ],
 };
 
@@ -704,6 +716,10 @@ fn cmd_serve(args: &Args) -> gpulb::Result<()> {
         return Ok(());
     }
 
+    if args.opt("devices").is_some() {
+        return cmd_serve_cluster(args, scale, batches);
+    }
+
     let mix = serve::corpus_mix(scale);
     let atoms: usize = mix.iter().map(|p| p.atoms()).sum();
     let count = |kind: &str| mix.iter().filter(|p| p.kind_name() == kind).count();
@@ -787,6 +803,91 @@ fn cmd_serve(args: &Args) -> gpulb::Result<()> {
                 report.tuner.exploits,
                 report.tuner.explorations,
                 report.tuner.priors
+            );
+        }
+    }
+    Ok(())
+}
+
+/// `serve --devices`: the multi-device cluster engine.  Plain mode runs
+/// `--batches` corpus batches across heterogeneous device pools and
+/// reports placement, migration, and shard activity; `--bench` runs the
+/// deterministic placement-strategy comparison on the closed-form gate
+/// mix, enforces the migration-vs-tile-split speedup gate, and writes
+/// the `BENCH_cluster.json` artifact the CI perf gate diffs.
+fn cmd_serve_cluster(args: &Args, scale: usize, batches: usize) -> gpulb::Result<()> {
+    let spec = args.opt("devices").expect("caller checked --devices");
+    anyhow::ensure!(
+        !args.has_flag("chaos"),
+        "--chaos runs on the single-host engine; drop --devices"
+    );
+    let migration = match args.opt_or("migration", "on").as_str() {
+        "on" => true,
+        "off" => false,
+        other => anyhow::bail!("invalid --migration `{other}`; expected on|off"),
+    };
+
+    if args.has_flag("bench") {
+        let min_speedup: f64 = opt_strict(args, "min-speedup", 1.2)?;
+        let out = args.opt_or("out", "BENCH_cluster.json");
+        serve::run_cluster_bench(spec, scale, min_speedup, &out)?;
+        return Ok(());
+    }
+
+    let devices = serve::parse_devices(spec)?;
+    let policy = parse_schedule_policy(args)?;
+    let feedback = if args.has_flag("proxy-feedback") {
+        serve::CostFeedback::Proxy
+    } else {
+        serve::CostFeedback::Measured
+    };
+    let cfg = serve_config_from_args(args, policy, feedback)?;
+    let names: Vec<String> = devices
+        .iter()
+        .map(|d| format!("{}(x{:.2}, {} ctas)", d.class, d.speed, d.cores))
+        .collect();
+    println!(
+        "cluster: {} devices [{}], migration {}, {} threads/pool, schedule {}",
+        devices.len(),
+        names.join(", "),
+        if migration { "on" } else { "off" },
+        cfg.threads,
+        policy_name(policy)
+    );
+
+    let mix = serve::corpus_mix(scale);
+    let engine = serve::ClusterEngine::new(cfg, devices, migration)?;
+    for batch_no in 1..=batches.max(1) {
+        let report = engine.execute_batch(&mix);
+        let per_device: Vec<String> = report
+            .device_problems
+            .iter()
+            .map(|n| n.to_string())
+            .collect();
+        println!(
+            "batch {batch_no}: {:>8.1} problems/sec  placement [{}] ({} migrated, \
+             {} sharded into {} shards; est makespan {:.0} steps)",
+            report.problems as f64 / report.elapsed.as_secs_f64().max(1e-12),
+            per_device.join("/"),
+            report.migrated,
+            report.shard_problems,
+            report.shards,
+            report.makespan_est
+        );
+        if report.tuner.adaptive > 0 {
+            println!(
+                "         tuner: {:.0}% converged ({} exploits, {} explorations, {} priors)",
+                report.tuner.convergence_fraction() * 100.0,
+                report.tuner.exploits,
+                report.tuner.explorations,
+                report.tuner.priors
+            );
+        }
+        if !report.faults.is_clean() {
+            let f = &report.faults;
+            println!(
+                "         faults: {} panics / {} timeouts / {} poisons, {} recovered, {} failed",
+                f.panics, f.timeouts, f.poisons, f.recovered, f.failed
             );
         }
     }
@@ -1121,5 +1222,24 @@ fn main() -> gpulb::Result<()> {
         "bench-diff" => cmd_bench_diff(&args),
         "info" => cmd_info(),
         other => unreachable!("unmatched command `{other}` with a spec"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_spec_follows_the_canonical_flag_order() {
+        // `serve --help` renders from SERVE_SPEC in declaration order;
+        // the README's serve-flags list renders from the same canonical
+        // order (tests/cli_docs.rs pins that side).  One source of truth:
+        // gpulb::cli::SERVE_FLAG_ORDER.
+        let spec_order: Vec<&str> = SERVE_SPEC.flags.iter().map(|f| f.name).collect();
+        assert_eq!(
+            spec_order,
+            gpulb::cli::SERVE_FLAG_ORDER,
+            "SERVE_SPEC flag order diverged from cli::SERVE_FLAG_ORDER"
+        );
     }
 }

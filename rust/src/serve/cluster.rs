@@ -1,0 +1,1024 @@
+//! Multi-device sharded serving: the cluster layer over [`super::ServeEngine`]'s
+//! batch machinery — the §6.2 multi-GPU direction lifted to the serving
+//! host.
+//!
+//! A [`ClusterEngine`] owns one worker pool per simulated device, each
+//! tagged with a [`DeviceProfile`] derived from the
+//! [`crate::sim::GpuSpec`] presets (`--devices a100:2,v100:1`).  Work is
+//! placed at two levels:
+//!
+//! * **whole problems** go to devices by LPT over roofline-scaled proxy
+//!   weights ([`crate::balance::roofline::placement_weight`] divided by
+//!   the profile speed — [`crate::serve::pool::lpt_seed_hetero`]);
+//! * **the largest problems** (at or above
+//!   [`super::ServeConfig::split_min_atoms`], on a streaming-capable
+//!   planned schedule) shard *across* devices: the single global-plan
+//!   descriptor's worker ranges are divided proportionally to device
+//!   speed, and the proxy model charges an [`INTERCONNECT_STEPS`] fixup
+//!   per shard beyond the first (the host analogue of
+//!   [`crate::streamk::multi_gpu`]'s `IterSplit` boundary-tile charge).
+//!
+//! Placement is corrected at run time by **migration**: a deterministic
+//! virtual-time simulation replays the device queues against the *true*
+//! per-problem proxy costs, and a device that runs dry steals queued
+//! (never in-flight) problems from the back of the most-loaded queue —
+//! the cross-device analogue of the pool's stealing deques, built on the
+//! same [`crate::balance::deque`] primitives.  The simulation decides
+//! the final owner of every whole problem before any kernel runs, so
+//! placement is a pure function of (mix, devices, migration flag) that
+//! `tools/proxy_port.py` reproduces bit for bit.
+//!
+//! **Bit-identity contract**: plans are built for the engine's *global*
+//! [`super::ServeConfig::plan_workers`] — never per-device core counts —
+//! and shard partials reduce through the segment-keyed canonical fixup
+//! ([`super::batch::reduce_shards`]).  Checksums are therefore identical
+//! across any device count, threads-per-pool, migration setting, and
+//! shard boundary, and equal to a single [`super::ServeEngine`] run
+//! (`tests/cluster.rs` pins the full matrix).  Device profiles feed only
+//! the *placement* and the *tuner*: the adaptive tuner keys its history
+//! by device class ([`crate::balance::adaptive::device_class_tag`]) and
+//! normalizes measured samples by profile speed, so each class converges
+//! to its own schedule.
+
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::sync::Mutex;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::balance::adaptive::{self, device_class_tag};
+use crate::balance::deque::{mirrors, pop_own, steal};
+use crate::balance::roofline;
+use crate::balance::stream::ScheduleDescriptor;
+use crate::balance::ScheduleKind;
+use crate::benchutil::{self, Direction, FamilyPoint};
+use crate::sim::GpuSpec;
+
+use super::batch::{self, ExecSample, Failure, Problem};
+use super::config::{ServeConfig, ServeError, DEFAULT_SPLIT_MIN_ATOMS};
+use super::mix::cluster_gate_mix;
+use super::plan_cache::{PlanCache, PlanEntry};
+use super::pool::{self, PoolStats};
+use super::tuner::{CostFeedback, Decision, SchedulePolicy, ScheduleTuner};
+use super::{FaultBatchStats, ServeEngine, TunerBatchStats};
+
+/// Memory bandwidth of the reference device class (V100, GB/s): profile
+/// speeds are bandwidth ratios against this, so `v100` is speed 1.0.
+pub const REFERENCE_BW_GBS: f64 = 900.0;
+
+/// Proxy-step fixup charged per shard beyond the first when one problem
+/// spans devices: the cross-device reduction traffic the two-phase fixup
+/// pays on the wire, per [`crate::streamk::multi_gpu`]'s `IterSplit`
+/// interconnect model.  `tools/proxy_port.py` hardcodes the same value.
+pub const INTERCONNECT_STEPS: f64 = 32.0;
+
+/// Plan workers the cluster bench pins (independent of host shape so the
+/// committed baseline reproduces; mirrored by `tools/proxy_port.py`).
+pub const CLUSTER_BENCH_PLAN_WORKERS: usize = 256;
+
+/// One device in the cluster: a [`GpuSpec`] preset reduced to what the
+/// serving host plans with.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceProfile {
+    /// Class key (`a100` / `v100` / `h100`) from [`GpuSpec::class_key`].
+    pub class: &'static str,
+    /// Position in the cluster (0-based, expansion order of `--devices`).
+    pub ordinal: usize,
+    /// Relative speed: memory bandwidth over [`REFERENCE_BW_GBS`]
+    /// (SpMV-family serving is bandwidth-bound, so placement scales by
+    /// bandwidth, not FLOPs).
+    pub speed: f64,
+    /// Concurrent CTA slots ([`GpuSpec::concurrent_ctas`]) — reporting
+    /// and tuner context only, never plan shape (see module docs).
+    pub cores: usize,
+    /// Tuner history dimension for this class
+    /// ([`device_class_tag`]; equal for same-class devices, so they
+    /// share learned schedules).
+    pub tag: u64,
+}
+
+impl DeviceProfile {
+    /// Derive a profile from a simulator preset.
+    pub fn from_spec(gpu: &GpuSpec, ordinal: usize) -> DeviceProfile {
+        DeviceProfile {
+            class: gpu.class_key(),
+            ordinal,
+            speed: gpu.mem_bw_gbs / REFERENCE_BW_GBS,
+            cores: gpu.concurrent_ctas(),
+            tag: device_class_tag(gpu.class_key()),
+        }
+    }
+}
+
+/// Parse a `--devices` list (`a100:2,v100:1`) into expanded profiles,
+/// one per physical device, in declaration order.
+pub fn parse_devices(spec: &str) -> crate::Result<Vec<DeviceProfile>> {
+    let mut out: Vec<DeviceProfile> = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        anyhow::ensure!(!part.is_empty(), "empty device entry in `{spec}`");
+        let (gpu, count) = GpuSpec::parse(part)?;
+        for _ in 0..count {
+            let ordinal = out.len();
+            out.push(DeviceProfile::from_spec(&gpu, ordinal));
+        }
+    }
+    anyhow::ensure!(!out.is_empty(), "device list `{spec}` names no devices");
+    Ok(out)
+}
+
+/// Outcome of the deterministic virtual-time placement simulation (see
+/// [`simulate_cluster`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSim {
+    /// Execution order per device — every queued job exactly once.
+    pub order: Vec<Vec<usize>>,
+    /// Final virtual clock per device (reference-speed proxy steps).
+    pub clocks: Vec<f64>,
+    /// Max over [`ClusterSim::clocks`].
+    pub makespan: f64,
+    /// Jobs that changed device relative to the seeded placement.
+    pub migrated: usize,
+}
+
+/// Replay device queues in virtual time: the device with the earliest
+/// clock acts next (ties keep the lower index), popping the front of its
+/// own queue or — when dry and `migration` is on — stealing from the
+/// back of the longest queue (the shared [`crate::balance::deque`]
+/// discipline at whole-problem granularity).  Each executed job advances
+/// its device's clock by `costs[job] / speeds[device]`.
+///
+/// Pure function of its inputs (every f64 op in a fixed order), mirrored
+/// exactly by `tools/proxy_port.py`: the real engine runs whatever
+/// placement this returns, so checksums cannot depend on host timing.
+pub fn simulate_cluster(
+    queues: Vec<VecDeque<usize>>,
+    costs: &[f64],
+    speeds: &[f64],
+    migration: bool,
+) -> ClusterSim {
+    let n = queues.len();
+    let lens = mirrors(&queues);
+    let deques: Vec<Mutex<VecDeque<usize>>> = queues.into_iter().map(Mutex::new).collect();
+    let mut clocks = vec![0.0f64; n];
+    let mut order: Vec<Vec<usize>> = (0..n).map(|_| Vec::new()).collect();
+    let mut migrated = 0usize;
+    let mut remaining: usize = lens.iter().map(|l| l.load(Ordering::Acquire)).sum();
+    while remaining > 0 {
+        // Earliest-clock device that can act: its own queue is nonempty,
+        // or migration lets it steal.  Strict `<` keeps clock ties on the
+        // lower device index.
+        let mut pick: Option<usize> = None;
+        for d in 0..n {
+            if lens[d].load(Ordering::Acquire) == 0 && !migration {
+                continue;
+            }
+            match pick {
+                Some(best) if clocks[d] >= clocks[best] => {}
+                _ => pick = Some(d),
+            }
+        }
+        let d = pick.expect("jobs remain, so some device can act");
+        let job = match pop_own(&deques, &lens, d) {
+            Some(job) => Some(job),
+            None => {
+                let stolen = steal(&deques, &lens, d);
+                if stolen.is_some() {
+                    migrated += 1;
+                }
+                stolen
+            }
+        };
+        // With migration on, an all-empty scan can only race `remaining`
+        // here if the caller's queues disagree with it — impossible by
+        // construction, but a `None` just rescans.
+        if let Some(job) = job {
+            order[d].push(job);
+            clocks[d] += costs[job] / speeds[d].max(f64::MIN_POSITIVE);
+            remaining -= 1;
+        }
+    }
+    let makespan = clocks.iter().fold(0.0f64, |a, &b| a.max(b));
+    ClusterSim {
+        order,
+        clocks,
+        makespan,
+        migrated,
+    }
+}
+
+/// Divide a descriptor's `total_workers` contiguous worker ranges across
+/// devices proportionally to speed (cumulative rounding, so ranges tile
+/// `[0, total_workers)` exactly).  Shard *boundaries* never affect
+/// checksums — the canonical reduction guarantees that — only how much
+/// of a split problem each device executes.
+pub fn shard_ranges(total_workers: usize, speeds: &[f64]) -> Vec<(usize, usize)> {
+    let total_speed: f64 = speeds.iter().map(|s| s.max(f64::MIN_POSITIVE)).sum();
+    let n = speeds.len().max(1);
+    let mut bounds = vec![0usize];
+    let mut cum = 0.0f64;
+    for (d, s) in speeds.iter().enumerate() {
+        cum += s.max(f64::MIN_POSITIVE);
+        let b = if d + 1 == n {
+            total_workers
+        } else {
+            ((total_workers as f64) * (cum / total_speed)).round() as usize
+        };
+        let prev = *bounds.last().expect("bounds starts nonempty");
+        bounds.push(b.clamp(prev, total_workers));
+    }
+    (0..n).map(|d| (bounds[d], bounds[d + 1])).collect()
+}
+
+/// Outcome of one cluster batch execution.
+#[derive(Debug, Clone)]
+pub struct ClusterBatchReport {
+    pub problems: usize,
+    pub elapsed: Duration,
+    /// Per-problem checksums in submission order — bit-identical across
+    /// device counts, threads-per-pool, and migration settings (the
+    /// cluster contract `tests/cluster.rs` pins).
+    pub checksums: Vec<f64>,
+    /// Per-problem chosen schedule in submission order.
+    pub schedules: Vec<ScheduleKind>,
+    /// Final owner device per problem (`None` = sharded across devices).
+    pub placements: Vec<Option<usize>>,
+    /// Whole problems executed per device (post-migration).
+    pub device_problems: Vec<usize>,
+    /// Whole problems that changed device relative to the LPT seed.
+    pub migrated: usize,
+    /// Virtual-time makespan of the placement the batch ran (reference
+    /// proxy steps — an estimate, not wall clock).
+    pub makespan_est: f64,
+    /// Problems sharded across devices.
+    pub shard_problems: usize,
+    /// Total cross-device shard tasks dispatched.
+    pub shards: usize,
+    /// Tuner selection counters (zero under `Auto`/`Fixed`).
+    pub tuner: TunerBatchStats,
+    /// Panic / timeout / poison / retry counters.
+    pub faults: FaultBatchStats,
+    /// Per-problem terminal errors (`None` = good checksum).
+    pub errors: Vec<Option<ServeError>>,
+    /// Pool counters summed across every device pool.
+    pub pool: PoolStats,
+}
+
+impl ClusterBatchReport {
+    pub fn checksum(&self) -> f64 {
+        self.checksums.iter().sum()
+    }
+}
+
+/// The multi-device batch engine (see module docs).
+pub struct ClusterEngine {
+    cfg: ServeConfig,
+    devices: Vec<DeviceProfile>,
+    migration: bool,
+    cache: PlanCache,
+    tuner: Option<ScheduleTuner>,
+}
+
+impl ClusterEngine {
+    /// Build an engine over `devices` (at least one).  The plan cache and
+    /// tuner are shared across pools: plans are device-independent by the
+    /// bit-identity contract, and the tuner separates classes through its
+    /// device dimension, not through separate histories.
+    pub fn new(
+        cfg: ServeConfig,
+        devices: Vec<DeviceProfile>,
+        migration: bool,
+    ) -> crate::Result<ClusterEngine> {
+        anyhow::ensure!(!devices.is_empty(), "a cluster needs at least one device");
+        let cache = PlanCache::new(cfg.cache_capacity);
+        let tuner =
+            ScheduleTuner::from_policy(cfg.schedule).map(|t| t.with_candidates(&cfg.candidates));
+        Ok(ClusterEngine {
+            cfg,
+            devices,
+            migration,
+            cache,
+            tuner,
+        })
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    pub fn devices(&self) -> &[DeviceProfile] {
+        &self.devices
+    }
+
+    pub fn migration(&self) -> bool {
+        self.migration
+    }
+
+    pub fn cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
+    pub fn tuner(&self) -> Option<&ScheduleTuner> {
+        self.tuner.as_ref()
+    }
+
+    /// The schedule the policy yields before any device is known: what
+    /// shard candidacy and the placement cost model key on (for
+    /// `Adaptive` this is the cold-start prior — cross-device sharded
+    /// problems keep it, see [`ClusterEngine::execute_batch`]).
+    fn prior_kind(&self, p: &Problem) -> ScheduleKind {
+        match self.cfg.schedule {
+            SchedulePolicy::Auto => p.static_schedule(),
+            SchedulePolicy::Fixed(kind) => kind,
+            SchedulePolicy::Adaptive { .. } => p.cold_start_prior(self.cfg.plan_workers),
+        }
+    }
+
+    /// Execute one batch across the device pools.
+    ///
+    /// Phases: (1) shard candidacy — problems at or above
+    /// `split_min_atoms` whose prior schedule streams span devices and
+    /// skip placement; (2) whole problems place by heterogeneous LPT
+    /// over roofline weights, then the virtual-time migration simulation
+    /// fixes the final owners; (3) per-device schedule selection, serial
+    /// in submission order (adaptive selection keys on the owner's
+    /// device class); (4) every device pool runs concurrently — whole
+    /// problems plus this device's shard ranges, panic-isolated; (5)
+    /// shard partials reduce canonically, failed problems walk the
+    /// planned `ThreadMapped` retry ladder, and clean whole problems
+    /// feed the tuner under their owner's class tag (measured samples
+    /// normalized by profile speed).
+    pub fn execute_batch(&self, problems: &[Problem]) -> ClusterBatchReport {
+        let start = Instant::now();
+        let workers = self.cfg.plan_workers;
+        let threads = self.cfg.threads;
+        let n_dev = self.devices.len();
+        let speeds: Vec<f64> = self.devices.iter().map(|d| d.speed).collect();
+
+        // Phase 1: cross-device shard candidacy (prior schedule — the
+        // adaptive selector never sees these problems, because a shard
+        // spans devices and has no single device class to learn under).
+        let shard: Vec<Option<ScheduleDescriptor>> = problems
+            .iter()
+            .map(|p| {
+                let kind = self.prior_kind(p);
+                if n_dev <= 1
+                    || kind.is_dynamic()
+                    || p.atoms() < self.cfg.split_min_atoms
+                    || matches!(kind, ScheduleKind::Binning | ScheduleKind::Lrb)
+                {
+                    return None;
+                }
+                match batch::plan(p, kind, &self.cache, workers) {
+                    PlanEntry::Descriptor(d) if d.workers() > 1 => Some(d),
+                    _ => None,
+                }
+            })
+            .collect();
+
+        // Phase 2: whole-problem placement.  LPT seeds over the coarse
+        // roofline weights; the virtual-time replay then runs the queues
+        // against the *true* proxy costs of the prior schedules, so
+        // migration corrects exactly the estimate-vs-reality gap.
+        let whole: Vec<usize> = (0..problems.len()).filter(|&i| shard[i].is_none()).collect();
+        let weights: Vec<u64> = whole
+            .iter()
+            .map(|&i| {
+                let (tiles, atoms) = problems[i].tile_set_size();
+                roofline::placement_weight(tiles, atoms)
+            })
+            .collect();
+        let mut costs = vec![0.0f64; problems.len()];
+        for &i in &whole {
+            costs[i] = adaptive::proxy_cost_for(
+                self.prior_kind(&problems[i]),
+                problems[i].offsets(),
+                workers,
+            );
+        }
+        let queues: Vec<VecDeque<usize>> = pool::lpt_seed_hetero(&weights, &speeds)
+            .into_iter()
+            .map(|q| q.into_iter().map(|j| whole[j]).collect())
+            .collect();
+        let sim = simulate_cluster(queues, &costs, &speeds, self.migration);
+        let mut placements: Vec<Option<usize>> = vec![None; problems.len()];
+        for (d, order) in sim.order.iter().enumerate() {
+            for &i in order {
+                placements[i] = Some(d);
+            }
+        }
+
+        // Phase 3: schedule selection, serial in submission order.
+        let mut stats = TunerBatchStats::default();
+        let schedules: Vec<ScheduleKind> = problems
+            .iter()
+            .enumerate()
+            .map(|(i, p)| match self.cfg.schedule {
+                SchedulePolicy::Auto => p.static_schedule(),
+                SchedulePolicy::Fixed(kind) => kind,
+                SchedulePolicy::Adaptive { .. } => {
+                    let Some(owner) = placements[i] else {
+                        // Sharded: keep the prior the candidacy used.
+                        return self.prior_kind(p);
+                    };
+                    let selector = self.tuner.as_ref().expect("adaptive policy builds a tuner");
+                    let prior = || p.cold_start_prior(workers);
+                    let (kind, decision) = selector.select_on(
+                        self.devices[owner].tag,
+                        p.fingerprint(),
+                        workers,
+                        prior,
+                    );
+                    stats.adaptive += 1;
+                    match decision {
+                        Decision::Prior => stats.priors += 1,
+                        Decision::Explore => stats.explorations += 1,
+                        Decision::Exploit => stats.exploits += 1,
+                    }
+                    kind
+                }
+            })
+            .collect();
+
+        // Phase 4: per-device task lists — migrated run order, then this
+        // device's worker sub-ranges of every sharded problem (split
+        // proportionally to speed, then into up to `threads` tasks so
+        // the pool parallelizes inside the device).
+        enum Task {
+            Whole(usize),
+            Shard { problem: usize, w0: usize, w1: usize },
+        }
+        enum TaskOut {
+            Sample(Result<ExecSample, Failure>),
+            Partials {
+                elapsed: f64,
+                parts: Result<batch::BoxedPartials, Failure>,
+            },
+        }
+        let mut device_tasks: Vec<Vec<Task>> = sim
+            .order
+            .iter()
+            .map(|order| order.iter().map(|&i| Task::Whole(i)).collect())
+            .collect();
+        let mut shard_counts = vec![0usize; problems.len()];
+        let mut shard_devices = vec![0usize; problems.len()];
+        for (i, desc) in shard.iter().enumerate() {
+            let Some(desc) = desc else { continue };
+            for (d, &(a, b)) in shard_ranges(desc.workers(), &speeds).iter().enumerate() {
+                if b <= a {
+                    continue;
+                }
+                shard_devices[i] += 1;
+                let per = (b - a).div_ceil(threads.min(b - a).max(1));
+                let mut w0 = a;
+                while w0 < b {
+                    let w1 = (w0 + per).min(b);
+                    device_tasks[d].push(Task::Shard { problem: i, w0, w1 });
+                    shard_counts[i] += 1;
+                    w0 = w1;
+                }
+            }
+        }
+
+        // Every device pool runs concurrently; each is the same
+        // weight-seeded stealing pool the single engine uses, with the
+        // same panic isolation inside the task closures.
+        let run_task = |t: &Task| match *t {
+            Task::Whole(i) => TaskOut::Sample(batch::execute_caught(
+                &problems[i],
+                schedules[i],
+                &self.cache,
+                &self.cfg,
+            )),
+            Task::Shard { problem, w0, w1 } => {
+                let desc = shard[problem].as_ref().expect("shard task has descriptor");
+                let t0 = Instant::now();
+                let parts = batch::execute_shard_caught(&problems[problem], desc, w0, w1);
+                TaskOut::Partials {
+                    elapsed: t0.elapsed().as_secs_f64(),
+                    parts,
+                }
+            }
+        };
+        let task_weight = |t: &Task| match *t {
+            Task::Whole(i) => problems[i].atoms().max(1) as u64,
+            Task::Shard { problem, w0, w1 } => {
+                let total = shard[problem].map(|d| d.workers()).unwrap_or(1).max(1);
+                ((problems[problem].atoms() * (w1 - w0)) / total).max(1) as u64
+            }
+        };
+        let device_outs: Vec<(Vec<TaskOut>, PoolStats)> = thread::scope(|scope| {
+            let handles: Vec<_> = device_tasks
+                .iter()
+                .map(|tasks| {
+                    scope.spawn(|| pool::execute_weighted(threads, tasks, task_weight, run_task))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("task closures are panic-isolated"))
+                .collect()
+        });
+
+        // Phase 5: reassembly in submission order (first failure wins per
+        // problem; device-ascending task order makes it deterministic).
+        let mut samples: Vec<Option<ExecSample>> = (0..problems.len()).map(|_| None).collect();
+        let mut failures: Vec<Option<Failure>> = vec![None; problems.len()];
+        let mut shard_parts: Vec<Vec<batch::BoxedPartials>> =
+            (0..problems.len()).map(|_| Vec::new()).collect();
+        let mut shard_elapsed = vec![0.0f64; problems.len()];
+        let mut pool_stats = PoolStats::default();
+        for (tasks, (outs, pstats)) in device_tasks.iter().zip(device_outs) {
+            pool_stats.pops += pstats.pops;
+            pool_stats.steals += pstats.steals;
+            pool_stats.fetches += pstats.fetches;
+            pool_stats.threads += pstats.threads;
+            for (task, out) in tasks.iter().zip(outs) {
+                match (task, out) {
+                    (Task::Whole(i), TaskOut::Sample(Ok(s))) => samples[*i] = Some(s),
+                    (Task::Whole(i), TaskOut::Sample(Err(f))) => {
+                        failures[*i].get_or_insert(f);
+                    }
+                    (Task::Shard { problem, .. }, TaskOut::Partials { elapsed, parts }) => {
+                        match parts {
+                            Ok(parts) => {
+                                shard_elapsed[*problem] += elapsed;
+                                shard_parts[*problem].push(parts);
+                            }
+                            Err(f) => {
+                                failures[*problem].get_or_insert(f);
+                            }
+                        }
+                    }
+                    _ => unreachable!("task/output kinds always pair up"),
+                }
+            }
+        }
+        for (i, p) in problems.iter().enumerate() {
+            let Some(desc) = &shard[i] else { continue };
+            if failures[i].is_some() {
+                shard_parts[i].clear();
+                continue;
+            }
+            match batch::reduce_shards_caught(p, std::mem::take(&mut shard_parts[i])) {
+                Ok(checksum) => {
+                    let cost = match self.cfg.feedback {
+                        CostFeedback::Measured => shard_elapsed[i],
+                        CostFeedback::Proxy => {
+                            batch::proxy_cost_entry(p, schedules[i], &PlanEntry::Descriptor(*desc))
+                                + INTERCONNECT_STEPS
+                                    * (shard_devices[i].saturating_sub(1)) as f64
+                        }
+                    };
+                    samples[i] = Some(ExecSample { checksum, cost });
+                }
+                Err(f) => {
+                    failures[i] = Some(f);
+                }
+            }
+        }
+
+        // Retry ladder: identical policy to the single engine — failed
+        // problems re-execute whole on planned `ThreadMapped`, on the
+        // caller's thread, up to `max_retries` times.
+        let mut faults = FaultBatchStats::default();
+        let mut errors: Vec<Option<ServeError>> = vec![None; problems.len()];
+        for (i, p) in problems.iter().enumerate() {
+            let Some(first) = failures[i] else { continue };
+            match first {
+                Failure::Panicked => faults.panics += 1,
+                Failure::Stalled(_) => faults.timeouts += 1,
+                Failure::Poisoned => faults.poisons += 1,
+            }
+            let mut outcome: Result<ExecSample, Failure> = Err(first);
+            for _ in 0..self.cfg.max_retries {
+                faults.retries += 1;
+                outcome =
+                    batch::execute_caught(p, ScheduleKind::ThreadMapped, &self.cache, &self.cfg);
+                if outcome.is_ok() {
+                    break;
+                }
+            }
+            match outcome {
+                Ok(sample) => {
+                    faults.recovered += 1;
+                    samples[i] = Some(sample);
+                }
+                Err(last) => {
+                    faults.failed += 1;
+                    let retries = self.cfg.max_retries;
+                    errors[i] = Some(match last {
+                        Failure::Panicked => ServeError::Panicked { retries },
+                        Failure::Stalled(_) => ServeError::TimedOut { retries },
+                        Failure::Poisoned => ServeError::Poisoned { retries },
+                    });
+                    samples[i] = Some(ExecSample {
+                        checksum: f64::NAN,
+                        cost: f64::NAN,
+                    });
+                }
+            }
+        }
+        let samples: Vec<ExecSample> = samples
+            .into_iter()
+            .map(|s| s.expect("every problem executed, recovered, or failed typed"))
+            .collect();
+
+        // Tuner feedback: clean, unsharded, first-try problems only,
+        // keyed by the owner's device class.  Measured wall-clock scales
+        // by profile speed so a fast device's short sample and a slow
+        // device's long sample of the same schedule agree in
+        // reference-device units; proxy costs are device-independent
+        // already.
+        if let Some(tuner) = &self.tuner {
+            for (i, p) in problems.iter().enumerate() {
+                if failures[i].is_some() {
+                    continue;
+                }
+                let Some(owner) = placements[i] else { continue };
+                let profile = &self.devices[owner];
+                let cost = match self.cfg.feedback {
+                    CostFeedback::Measured => samples[i].cost * profile.speed,
+                    CostFeedback::Proxy => samples[i].cost,
+                };
+                tuner.record_on(profile.tag, p.fingerprint(), schedules[i], workers, cost);
+            }
+        }
+
+        ClusterBatchReport {
+            problems: problems.len(),
+            elapsed: start.elapsed(),
+            checksums: samples.iter().map(|s| s.checksum).collect(),
+            schedules,
+            device_problems: sim.order.iter().map(Vec::len).collect(),
+            placements,
+            migrated: sim.migrated,
+            makespan_est: sim.makespan,
+            shard_problems: shard.iter().flatten().count(),
+            shards: shard_counts.iter().sum(),
+            tuner: stats,
+            faults,
+            errors,
+            pool: pool_stats,
+        }
+    }
+}
+
+/// Makespans (reference proxy steps) of the four placement strategies the
+/// cluster bench compares on one mix — all driven by the same true
+/// per-problem proxy costs, so the rows differ only in placement.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterBenchRows {
+    /// Static contiguous split: problem `i` on device `i / ceil(n/D)` —
+    /// the `TileSplit` analogue and the baseline migration must beat.
+    pub tilesplit: f64,
+    /// Heterogeneous LPT over roofline weights, no migration.
+    pub lpt: f64,
+    /// LPT seed plus virtual-time migration.
+    pub migration: f64,
+    /// Problems stolen by the migration row.
+    pub migrated: usize,
+    /// LPT + migration with the largest problems sharded across all
+    /// devices (perfect speed-proportional split, interconnect fixup
+    /// charged per extra shard).
+    pub shard: f64,
+}
+
+/// Compute the four makespan rows for `mix` on `devices` (pure proxy
+/// arithmetic — mirrored bit for bit by `tools/proxy_port.py`, which
+/// generates the committed `BENCH_cluster_baseline.json`).
+pub fn cluster_bench_rows(mix: &[Problem], devices: &[DeviceProfile]) -> ClusterBenchRows {
+    let speeds: Vec<f64> = devices.iter().map(|d| d.speed).collect();
+    let n_dev = speeds.len().max(1);
+    let costs: Vec<f64> = mix
+        .iter()
+        .map(|p| {
+            adaptive::proxy_cost_for(
+                ScheduleKind::ThreadMapped,
+                p.offsets(),
+                CLUSTER_BENCH_PLAN_WORKERS,
+            )
+        })
+        .collect();
+    let weights: Vec<u64> = mix
+        .iter()
+        .map(|p| {
+            let (tiles, atoms) = p.tile_set_size();
+            roofline::placement_weight(tiles, atoms)
+        })
+        .collect();
+
+    // Row 1: static contiguous placement in submission order.
+    let chunk = mix.len().div_ceil(n_dev).max(1);
+    let mut clocks = vec![0.0f64; n_dev];
+    for (i, &c) in costs.iter().enumerate() {
+        let d = (i / chunk).min(n_dev - 1);
+        clocks[d] += c / speeds[d].max(f64::MIN_POSITIVE);
+    }
+    let tilesplit = clocks.iter().fold(0.0f64, |a, &b| a.max(b));
+
+    // Rows 2-3: LPT placement, replayed without and with migration.
+    let queues = pool::lpt_seed_hetero(&weights, &speeds);
+    let lpt = simulate_cluster(queues.clone(), &costs, &speeds, false).makespan;
+    let migrated_sim = simulate_cluster(queues, &costs, &speeds, true);
+
+    // Row 4: the largest problems leave the queues and shard across all
+    // devices — each contributes `cost / total_speed` of cooperative
+    // virtual time to every device, plus the per-extra-shard
+    // interconnect fixup on the critical path.
+    let total_speed: f64 = speeds.iter().map(|s| s.max(f64::MIN_POSITIVE)).sum();
+    let small: Vec<usize> = (0..mix.len())
+        .filter(|&i| mix[i].atoms() < DEFAULT_SPLIT_MIN_ATOMS)
+        .collect();
+    let small_weights: Vec<u64> = small.iter().map(|&i| weights[i]).collect();
+    let small_queues: Vec<VecDeque<usize>> = pool::lpt_seed_hetero(&small_weights, &speeds)
+        .into_iter()
+        .map(|q| q.into_iter().map(|j| small[j]).collect())
+        .collect();
+    let shard_sim = simulate_cluster(small_queues, &costs, &speeds, true);
+    let mut shared = 0.0f64;
+    let mut big = 0usize;
+    for (i, &c) in costs.iter().enumerate() {
+        if mix[i].atoms() >= DEFAULT_SPLIT_MIN_ATOMS {
+            big += 1;
+            shared += c / total_speed;
+        }
+    }
+    let shard =
+        shard_sim.makespan + shared + INTERCONNECT_STEPS * (n_dev.saturating_sub(1) * big) as f64;
+
+    ClusterBenchRows {
+        tilesplit,
+        lpt,
+        migration: migrated_sim.makespan,
+        migrated: migrated_sim.migrated,
+        shard,
+    }
+}
+
+/// Run the deterministic cluster bench: compute the four placement rows
+/// on [`cluster_gate_mix`], verify the bit-identity contract by running
+/// the real [`ClusterEngine`] against a single [`ServeEngine`] on the
+/// same mix, enforce the migration gate (`tilesplit / migration >=
+/// min_speedup`), and write the family JSON artifact.  Returns the gated
+/// speedup.
+pub fn run_cluster_bench(
+    devices_spec: &str,
+    scale: usize,
+    min_speedup: f64,
+    out_path: &str,
+) -> crate::Result<f64> {
+    let devices = parse_devices(devices_spec)?;
+    let mix = cluster_gate_mix(scale);
+    let rows = cluster_bench_rows(&mix, &devices);
+
+    // Contract check: the real cluster (sharding on, migration on)
+    // reproduces a single engine's checksums bit for bit.
+    let cfg = ServeConfig::builder()
+        .threads(2)
+        .plan_workers(CLUSTER_BENCH_PLAN_WORKERS)
+        .schedule(SchedulePolicy::Fixed(ScheduleKind::ThreadMapped))
+        .feedback(CostFeedback::Proxy)
+        .build()?;
+    let single = ServeEngine::new(cfg.clone()).execute_batch(&mix);
+    let cluster = ClusterEngine::new(cfg, devices.clone(), true)?.execute_batch(&mix);
+    anyhow::ensure!(
+        cluster.checksums == single.checksums,
+        "cluster checksums diverged from the single-engine reference"
+    );
+
+    let speedup = if rows.migration > 0.0 {
+        rows.tilesplit / rows.migration
+    } else {
+        0.0
+    };
+    let points = [
+        ("tilesplit_makespan", rows.tilesplit),
+        ("lpt_makespan", rows.lpt),
+        ("migration_makespan", rows.migration),
+        ("shard_makespan", rows.shard),
+    ];
+    for (family, value) in &points {
+        println!("bench cluster/{family:<20} {value:>14.1} proxy-steps");
+    }
+    println!(
+        "cluster migration speedup vs tile-split: x{speedup:.2} \
+         ({} devices, {} migrated, {} sharded)",
+        devices.len(),
+        rows.migrated,
+        cluster.shard_problems
+    );
+    let family_points: Vec<FamilyPoint> = points
+        .iter()
+        .map(|&(family, value)| FamilyPoint {
+            family: family.to_string(),
+            problems: mix.len(),
+            geomean_throughput: value,
+            direction: Direction::LowerIsBetter,
+        })
+        .collect();
+    std::fs::write(
+        out_path,
+        benchutil::family_json_with_unit("cluster", "proxy-steps", scale, &family_points),
+    )?;
+    println!("wrote {out_path}");
+    anyhow::ensure!(
+        speedup >= min_speedup,
+        "cluster migration gate failed: x{speedup:.2} < x{min_speedup:.2} \
+         (tilesplit {:.1}, migration {:.1})",
+        rows.tilesplit,
+        rows.migration
+    );
+    Ok(speedup)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use std::sync::Arc;
+
+    fn tiny_mix() -> Vec<Problem> {
+        vec![
+            Problem::spmv(Arc::new(gen::uniform(64, 64, 4, 1))),
+            Problem::spmv(Arc::new(gen::power_law(80, 80, 40, 1.5, 2))),
+            Problem::spmv(Arc::new(gen::hotrow(96, 96, 8, 32, 4))),
+        ]
+    }
+
+    #[test]
+    fn parse_devices_expands_counts_in_order() {
+        let devs = parse_devices("a100:2,v100:1").unwrap();
+        assert_eq!(devs.len(), 3);
+        assert_eq!(
+            devs.iter().map(|d| d.class).collect::<Vec<_>>(),
+            vec!["a100", "a100", "v100"]
+        );
+        assert_eq!(devs.iter().map(|d| d.ordinal).collect::<Vec<_>>(), vec![0, 1, 2]);
+        // v100 is the reference class; a100 is faster and same-class
+        // devices share a tuner tag.
+        assert_eq!(devs[2].speed, 1.0);
+        assert!(devs[0].speed > 1.5 && devs[0].speed < 2.0);
+        assert_eq!(devs[0].tag, devs[1].tag);
+        assert_ne!(devs[0].tag, devs[2].tag);
+        assert!(devs.iter().all(|d| d.cores > 0));
+
+        for bad in ["", "a100:2,,v100:1", "a100:0", "k80:2", "a100"] {
+            assert!(parse_devices(bad).is_err(), "{bad:?} parsed");
+        }
+    }
+
+    #[test]
+    fn simulation_is_deterministic_and_migration_fills_dry_devices() {
+        // Device 0 seeded with everything, device 1 dry: without
+        // migration the makespan is the full sum; with it, device 1
+        // steals from the back.
+        let queues = || -> Vec<VecDeque<usize>> {
+            vec![VecDeque::from(vec![0, 1, 2, 3]), VecDeque::new()]
+        };
+        let costs = [10.0, 10.0, 10.0, 10.0];
+        let speeds = [1.0, 1.0];
+        let fixed = simulate_cluster(queues(), &costs, &speeds, false);
+        assert_eq!(fixed.makespan, 40.0);
+        assert_eq!(fixed.migrated, 0);
+        assert_eq!(fixed.order[0], vec![0, 1, 2, 3]);
+        assert!(fixed.order[1].is_empty());
+
+        let moved = simulate_cluster(queues(), &costs, &speeds, true);
+        assert_eq!(moved.makespan, 20.0);
+        assert_eq!(moved.migrated, 2);
+        // Steals come from the back; owned pops from the front.
+        assert_eq!(moved.order[0], vec![0, 1]);
+        assert_eq!(moved.order[1], vec![3, 2]);
+        assert_eq!(moved, simulate_cluster(queues(), &costs, &speeds, true));
+    }
+
+    #[test]
+    fn shard_ranges_tile_the_workers_proportionally() {
+        let ranges = shard_ranges(30, &[2.0, 1.0]);
+        assert_eq!(ranges, vec![(0, 20), (20, 30)]);
+        let ranges = shard_ranges(7, &[1.0, 1.0, 1.0]);
+        assert_eq!(ranges.first().map(|r| r.0), Some(0));
+        assert_eq!(ranges.last().map(|r| r.1), Some(7));
+        for pair in ranges.windows(2) {
+            assert_eq!(pair[0].1, pair[1].0);
+        }
+    }
+
+    #[test]
+    fn cluster_checksums_match_single_engine_and_survive_migration_toggle() {
+        let mix = tiny_mix();
+        let cfg = |threads: usize| {
+            ServeConfig::builder()
+                .threads(threads)
+                .plan_workers(64)
+                .feedback(CostFeedback::Proxy)
+                .split_min_atoms(1)
+                .build()
+                .unwrap()
+        };
+        let reference = ServeEngine::new(cfg(1)).execute_batch(&mix).checksums;
+        for spec in ["v100:1", "a100:1,v100:1", "a100:2,v100:2"] {
+            for migration in [false, true] {
+                let engine =
+                    ClusterEngine::new(cfg(2), parse_devices(spec).unwrap(), migration).unwrap();
+                let report = engine.execute_batch(&mix);
+                assert_eq!(report.checksums, reference, "{spec} migration={migration}");
+                assert!(report.faults.is_clean());
+                assert_eq!(report.problems, mix.len());
+                // Owned + sharded partitions the batch.
+                let sharded = report.placements.iter().filter(|p| p.is_none()).count();
+                assert_eq!(sharded, report.shard_problems);
+                assert_eq!(
+                    report.device_problems.iter().sum::<usize>(),
+                    mix.len() - sharded
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cross_device_sharding_engages_above_threshold() {
+        let mix = tiny_mix();
+        let devices = parse_devices("a100:1,v100:1").unwrap();
+        let split = ClusterEngine::new(
+            ServeConfig::builder()
+                .threads(2)
+                .plan_workers(64)
+                .schedule(SchedulePolicy::Fixed(ScheduleKind::MergePath))
+                .feedback(CostFeedback::Proxy)
+                .split_min_atoms(1)
+                .build()
+                .unwrap(),
+            devices.clone(),
+            true,
+        )
+        .unwrap()
+        .execute_batch(&mix);
+        assert_eq!(split.shard_problems, mix.len());
+        assert!(split.shards >= 2 * mix.len(), "shards: {}", split.shards);
+        assert!(split.placements.iter().all(Option::is_none));
+
+        let whole = ClusterEngine::new(
+            ServeConfig::builder()
+                .threads(2)
+                .plan_workers(64)
+                .schedule(SchedulePolicy::Fixed(ScheduleKind::MergePath))
+                .feedback(CostFeedback::Proxy)
+                .build()
+                .unwrap(),
+            devices,
+            true,
+        )
+        .unwrap()
+        .execute_batch(&mix);
+        assert_eq!((whole.shard_problems, whole.shards), (0, 0));
+        assert!(whole.placements.iter().all(Option::is_some));
+        // Sharding is invisible to the numerics.
+        assert_eq!(split.checksums, whole.checksums);
+    }
+
+    #[test]
+    fn adaptive_cluster_learns_per_device_class() {
+        let mix = tiny_mix();
+        let engine = ClusterEngine::new(
+            ServeConfig::builder()
+                .threads(2)
+                .plan_workers(64)
+                .schedule(SchedulePolicy::Adaptive {
+                    epsilon: 0.0,
+                    min_samples: 1,
+                    seed: 3,
+                })
+                .feedback(CostFeedback::Proxy)
+                .build()
+                .unwrap(),
+            parse_devices("a100:1,v100:1").unwrap(),
+            true,
+        )
+        .unwrap();
+        let mut last = engine.execute_batch(&mix);
+        for _ in 0..8 {
+            last = engine.execute_batch(&mix);
+        }
+        assert_eq!(last.tuner.adaptive, mix.len() as u64);
+        assert!(last.tuner.convergence_fraction() > 0.5, "{:?}", last.tuner);
+        assert!(last.checksums.iter().all(|c| c.is_finite()));
+    }
+
+    #[test]
+    fn bench_rows_are_deterministic_and_migration_never_loses() {
+        let mix = cluster_gate_mix(0);
+        let devices = parse_devices("a100:2,v100:1").unwrap();
+        let a = cluster_bench_rows(&mix, &devices);
+        let b = cluster_bench_rows(&mix, &devices);
+        assert_eq!(a.tilesplit, b.tilesplit);
+        assert_eq!(a.migration, b.migration);
+        assert_eq!(a.shard, b.shard);
+        assert!(a.tilesplit > 0.0 && a.lpt > 0.0 && a.migration > 0.0);
+        // Migration is work-conserving over the same costs: it can only
+        // improve on the static LPT queues.
+        assert!(a.migration <= a.lpt + 1e-9, "{a:?}");
+        assert!(a.migration <= a.tilesplit + 1e-9, "{a:?}");
+    }
+}

@@ -146,6 +146,48 @@ pub fn ingest_gate_catalog(scale: usize) -> Vec<Problem> {
         .collect()
 }
 
+/// The cluster gate mix: closed-form hotrow SpMV problems in a
+/// deliberately adversarial *submission order* — light problems first,
+/// heavy ones last — so the static contiguous tile-split placement the
+/// cluster bench baselines against strands the heaviest third on the
+/// slowest device, while LPT + migration spread it.  Closed-form so the
+/// committed `BENCH_cluster_baseline.json` reproduces from
+/// `tools/proxy_port.py` without a Rust toolchain (same reasoning as
+/// [`ingest_gate_catalog`]).  `scale` 0 is the smoke mix; `scale >= 1`
+/// is the gate mix and ends with a problem above
+/// [`super::DEFAULT_SPLIT_MIN_ATOMS`] so the cross-device shard row (and
+/// the gate's shard-path contract check) engages.
+pub fn cluster_gate_mix(scale: usize) -> Vec<Problem> {
+    let shapes: &[(usize, usize, usize, usize)] = if scale == 0 {
+        &[
+            (512, 8, 64, 4),
+            (512, 16, 32, 4),
+            (1024, 8, 64, 4),
+            (1024, 16, 32, 4),
+            (2048, 128, 256, 16),
+            (2048, 256, 128, 16),
+        ]
+    } else {
+        &[
+            (2048, 32, 128, 8),
+            (2048, 64, 64, 8),
+            (1024, 16, 128, 8),
+            (1024, 32, 64, 8),
+            (4096, 32, 128, 8),
+            (4096, 64, 64, 8),
+            (4096, 256, 512, 16),
+            (4096, 512, 256, 16),
+            (8192, 1024, 1024, 32),
+        ]
+    };
+    shapes
+        .iter()
+        .map(|&(n, hot, hot_len, tail)| {
+            Problem::spmv(Arc::new(gen::hotrow(n, n, hot, hot_len, tail)))
+        })
+        .collect()
+}
+
 /// Draw a request class: 20% interactive, 60% standard, 20% bulk.
 fn draw_class(rng: &mut Rng) -> IngestClass {
     let u = rng.f64();
@@ -286,5 +328,29 @@ mod tests {
             }
         }
         assert!(ingest_gate_catalog(1).len() > ingest_gate_catalog(0).len());
+    }
+
+    #[test]
+    fn cluster_gate_mix_is_skewed_toward_the_tail() {
+        for scale in [0usize, 1] {
+            let mix = cluster_gate_mix(scale);
+            assert!(mix.len() >= 6);
+            assert!(mix.iter().all(|p| p.kind_name() == "spmv"));
+            let again = cluster_gate_mix(scale);
+            for (x, y) in mix.iter().zip(&again) {
+                assert_eq!(x.fingerprint(), y.fingerprint());
+            }
+            // The adversarial order the tile-split baseline trips over:
+            // the last third outweighs the first two thirds combined.
+            let atoms: Vec<usize> = mix.iter().map(|p| p.atoms()).collect();
+            let third = atoms.len() - atoms.len() / 3;
+            let head: usize = atoms[..third].iter().sum();
+            let tail: usize = atoms[third..].iter().sum();
+            assert!(tail > head, "tail {tail} <= head {head}");
+        }
+        // The gate mix ends above the split threshold so the shard row
+        // and the cross-device shard contract check engage.
+        let gate = cluster_gate_mix(1);
+        assert!(gate.last().unwrap().atoms() >= super::super::DEFAULT_SPLIT_MIN_ATOMS);
     }
 }

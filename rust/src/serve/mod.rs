@@ -40,6 +40,8 @@
 //!   feedback (the [`SchedulePolicy::Adaptive`] policy);
 //! * [`ingest`]     — the open-loop serving front-end: MPSC submission,
 //!   micro-batch cuts under a batching window, latency SLO reporting;
+//! * [`cluster`]    — the multi-device engine: heterogeneous device
+//!   pools, LPT/roofline placement, cross-device sharding and migration;
 //! * [`landscape`]  — the deterministic problem landscape behind the CI
 //!   perf-regression gate;
 //! * this module    — the engine, batch reports, and the bench sweep.
@@ -48,6 +50,7 @@
 //! the engine-internal modules are `pub(crate)`.
 
 pub(crate) mod batch;
+pub mod cluster;
 pub mod config;
 pub mod ingest;
 pub mod landscape;
@@ -57,6 +60,10 @@ pub mod pool;
 pub(crate) mod tuner;
 
 pub use batch::{ExecSample, Failure, Problem};
+pub use cluster::{
+    parse_devices, run_cluster_bench, ClusterBatchReport, ClusterEngine, DeviceProfile,
+    INTERCONNECT_STEPS, REFERENCE_BW_GBS,
+};
 pub use config::{
     ConfigError, ServeConfig, ServeConfigBuilder, ServeError, DEFAULT_MAX_RETRIES,
     DEFAULT_SPLIT_MIN_ATOMS,
@@ -65,7 +72,8 @@ pub use ingest::{
     Arrival, BatchCut, ClassLatency, IngestClass, IngestConfig, IngestConfigBuilder, IngestReport,
 };
 pub use mix::{
-    bursty_trace, corpus_mix, ingest_gate_catalog, poisson_trace, single_large_mix,
+    bursty_trace, cluster_gate_mix, corpus_mix, ingest_gate_catalog, poisson_trace,
+    single_large_mix,
 };
 pub use plan_cache::{fingerprint, CacheStats, PlanCache, PlanEntry, PlanKey};
 pub use pool::PoolStats;

@@ -18,6 +18,8 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::thread;
 
+use crate::balance::deque::{lock_clean, mirrors, pop_own, steal};
+
 /// Aggregate pop/steal/fetch counters for one batch execution.
 ///
 /// `pops` and `steals` come from this pool's deques; dynamic problems
@@ -98,12 +100,44 @@ pub fn lpt_seed(weights: &[u64], threads: usize) -> Vec<VecDeque<usize>> {
     seeds
 }
 
+/// [`lpt_seed`] generalized to heterogeneous worker speeds: job `i`
+/// finishing on worker `d` is charged `weights[i] / speeds[d]`, and each
+/// job (heaviest first, weight ties on the lower job index) goes to the
+/// worker with the earliest finish time (ties keep the lower worker
+/// index).  With equal speeds the placement is identical to
+/// [`lpt_seed`]'s.  One deque per entry of `speeds` (at least one);
+/// fully determined by `(weights, speeds)` — the cluster placement
+/// tests pin it, and `tools/proxy_port.py` mirrors the exact f64
+/// accumulation order so the committed cluster baseline reproduces.
+pub fn lpt_seed_hetero(weights: &[u64], speeds: &[f64]) -> Vec<VecDeque<usize>> {
+    let n = speeds.len().max(1);
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_unstable_by_key(|&i| (std::cmp::Reverse(weights[i]), i));
+    let mut seeds: Vec<VecDeque<usize>> = (0..n).map(|_| VecDeque::new()).collect();
+    let mut loads = vec![0f64; n];
+    for i in order {
+        let w = weights[i].max(1) as f64;
+        let mut best = 0usize;
+        let mut best_finish = f64::INFINITY;
+        for (d, load) in loads.iter().enumerate() {
+            let speed = speeds.get(d).copied().unwrap_or(1.0).max(f64::MIN_POSITIVE);
+            let finish = load + w / speed;
+            if finish < best_finish {
+                best = d;
+                best_finish = finish;
+            }
+        }
+        seeds[best].push_back(i);
+        loads[best] = best_finish;
+    }
+    seeds
+}
+
 /// The shared pool body: clamp threads, seed the deques, run the
 /// pop-own / steal-from-richest worker loop, return results in job order.
-///
-/// NOTE: `balance/dynamic.rs::execute_stealing` mirrors this loop at
-/// chunk granularity (`balance` cannot depend on `serve`); a change to
-/// the termination or ordering protocol here must be applied there too.
+/// The claim primitives are the shared [`crate::balance::deque`] helpers
+/// (`balance/dynamic.rs::execute_stealing` runs the same loop at chunk
+/// granularity over the same primitives).
 fn run_pool<J, T, F>(
     threads: usize,
     jobs: &[J],
@@ -133,7 +167,7 @@ where
     let seeds = seed(threads);
     debug_assert_eq!(seeds.len(), threads);
     debug_assert_eq!(seeds.iter().map(VecDeque::len).sum::<usize>(), jobs.len());
-    let lens: Vec<AtomicUsize> = seeds.iter().map(|q| AtomicUsize::new(q.len())).collect();
+    let lens: Vec<AtomicUsize> = mirrors(&seeds);
     let deques: Vec<Mutex<VecDeque<usize>>> = seeds.into_iter().map(Mutex::new).collect();
     let pops = AtomicU64::new(0);
     let steals = AtomicU64::new(0);
@@ -204,49 +238,6 @@ where
     (results, stats)
 }
 
-/// Lock with poison recovery: pool state (deques, result slots) only
-/// mutates inside short push/pop critical sections that are never left
-/// half-done, so a guard poisoned by a dying worker is still
-/// structurally sound — recovering it is what keeps one panicked job
-/// from wedging every subsequent batch.
-fn lock_clean<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(|e| e.into_inner())
-}
-
-/// Pop the front of the worker's own deque.
-fn pop_own(deques: &[Mutex<VecDeque<usize>>], lens: &[AtomicUsize], w: usize) -> Option<usize> {
-    if lens[w].load(Ordering::Acquire) == 0 {
-        return None;
-    }
-    let mut deque = lock_clean(&deques[w]);
-    let job = deque.pop_front();
-    if job.is_some() {
-        lens[w].fetch_sub(1, Ordering::Release);
-    }
-    job
-}
-
-/// Steal from the back of the richest non-empty victim, rescanning until a
-/// steal lands or every queue reads empty.
-fn steal(deques: &[Mutex<VecDeque<usize>>], lens: &[AtomicUsize], w: usize) -> Option<usize> {
-    loop {
-        let victim = (0..deques.len())
-            .filter(|&v| v != w)
-            .map(|v| (v, lens[v].load(Ordering::Acquire)))
-            .filter(|&(_, len)| len > 0)
-            .max_by_key(|&(_, len)| len);
-        let (v, _) = victim?;
-        let mut deque = lock_clean(&deques[v]);
-        if let Some(job) = deque.pop_back() {
-            lens[v].fetch_sub(1, Ordering::Release);
-            return Some(job);
-        }
-        // Raced with the owner draining the deque; rescan for a new victim.
-        drop(deque);
-        thread::yield_now();
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -289,6 +280,27 @@ mod tests {
         // Degenerate shapes stay well-formed.
         assert_eq!(lpt_seed(&[], 3).len(), 3);
         assert_eq!(lpt_seed(&[5], 0).len(), 1);
+    }
+
+    #[test]
+    fn hetero_seeding_degenerates_to_lpt_on_equal_speeds() {
+        for weights in [vec![7u64, 7, 7, 7, 7], vec![1, 8, 8, 2, 1]] {
+            let homo = lpt_seed(&weights, 2);
+            let hetero = lpt_seed_hetero(&weights, &[1.0, 1.0]);
+            assert_eq!(homo, hetero, "{weights:?}");
+        }
+        assert_eq!(lpt_seed_hetero(&[], &[1.0; 3]).len(), 3);
+        assert_eq!(lpt_seed_hetero(&[5], &[]).len(), 1);
+    }
+
+    #[test]
+    fn hetero_seeding_favors_the_fast_worker() {
+        // Four equal jobs on a 3x-speed worker vs a 1x worker: the fast
+        // worker takes three of them (finishes 2, 4, 6 vs 6 on the slow
+        // one — the 6-vs-6 tie keeps the lower = fast index).
+        let seeds = lpt_seed_hetero(&[6, 6, 6, 6], &[3.0, 1.0]);
+        let as_vecs: Vec<Vec<usize>> = seeds.iter().map(|q| q.iter().copied().collect()).collect();
+        assert_eq!(as_vecs, vec![vec![0, 1, 2], vec![3]]);
     }
 
     #[test]

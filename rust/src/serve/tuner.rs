@@ -20,7 +20,9 @@
 
 use std::sync::Mutex;
 
-use crate::balance::adaptive::{best_of, least_sampled_of, PerfHistory, PerfKey, CANDIDATES};
+use crate::balance::adaptive::{
+    best_of, least_sampled_of, PerfHistory, PerfKey, CANDIDATES, HOST_DEVICE_CLASS,
+};
 use crate::balance::ScheduleKind;
 use crate::rng::Rng;
 
@@ -145,8 +147,8 @@ impl ScheduleTuner {
         &self.candidates
     }
 
-    /// Choose a schedule for a fingerprint (see module docs for the
-    /// three-phase policy).
+    /// Choose a schedule for a fingerprint on the host device class (see
+    /// module docs for the three-phase policy).
     ///
     /// `prior` is a thunk so callers don't pay its cost (row-stats scans
     /// for SpMV priors) once the history has samples and the prior is
@@ -157,11 +159,26 @@ impl ScheduleTuner {
         workers: usize,
         prior: impl FnOnce() -> ScheduleKind,
     ) -> (ScheduleKind, Decision) {
+        self.select_on(HOST_DEVICE_CLASS, fingerprint, workers, prior)
+    }
+
+    /// [`ScheduleTuner::select`] for an explicit device class: each class
+    /// warms up and converges independently (the cluster engine passes
+    /// the placed pool's [`crate::balance::adaptive::device_class_tag`]).
+    pub fn select_on(
+        &self,
+        device: u64,
+        fingerprint: u64,
+        workers: usize,
+        prior: impl FnOnce() -> ScheduleKind,
+    ) -> (ScheduleKind, Decision) {
         // One snapshot of the candidate set (one stripe access per
         // candidate); cold start, warmup target and EWMA argmin are all
         // answered from it — this runs serially per problem on the
         // engine's pre-dispatch path.
-        let estimates = self.history.snapshot(&self.candidates, fingerprint, workers);
+        let estimates = self
+            .history
+            .snapshot_on(&self.candidates, device, fingerprint, workers);
         let no_samples = estimates
             .iter()
             .all(|(_, e)| e.map(|e| e.samples).unwrap_or(0) == 0);
@@ -193,23 +210,49 @@ impl ScheduleTuner {
         }
     }
 
-    /// Feed back the cost of one execution.
+    /// Feed back the cost of one execution on the host device class.
     pub fn record(&self, fingerprint: u64, kind: ScheduleKind, workers: usize, cost: f64) {
+        self.record_on(HOST_DEVICE_CLASS, fingerprint, kind, workers, cost);
+    }
+
+    /// [`ScheduleTuner::record`] for an explicit device class.  Cluster
+    /// callers normalize `Measured` wall-clock samples by the device
+    /// profile's speed before recording, so estimates stay comparable in
+    /// reference-device units.
+    pub fn record_on(
+        &self,
+        device: u64,
+        fingerprint: u64,
+        kind: ScheduleKind,
+        workers: usize,
+        cost: f64,
+    ) {
         self.history.record(
             PerfKey {
                 fingerprint,
                 schedule: kind,
                 workers,
+                device,
             },
             cost,
         );
     }
 
-    /// Current converged pick for a fingerprint, if the history supports
-    /// one (exploit-only, no exploration draw).
+    /// Current converged pick for a fingerprint on the host device class,
+    /// if the history supports one (exploit-only, no exploration draw).
     pub fn best(&self, fingerprint: u64, workers: usize) -> Option<ScheduleKind> {
         self.history
             .best(&self.candidates, fingerprint, workers, self.min_samples)
+    }
+
+    /// [`ScheduleTuner::best`] for an explicit device class.
+    pub fn best_on(&self, device: u64, fingerprint: u64, workers: usize) -> Option<ScheduleKind> {
+        best_of(
+            &self
+                .history
+                .snapshot_on(&self.candidates, device, fingerprint, workers),
+            self.min_samples,
+        )
     }
 }
 
@@ -265,7 +308,8 @@ mod tests {
                 t.history().samples(&PerfKey {
                     fingerprint: FP,
                     schedule: kind,
-                    workers: W
+                    workers: W,
+                    device: HOST_DEVICE_CLASS
                 }) >= 2,
                 "{kind:?} under-sampled after warmup: {seen:?}"
             );
@@ -336,6 +380,7 @@ mod tests {
             fingerprint: FP,
             schedule: ScheduleKind::ThreadMapped,
             workers: W,
+            device: HOST_DEVICE_CLASS,
         };
         let samples_before = t.history().samples(&key);
         // A failed or timed-out execution carries a NaN cost; the engine
@@ -345,6 +390,30 @@ mod tests {
         t.record(FP, ScheduleKind::ThreadMapped, W, f64::INFINITY);
         assert_eq!(t.history().samples(&key), samples_before);
         assert_eq!(t.best(FP, W), Some(ScheduleKind::ThreadMapped));
+    }
+
+    #[test]
+    fn device_classes_tune_independently() {
+        use crate::balance::adaptive::device_class_tag;
+        let (a, v) = (device_class_tag("a100"), device_class_tag("v100"));
+        let t = ScheduleTuner::new(0.0, 1, 7);
+        for &kind in &CANDIDATES {
+            t.record_on(a, FP, kind, W, if kind == ScheduleKind::MergePath { 1.0 } else { 9.0 });
+            t.record_on(
+                v,
+                FP,
+                kind,
+                W,
+                if kind == ScheduleKind::ThreadMapped { 1.0 } else { 9.0 },
+            );
+        }
+        // Same fingerprint, same workers: each class converges to its own
+        // winner, and the host dimension stays cold.
+        assert_eq!(t.best_on(a, FP, W), Some(ScheduleKind::MergePath));
+        assert_eq!(t.best_on(v, FP, W), Some(ScheduleKind::ThreadMapped));
+        assert_eq!(t.best(FP, W), None);
+        let (kind, decision) = t.select_on(a, FP, W, || ScheduleKind::NonzeroSplit);
+        assert_eq!((kind, decision), (ScheduleKind::MergePath, Decision::Exploit));
     }
 
     #[test]

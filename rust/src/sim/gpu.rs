@@ -77,6 +77,22 @@ impl GpuSpec {
         }
     }
 
+    /// An H100-class device (SXM config, clocks at the ~1.98 GHz boost):
+    /// the "next generation" point the §6.1.1 multi-GPU discussion assumes
+    /// heterogeneous pools will mix with A100/V100-class parts.
+    pub fn h100() -> Self {
+        GpuSpec {
+            name: "H100 (sim)",
+            sms: 132,
+            clock_ghz: 1.98,
+            peak_tflops_f16f32: 989.0,
+            peak_tflops_f64: 67.0,
+            mem_bw_gbs: 3350.0,
+            l2_mib: 50.0,
+            ctas_per_sm: 1,
+        }
+    }
+
     /// The hypothetical four-SM GPU of Figures 5.1–5.3 and 5.5.
     pub fn toy(sms: usize) -> Self {
         GpuSpec {
@@ -89,6 +105,46 @@ impl GpuSpec {
             l2_mib: 4.0,
             ctas_per_sm: 1,
         }
+    }
+
+    /// Look up a preset by its short class key (`a100` | `v100` | `h100`)
+    /// — the names the `serve --devices` flag accepts.
+    pub fn preset(key: &str) -> Option<GpuSpec> {
+        match key {
+            "a100" => Some(GpuSpec::a100()),
+            "v100" => Some(GpuSpec::v100()),
+            "h100" => Some(GpuSpec::h100()),
+            _ => None,
+        }
+    }
+
+    /// The short class key of a preset spec (inverse of [`GpuSpec::preset`]
+    /// for the three shipped presets).
+    pub fn class_key(&self) -> &'static str {
+        match self.name {
+            "A100 (sim)" => "a100",
+            "V100 (sim)" => "v100",
+            "H100 (sim)" => "h100",
+            other => other,
+        }
+    }
+
+    /// Parse a strict `name:count` device spec (e.g. `a100:2`): a preset
+    /// key, a colon, and a positive device count — anything else is an
+    /// error.  This is one element of the comma-separated `--devices`
+    /// list; the list itself is split by the cluster layer.
+    pub fn parse(spec: &str) -> crate::Result<(GpuSpec, usize)> {
+        let (name, count) = spec
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("device spec `{spec}` is not `name:count`"))?;
+        let gpu = GpuSpec::preset(name).ok_or_else(|| {
+            anyhow::anyhow!("unknown device class `{name}` in `{spec}`; expected a100|v100|h100")
+        })?;
+        let count: usize = count
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid device count `{count}` in `{spec}`"))?;
+        anyhow::ensure!(count >= 1, "device count must be >= 1 in `{spec}`");
+        Ok((gpu, count))
     }
 
     pub fn peak_tflops(&self, prec: Precision) -> f64 {
@@ -120,5 +176,42 @@ mod tests {
     #[test]
     fn toy_gpu_sizes() {
         assert_eq!(GpuSpec::toy(4).concurrent_ctas(), 4);
+    }
+
+    #[test]
+    fn h100_outclasses_a100() {
+        let (h, a) = (GpuSpec::h100(), GpuSpec::a100());
+        assert!(h.sms > a.sms);
+        assert!(h.mem_bw_gbs > a.mem_bw_gbs);
+        assert!(h.peak_tflops(Precision::F64) > a.peak_tflops(Precision::F64));
+    }
+
+    #[test]
+    fn parse_round_trips_every_preset() {
+        for key in ["a100", "v100", "h100"] {
+            for count in [1usize, 2, 8] {
+                let spec = format!("{key}:{count}");
+                let (gpu, n) = GpuSpec::parse(&spec).unwrap();
+                assert_eq!(n, count, "{spec}");
+                assert_eq!(gpu, GpuSpec::preset(key).unwrap(), "{spec}");
+                assert_eq!(gpu.class_key(), key, "{spec}");
+            }
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "a100",      // no count
+            "a100:",     // empty count
+            "a100:0",    // zero devices
+            "a100:-1",   // negative
+            "a100:two",  // non-numeric
+            "k80:1",     // unknown class
+            ":2",        // empty class
+            "a100:1:2",  // trailing junk becomes a bad count
+        ] {
+            assert!(GpuSpec::parse(bad).is_err(), "`{bad}` should be rejected");
+        }
     }
 }

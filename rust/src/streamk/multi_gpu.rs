@@ -30,6 +30,10 @@ pub enum MultiGpuPolicy {
 pub struct MultiGpuSim {
     pub makespan: f64,
     pub per_device: Vec<f64>,
+    /// MAC iterations assigned to each device — sums to `tiles *
+    /// iters_per_tile` under either policy (the conservation invariant
+    /// the tests pin).
+    pub per_device_iters: Vec<u64>,
     /// Tiles whose partials cross a device boundary (IterSplit only).
     pub boundary_tiles: usize,
 }
@@ -58,14 +62,17 @@ pub fn simulate_multi_gpu(
             // the best single-GPU schedule (two-tile hybrid / model grid).
             let per = tiles.div_ceil(n);
             let mut per_device = Vec::with_capacity(n);
+            let mut per_device_iters = Vec::with_capacity(n);
             for d in 0..n {
                 let start = d * per;
                 let end = ((d + 1) * per).min(tiles);
                 if start >= end {
                     per_device.push(0.0);
+                    per_device_iters.push(0);
                     continue;
                 }
                 let dev_tiles = end - start;
+                per_device_iters.push(dev_tiles as u64 * ipt);
                 // Shape covering exactly dev_tiles (1-D tiling along m).
                 let sub = GemmShape::new(dev_tiles * blk.bm, blk.bn, shape.k);
                 let d_plan = if dev_tiles > gpu.sms {
@@ -89,6 +96,7 @@ pub fn simulate_multi_gpu(
             MultiGpuSim {
                 makespan: per_device.iter().cloned().fold(0.0, f64::max),
                 per_device,
+                per_device_iters,
                 boundary_tiles: 0,
             }
         }
@@ -100,6 +108,7 @@ pub fn simulate_multi_gpu(
             let per = total / n as u64;
             let rem = total % n as u64;
             let mut per_device = Vec::with_capacity(n);
+            let mut per_device_iters = Vec::with_capacity(n);
             let mut boundary_tiles = 0usize;
             let mut cursor = 0u64;
             for d in 0..n {
@@ -107,6 +116,7 @@ pub fn simulate_multi_gpu(
                 let start = cursor;
                 let end = cursor + share;
                 cursor = end;
+                per_device_iters.push(share);
                 if share == 0 {
                     per_device.push(0.0);
                     continue;
@@ -138,6 +148,7 @@ pub fn simulate_multi_gpu(
             MultiGpuSim {
                 makespan: per_device.iter().cloned().fold(0.0, f64::max),
                 per_device,
+                per_device_iters,
                 boundary_tiles,
             }
         }
@@ -212,6 +223,105 @@ mod tests {
         .makespan;
         let speedup = t1 / t4;
         assert!(speedup > 2.8 && speedup <= 4.2, "4-GPU speedup {speedup}");
+    }
+
+    #[test]
+    fn iter_split_never_worse_than_tile_split_beyond_fixup() {
+        // The §6.1.1 invariant: device-level Stream-K balances iterations
+        // within one, so its makespan can exceed tile-split's only by the
+        // interconnect fixup (plus sub-problem rounding slack) — never by
+        // a quantization cliff.
+        let (gpu, blk, model) = setup();
+        let interconnect_us = 3.0;
+        for shape in [
+            GemmShape::new(256, 128, 1 << 16),
+            GemmShape::new(1000, 1000, 1000),
+            GemmShape::new(2048, 2048, 2048),
+            GemmShape::new(8192, 8192, 4096),
+        ] {
+            for n in [2usize, 3, 4, 8] {
+                let ts = simulate_multi_gpu(
+                    shape, blk, &model, &gpu, Precision::F16F32, n,
+                    MultiGpuPolicy::TileSplit, interconnect_us,
+                );
+                let is = simulate_multi_gpu(
+                    shape, blk, &model, &gpu, Precision::F16F32, n,
+                    MultiGpuPolicy::IterSplit, interconnect_us,
+                );
+                let fixup_slack = 2.0 * interconnect_us * 1e-6;
+                assert!(
+                    is.makespan <= ts.makespan * 1.10 + fixup_slack,
+                    "{shape:?} x{n}: iter-split {} vs tile-split {}",
+                    is.makespan,
+                    ts.makespan
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn per_device_iterations_conserve_the_total() {
+        // Neither policy may drop or duplicate MAC iterations, whatever
+        // the device count does to quantization.
+        let (gpu, blk, model) = setup();
+        for shape in [
+            GemmShape::new(256, 128, 1 << 16),
+            GemmShape::new(1000, 1000, 1000),
+            GemmShape::new(2048, 2048, 2048),
+        ] {
+            let total = blk.tiles(shape) as u64 * blk.iters_per_tile(shape);
+            for n in [1usize, 2, 3, 4, 8] {
+                for policy in [MultiGpuPolicy::TileSplit, MultiGpuPolicy::IterSplit] {
+                    let r = simulate_multi_gpu(
+                        shape, blk, &model, &gpu, Precision::F16F32, n, policy, 3.0,
+                    );
+                    assert_eq!(r.per_device_iters.len(), n);
+                    assert_eq!(
+                        r.per_device_iters.iter().sum::<u64>(),
+                        total,
+                        "{shape:?} x{n} {policy:?}"
+                    );
+                    // Iter-split balances within one iteration.
+                    if policy == MultiGpuPolicy::IterSplit {
+                        let lo = r.per_device_iters.iter().min().unwrap();
+                        let hi = r.per_device_iters.iter().max().unwrap();
+                        assert!(hi - lo <= 1, "{shape:?} x{n}: {lo}..{hi}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn boundary_tiles_bounded_by_internal_cuts() {
+        // n devices make n-1 cuts in the iteration space; each cut can
+        // split at most one tile, charged once on each side — so at most
+        // 2(n-1) boundary crossings, and zero when every cut lands on a
+        // tile boundary.
+        let (gpu, blk, model) = setup();
+        let shape = GemmShape::new(1000, 1000, 1000);
+        for n in [2usize, 3, 4, 8] {
+            let r = simulate_multi_gpu(
+                shape, blk, &model, &gpu, Precision::F16F32, n,
+                MultiGpuPolicy::IterSplit, 3.0,
+            );
+            assert!(
+                r.boundary_tiles <= 2 * (n - 1),
+                "{} > {}",
+                r.boundary_tiles,
+                2 * (n - 1)
+            );
+        }
+        // Tiles divisible by devices and no remainder: cuts align, no
+        // cross-device fixups.
+        let aligned = GemmShape::new(2048, 2048, 2048);
+        let tiles = blk.tiles(aligned);
+        assert_eq!(tiles % 4, 0);
+        let r = simulate_multi_gpu(
+            aligned, blk, &model, &gpu, Precision::F16F32, 4,
+            MultiGpuPolicy::IterSplit, 3.0,
+        );
+        assert_eq!(r.boundary_tiles, 0);
     }
 
     #[test]

@@ -1,0 +1,44 @@
+//! The serve-family flag surface has one canonical order,
+//! `gpulb::cli::SERVE_FLAG_ORDER`: `main.rs` pins its `SERVE_SPEC` table
+//! (and therefore `serve --help`) against it, and this test pins the
+//! README's serve-flags list — so the two user-facing renderings can
+//! never drift apart or silently drop a flag.
+
+use gpulb::cli::SERVE_FLAG_ORDER;
+
+#[test]
+fn readme_serve_flags_match_the_canonical_order() {
+    let readme = include_str!("../../README.md");
+    let begin = readme
+        .find("<!-- serve-flags:begin -->")
+        .expect("README lost the serve-flags:begin marker");
+    let end = readme
+        .find("<!-- serve-flags:end -->")
+        .expect("README lost the serve-flags:end marker");
+    assert!(begin < end, "serve-flags markers out of order");
+
+    let mut listed = Vec::new();
+    for line in readme[begin..end].lines() {
+        if let Some(rest) = line.trim_start().strip_prefix("- `--") {
+            let name: String = rest
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '-')
+                .collect();
+            listed.push(name);
+        }
+    }
+    let listed: Vec<&str> = listed.iter().map(String::as_str).collect();
+    assert_eq!(
+        listed, SERVE_FLAG_ORDER,
+        "README serve-flags list diverged from cli::SERVE_FLAG_ORDER \
+         (every serve flag, in canonical order, exactly once)"
+    );
+}
+
+#[test]
+fn canonical_order_has_no_duplicates() {
+    let mut seen = std::collections::BTreeSet::new();
+    for name in SERVE_FLAG_ORDER {
+        assert!(seen.insert(name), "duplicate serve flag `{name}`");
+    }
+}

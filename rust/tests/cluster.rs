@@ -1,0 +1,97 @@
+//! Cluster-engine contracts: the bit-identity matrix (checksums equal
+//! across device counts × threads-per-pool × migration settings, and
+//! equal to a single `ServeEngine` run) and placement determinism.
+//!
+//! Run with `RUST_TEST_THREADS=1` in CI: the matrix spawns its own device
+//! pools, so test-level parallelism only adds scheduling noise.
+
+use gpulb::serve::{
+    cluster_gate_mix, parse_devices, ClusterEngine, CostFeedback, ServeConfig, ServeEngine,
+};
+
+/// Auto policy (the default): static schedule choice is a pure function
+/// of the problem, so placement cannot leak into the numerics.  The
+/// split threshold sits below the smoke mix's two heavy problems, so
+/// multi-device runs exercise the cross-device shard path.
+fn cfg(threads: usize) -> ServeConfig {
+    ServeConfig::builder()
+        .threads(threads)
+        .plan_workers(64)
+        .feedback(CostFeedback::Proxy)
+        .split_min_atoms(60_000)
+        .build()
+        .unwrap()
+}
+
+const SPECS: [&str; 3] = ["v100:1", "a100:1,v100:1", "a100:2,v100:2"];
+
+#[test]
+fn checksums_bit_identical_across_devices_threads_and_migration() {
+    let mix = cluster_gate_mix(0);
+    let reference = ServeEngine::new(cfg(1)).execute_batch(&mix).checksums;
+    assert!(reference.iter().all(|c| c.is_finite()));
+
+    for spec in SPECS {
+        let devices = parse_devices(spec).unwrap();
+        for threads in [1usize, 2, 4, 8] {
+            for migration in [false, true] {
+                let engine =
+                    ClusterEngine::new(cfg(threads), devices.clone(), migration).unwrap();
+                let report = engine.execute_batch(&mix);
+                assert!(report.faults.is_clean(), "{spec} t{threads}");
+                for (i, (got, want)) in report.checksums.iter().zip(&reference).enumerate() {
+                    assert_eq!(
+                        got.to_bits(),
+                        want.to_bits(),
+                        "problem {i} diverged on {spec} threads={threads} \
+                         migration={migration}"
+                    );
+                }
+                if devices.len() > 1 {
+                    assert!(
+                        report.shard_problems > 0,
+                        "{spec}: heavy problems should shard across devices"
+                    );
+                } else {
+                    assert_eq!(report.shard_problems, 0);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn placement_is_deterministic_across_runs_and_engines() {
+    let mix = cluster_gate_mix(0);
+    for spec in SPECS {
+        let devices = parse_devices(spec).unwrap();
+        for migration in [false, true] {
+            let a = ClusterEngine::new(cfg(2), devices.clone(), migration)
+                .unwrap()
+                .execute_batch(&mix);
+            let b = ClusterEngine::new(cfg(4), devices.clone(), migration)
+                .unwrap()
+                .execute_batch(&mix);
+            // Placement is decided by the virtual-time simulation before
+            // any kernel runs: identical across runs, fresh engines, and
+            // threads-per-pool.
+            assert_eq!(a.placements, b.placements, "{spec} migration={migration}");
+            assert_eq!(a.schedules, b.schedules);
+            assert_eq!(a.device_problems, b.device_problems);
+            assert_eq!(a.migrated, b.migrated);
+            assert_eq!(a.makespan_est, b.makespan_est);
+        }
+    }
+}
+
+#[test]
+fn device_list_parsing_pins_the_cli_surface() {
+    let devices = parse_devices("a100:2,v100:1").unwrap();
+    assert_eq!(devices.len(), 3);
+    assert_eq!(devices[0].class, "a100");
+    assert_eq!(devices[2].class, "v100");
+    assert_eq!(devices[2].speed, 1.0);
+    for bad in ["", "a100", "a100:0", "k80:1", "a100:2,"] {
+        assert!(parse_devices(bad).is_err(), "{bad:?} parsed");
+    }
+}

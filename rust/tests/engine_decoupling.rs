@@ -8,9 +8,10 @@
 //! or calls an executor function directly fails loudly here even if it
 //! compiles and computes correctly.
 
-const ENGINE_SOURCES: [(&str, &str); 7] = [
+const ENGINE_SOURCES: [(&str, &str); 8] = [
     ("serve/mod.rs", include_str!("../src/serve/mod.rs")),
     ("serve/batch.rs", include_str!("../src/serve/batch.rs")),
+    ("serve/cluster.rs", include_str!("../src/serve/cluster.rs")),
     ("serve/config.rs", include_str!("../src/serve/config.rs")),
     ("serve/ingest.rs", include_str!("../src/serve/ingest.rs")),
     ("serve/plan_cache.rs", include_str!("../src/serve/plan_cache.rs")),
@@ -60,9 +61,10 @@ fn engine_has_no_per_kind_execution_arms() {
 /// Everything that configures an engine, outside `serve/config.rs` (the
 /// one module allowed to name the struct's fields): the serve sources,
 /// the CLI binary, the bench harness, and every engine-driving test.
-const BUILDER_ONLY_SOURCES: [(&str, &str); 15] = [
+const BUILDER_ONLY_SOURCES: [(&str, &str); 17] = [
     ("serve/mod.rs", include_str!("../src/serve/mod.rs")),
     ("serve/batch.rs", include_str!("../src/serve/batch.rs")),
+    ("serve/cluster.rs", include_str!("../src/serve/cluster.rs")),
     ("serve/ingest.rs", include_str!("../src/serve/ingest.rs")),
     ("serve/mix.rs", include_str!("../src/serve/mix.rs")),
     ("serve/landscape.rs", include_str!("../src/serve/landscape.rs")),
@@ -79,6 +81,7 @@ const BUILDER_ONLY_SOURCES: [(&str, &str); 15] = [
     ("tests/serve_plan_cache.rs", include_str!("serve_plan_cache.rs")),
     ("tests/ingest.rs", include_str!("ingest.rs")),
     ("tests/fault_tolerance.rs", include_str!("fault_tolerance.rs")),
+    ("tests/cluster.rs", include_str!("cluster.rs")),
 ];
 
 #[test]

@@ -191,6 +191,198 @@ def report(title, entries, workers):
     return geomean(values)
 
 
+# --- serve::cluster mirror ---------------------------------------------
+#
+# Exact port of the deterministic placement pipeline behind the `cluster`
+# bench family (serve/cluster.rs::cluster_bench_rows): device profiles
+# from sim/gpu.rs presets, roofline placement weights, heterogeneous LPT
+# seeding (serve/pool.rs::lpt_seed_hetero), and the virtual-time
+# migration simulation (simulate_cluster).  Every f64 operation happens
+# in the same order as the Rust code, so the committed
+# BENCH_cluster_baseline.json values reproduce bit-for-printed-digit.
+
+REFERENCE_BW_GBS = 900.0
+INTERCONNECT_STEPS = 32.0
+CLUSTER_BENCH_PLAN_WORKERS = 256
+DEFAULT_SPLIT_MIN_ATOMS = 1 << 20
+
+# class -> memory bandwidth (GB/s), from sim/gpu.rs presets.
+GPU_BW = {"a100": 1555.0, "v100": 900.0, "h100": 3350.0}
+
+
+def parse_device_speeds(spec):
+    speeds = []
+    for part in spec.split(","):
+        name, count = part.strip().split(":")
+        for _ in range(int(count)):
+            speeds.append(GPU_BW[name] / REFERENCE_BW_GBS)
+    return speeds
+
+
+def placement_weight(tiles, atoms):
+    return atoms + SEG_OVERHEAD * tiles
+
+
+def lpt_seed_hetero(weights, speeds):
+    """Mirror of serve::pool::lpt_seed_hetero (same f64 accumulation)."""
+    n = max(len(speeds), 1)
+    order = sorted(range(len(weights)), key=lambda i: (-weights[i], i))
+    seeds = [[] for _ in range(n)]
+    loads = [0.0] * n
+    for i in order:
+        w = float(max(weights[i], 1))
+        best, best_finish = 0, math.inf
+        for d in range(n):
+            finish = loads[d] + w / speeds[d]
+            if finish < best_finish:
+                best, best_finish = d, finish
+        seeds[best].append(i)
+        loads[best] = best_finish
+    return seeds
+
+
+def simulate_cluster(queues, costs, speeds, migration):
+    """Mirror of serve::cluster::simulate_cluster: earliest-clock device
+    acts (clock ties keep the lower index), popping its own front or --
+    when dry and migration is on -- stealing the back of the longest
+    queue (length ties keep the lowest victim index)."""
+    n = len(queues)
+    queues = [list(q) for q in queues]
+    clocks = [0.0] * n
+    order = [[] for _ in range(n)]
+    migrated = 0
+    remaining = sum(len(q) for q in queues)
+    while remaining:
+        pick = None
+        for d in range(n):
+            if not queues[d] and not migration:
+                continue
+            if pick is None or clocks[d] < clocks[pick]:
+                pick = d
+        d = pick
+        if queues[d]:
+            job = queues[d].pop(0)
+        else:
+            victims = [v for v in range(n) if v != d and queues[v]]
+            if not victims:
+                continue
+            v = max(victims, key=lambda v: (len(queues[v]), -v))
+            job = queues[v].pop()
+            migrated += 1
+        order[d].append(job)
+        clocks[d] += costs[job] / speeds[d]
+        remaining -= 1
+    makespan = max(clocks) if clocks else 0.0
+    return order, clocks, makespan, migrated
+
+
+# serve::mix::cluster_gate_mix shapes: (n, hot, hot_len, tail) hotrow
+# tuples, light problems first, heavy last (the adversarial submission
+# order the tile-split baseline trips over).
+CLUSTER_MIX = {
+    0: [
+        (512, 8, 64, 4),
+        (512, 16, 32, 4),
+        (1024, 8, 64, 4),
+        (1024, 16, 32, 4),
+        (2048, 128, 256, 16),
+        (2048, 256, 128, 16),
+    ],
+    1: [
+        (2048, 32, 128, 8),
+        (2048, 64, 64, 8),
+        (1024, 16, 128, 8),
+        (1024, 32, 64, 8),
+        (4096, 32, 128, 8),
+        (4096, 64, 64, 8),
+        (4096, 256, 512, 16),
+        (4096, 512, 256, 16),
+        (8192, 1024, 1024, 32),
+    ],
+}
+
+
+def cluster_bench_rows(scale, devices_spec):
+    speeds = parse_device_speeds(devices_spec)
+    n_dev = max(len(speeds), 1)
+    mix = [
+        [hot_len if r < hot else tail for r in range(n)]
+        for (n, hot, hot_len, tail) in CLUSTER_MIX[scale]
+    ]
+    offsets = [prefix(lens) for lens in mix]
+    costs = [
+        proxy_planned("tm", None, o, CLUSTER_BENCH_PLAN_WORKERS) for o in offsets
+    ]
+    weights = [placement_weight(len(o) - 1, o[-1]) for o in offsets]
+
+    # Row 1: static contiguous tile-split placement in submission order.
+    chunk = max(-(-len(mix) // n_dev), 1)
+    clocks = [0.0] * n_dev
+    for i, c in enumerate(costs):
+        d = min(i // chunk, n_dev - 1)
+        clocks[d] += c / speeds[d]
+    tilesplit = max(clocks)
+
+    # Rows 2-3: LPT without and with migration.
+    queues = lpt_seed_hetero(weights, speeds)
+    _, _, lpt, _ = simulate_cluster(queues, costs, speeds, False)
+    _, _, migration, migrated = simulate_cluster(queues, costs, speeds, True)
+
+    # Row 4: big problems shard across every device.
+    total_speed = sum(speeds)
+    small = [i for i in range(len(mix)) if offsets[i][-1] < DEFAULT_SPLIT_MIN_ATOMS]
+    small_queues = [
+        [small[j] for j in q]
+        for q in lpt_seed_hetero([weights[i] for i in small], speeds)
+    ]
+    _, _, shard_makespan, _ = simulate_cluster(small_queues, costs, speeds, True)
+    shared, big = 0.0, 0
+    for i, c in enumerate(costs):
+        if offsets[i][-1] >= DEFAULT_SPLIT_MIN_ATOMS:
+            big += 1
+            shared += c / total_speed
+    shard = shard_makespan + shared + INTERCONNECT_STEPS * ((n_dev - 1) * big)
+
+    return {
+        "tilesplit_makespan": tilesplit,
+        "lpt_makespan": lpt,
+        "migration_makespan": migration,
+        "shard_makespan": shard,
+    }, migrated, len(mix)
+
+
+def cluster_family_json(scale, rows, problems):
+    """Mirror of benchutil::family_json_with_unit for the cluster rows."""
+    out = "{\n"
+    out += '  "bench": "cluster",\n'
+    out += '  "unit": "proxy-steps",\n'
+    out += f'  "scale": {scale},\n'
+    out += '  "families": [\n'
+    names = list(rows)
+    for i, name in enumerate(names):
+        sep = "" if i + 1 == len(names) else ","
+        out += (
+            f'    {{"family": "{name}", "problems": {problems}, '
+            f'"geomean_throughput": {rows[name]:.6f}, "better": "lower"}}{sep}\n'
+        )
+    out += "  ]\n}\n"
+    return out
+
+
+def cluster_report(devices_spec):
+    for scale in (0, 1):
+        rows, migrated, problems = cluster_bench_rows(scale, devices_spec)
+        print(f"== cluster scale {scale} ({devices_spec}, {problems} problems)")
+        for name, value in rows.items():
+            print(f"  {name:<20} {value:>14.1f} proxy-steps")
+        speedup = rows["tilesplit_makespan"] / rows["migration_makespan"]
+        print(f"  migration speedup vs tile-split: x{speedup:.2f} ({migrated} migrated)")
+        if scale == 1:
+            with open("BENCH_cluster_baseline.json", "w") as f:
+                f.write(cluster_family_json(scale, rows, problems))
+            print("  wrote BENCH_cluster_baseline.json")
+
+
 if __name__ == "__main__":
     # The committed BENCH_baseline.json hotrow row (scale 1, plan workers
     # 256 = serve::landscape::DEFAULT_PLAN_WORKERS).
@@ -236,3 +428,7 @@ if __name__ == "__main__":
         ],
         256,
     )
+
+    # The committed BENCH_cluster_baseline.json (scale 1) and the gate
+    # ratio the CI cluster perf-gate leg asserts.
+    cluster_report("a100:2,v100:1")
