@@ -315,8 +315,11 @@ pub fn proxy_cost_stream(
 /// [`proxy_cost`]).  Dynamic kinds never route through here in practice —
 /// their model is [`dynamic::proxy_cost_dynamic`], reached via
 /// [`proxy_cost_for`] — but the arms keep the charge consistent if a
-/// caller meters their canonical snapshot directly.
-fn setup_cost(kind: ScheduleKind, tiles: usize, atoms: usize) -> f64 {
+/// caller meters their canonical snapshot directly.  Public so the
+/// iterative graph bench can separate the plan-setup charge (which the
+/// plan cache amortizes across shape-identical rounds) from the per-round
+/// makespan.
+pub fn setup_cost(kind: ScheduleKind, tiles: usize, atoms: usize) -> f64 {
     match kind {
         ScheduleKind::ThreadMapped => 0.0,
         ScheduleKind::GroupMapped(_) => 4.0,

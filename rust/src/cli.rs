@@ -111,6 +111,11 @@ pub const SERVE_FLAG_ORDER: &[&str] = &[
     "deadline",
     "devices",
     "migration",
+    "iterative",
+    "algo",
+    "source",
+    "direction",
+    "queries",
 ];
 
 /// One declared flag of a subcommand: `--name`.  `value` is the

@@ -14,8 +14,10 @@ use crate::sparse::Csr;
 /// Run `visit` over every segment of `schedule` for `src`, in worker
 /// order: lazily through the streaming descriptor when the schedule has
 /// one (allocation-free — nothing is materialized per frontier), else
-/// through a materialized assignment (Binning/LRB).
-fn for_each_schedule_segment<S: WorkSource>(
+/// through a materialized assignment (Binning/LRB).  Public because the
+/// engine-driven iterative driver (`serve::iterative`) applies its
+/// per-round semantic updates through the same canonical walk.
+pub fn for_each_schedule_segment<S: WorkSource>(
     schedule: ScheduleKind,
     src: &S,
     workers: usize,
@@ -107,20 +109,28 @@ pub fn frontier_shard_partials(
 pub fn bfs(graph: &Csr, source: usize, schedule: ScheduleKind, workers: usize) -> Vec<u32> {
     let mut depth = vec![u32::MAX; graph.rows];
     depth[source] = 0;
-    let mut frontier = vec![source as u32];
+    // Loop-lifetime buffers: each round fills them in place, so steady
+    // state allocates nothing per round.
+    let mut frontier: Vec<u32> = Vec::with_capacity(graph.rows);
+    frontier.push(source as u32);
+    let mut next: Vec<u32> = Vec::with_capacity(graph.rows);
+    let mut offsets: Vec<usize> = Vec::with_capacity(graph.rows + 1);
+    let mut in_next = vec![0u64; graph.rows.div_ceil(64)];
     let mut level = 0u32;
 
     while !frontier.is_empty() {
         level += 1;
-        // Offsets over the frontier's adjacency lists (prefix sum, §3.4.1).
-        let lens: Vec<usize> = frontier
-            .iter()
-            .map(|&v| graph.row_nnz(v as usize))
-            .collect();
-        let offsets = crate::balance::prefix::exclusive(&lens);
+        // Offsets over the frontier's adjacency lists (prefix sum, §3.4.1),
+        // built directly into the slab — no per-round `lens` Vec.
+        offsets.clear();
+        offsets.push(0);
+        let mut acc = 0usize;
+        for &v in &frontier {
+            acc += graph.row_nnz(v as usize);
+            offsets.push(acc);
+        }
         let src = OffsetsSource::new(&offsets);
 
-        let mut next = Vec::new();
         for_each_schedule_segment(schedule, &src, workers, |s| {
             let v = frontier[s.tile as usize] as usize;
             let (cols, _) = graph.row(v);
@@ -129,13 +139,24 @@ pub fn bfs(graph: &Csr, source: usize, schedule: ScheduleKind, workers: usize) -
                 let n = cols[a - base] as usize;
                 if depth[n] == u32::MAX {
                     depth[n] = level;
-                    next.push(n as u32);
+                    in_next[n >> 6] |= 1u64 << (n & 63);
                 }
             }
         });
-        next.sort_unstable();
-        next.dedup();
-        frontier = next;
+        // Ascending bitmap sweep: exactly the old `sort_unstable`+`dedup`
+        // frontier (first-discovery already dedups; sorting only
+        // canonicalized the order) without the O(F log F) sort.
+        next.clear();
+        for (w, word) in in_next.iter_mut().enumerate() {
+            let mut bits = *word;
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                next.push(((w << 6) | b) as u32);
+                bits &= bits - 1;
+            }
+            *word = 0;
+        }
+        std::mem::swap(&mut frontier, &mut next);
     }
     depth
 }
@@ -163,18 +184,26 @@ pub fn bfs_ref(graph: &Csr, source: usize) -> Vec<u32> {
 pub fn sssp(graph: &Csr, source: usize, schedule: ScheduleKind, workers: usize) -> Vec<f64> {
     let mut dist = vec![f64::INFINITY; graph.rows];
     dist[source] = 0.0;
-    let mut frontier = vec![source as u32];
+    // Loop-lifetime buffers: the old per-round `vec![false; rows]`
+    // membership array is a bitmap hoisted out of the loop (cleared by
+    // the sweep that drains it), and the lens/offsets/next Vecs fill in
+    // place — steady-state rounds allocate nothing.
+    let mut frontier: Vec<u32> = Vec::with_capacity(graph.rows);
+    frontier.push(source as u32);
+    let mut next: Vec<u32> = Vec::with_capacity(graph.rows);
+    let mut offsets: Vec<usize> = Vec::with_capacity(graph.rows + 1);
+    let mut in_next = vec![0u64; graph.rows.div_ceil(64)];
 
     while !frontier.is_empty() {
-        let lens: Vec<usize> = frontier
-            .iter()
-            .map(|&v| graph.row_nnz(v as usize))
-            .collect();
-        let offsets = crate::balance::prefix::exclusive(&lens);
+        offsets.clear();
+        offsets.push(0);
+        let mut acc = 0usize;
+        for &v in &frontier {
+            acc += graph.row_nnz(v as usize);
+            offsets.push(acc);
+        }
         let src = OffsetsSource::new(&offsets);
 
-        let mut in_next = vec![false; graph.rows];
-        let mut next = Vec::new();
         for_each_schedule_segment(schedule, &src, workers, |s| {
             let v = frontier[s.tile as usize] as usize;
             let (cols, weights) = graph.row(v);
@@ -188,14 +217,24 @@ pub fn sssp(graph: &Csr, source: usize, schedule: ScheduleKind, workers: usize) 
                 let cand = dist[v] + wgt;
                 if cand < dist[n] - 1e-15 {
                     dist[n] = cand;
-                    if !in_next[n] {
-                        in_next[n] = true;
-                        next.push(n as u32);
-                    }
+                    in_next[n >> 6] |= 1u64 << (n & 63);
                 }
             }
         });
-        frontier = next;
+        // Drain the bitmap in ascending vertex order (the canonical
+        // frontier order the iterative driver shares), clearing it for
+        // the next round as we go.
+        next.clear();
+        for (w, word) in in_next.iter_mut().enumerate() {
+            let mut bits = *word;
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                next.push(((w << 6) | b) as u32);
+                bits &= bits - 1;
+            }
+            *word = 0;
+        }
+        std::mem::swap(&mut frontier, &mut next);
     }
     dist
 }
@@ -270,10 +309,12 @@ pub fn pagerank(
     };
 
     let mut rank = vec![1.0 / n as f64; n];
+    // Ping-pong rank buffers (hoisted: no per-iteration Vec).
+    let mut next = vec![0.0f64; n];
     let mut iters = 0usize;
     while iters < max_iters {
         iters += 1;
-        let mut next = vec![(1.0 - damping) / n as f64; n];
+        next.fill((1.0 - damping) / n as f64);
         let mut accum = |s: Segment| {
             let v = s.tile as usize;
             let mut sum = 0.0;
@@ -298,7 +339,7 @@ pub fn pagerank(
             .zip(&next)
             .map(|(a, b)| (a - b).abs())
             .sum();
-        rank = next;
+        std::mem::swap(&mut rank, &mut next);
         if delta < tol {
             break;
         }

@@ -461,12 +461,40 @@ impl FrontierKernel {
             .map(|&v| graph.row_nnz(v as usize))
             .collect();
         let offsets = prefix::exclusive(&lens);
+        Self::with_offsets(graph, frontier, offsets)
+    }
+
+    /// Build from a caller-computed offsets slab.  `offsets` must be the
+    /// exclusive prefix sum of the frontier's neighbor-list lengths over
+    /// `graph` — the iterative driver's arena maintains it in place, so
+    /// steady-state rounds construct the kernel without recomputing (or
+    /// reallocating) the prefix.  The fingerprint hashes the offsets
+    /// *content*: two rounds with the same canonical frontier produce the
+    /// same fingerprint and hit the same plan-cache entry.
+    pub fn with_offsets(graph: Arc<Csr>, frontier: Vec<u32>, offsets: Vec<usize>) -> Self {
+        debug_assert_eq!(offsets.len(), frontier.len() + 1);
+        debug_assert_eq!(offsets.first().copied(), Some(0));
         let fingerprint = fingerprint(SALT_FRONTIER, &OffsetsSource::new(&offsets));
         FrontierKernel {
             graph,
             frontier: Arc::new(frontier),
             offsets: Arc::new(offsets),
             fingerprint,
+        }
+    }
+
+    /// Recover the frontier/offsets buffers for reuse once every other
+    /// handle (the engine's batch dropped its clones when
+    /// `execute_batch` returned) is gone; `None` if some clone is still
+    /// alive, in which case the caller falls back to allocating fresh
+    /// buffers next round.
+    pub fn into_buffers(self) -> Option<(Vec<u32>, Vec<usize>)> {
+        let FrontierKernel {
+            frontier, offsets, ..
+        } = self;
+        match (Arc::try_unwrap(frontier), Arc::try_unwrap(offsets)) {
+            (Ok(f), Ok(o)) => Some((f, o)),
+            _ => None,
         }
     }
 }

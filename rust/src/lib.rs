@@ -59,7 +59,7 @@ pub mod prelude {
     pub use crate::serve::ServeEngine as Engine;
     pub use crate::serve::{
         BatchReport, ConfigError, CostFeedback, FaultBatchStats, IngestClass, IngestConfig,
-        IngestReport, Problem, SchedulePolicy, ServeConfig, ServeConfigBuilder, ServeEngine,
-        ServeError,
+        IngestReport, IterativeDriver, IterativeOptions, LoopReport, Problem, SchedulePolicy,
+        ServeConfig, ServeConfigBuilder, ServeEngine, ServeError,
     };
 }

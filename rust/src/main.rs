@@ -331,6 +331,36 @@ const SERVE_SPEC: CommandSpec = CommandSpec {
             default: Some("on"),
             help: "cluster mode: cross-device migration of queued work",
         },
+        FlagSpec {
+            name: "iterative",
+            value: None,
+            default: None,
+            help: "iterative graph driver: BFS/SSSP/PageRank loops served through the engine",
+        },
+        FlagSpec {
+            name: "algo",
+            value: Some("NAME"),
+            default: Some("bfs"),
+            help: "iterative mode: bfs|sssp|pagerank|all",
+        },
+        FlagSpec {
+            name: "source",
+            value: Some("V"),
+            default: Some("0"),
+            help: "iterative mode: BFS/SSSP source vertex",
+        },
+        FlagSpec {
+            name: "direction",
+            value: Some("MODE"),
+            default: Some("adaptive"),
+            help: "iterative mode: adaptive (Beamer push/pull switching) or push",
+        },
+        FlagSpec {
+            name: "queries",
+            value: Some("N"),
+            default: Some("1"),
+            help: "iterative mode: repeated traversals per family (warms the plan cache)",
+        },
     ],
 };
 
@@ -720,6 +750,10 @@ fn cmd_serve(args: &Args) -> gpulb::Result<()> {
         return cmd_serve_cluster(args, scale, batches);
     }
 
+    if args.has_flag("iterative") {
+        return cmd_serve_iterative(args, scale);
+    }
+
     let mix = serve::corpus_mix(scale);
     let atoms: usize = mix.iter().map(|p| p.atoms()).sum();
     let count = |kind: &str| mix.iter().filter(|p| p.kind_name() == kind).count();
@@ -803,6 +837,135 @@ fn cmd_serve(args: &Args) -> gpulb::Result<()> {
                 report.tuner.exploits,
                 report.tuner.explorations,
                 report.tuner.priors
+            );
+        }
+    }
+    Ok(())
+}
+
+/// `serve --iterative`: BFS/SSSP/PageRank loops driven through the
+/// engine, one served frontier problem per round.  Plain mode runs the
+/// requested algorithm over the pinned graph families and prints
+/// per-loop direction/cache/arena activity; `--bench` runs the
+/// deterministic virtual-time naive-vs-engine comparison, enforces the
+/// speedup gate on the rmat family, and writes the `BENCH_graph.json`
+/// artifact the CI graph gate diffs.
+fn cmd_serve_iterative(args: &Args, scale: usize) -> gpulb::Result<()> {
+    use gpulb::exec::chaos::{FaultPlan, DEFAULT_FAULT_RATE, DEFAULT_FAULT_SEED};
+
+    if args.has_flag("bench") {
+        let min_speedup: f64 = opt_strict(args, "min-speedup", 1.3)?;
+        let out = args.opt_or("out", "BENCH_graph.json");
+        serve::run_graph_bench(scale, min_speedup, &out)?;
+        return Ok(());
+    }
+
+    let source: usize = opt_strict(args, "source", 0)?;
+    let queries: usize = opt_strict(args, "queries", 1)?;
+    let queries = queries.max(1);
+    let algo = args.opt_or("algo", "bfs");
+    anyhow::ensure!(
+        matches!(algo.as_str(), "bfs" | "sssp" | "pagerank" | "all"),
+        "invalid --algo `{algo}`; expected bfs|sssp|pagerank|all"
+    );
+    let direction = match args.opt_or("direction", "adaptive").as_str() {
+        "adaptive" => serve::DirectionPolicy::default(),
+        "push" => serve::DirectionPolicy::PushOnly,
+        other => anyhow::bail!("invalid --direction `{other}`; expected adaptive|push"),
+    };
+    let faults = if args.has_flag("chaos") {
+        let seed: u64 = opt_strict(args, "fault-seed", DEFAULT_FAULT_SEED)?;
+        let rate: f64 = opt_strict(args, "fault-rate", DEFAULT_FAULT_RATE)?;
+        anyhow::ensure!(
+            rate.is_finite() && (0.0..=1.0).contains(&rate),
+            "--fault-rate must be in [0,1]"
+        );
+        Some(FaultPlan::new(seed, rate))
+    } else {
+        None
+    };
+
+    let policy = parse_schedule_policy(args)?;
+    let feedback = if args.has_flag("proxy-feedback") {
+        serve::CostFeedback::Proxy
+    } else {
+        serve::CostFeedback::Measured
+    };
+    let cfg = serve_config_from_args(args, policy, feedback)?;
+    let engine = serve::ServeEngine::new(cfg);
+
+    for case in serve::iterative_mix(scale) {
+        anyhow::ensure!(
+            source < case.graph.rows,
+            "--source {source} out of range for family {} ({} rows)",
+            case.family,
+            case.graph.rows
+        );
+        println!(
+            "family {}: {} rows, {} edges, source {}, {} queries",
+            case.family,
+            case.graph.rows,
+            case.graph.nnz(),
+            source,
+            queries
+        );
+        for algo_name in ["bfs", "sssp", "pagerank"] {
+            if algo != "all" && algo != algo_name {
+                continue;
+            }
+            let mut driver = serve::IterativeDriver::with_options(
+                &engine,
+                case.graph.clone(),
+                serve::IterativeOptions { direction, faults },
+            );
+            let rep = match algo_name {
+                "bfs" => {
+                    let mut last = None;
+                    for _ in 0..queries {
+                        let (depth, rep) = driver.bfs(source);
+                        let reached = depth.iter().filter(|&&d| d != u32::MAX).count();
+                        if last.is_none() {
+                            println!("  bfs: {} of {} vertices reached", reached, depth.len());
+                        }
+                        last = Some(rep);
+                    }
+                    last.expect("queries >= 1")
+                }
+                "sssp" => {
+                    let mut last = None;
+                    for _ in 0..queries {
+                        let (dist, rep) = driver.sssp(source);
+                        let finite = dist.iter().filter(|d| d.is_finite()).count();
+                        if last.is_none() {
+                            println!("  sssp: {} of {} vertices reachable", finite, dist.len());
+                        }
+                        last = Some(rep);
+                    }
+                    last.expect("queries >= 1")
+                }
+                _ => {
+                    let mut last = None;
+                    for _ in 0..queries {
+                        let (_, iters, rep) = driver.pagerank(0.85, 1e-8, 100);
+                        if last.is_none() {
+                            println!("  pagerank: converged in {} iterations", iters);
+                        }
+                        last = Some(rep);
+                    }
+                    last.expect("queries >= 1")
+                }
+            };
+            println!(
+                "  {}: last query {} rounds ({} push, {} pull), {} faults recovered; \
+                 cache {} hits / {} misses; arena reallocations {}",
+                algo_name,
+                rep.rounds.len(),
+                rep.push_rounds,
+                rep.pull_rounds,
+                rep.recovered_faults,
+                rep.cache.hits,
+                rep.cache.misses,
+                rep.arena.reallocations
             );
         }
     }

@@ -32,6 +32,39 @@ fn connected_rmat(scale: u32, edge_factor: usize, seed: u64) -> Csr {
     Csr::from_coo(&coo)
 }
 
+/// One pinned graph workload for the iterative driver: a named family,
+/// a shared graph, the BFS source, and how many times the query repeats
+/// (re-queries are what exercise plan-cache warm-up across traversals).
+pub struct IterativeCase {
+    pub family: &'static str,
+    pub graph: Arc<Csr>,
+    pub source: usize,
+    pub queries: usize,
+}
+
+/// The pinned graph families for the iterative bench and gate: a
+/// scale-free R-MAT (hub-dominated, direction switching pays early) and
+/// a road grid (near-uniform low degree, push until a short pull tail as
+/// the unexplored pool drains).  `scale` 0 is the smoke mix; `scale >= 1`
+/// is the bench mix the committed baseline pins.
+pub fn iterative_mix(scale: usize) -> Vec<IterativeCase> {
+    let (rmat_scale, road_side, queries) = if scale == 0 { (9, 16, 2) } else { (12, 64, 4) };
+    vec![
+        IterativeCase {
+            family: "rmat",
+            graph: Arc::new(connected_rmat(rmat_scale, 8, 2022)),
+            source: 0,
+            queries,
+        },
+        IterativeCase {
+            family: "road",
+            graph: Arc::new(gen::road(road_side, 0x70AD)),
+            source: 0,
+            queries,
+        },
+    ]
+}
+
 /// Deterministic heterogeneous batch over the evaluation corpora: SpMV,
 /// SpMM, SpGEMM, GEMM and graph-frontier problems in one stream.
 ///

@@ -53,6 +53,7 @@ pub(crate) mod batch;
 pub mod cluster;
 pub mod config;
 pub mod ingest;
+pub mod iterative;
 pub mod landscape;
 pub(crate) mod mix;
 pub(crate) mod plan_cache;
@@ -71,9 +72,14 @@ pub use config::{
 pub use ingest::{
     Arrival, BatchCut, ClassLatency, IngestClass, IngestConfig, IngestConfigBuilder, IngestReport,
 };
+pub use iterative::{
+    choose_direction, run_graph_bench, simulate_iterative, ArenaStats, Direction,
+    DirectionPolicy, FrontierArena, GraphSim, IterativeDriver, IterativeOptions, LoopReport,
+    RoundStats, SimRound, DEFAULT_ALPHA, DEFAULT_BETA, GRAPH_BENCH_PLAN_WORKERS,
+};
 pub use mix::{
-    bursty_trace, cluster_gate_mix, corpus_mix, ingest_gate_catalog, poisson_trace,
-    single_large_mix,
+    bursty_trace, cluster_gate_mix, corpus_mix, ingest_gate_catalog, iterative_mix,
+    poisson_trace, single_large_mix, IterativeCase,
 };
 pub use plan_cache::{fingerprint, CacheStats, PlanCache, PlanEntry, PlanKey};
 pub use pool::PoolStats;

@@ -130,6 +130,41 @@ pub fn rmat(scale: u32, edge_factor: usize, seed: u64) -> Csr {
     Csr::from_coo(&coo)
 }
 
+/// Road-style graph: a `side`×`side` 2-D grid with diagonal shortcuts
+/// (8-neighbor king moves), the high-diameter low-degree counterpart to
+/// [`rmat`]'s scale-free skew — BFS runs ~`2(side-1)` thin diagonal-band
+/// rounds, so direction-optimizing traversal stays push until the
+/// unexplored-edge pool drains near the far corner, where the alpha
+/// check flips a short pull tail.  Each undirected edge draws one seeded
+/// weight and is emitted in both orientations, so the CSR is exactly
+/// symmetric
+/// (`road(s, seed) == road(s, seed).transpose()` bitwise); the structure
+/// itself is closed-form, which is what lets `tools/proxy_port.py`
+/// regenerate the graph-bench baseline toolchain-free.
+pub fn road(side: usize, seed: u64) -> Csr {
+    assert!(side >= 2, "road grid needs side >= 2");
+    let n = side * side;
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::new(n, n);
+    for r in 0..side {
+        for c in 0..side {
+            let v = r * side + c;
+            // Forward neighbors only (E, S, SE, SW) in a fixed order, so
+            // every undirected edge is generated exactly once.
+            let east = (c + 1 < side).then_some(v + 1);
+            let south = (r + 1 < side).then_some(v + side);
+            let south_east = (r + 1 < side && c + 1 < side).then_some(v + side + 1);
+            let south_west = (r + 1 < side && c > 0).then_some(v + side - 1);
+            for u in [east, south, south_east, south_west].into_iter().flatten() {
+                let w = rng.range_f64(0.5, 1.5);
+                coo.push(v, u, w);
+                coo.push(u, v, w);
+            }
+        }
+    }
+    Csr::from_coo(&coo)
+}
+
 /// Tall-skinny: many rows, 1 column (the "sparse vector" CUB special-cases
 /// with its columns==1 heuristic — Fig. 4.2's outlier population).
 pub fn tall_skinny(rows: usize, density: f64, seed: u64) -> Csr {
@@ -234,5 +269,45 @@ mod tests {
             power_law(64, 64, 32, 2.0, 9),
             power_law(64, 64, 32, 2.0, 9)
         );
+    }
+
+    #[test]
+    fn road_is_symmetric_with_matching_weights() {
+        // Symmetry is exact, weights included: the transpose's counting
+        // sort is stable and every mirrored entry carries the same draw,
+        // so `g == g.transpose()` holds bitwise.
+        let g = road(9, 0x70AD);
+        assert_eq!(g, g.transpose());
+    }
+
+    #[test]
+    fn road_seeded_determinism_and_closed_form_edge_count() {
+        let side = 11;
+        let g = road(side, 42);
+        assert_eq!(g, road(side, 42), "same seed must be bitwise-identical");
+        let h = road(side, 43);
+        assert_eq!(g.offsets, h.offsets, "structure is seed-independent");
+        assert_ne!(g.values, h.values, "weights are seeded");
+        // Undirected edges: 2s(s-1) orthogonal + 2(s-1)^2 diagonal.
+        let undirected = 2 * side * (side - 1) + 2 * (side - 1) * (side - 1);
+        assert_eq!(g.nnz(), 2 * undirected);
+        // King moves: degree is at most 8, corners have 3.
+        assert!((0..g.rows).all(|v| g.row_nnz(v) <= 8));
+        assert_eq!(g.row_nnz(0), 3);
+    }
+
+    #[test]
+    fn rmat_and_road_degree_sums_conserved() {
+        // Out-degree and in-degree sums both equal nnz (no edges lost or
+        // invented by the CSR build or the transpose).
+        for g in [rmat(7, 4, 3), road(8, 5)] {
+            let t = g.transpose();
+            let out_sum: usize = (0..g.rows).map(|v| g.row_nnz(v)).sum();
+            let in_sum: usize = (0..t.rows).map(|v| t.row_nnz(v)).sum();
+            assert_eq!(out_sum, g.nnz());
+            assert_eq!(in_sum, g.nnz());
+            assert_eq!(*g.offsets.last().unwrap(), g.indices.len());
+            assert_eq!(g.indices.len(), g.values.len());
+        }
     }
 }

@@ -61,11 +61,12 @@ fn engine_has_no_per_kind_execution_arms() {
 /// Everything that configures an engine, outside `serve/config.rs` (the
 /// one module allowed to name the struct's fields): the serve sources,
 /// the CLI binary, the bench harness, and every engine-driving test.
-const BUILDER_ONLY_SOURCES: [(&str, &str); 17] = [
+const BUILDER_ONLY_SOURCES: [(&str, &str); 19] = [
     ("serve/mod.rs", include_str!("../src/serve/mod.rs")),
     ("serve/batch.rs", include_str!("../src/serve/batch.rs")),
     ("serve/cluster.rs", include_str!("../src/serve/cluster.rs")),
     ("serve/ingest.rs", include_str!("../src/serve/ingest.rs")),
+    ("serve/iterative.rs", include_str!("../src/serve/iterative.rs")),
     ("serve/mix.rs", include_str!("../src/serve/mix.rs")),
     ("serve/landscape.rs", include_str!("../src/serve/landscape.rs")),
     ("src/main.rs", include_str!("../src/main.rs")),
@@ -82,6 +83,7 @@ const BUILDER_ONLY_SOURCES: [(&str, &str); 17] = [
     ("tests/ingest.rs", include_str!("ingest.rs")),
     ("tests/fault_tolerance.rs", include_str!("fault_tolerance.rs")),
     ("tests/cluster.rs", include_str!("cluster.rs")),
+    ("tests/iterative_graph.rs", include_str!("iterative_graph.rs")),
 ];
 
 #[test]

@@ -1,0 +1,291 @@
+//! End-to-end matrix for the engine-driven iterative graph driver:
+//! reference parity, bit-identity across thread counts and push/pull
+//! switch points, plan-cache warm-up across rounds and re-queries, chaos
+//! recovery inside a loop, the arena's zero-steady-state-allocation
+//! contract, and the graph bench smoke run.
+
+use std::sync::Arc;
+
+use gpulb::balance::ScheduleKind;
+use gpulb::exec::chaos::FaultPlan;
+use gpulb::exec::graph;
+use gpulb::serve::{
+    self, CostFeedback, DirectionPolicy, IterativeDriver, IterativeOptions, LoopReport,
+    SchedulePolicy, ServeConfig, ServeEngine,
+};
+use gpulb::sparse::Csr;
+
+const WORKERS: usize = 64;
+
+fn engine(threads: usize, schedule: ScheduleKind) -> ServeEngine {
+    let cfg = ServeConfig::builder()
+        .threads(threads)
+        .plan_workers(WORKERS)
+        .schedule(SchedulePolicy::Fixed(schedule))
+        .feedback(CostFeedback::Proxy)
+        .build()
+        .unwrap();
+    ServeEngine::new(cfg)
+}
+
+fn smoke_graphs() -> Vec<(&'static str, Arc<Csr>)> {
+    serve::iterative_mix(0)
+        .into_iter()
+        .map(|c| (c.family, c.graph))
+        .collect()
+}
+
+fn assert_clean(rep: &LoopReport, ctx: &str) {
+    assert_eq!(rep.failed_rounds, 0, "{ctx}: rounds exhausted retries");
+    assert!(
+        rep.rounds.iter().all(|r| r.checksum.is_finite()),
+        "{ctx}: non-finite round checksum"
+    );
+}
+
+#[test]
+fn driver_bfs_matches_references_bitwise_across_thread_counts() {
+    for (family, g) in smoke_graphs() {
+        let reference = graph::bfs_ref(&g, 0);
+        let legacy = graph::bfs(&g, 0, ScheduleKind::MergePath, WORKERS);
+        assert_eq!(legacy, reference, "{family}: legacy bfs vs queue reference");
+
+        let mut baseline: Option<Vec<u32>> = None;
+        for threads in [1, 2, 4, 8] {
+            let eng = engine(threads, ScheduleKind::MergePath);
+            let mut driver = IterativeDriver::new(&eng, Arc::clone(&g));
+            let (depth, rep) = driver.bfs(0);
+            assert_clean(&rep, &format!("{family} bfs threads={threads}"));
+            assert_eq!(depth, reference, "{family} bfs threads={threads}");
+            match &baseline {
+                None => baseline = Some(depth),
+                Some(b) => assert_eq!(&depth, b, "{family} bfs thread-variant"),
+            }
+        }
+    }
+}
+
+#[test]
+fn driver_sssp_matches_references_bitwise_across_thread_counts() {
+    for (family, g) in smoke_graphs() {
+        let legacy = graph::sssp(&g, 0, ScheduleKind::MergePath, WORKERS);
+        let dijkstra = graph::sssp_ref(&g, 0);
+        for (v, (a, b)) in legacy.iter().zip(&dijkstra).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-9 || (a.is_infinite() && b.is_infinite()),
+                "{family}: legacy sssp vs Dijkstra at vertex {v}: {a} vs {b}"
+            );
+        }
+
+        let mut baseline: Option<Vec<u64>> = None;
+        for threads in [1, 2, 4, 8] {
+            let eng = engine(threads, ScheduleKind::MergePath);
+            let mut driver = IterativeDriver::new(&eng, Arc::clone(&g));
+            let (dist, rep) = driver.sssp(0);
+            assert_clean(&rep, &format!("{family} sssp threads={threads}"));
+            let bits: Vec<u64> = dist.iter().map(|d| d.to_bits()).collect();
+            let legacy_bits: Vec<u64> = legacy.iter().map(|d| d.to_bits()).collect();
+            assert_eq!(bits, legacy_bits, "{family} sssp threads={threads} vs legacy");
+            match &baseline {
+                None => baseline = Some(bits),
+                Some(b) => assert_eq!(&bits, b, "{family} sssp thread-variant"),
+            }
+        }
+    }
+}
+
+#[test]
+fn driver_pagerank_matches_legacy_bitwise() {
+    for (family, g) in smoke_graphs() {
+        let (legacy, legacy_iters) =
+            graph::pagerank(&g, ScheduleKind::MergePath, WORKERS, 0.85, 1e-10, 60);
+        for threads in [1, 4] {
+            let eng = engine(threads, ScheduleKind::MergePath);
+            let mut driver = IterativeDriver::new(&eng, Arc::clone(&g));
+            let (rank, iters, rep) = driver.pagerank(0.85, 1e-10, 60);
+            assert_clean(&rep, &format!("{family} pagerank threads={threads}"));
+            assert_eq!(iters, legacy_iters, "{family} pagerank iteration count");
+            let bits: Vec<u64> = rank.iter().map(|r| r.to_bits()).collect();
+            let legacy_bits: Vec<u64> = legacy.iter().map(|r| r.to_bits()).collect();
+            assert_eq!(bits, legacy_bits, "{family} pagerank threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn direction_optimizing_bfs_is_bit_identical_to_push_only() {
+    for (family, g) in smoke_graphs() {
+        let eng = engine(2, ScheduleKind::MergePath);
+        let mut push_driver = IterativeDriver::with_options(
+            &eng,
+            Arc::clone(&g),
+            IterativeOptions {
+                direction: DirectionPolicy::PushOnly,
+                faults: None,
+            },
+        );
+        let (push_depth, push_rep) = push_driver.bfs(0);
+        assert_clean(&push_rep, &format!("{family} push-only"));
+        assert_eq!(push_rep.pull_rounds, 0);
+
+        // The default heuristic, plus an aggressive switch point that
+        // forces pull as early as possible: the switch point must never
+        // change the answer.
+        for (name, policy) in [
+            ("default", DirectionPolicy::default()),
+            (
+                "aggressive",
+                DirectionPolicy::Adaptive { alpha: 1, beta: 1 },
+            ),
+        ] {
+            let mut driver = IterativeDriver::with_options(
+                &eng,
+                Arc::clone(&g),
+                IterativeOptions {
+                    direction: policy,
+                    faults: None,
+                },
+            );
+            let (depth, rep) = driver.bfs(0);
+            assert_clean(&rep, &format!("{family} {name}"));
+            assert_eq!(depth, push_depth, "{family} {name}: push/pull changed depths");
+        }
+
+        // Both families take tail pull rounds under the default heuristic
+        // (the alpha check trips once `unexplored` shrinks), and the
+        // driver's realized direction trace must match the virtual-time
+        // simulation round for round.
+        let sim = serve::simulate_iterative(&g, 0, 1, DirectionPolicy::default());
+        let mut driver = IterativeDriver::new(&eng, Arc::clone(&g));
+        let (_, rep) = driver.bfs(0);
+        assert_eq!(
+            rep.rounds.len(),
+            sim.rounds.len(),
+            "{family}: driver round count vs simulation"
+        );
+        assert_eq!(
+            rep.pull_rounds, sim.pull_rounds,
+            "{family}: driver pull rounds vs simulation"
+        );
+        assert!(
+            rep.pull_rounds >= 1,
+            "{family}: default heuristic never switched to pull"
+        );
+    }
+}
+
+#[test]
+fn plan_cache_warms_within_and_across_queries() {
+    let (_, g) = smoke_graphs().remove(0);
+
+    // PageRank submits the same fingerprint every round: the cache must
+    // hit from round 2 onward within a single query on a cold engine.
+    let eng = engine(2, ScheduleKind::MergePath);
+    let mut driver = IterativeDriver::new(&eng, Arc::clone(&g));
+    let (_, iters, rep) = driver.pagerank(0.85, 1e-10, 20);
+    assert!(iters >= 3, "need a few rounds to observe warm-up");
+    assert!(
+        rep.rounds[1].cache_hits > rep.rounds[0].cache_hits,
+        "pagerank round 2 missed the plan cache"
+    );
+    let last = rep.rounds.last().unwrap();
+    assert!(
+        last.cache_hits - rep.rounds[0].cache_hits >= (rep.rounds.len() - 1) as u64,
+        "every pagerank round after the first should hit"
+    );
+
+    // A repeated BFS query replays the same frontier fingerprints: every
+    // round of the second traversal hits the plan warmed by the first.
+    let eng = engine(2, ScheduleKind::MergePath);
+    let mut driver = IterativeDriver::new(&eng, Arc::clone(&g));
+    let (_, first) = driver.bfs(0);
+    let (_, second) = driver.bfs(0);
+    assert_eq!(first.rounds.len(), second.rounds.len());
+    assert!(
+        second.cache.hits - first.cache.hits >= second.rounds.len() as u64,
+        "re-query rounds should all hit the plan cache: first {:?}, second {:?}",
+        first.cache,
+        second.cache
+    );
+}
+
+#[test]
+fn chaos_rounds_recover_bit_identically() {
+    let (_, g) = smoke_graphs().remove(0);
+    // ThreadMapped is the conservative fallback the retry ladder re-plans
+    // onto, so recovered rounds reduce bit-identically to clean ones.
+    let clean_engine = engine(2, ScheduleKind::ThreadMapped);
+    let mut clean = IterativeDriver::new(&clean_engine, Arc::clone(&g));
+    let (clean_depth, clean_rep) = clean.bfs(0);
+    assert_clean(&clean_rep, "clean bfs");
+
+    let chaos_engine = engine(2, ScheduleKind::ThreadMapped);
+    let mut chaotic = IterativeDriver::with_options(
+        &chaos_engine,
+        Arc::clone(&g),
+        IterativeOptions {
+            direction: DirectionPolicy::default(),
+            faults: Some(FaultPlan::new(7, 1.0)),
+        },
+    );
+    let (depth, rep) = chaotic.bfs(0);
+    assert_eq!(rep.failed_rounds, 0, "a faulted round exhausted its retries");
+    assert!(rep.recovered_faults > 0, "rate-1.0 plan injected no faults");
+    assert_eq!(depth, clean_depth, "recovered traversal changed depths");
+    assert_eq!(rep.rounds.len(), clean_rep.rounds.len());
+    for (a, b) in rep.rounds.iter().zip(&clean_rep.rounds) {
+        assert_eq!(
+            a.checksum.to_bits(),
+            b.checksum.to_bits(),
+            "round {} recovered to a different checksum",
+            a.round
+        );
+    }
+}
+
+#[test]
+fn arena_steady_state_allocates_nothing() {
+    let (_, g) = smoke_graphs().remove(0);
+    let eng = engine(2, ScheduleKind::MergePath);
+    let mut driver = IterativeDriver::new(&eng, Arc::clone(&g));
+
+    // Warm-up query, then capture the arena's capacity profile.
+    let (_, warm) = driver.bfs(0);
+    assert_clean(&warm, "warm-up bfs");
+    let warm_stats = warm.arena;
+    assert_eq!(warm_stats.reallocations, 0, "warm-up allocated mid-loop");
+    assert_eq!(
+        warm_stats.recycled_rounds, warm_stats.rounds,
+        "engine retained kernel buffers past the batch"
+    );
+
+    // Steady state: more traversals of every algorithm reuse the same
+    // buffers — capacities frozen, zero reallocations, every round's
+    // kernel buffers recycled.
+    let (_, _) = driver.bfs(0);
+    let (_, _) = driver.sssp(0);
+    let (_, _, rep) = driver.pagerank(0.85, 1e-10, 10);
+    let stats = rep.arena;
+    assert_eq!(stats.reallocations, 0, "steady-state rounds allocated");
+    assert_eq!(stats.recycled_rounds, stats.rounds);
+    assert!(stats.rounds > warm_stats.rounds);
+    assert_eq!(stats.frontier_capacity, warm_stats.frontier_capacity);
+    assert_eq!(stats.pull_capacity, warm_stats.pull_capacity);
+    assert_eq!(stats.offsets_capacity, warm_stats.offsets_capacity);
+    assert_eq!(stats.bitmap_words, warm_stats.bitmap_words);
+}
+
+#[test]
+fn graph_bench_smoke_writes_artifact_and_meets_floor() {
+    let out = std::env::temp_dir().join(format!("BENCH_graph_smoke_{}.json", std::process::id()));
+    let out = out.to_str().unwrap().to_owned();
+    let speedup = serve::run_graph_bench(0, 1.0, &out).expect("smoke bench");
+    assert!(speedup >= 1.0);
+    let json = std::fs::read_to_string(&out).expect("bench artifact written");
+    for family in ["rmat_naive", "rmat_engine", "road_naive", "road_engine"] {
+        assert!(json.contains(family), "artifact missing family {family}");
+    }
+    assert!(json.contains("\"better\": \"lower\""));
+    assert!(json.contains("virtual-steps"));
+    let _ = std::fs::remove_file(&out);
+}

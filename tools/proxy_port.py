@@ -383,6 +383,283 @@ def cluster_report(devices_spec):
             print("  wrote BENCH_cluster_baseline.json")
 
 
+# --- serve::iterative mirror -------------------------------------------
+#
+# Exact port of the virtual-time graph bench behind `serve --iterative
+# --bench` (serve/iterative.rs::simulate_iterative over
+# serve/mix.rs::iterative_mix): the xoshiro256** RNG and R-MAT/road
+# generators (structure only -- the cost model sees only degrees), BFS
+# level sets, the integer Beamer push/pull heuristic, the FNV offsets
+# fingerprint standing in for the plan cache, and the naive-vs-engine
+# per-round cost model.  Every f64 operation happens in the same order
+# as the Rust code, so the committed BENCH_graph_baseline.json values
+# reproduce bit-for-printed-digit.
+
+GRAPH_BENCH_PLAN_WORKERS = 256
+SORT_LANES = 64.0
+ALLOC_WORDS_PER_STEP = 64.0
+SCAN_WORDS_PER_STEP = 4.0
+GRAPH_ALPHA, GRAPH_BETA = 14, 24
+SALT_FRONTIER = 0xF0
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+MASK64 = (1 << 64) - 1
+
+
+def fnv_fold(h, v):
+    return ((h ^ v) * FNV_PRIME) & MASK64
+
+
+def offsets_fingerprint(salt, offsets):
+    """Mirror of balance::fingerprint over an OffsetsSource."""
+    h = fnv_fold(FNV_OFFSET, salt)
+    h = fnv_fold(h, len(offsets) - 1)
+    for o in offsets:
+        h = fnv_fold(h, o)
+    return h
+
+
+class Xoshiro:
+    """Exact mirror of rng.rs: xoshiro256** seeded via splitmix64."""
+
+    def __init__(self, seed):
+        self.s = []
+        state = seed & MASK64
+        for _ in range(4):
+            state = (state + 0x9E3779B97F4A7C15) & MASK64
+            z = state
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+            self.s.append((z ^ (z >> 31)) & MASK64)
+
+    @staticmethod
+    def _rotl(x, k):
+        return ((x << k) | (x >> (64 - k))) & MASK64
+
+    def next_u64(self):
+        s = self.s
+        result = (self._rotl((s[1] * 5) & MASK64, 7) * 9) & MASK64
+        t = (s[1] << 17) & MASK64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = self._rotl(s[3], 45)
+        return result
+
+    def f64(self):
+        return (self.next_u64() >> 11) / float(1 << 53)
+
+
+def rmat_adjacency(scale, edge_factor, seed):
+    """Structure mirror of sparse::gen::rmat (Csr::from_coo dedups
+    duplicate entries, so adjacency sets are exact)."""
+    n = 1 << scale
+    rng = Xoshiro(seed)
+    a, b, c = 0.57, 0.19, 0.19
+    adj = [set() for _ in range(n)]
+    for _ in range(n * edge_factor):
+        r = col = 0
+        half = n >> 1
+        while half > 0:
+            p = rng.f64()
+            if p < a:
+                pass
+            elif p < a + b:
+                col += half
+            elif p < a + b + c:
+                r += half
+            else:
+                r += half
+                col += half
+            half >>= 1
+        adj[r].add(col)
+    return adj
+
+
+def connected_rmat_adjacency(scale, edge_factor, seed):
+    """Mirror of serve::mix::connected_rmat: one-directional ring union
+    the R-MAT edge set."""
+    adj = rmat_adjacency(scale, edge_factor, seed)
+    n = len(adj)
+    for v in range(n):
+        adj[v].add((v + 1) % n)
+    return adj
+
+
+def road_adjacency(side):
+    """Structure mirror of sparse::gen::road: the 8-neighbor king-move
+    grid (each undirected edge emitted in both orientations)."""
+    n = side * side
+    adj = [set() for _ in range(n)]
+    for r in range(side):
+        for c in range(side):
+            v = r * side + c
+            for dr, dc in ((0, 1), (1, 0), (1, 1), (1, -1)):
+                rr, cc = r + dr, c + dc
+                if 0 <= rr < side and 0 <= cc < side:
+                    u = rr * side + cc
+                    adj[v].add(u)
+                    adj[u].add(v)
+    return adj
+
+
+def bfs_levels(adj, source):
+    from collections import deque
+
+    depth = [None] * len(adj)
+    depth[source] = 0
+    q = deque([source])
+    while q:
+        v = q.popleft()
+        for u in adj[v]:
+            if depth[u] is None:
+                depth[u] = depth[v] + 1
+                q.append(u)
+    return depth
+
+
+def simulate_iterative(adj, source, queries):
+    """Mirror of serve::iterative::simulate_iterative with the default
+    adaptive direction policy."""
+    n = len(adj)
+    out_deg = [len(s) for s in adj]
+    in_deg = [0] * n
+    for v in range(n):
+        for u in adj[v]:
+            in_deg[u] += 1
+    depth = bfs_levels(adj, source)
+    reached = [d for d in depth if d is not None]
+    max_level = max(reached) if reached else 0
+    levels = [[] for _ in range(max_level + 1)]
+    for v in range(n):
+        if depth[v] is not None:
+            levels[depth[v]].append(v)
+    nnz = sum(out_deg)
+    seen = set()
+    rounds0 = []
+    pull0 = 0
+    total_rounds = 0
+    naive_total = 0.0
+    engine_total = 0.0
+    for q in range(queries):
+        prev = "push"
+        unexplored = nnz - sum(out_deg[v] for v in levels[0])
+        for l in range(max_level + 1):
+            total_rounds += 1
+            frontier = levels[l]
+            m_f = sum(out_deg[v] for v in frontier)
+            if prev == "push":
+                direction = "pull" if m_f * GRAPH_ALPHA > unexplored else "push"
+            else:
+                direction = "push" if len(frontier) * GRAPH_BETA < n else "pull"
+            k_next = len(levels[l + 1]) if l + 1 <= max_level else 0
+            if k_next == 0:
+                scan_steps = 0.0
+            else:
+                nxt = levels[l + 1]
+                scan_steps = (
+                    (nxt[-1] >> 6) - (nxt[0] >> 6) + 1
+                ) / SCAN_WORDS_PER_STEP
+
+            push_offsets = prefix([out_deg[v] for v in frontier])
+            sort_steps = k_next * math.ceil(math.log2(k_next + 1)) / SORT_LANES
+            alloc_steps = (len(frontier) + k_next) / ALLOC_WORDS_PER_STEP
+            naive_round = (
+                proxy_planned("mp", None, push_offsets, GRAPH_BENCH_PLAN_WORKERS)
+                + sort_steps
+                + alloc_steps
+            )
+
+            if direction == "push":
+                eng_offsets = push_offsets
+            else:
+                unvisited = [
+                    v for v in range(n) if depth[v] is None or depth[v] > l
+                ]
+                eng_offsets = prefix([in_deg[v] for v in unvisited])
+            tiles, atoms = len(eng_offsets) - 1, eng_offsets[-1]
+            fp = offsets_fingerprint(SALT_FRONTIER, eng_offsets)
+            total = proxy_planned("mp", None, eng_offsets, GRAPH_BENCH_PLAN_WORKERS)
+            setup = setup_cost("mp", tiles, atoms)
+            paid = setup if fp not in seen else 0.0
+            seen.add(fp)
+            engine_round = (total - setup) + paid + scan_steps
+
+            naive_total += naive_round
+            engine_total += engine_round
+            if q == 0:
+                rounds0.append((direction, tiles, atoms))
+                if direction == "pull":
+                    pull0 += 1
+            if l + 1 <= max_level:
+                unexplored -= sum(out_deg[v] for v in levels[l + 1])
+            prev = direction
+    return {
+        "rounds": rounds0,
+        "total_rounds": total_rounds,
+        "pull_rounds": pull0,
+        "naive_steps": naive_total,
+        "engine_steps": engine_total,
+    }
+
+
+def iterative_mix(scale):
+    """Mirror of serve::mix::iterative_mix (graph structure + queries)."""
+    if scale == 0:
+        rmat_scale, road_side, queries = 9, 16, 2
+    else:
+        rmat_scale, road_side, queries = 12, 64, 4
+    return [
+        ("rmat", connected_rmat_adjacency(rmat_scale, 8, 2022), queries),
+        ("road", road_adjacency(road_side), queries),
+    ]
+
+
+def graph_family_json(scale, points):
+    """Mirror of benchutil::family_json_with_unit for the graph bench."""
+    out = "{\n"
+    out += '  "bench": "graph",\n'
+    out += '  "unit": "virtual-steps",\n'
+    out += f'  "scale": {scale},\n'
+    out += '  "families": [\n'
+    for i, (name, problems, value) in enumerate(points):
+        sep = "" if i + 1 == len(points) else ","
+        out += (
+            f'    {{"family": "{name}", "problems": {problems}, '
+            f'"geomean_throughput": {value:.6f}, "better": "lower"}}{sep}\n'
+        )
+    out += "  ]\n}\n"
+    return out
+
+
+def graph_report():
+    for scale in (0, 1):
+        points = []
+        gate = None
+        print(f"== graph scale {scale} (plan workers {GRAPH_BENCH_PLAN_WORKERS})")
+        for family, adj, queries in iterative_mix(scale):
+            sim = simulate_iterative(adj, 0, queries)
+            speedup = sim["naive_steps"] / sim["engine_steps"]
+            print(
+                f"  {family:<5} {queries} queries, {sim['total_rounds']:>3} rounds "
+                f"({sim['pull_rounds']} pull/query): naive {sim['naive_steps']:>11.1f} "
+                f"engine {sim['engine_steps']:>11.1f}  speedup x{speedup:.2f}"
+            )
+            if family == "rmat":
+                gate = speedup
+            points.append((f"{family}_naive", sim["total_rounds"], sim["naive_steps"]))
+            points.append((f"{family}_engine", sim["total_rounds"], sim["engine_steps"]))
+        assert gate is not None and gate >= 1.3, (
+            f"graph gate floor violated at scale {scale}: x{gate:.2f} < x1.3"
+        )
+        if scale == 1:
+            with open("BENCH_graph_baseline.json", "w") as f:
+                f.write(graph_family_json(scale, points))
+            print("  wrote BENCH_graph_baseline.json")
+
+
 if __name__ == "__main__":
     # The committed BENCH_baseline.json hotrow row (scale 1, plan workers
     # 256 = serve::landscape::DEFAULT_PLAN_WORKERS).
@@ -432,3 +709,7 @@ if __name__ == "__main__":
     # The committed BENCH_cluster_baseline.json (scale 1) and the gate
     # ratio the CI cluster perf-gate leg asserts.
     cluster_report("a100:2,v100:1")
+
+    # The committed BENCH_graph_baseline.json (scale 1) and the gate
+    # ratio the CI graph perf-gate leg asserts.
+    graph_report()
